@@ -1,0 +1,72 @@
+"""Fig. 8: effect of pool cardinality — the number of heterogeneous configs
+beating the best homogeneous config, and the top savings, saturate beyond
+three unique instance types."""
+
+import itertools
+
+import numpy as np
+
+from repro.core.search_space import SearchSpace
+from repro.serving import AWS_INSTANCES, MODEL_PROFILES, PoolEvaluator
+from repro.serving.pool import DEFAULT_RATES
+from repro.serving.workload import generate_workload
+
+from .common import get_context, print_table, write_json
+
+ANCHOR = "g4dn"
+FILLERS = ["c5", "r5n", "t3", "m5"]
+BOUNDS = {1: (8,), 2: (8, 8), 3: (6, 6, 8), 4: (5, 5, 6, 6)}
+
+
+def run(quick: bool = False):
+    prof = MODEL_PROFILES["mtwnd"]
+    wl = generate_workload(0, 1200, DEFAULT_RATES["mtwnd"],
+                           median_batch=prof.median_batch,
+                           max_batch=prof.max_batch)
+    homog_cost = get_context("mtwnd").homog_cost
+
+    max_card = 3 if quick else 4
+    rows, payload = [], {}
+    for k in range(1, max_card + 1):
+        better_counts, top_savings = [], []
+        combos = list(itertools.combinations(FILLERS, k - 1))
+        if quick:
+            combos = combos[:2]
+        for fillers in combos:
+            names = [ANCHOR, *fillers]
+            types = [AWS_INSTANCES[n] for n in names]
+            ev = PoolEvaluator(prof, types, wl)
+            space = SearchSpace(bounds=BOUNDS[k],
+                                prices=tuple(t.price for t in types))
+            lattice = space.enumerate()
+            costs = space.costs(lattice)
+            better, best_cost = 0, np.inf
+            for cfg, c in zip(lattice, costs):
+                if c >= homog_cost:
+                    continue
+                if ev(tuple(int(x) for x in cfg)) >= 0.99:
+                    better += 1
+                    best_cost = min(best_cost, float(c))
+            better_counts.append(better)
+            top_savings.append(0.0 if np.isinf(best_cost)
+                               else 100 * (1 - best_cost / homog_cost))
+        payload[k] = {"mean_better_configs": float(np.mean(better_counts)),
+                      "mean_top_saving_pct": float(np.mean(top_savings))}
+        rows.append([k, f"{np.mean(better_counts):.1f}",
+                     f"{np.mean(top_savings):.1f}%"])
+    print_table("Fig.8 — pool cardinality (MT-WND)",
+                ["unique types", "configs beating homog (mean)",
+                 "top saving (mean)"], rows)
+    ks = sorted(payload)
+    checks = {"saturates_beyond_3":
+              payload[min(3, max(ks))]["mean_top_saving_pct"]
+              >= payload[ks[-1]]["mean_top_saving_pct"] - 3.0
+              if len(ks) >= 3 else None}
+    payload["checks"] = checks
+    print("checks:", checks)
+    write_json("fig8_cardinality", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

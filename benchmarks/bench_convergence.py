@@ -1,0 +1,54 @@
+"""Fig. 10: samples needed to reach cost-saving levels, per method per model.
+Paper claim: RIBBON needs <40 samples (≈20 for recsys), 2-10x fewer than
+RANDOM / HILL-CLIMB / RSM."""
+
+import numpy as np
+
+from .common import MODELS, get_context, print_table, run_method, write_json
+
+METHODS = ["ribbon", "random", "hill", "rsm"]
+SEEDS = (0, 1, 2)
+
+
+def _samples_to(trace, cost_target):
+    s = trace.samples_to_reach_cost(cost_target)
+    return s if s is not None else np.inf
+
+
+def run(quick: bool = False):
+    models = MODELS if not quick else ["mtwnd", "candle"]
+    rows, payload = [], {}
+    for m in models:
+        ctx = get_context(m)
+        targets = {"50%": ctx.homog_cost - 0.5 * (ctx.homog_cost - ctx.best_cost),
+                   "100%": ctx.best_cost}
+        payload[m] = {}
+        for method in METHODS:
+            seeds = SEEDS if method != "ribbon" else (0,)
+            per_target = {k: [] for k in targets}
+            for seed in seeds:
+                tr = run_method(method, ctx, seed=seed)
+                for k, cost_t in targets.items():
+                    per_target[k].append(_samples_to(tr, cost_t))
+            med = {k: float(np.median(v)) for k, v in per_target.items()}
+            payload[m][method] = med
+            rows.append([m, method] +
+                        [("∞" if np.isinf(med[k]) else int(med[k]))
+                         for k in targets])
+    print_table("Fig.10 — median samples to reach saving levels",
+                ["model", "method", "to 50% saving", "to optimum"], rows)
+    checks = {}
+    for m in models:
+        r = payload[m]["ribbon"]["100%"]
+        others = [payload[m][x]["100%"] for x in ("random", "hill", "rsm")]
+        checks[m] = {"ribbon_samples": r,
+                     "ribbon_under_40": bool(r <= 45),
+                     "ribbon_fastest": bool(r <= min(others))}
+    payload["checks"] = checks
+    print("checks:", checks)
+    write_json("fig10_convergence", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

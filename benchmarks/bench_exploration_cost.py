@@ -1,0 +1,43 @@
+"""Fig. 13: total exploration cost to find the optimum, as % of evaluating
+every configuration exhaustively.  Paper claim: RIBBON < 3%, others 10-20%."""
+
+import numpy as np
+
+from .common import MODELS, get_context, print_table, run_method, write_json
+
+METHODS = ["ribbon", "ribbon-ca", "random", "hill", "rsm"]
+
+
+def run(quick: bool = False):
+    models = MODELS if not quick else ["mtwnd"]
+    rows, payload = [], {}
+    for m in models:
+        ctx = get_context(m)
+        payload[m] = {}
+        for method in METHODS:
+            tr = run_method(method, ctx, seed=0)
+            s_opt = tr.samples_to_reach_cost(ctx.best_cost)
+            if s_opt is None:
+                cost = sum(e.cost for e in tr.real)
+                reached = False
+            else:
+                cost = sum(e.cost for e in tr.real[:s_opt])
+                reached = True
+            pct = 100.0 * cost / ctx.exhaustive_cost
+            payload[m][method] = {"pct_of_exhaustive": pct,
+                                  "reached_optimum": reached}
+            rows.append([m, method, f"{pct:.2f}%",
+                         "yes" if reached else "no"])
+    print_table("Fig.13 — exploration cost (% of exhaustive)",
+                ["model", "method", "cost", "found optimum"], rows)
+    checks = {m: {"ribbon_under_3pct":
+                  payload[m]["ribbon"]["pct_of_exhaustive"] < 3.0}
+              for m in models}
+    payload["checks"] = checks
+    print("checks:", checks)
+    write_json("fig13_exploration_cost", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Fig. 14: number of QoS-violating configurations sampled before reaching
+the optimum, per method.  Paper: RIBBON fewest (e.g. ~20 vs up to 100 on
+CANDLE)."""
+
+import numpy as np
+
+from .common import MODELS, get_context, print_table, run_method, write_json
+
+METHODS = ["ribbon", "random", "hill", "rsm"]
+
+
+def run(quick: bool = False):
+    models = MODELS if not quick else ["candle", "mtwnd"]
+    rows, payload = [], {}
+    for m in models:
+        ctx = get_context(m)
+        payload[m] = {}
+        for method in METHODS:
+            tr = run_method(method, ctx, seed=0)
+            s_opt = tr.samples_to_reach_cost(ctx.best_cost)
+            upto = tr.real[:s_opt] if s_opt is not None else tr.real
+            viol = sum(1 for e in upto if not e.feasible)
+            payload[m][method] = {"violations": viol,
+                                  "reached": s_opt is not None}
+            rows.append([m, method, viol,
+                         "yes" if s_opt is not None else "no"])
+    print_table("Fig.14 — QoS-violating samples before optimum",
+                ["model", "method", "violations", "found optimum"], rows)
+    checks = {}
+    for m in models:
+        r = payload[m]["ribbon"]["violations"]
+        reached_others = [payload[m][x]["violations"]
+                          for x in ("random", "hill", "rsm")
+                          if payload[m][x]["reached"]]
+        checks[m] = {"ribbon_violations": r,
+                     "ribbon_not_worst": (not reached_others
+                                          or r <= max(reached_others))}
+    payload["checks"] = checks
+    print("checks:", checks)
+    write_json("fig14_qos_violations", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Fig. 3: per-instance performance and cost-effectiveness flip with batch
+size (MT-WND, batches 32 vs 128)."""
+
+import numpy as np
+
+from repro.serving import AWS_INSTANCES, MODEL_PROFILES
+from repro.serving.pool import cost_effectiveness
+
+from .common import print_table, write_json
+
+
+def run(quick: bool = False):
+    prof = MODEL_PROFILES["mtwnd"]
+    names = list(AWS_INSTANCES)
+    payload = {}
+    rows = []
+    for b in (32, 128):
+        lat = {n: float(AWS_INSTANCES[n].latency(prof, b)) for n in names}
+        perf = {n: 1.0 / lat[n] for n in names}
+        ce = {n: cost_effectiveness(perf[n], AWS_INSTANCES[n].price)
+              for n in names}
+        pmax, cmax = max(perf.values()), max(ce.values())
+        payload[f"batch{b}"] = {
+            n: {"latency_ms": lat[n] * 1e3, "norm_perf": perf[n] / pmax,
+                "norm_cost_eff": ce[n] / cmax} for n in names}
+        for n in names:
+            rows.append([b, n, f"{lat[n]*1e3:.2f}", f"{perf[n]/pmax:.2f}",
+                         f"{ce[n]/cmax:.2f}"])
+    print_table("Fig.3 — MT-WND perf / cost-effectiveness (normalized)",
+                ["batch", "instance", "lat(ms)", "perf", "cost-eff"], rows)
+
+    b128 = payload["batch128"]
+    checks = {
+        "g4dn_best_perf_b128": max(b128, key=lambda n: b128[n]["norm_perf"]) == "g4dn",
+        "r5_family_top_cost_eff_b32": max(
+            payload["batch32"], key=lambda n: payload["batch32"][n]["norm_cost_eff"])
+        in ("r5", "r5n"),
+        "g4dn_worst_cost_eff_b32": min(
+            payload["batch32"], key=lambda n: payload["batch32"][n]["norm_cost_eff"])
+        == "g4dn",
+    }
+    payload["checks"] = checks
+    print("checks:", checks)
+    write_json("fig3_tradeoff", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

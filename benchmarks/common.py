@@ -1,0 +1,93 @@
+"""Shared benchmark context: per-model evaluators with memoized exhaustive
+ground truth, so every figure reads from one cached simulation sweep."""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (run_hill_climb, run_random, run_ribbon, run_rsm)
+from repro.serving import best_homogeneous, make_paper_setup
+
+MODELS = ["candle", "resnet50", "vgg19", "mtwnd", "dien"]
+OUT_DIR = Path(__file__).resolve().parent.parent / "bench_out"
+
+# start configs: the deployed homogeneous optimum (paper §3.2 premise)
+HOMOG_START = {"candle": (5, 0, 0), "resnet50": (6, 0, 0), "vgg19": (4, 0, 0),
+               "mtwnd": (5, 0, 0), "dien": (5, 0, 0)}
+
+
+@dataclass
+class ModelContext:
+    name: str
+    evaluator: object
+    space: object
+    profile: object
+    homog_count: int
+    homog_cost: float
+    best_config: tuple
+    best_cost: float
+    exhaustive_cost: float
+
+    @property
+    def max_saving(self) -> float:
+        return 1.0 - self.best_cost / self.homog_cost
+
+
+_CTX: dict = {}
+
+
+def get_context(model: str, batch_dist: str = "lognormal",
+                qos_target: float = 0.99, seed: int = 0) -> ModelContext:
+    key = (model, batch_dist, qos_target, seed)
+    if key in _CTX:
+        return _CTX[key]
+    ev, space, prof = make_paper_setup(model, seed=seed, n_queries=1500,
+                                       batch_dist=batch_dist)
+    cnt, hcost = best_homogeneous(ev, 0, space.prices, qos_target, cap=20)
+    best_cfg, best_cost, exh = ev.exhaustive(space, qos_target)
+    _CTX[key] = ModelContext(model, ev, space, prof, cnt, hcost,
+                             best_cfg, best_cost, exh)
+    return _CTX[key]
+
+
+def run_method(method: str, ctx: ModelContext, qos_target: float = 0.99,
+               budget: int = 250, seed: int = 0):
+    start = HOMOG_START[ctx.name]
+    if method == "ribbon":
+        return run_ribbon(ctx.space, ctx.evaluator, qos_target=qos_target,
+                          budget=min(budget, 80), start=start)
+    if method == "ribbon-ca":
+        return run_ribbon(ctx.space, ctx.evaluator, qos_target=qos_target,
+                          budget=min(budget, 80), start=start,
+                          cost_aware=True)
+    if method == "random":
+        return run_random(ctx.space, ctx.evaluator, qos_target=qos_target,
+                          budget=budget, seed=seed)
+    if method == "hill":
+        return run_hill_climb(ctx.space, ctx.evaluator,
+                              qos_target=qos_target, budget=budget,
+                              start=start, seed=seed)
+    if method == "rsm":
+        return run_rsm(ctx.space, ctx.evaluator, qos_target=qos_target,
+                       budget=budget, seed=seed)
+    raise ValueError(method)
+
+
+def write_json(name: str, payload) -> Path:
+    OUT_DIR.mkdir(exist_ok=True)
+    path = OUT_DIR / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=2, default=str))
+    return path
+
+
+def print_table(title: str, headers: list[str], rows: list[list]):
+    print(f"\n== {title} ==")
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
+              else len(str(h)) for i, h in enumerate(headers)]
+    print("  ".join(str(h).ljust(w) for h, w in zip(headers, widths)))
+    for r in rows:
+        print("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))

@@ -1,0 +1,52 @@
+"""Load-change adaptation (paper §5.5 / Fig. 16).
+
+    PYTHONPATH=src python examples/autoscale_loadchange.py
+
+Converge on a base load, then hit the service with 1.5x traffic: the load
+monitor detects the QoS collapse, and the warm-restarted BO (exploration-
+record transfer: estimation set 𝕊 + pruning) re-converges to the new optimum
+faster than a cold restart.
+"""
+
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import RibbonOptimizer
+from repro.serving import PoolEvaluator, make_paper_setup
+from repro.serving.autoscaler import LoadMonitor, rescale
+
+
+def main():
+    ev, space, profile = make_paper_setup("mtwnd", seed=0, n_queries=1500)
+
+    opt = RibbonOptimizer(space, qos_target=0.99, start=(5, 0, 0))
+    while not opt.done:
+        cfg = opt.ask()
+        if cfg is None:
+            break
+        opt.tell(cfg, ev(cfg))
+    base = opt.trace.best_feasible()
+    print(f"base-load optimum: {base.config} at ${base.cost:.3f}/h "
+          f"({opt.trace.n_samples} samples)")
+
+    # ---- load jumps 1.5x -------------------------------------------------
+    hot = PoolEvaluator(profile, ev.types, ev.workload.scaled(1.5))
+    monitor = LoadMonitor(qos_target=0.99)
+    lat0 = ev.sim.latencies(base.config)
+    monitor.observe(lat0, np.zeros_like(lat0), profile.qos_latency)
+    lat1 = hot.sim.latencies(base.config)
+    detected = monitor.observe(lat1, np.maximum(lat1 - lat0, 0),
+                               profile.qos_latency)
+    print(f"\nload x1.5 applied; monitor detected change: {detected}")
+    print(f"incumbent under new load: QoS {hot(base.config):.3f} (violates)")
+
+    event = rescale(opt, hot, budget=40)
+    print(f"\nwarm-restart re-optimization: new optimum {event.new_best} at "
+          f"${event.new_cost:.3f}/h in {event.samples_used} samples "
+          f"({event.new_cost / base.cost:.2f}x the old cost for 1.5x load)")
+
+
+if __name__ == "__main__":
+    main()

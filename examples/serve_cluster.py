@@ -1,0 +1,65 @@
+"""End-to-end serving driver: live heterogeneous TPU-cell pool + RIBBON.
+
+    PYTHONPATH=src python examples/serve_cluster.py
+
+The execution plane for real: serving cells are jitted executables (here the
+MT-WND recommender at smoke scale on CPU; on a pod, submesh slices), the FCFS
+dispatcher routes a batched request stream, service latencies are *measured*,
+and RIBBON optimizes the cell mix against the measurements.  Ends by failing
+a cell and re-optimizing over the surviving capacity (fault-tolerance path).
+"""
+
+import sys
+sys.path.insert(0, "src")
+
+from repro.core import RibbonOptimizer, SearchSpace
+from repro.serving.engine import DEFAULT_TPU_CELLS, ClusterEngine
+from repro.serving.fault import recover_from_failure
+from repro.serving.workload import generate_workload
+
+
+def main():
+    cells = DEFAULT_TPU_CELLS
+    engine = ClusterEngine("mtwnd", cells, seed=0)
+    print("warming up cell executables ...")
+    engine.warmup()
+    wl = generate_workload(0, 80, rate_qps=150.0, median_batch=8,
+                           max_batch=32)
+    space = SearchSpace(bounds=(4, 3, 3),
+                        prices=tuple(c.price for c in cells))
+    qos_latency = 0.03
+
+    def evaluate(config):
+        engine.configure(config)
+        return engine.serve(wl, qos_latency=qos_latency)
+
+    print(f"serving {wl.n_queries} real queries per evaluation; "
+          f"cells {[c.name for c in cells]}")
+    opt = RibbonOptimizer(space, qos_target=0.9, patience=6)
+    for _ in range(16):
+        cfg = opt.ask()
+        if cfg is None or opt.done:
+            break
+        rate = evaluate(cfg)
+        opt.tell(cfg, rate)
+        print(f"  {cfg}: measured QoS {rate:.3f}, "
+              f"${engine.pool_price(cfg):.2f}/h")
+    best = opt.trace.best_feasible()
+    print(f"\noptimal pool: {best.config} at ${best.cost:.2f}/h")
+
+    # ---- fault tolerance: lose enough cells of the incumbent's type that
+    # the optimal pool no longer fits and another mix must be found ---------
+    lost_type = max(range(len(best.config)), key=lambda i: best.config[i])
+    lost = space.bounds[lost_type] - best.config[lost_type] + 1
+    print(f"\ninjecting failure: losing {lost} '{cells[lost_type].name}' "
+          f"cell(s) — the incumbent no longer fits the surviving capacity")
+    new_opt, event = recover_from_failure(opt, evaluate,
+                                          failed_type=lost_type, lost=lost,
+                                          budget=10)
+    print(f"recovered: new optimum {event.new_best} at "
+          f"${event.new_cost:.2f}/h using {event.samples_used} new samples "
+          f"(history replayed into the reduced space)")
+
+
+if __name__ == "__main__":
+    main()

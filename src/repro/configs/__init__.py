@@ -1,0 +1,7 @@
+"""Architecture configs: one module per assigned architecture + registry."""
+
+from .base import ArchConfig
+from .registry import ARCHS, SHAPES, all_cells, cell_is_applicable, get_arch
+
+__all__ = ["ArchConfig", "ARCHS", "SHAPES", "get_arch", "all_cells",
+           "cell_is_applicable"]

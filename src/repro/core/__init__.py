@@ -1,0 +1,32 @@
+"""RIBBON core: Bayesian-Optimization-driven heterogeneous pool configuration.
+
+Public API:
+    SearchSpace, estimate_upper_bounds
+    RibbonOptimizer, run_ribbon
+    run_random, run_hill_climb, run_rsm, central_composite_design
+    ribbon_objective, ribbon_objective_batch
+    GaussianProcess, matern52, rounded_matern52
+    PruneSet, SearchTrace
+"""
+
+from .acquisition import expected_improvement, select_next
+from .baselines import (central_composite_design, run_hill_climb, run_random,
+                        run_rsm)
+from .gp import GaussianProcess, matern52, round_counts, rounded_matern52
+from .objective import (is_feasible, naive_cost_objective, ribbon_objective,
+                        ribbon_objective_batch)
+from .pruning import PruneSet
+from .ribbon import RibbonOptimizer, run_ribbon
+from .search_space import SearchSpace, estimate_upper_bounds
+from .trace import Evaluation, SearchTrace
+
+__all__ = [
+    "SearchSpace", "estimate_upper_bounds",
+    "RibbonOptimizer", "run_ribbon",
+    "run_random", "run_hill_climb", "run_rsm", "central_composite_design",
+    "ribbon_objective", "ribbon_objective_batch", "naive_cost_objective",
+    "is_feasible",
+    "GaussianProcess", "matern52", "rounded_matern52", "round_counts",
+    "expected_improvement", "select_next",
+    "PruneSet", "SearchTrace", "Evaluation",
+]

@@ -1,0 +1,207 @@
+"""Competing search strategies from paper §5.3: RANDOM, HILL-CLIMB, RSM.
+
+Each strategy is given the same black-box QoS oracle and produces the same
+SearchTrace, so Figs. 10/13/14 comparisons are computed uniformly.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from .search_space import SearchSpace
+from .trace import SearchTrace
+
+
+def _dominates_down(v, x) -> bool:
+    """True if x <= v componentwise (x lies in the down-set of v)."""
+    return all(xi <= vi for xi, vi in zip(x, v))
+
+
+class _Bookkeeping:
+    """Shared skip rules (made explicit for RANDOM in the paper, and sound for
+    all strategies): a config in the down-set of a known violator cannot meet
+    QoS; a config componentwise >= a known feasible config cannot be cheaper."""
+
+    def __init__(self, space: SearchSpace):
+        self.space = space
+        self.violators: list[tuple[int, ...]] = []
+        self.feasibles: list[tuple[int, ...]] = []
+        self.visited: set[tuple[int, ...]] = set()
+
+    def skip(self, x) -> bool:
+        x = tuple(x)
+        if x in self.visited:
+            return True
+        if any(_dominates_down(v, x) for v in self.violators):
+            return True
+        if any(_dominates_down(x, f) for f in self.feasibles):
+            # x >= some feasible f componentwise → x at least as expensive.
+            return True
+        return False
+
+    def update(self, x, feasible: bool) -> None:
+        x = tuple(x)
+        self.visited.add(x)
+        (self.feasibles if feasible else self.violators).append(x)
+
+
+def _evaluate(space, evaluate_qos, qos_target, config, trace, book) -> bool:
+    rate = float(evaluate_qos(config))
+    cost = float(space.costs(np.asarray(config)[None, :])[0])
+    feasible = rate >= qos_target
+    trace.record(config, rate, cost, feasible)
+    book.update(config, feasible)
+    return feasible
+
+
+def run_random(space: SearchSpace, evaluate_qos, qos_target: float = 0.99,
+               budget: int = 200, seed: int = 0) -> SearchTrace:
+    """RANDOM with the paper's intelligence: skip configs ruled out by
+    dominance over previous observations."""
+    rng = np.random.default_rng(seed)
+    lattice = space.enumerate()
+    order = rng.permutation(len(lattice))
+    trace, book = SearchTrace(), _Bookkeeping(space)
+    for idx in order:
+        if trace.n_samples >= budget:
+            break
+        config = tuple(int(v) for v in lattice[idx])
+        if book.skip(config):
+            continue
+        _evaluate(space, evaluate_qos, qos_target, config, trace, book)
+    return trace
+
+
+def _neighbors(config, bounds):
+    for dim in range(len(config)):
+        for step in (+1, -1):
+            v = config[dim] + step
+            if 0 <= v <= bounds[dim]:
+                yield tuple(config[:dim]) + (v,) + tuple(config[dim + 1:])
+
+
+def run_hill_climb(space: SearchSpace, evaluate_qos, qos_target: float = 0.99,
+                   budget: int = 200, start=None, seed: int = 0) -> SearchTrace:
+    """HILL-CLIMB (paper §5.3): steepest-ascent on the (feasibility, cost/QoS)
+    ordering over ±1 neighbor moves, with random restarts when stuck
+    (paper Fig. 12 shows exactly this restart behavior)."""
+    rng = np.random.default_rng(seed)
+    bounds = space.bounds
+    trace, book = SearchTrace(), _Bookkeeping(space)
+
+    def score(rate, cost):
+        # Feasible configs rank above violating ones; within feasible prefer
+        # cheap, within violating prefer higher QoS rate.
+        if rate >= qos_target:
+            return (1, -cost)
+        return (0, rate)
+
+    current = tuple(space.bounds) if start is None else tuple(int(v) for v in start)
+    rate = float(evaluate_qos(current))
+    cost = float(space.costs(np.asarray(current)[None, :])[0])
+    trace.record(current, rate, cost, rate >= qos_target)
+    book.update(current, rate >= qos_target)
+    current_score = score(rate, cost)
+
+    lattice = space.enumerate()
+    while trace.n_samples < budget:
+        best_move, best_score = None, current_score
+        progressed = False
+        for nb in _neighbors(current, bounds):
+            if trace.n_samples >= budget:
+                break
+            if book.skip(nb):
+                continue
+            nrate = float(evaluate_qos(nb))
+            ncost = float(space.costs(np.asarray(nb)[None, :])[0])
+            trace.record(nb, nrate, ncost, nrate >= qos_target)
+            book.update(nb, nrate >= qos_target)
+            s = score(nrate, ncost)
+            if s > best_score:
+                best_move, best_score = nb, s
+        if best_move is not None:
+            current, current_score = best_move, best_score
+            progressed = True
+        if not progressed:
+            # Stuck at a local optimum → random restart (dark-orange square in
+            # paper Fig. 12).
+            unvisited = [tuple(int(v) for v in c) for c in lattice
+                         if tuple(int(v) for v in c) not in book.visited]
+            unvisited = [c for c in unvisited if not book.skip(c)]
+            if not unvisited or trace.n_samples >= budget:
+                break
+            current = unvisited[rng.integers(len(unvisited))]
+            crate = float(evaluate_qos(current))
+            ccost = float(space.costs(np.asarray(current)[None, :])[0])
+            trace.record(current, crate, ccost, crate >= qos_target)
+            book.update(current, crate >= qos_target)
+            current_score = score(crate, ccost)
+    return trace
+
+
+def central_composite_design(bounds) -> list[tuple[int, ...]]:
+    """3-level face-centered central composite design over [0, m_i]:
+    2^n factorial corners + 2n axial face points + center."""
+    n = len(bounds)
+    lo = [0] * n
+    hi = list(bounds)
+    mid = [m // 2 for m in bounds]
+    pts: list[tuple[int, ...]] = []
+    for corner in itertools.product(*[(l, h) for l, h in zip(lo, hi)]):
+        pts.append(tuple(int(v) for v in corner))
+    for dim in range(n):
+        for v in (lo[dim], hi[dim]):
+            p = list(mid)
+            p[dim] = v
+            pts.append(tuple(int(x) for x in p))
+    pts.append(tuple(int(v) for v in mid))
+    seen, uniq = set(), []
+    for p in pts:
+        if p not in seen:
+            seen.add(p)
+            uniq.append(p)
+    return uniq
+
+
+def run_rsm(space: SearchSpace, evaluate_qos, qos_target: float = 0.99,
+            budget: int = 200, seed: int = 0) -> SearchTrace:
+    """Response Surface Methodology (paper §5.3): evaluate the central
+    composite face-centered design, then explore around the most promising
+    design point (greedy neighborhood search, switching to the next-best
+    design point when stuck — the behavior described for Fig. 12)."""
+    trace, book = SearchTrace(), _Bookkeeping(space)
+    design = central_composite_design(space.bounds)
+    results = []
+    for p in design:
+        if trace.n_samples >= budget:
+            break
+        if book.skip(p):
+            continue
+        rate = float(evaluate_qos(p))
+        cost = float(space.costs(np.asarray(p)[None, :])[0])
+        trace.record(p, rate, cost, rate >= qos_target)
+        book.update(p, rate >= qos_target)
+        results.append((p, rate, cost))
+
+    def key(item):
+        p, rate, cost = item
+        return (1, -cost) if rate >= qos_target else (0, rate)
+
+    results.sort(key=key, reverse=True)
+    for start, rate, cost in results:
+        if trace.n_samples >= budget:
+            break
+        sub = run_hill_climb(space, evaluate_qos, qos_target=qos_target,
+                             budget=budget - trace.n_samples, start=start,
+                             seed=seed)
+        for e in sub.evaluations:
+            if tuple(e.config) in book.visited:
+                continue
+            trace.record(e.config, e.qos_rate, e.cost, e.feasible)
+            book.update(e.config, e.feasible)
+        best = trace.best_feasible()
+        if best is not None:
+            break
+    return trace

@@ -1,0 +1,50 @@
+"""RIBBON's two-regime objective function (paper Eq. 2).
+
+                | (1/2) * R_sat(x) / T_qos                          if QoS violated
+        f(x) =  |
+                | 1/2 + (1/2) * (1 - sum_i p_i x_i / sum_i p_i m_i) otherwise
+
+Design intent (paper §4):
+  * any QoS-meeting configuration scores > any QoS-violating one
+    (violating: f < 1/2 since R_sat < T_qos; meeting: f >= 1/2);
+  * smooth in the violating region (guides toward higher satisfaction rate)
+    and in the meeting region (guides toward lower cost);
+  * normalized to [0, 1]; maximizing f minimizes cost subject to QoS.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ribbon_objective(qos_rate: float, cost: float, qos_target: float,
+                     max_cost: float) -> float:
+    """Scalar Eq. 2 (python floats, used by the orchestration loop)."""
+    if qos_rate < qos_target:
+        return 0.5 * qos_rate / qos_target
+    return 0.5 + 0.5 * (1.0 - cost / max_cost)
+
+
+@jax.jit
+def ribbon_objective_batch(qos_rates, costs, qos_target, max_cost):
+    """Vectorized Eq. 2 over arrays of (qos_rate, cost)."""
+    violating = 0.5 * qos_rates / qos_target
+    meeting = 0.5 + 0.5 * (1.0 - costs / max_cost)
+    return jnp.where(qos_rates < qos_target, violating, meeting)
+
+
+def naive_cost_objective(qos_rate: float, cost: float, qos_target: float,
+                         max_cost: float) -> float:
+    """The rejected single-metric objective the paper ablates against
+    ("such design did not work well"): cost-only reward for feasible configs,
+    flat zero otherwise.  Kept for the ablation benchmark.
+    """
+    if qos_rate < qos_target:
+        return 0.0
+    return 1.0 - cost / max_cost
+
+
+def is_feasible(qos_rate: float, qos_target: float) -> bool:
+    return bool(np.asarray(qos_rate) >= qos_target)

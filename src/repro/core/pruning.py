@@ -1,0 +1,60 @@
+"""Active pruning of the configuration lattice (paper §4).
+
+Two sound pruning rules derived from the objective's structure:
+
+1. **Dominance-down rule** — "When a configuration x_c is evaluated to violate
+   the QoS by more than a threshold θ (e.g. 1%), any configuration x_c' where
+   ∀i, c'_i <= c_i cannot meet the QoS" → add the entire down-set of x_c to ℙ.
+   (Fewer instances of every type can only serve slower.)
+
+2. **Cost rule** — a configuration priced at or above the best *feasible*
+   configuration found so far can never improve the objective: if it meets QoS
+   it is at best as expensive; if it violates QoS it scores < 1/2.
+
+The prune set is a boolean mask over the enumerated lattice and is applied as a
+hard constraint on the acquisition argmax (see acquisition.select_next).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .search_space import SearchSpace
+
+
+class PruneSet:
+    def __init__(self, space: SearchSpace):
+        self.space = space
+        self.lattice = space.enumerate()                     # (size, n)
+        self.costs = space.costs(self.lattice)               # (size,)
+        self.mask = np.zeros(space.size, dtype=bool)         # True = pruned
+
+    def __len__(self) -> int:
+        return int(self.mask.sum())
+
+    def prune_down_set(self, config) -> int:
+        """Rule 1: prune every config componentwise <= ``config``.
+        Returns how many new configs were pruned."""
+        c = np.asarray(config, dtype=np.int32)
+        dominated = np.all(self.lattice <= c[None, :], axis=1)
+        new = int(np.sum(dominated & ~self.mask))
+        self.mask |= dominated
+        return new
+
+    def prune_cost_at_least(self, cost: float) -> int:
+        """Rule 2: prune every config with price >= ``cost`` (the incumbent
+        feasible cost).  The incumbent itself is already in the sampled mask,
+        so pruning ties is safe."""
+        over = self.costs >= cost - 1e-12
+        new = int(np.sum(over & ~self.mask))
+        self.mask |= over
+        return new
+
+    def is_pruned(self, config) -> bool:
+        return bool(self.mask[self.space.index_of(config)])
+
+    def state_dict(self) -> dict:
+        return {"mask": self.mask.copy()}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.mask = np.asarray(state["mask"], dtype=bool).copy()

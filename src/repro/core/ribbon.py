@@ -1,0 +1,218 @@
+"""RibbonOptimizer — the paper's BO engine as an ask/tell loop.
+
+Components wired together exactly as §4 of the paper:
+  * GP surrogate with Matern 5/2 + integer-rounding kernel (gp.py),
+  * Eq. 2 two-regime objective (objective.py),
+  * EI acquisition over the enumerated lattice (acquisition.py),
+  * active pruning ℙ via dominance-down and incumbent-cost rules (pruning.py),
+  * load-change warm restart: estimation set 𝕊 with linear QoS rescaling.
+
+The optimizer is deliberately *black-box*: it only ever sees
+(configuration → measured QoS satisfaction rate); prices are static metadata.
+The evaluation itself (queueing simulator or the live serving engine) plugs in
+through ``tell``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .acquisition import select_next, select_next_cost_aware
+from .gp import GaussianProcess
+from .objective import ribbon_objective
+from .pruning import PruneSet
+from .search_space import SearchSpace
+from .trace import SearchTrace
+
+
+class RibbonOptimizer:
+    def __init__(self, space: SearchSpace, qos_target: float = 0.99,
+                 theta: float = 0.01, start=None, max_obs: int = 192,
+                 ei_tol: float = 1e-6, patience: int = 3,
+                 cost_aware: bool = False):
+        self.space = space
+        self.qos_target = float(qos_target)
+        self.theta = float(theta)
+        self.lattice = space.enumerate()
+        self.lattice_costs = space.costs(self.lattice)
+        self.prune = PruneSet(space)
+        self.gp = GaussianProcess(space.n_types, space.bounds, max_obs=max_obs)
+        self.sampled = np.zeros(space.size, dtype=bool)
+        self.trace = SearchTrace()
+        self.best_config: tuple[int, ...] | None = None
+        self.best_cost: float = np.inf
+        self.best_objective: float = -np.inf
+        self._init_queue: list[tuple[int, ...]] = []
+        start = tuple(space.bounds) if start is None else tuple(int(v) for v in start)
+        self._init_queue.append(start)
+        self.ei_tol = ei_tol
+        self.patience = patience
+        self.cost_aware = cost_aware
+        self._low_ei_streak = 0
+        self.exhausted = False
+
+    # ------------------------------------------------------------------ ask
+    def ask(self) -> tuple[int, ...] | None:
+        """Next configuration to evaluate (None when the space is exhausted).
+
+        Idempotent until the matching ``tell`` arrives.
+        """
+        while self._init_queue:
+            cand = self._init_queue[0]
+            idx = self.space.index_of(cand)
+            if not self.sampled[idx] and not self.prune.mask[idx]:
+                return cand
+            self._init_queue.pop(0)
+
+        open_mask = ~(self.sampled | self.prune.mask)
+        if not open_mask.any():
+            self.exhausted = True
+            return None
+
+        mean, std = self.gp.predict(self.lattice)
+        if self.cost_aware:
+            idx, ei = select_next_cost_aware(
+                mean, std, float(self.best_objective_observed()),
+                self.sampled, self.prune.mask,
+                jnp.asarray(self.lattice_costs, dtype=jnp.float32))
+        else:
+            idx, ei = select_next(mean, std,
+                                  float(self.best_objective_observed()),
+                                  self.sampled, self.prune.mask)
+        idx = int(idx)
+        ei_val = float(np.asarray(ei)[idx])
+        if ei_val <= self.ei_tol:
+            self._low_ei_streak += 1
+        else:
+            self._low_ei_streak = 0
+        return tuple(int(v) for v in self.lattice[idx])
+
+    # ----------------------------------------------------------------- tell
+    def tell(self, config, qos_rate: float, estimated: bool = False) -> None:
+        config = tuple(int(v) for v in config)
+        if self._init_queue and config == self._init_queue[0]:
+            self._init_queue.pop(0)
+        idx = self.space.index_of(config)
+        cost = float(self.lattice_costs[idx])
+        feasible = qos_rate >= self.qos_target
+        obj = ribbon_objective(qos_rate, cost, self.qos_target, self.space.max_cost)
+
+        self.sampled[idx] = True
+        self.gp.add(np.asarray(config, dtype=np.float32), obj)
+        self.trace.record(config, qos_rate, cost, feasible, estimated=estimated)
+
+        if feasible:
+            if obj > self.best_objective:
+                self.best_objective = obj
+                self.best_config = config
+                self.best_cost = cost
+            # Cost rule: nothing priced >= the incumbent can beat it.
+            self.prune.prune_cost_at_least(self.best_cost)
+        elif qos_rate < self.qos_target - self.theta:
+            # Dominance rule: the whole down-set of a >θ violator is infeasible.
+            self.prune.prune_down_set(config)
+
+    def best_objective_observed(self) -> float:
+        ys = [ribbon_objective(e.qos_rate, e.cost, self.qos_target,
+                               self.space.max_cost) for e in self.trace.evaluations]
+        return max(ys) if ys else 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.exhausted or self._low_ei_streak >= self.patience
+
+    # --------------------------------------------------- load-change restart
+    def warm_restart(self, new_qos_of_best: float) -> None:
+        """Re-seed the BO for a changed load (paper §4, "RIBBON promptly
+        responds to load changes").
+
+        ``new_qos_of_best`` is the *measured* QoS rate of the previous optimal
+        configuration under the new load.  We then:
+          1. collect 𝕊 = previously-explored configs whose old QoS rate was
+             <= the old optimum's old rate (they cannot satisfy the new load);
+          2. estimate their new QoS rates by linear rescaling
+             (rate_new ≈ rate_old * new_best_rate / old_best_rate);
+          3. restart the GP/prune/sampled state and feed the old best (real
+             measurement) + 𝕊 (estimates, flagged) as the starting posterior,
+             with dominance pruning applied to every >θ violator among them.
+        """
+        if self.best_config is None:
+            raise RuntimeError("warm_restart requires a previous optimum")
+        old_best = self.best_config
+        old_records = {e.config: e for e in self.trace.evaluations}
+        old_best_rate = old_records[old_best].qos_rate
+        scale = new_qos_of_best / max(old_best_rate, 1e-9)
+
+        # Strictly-worse only: configs *tied* with the old optimum (e.g. both
+        # at 100% satisfaction) may have more capacity than the optimum, so
+        # "works as good" is not evidence they fail the new load; the paper's
+        # own example uses a strictly lower rate (90% vs 99.9%).
+        estimate_set = [
+            e for e in self.trace.evaluations
+            if e.config != old_best and e.qos_rate < old_best_rate
+        ]
+
+        # Reset search state (the objective function changed with the load).
+        self.prune = PruneSet(self.space)
+        self.gp = GaussianProcess(self.space.n_types, self.space.bounds,
+                                  max_obs=self.gp.max_obs)
+        self.sampled = np.zeros(self.space.size, dtype=bool)
+        self.trace = SearchTrace()
+        self.best_config, self.best_cost = None, np.inf
+        self.best_objective = -np.inf
+        self._init_queue = []
+        self._low_ei_streak = 0
+        self.exhausted = False
+
+        self.tell(old_best, new_qos_of_best)
+        for e in estimate_set:
+            est_rate = float(np.clip(e.qos_rate * scale, 0.0, 1.0))
+            self.tell(e.config, est_rate, estimated=True)
+
+    # ------------------------------------------------------------ checkpoint
+    def state_dict(self) -> dict:
+        return {
+            "gp": self.gp.state_dict(),
+            "prune": self.prune.state_dict(),
+            "sampled": self.sampled.copy(),
+            "best_config": None if self.best_config is None else list(self.best_config),
+            "best_cost": self.best_cost,
+            "best_objective": self.best_objective,
+            "qos_target": self.qos_target,
+            "theta": self.theta,
+            "init_queue": [list(c) for c in self._init_queue],
+            "trace": [
+                [list(e.config), e.qos_rate, e.cost, e.feasible, e.estimated]
+                for e in self.trace.evaluations
+            ],
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.gp.load_state_dict(state["gp"])
+        self.prune.load_state_dict(state["prune"])
+        self.sampled = np.asarray(state["sampled"], dtype=bool).copy()
+        bc = state["best_config"]
+        self.best_config = None if bc is None else tuple(int(v) for v in bc)
+        self.best_cost = float(state["best_cost"])
+        self.best_objective = float(state["best_objective"])
+        self.qos_target = float(state["qos_target"])
+        self.theta = float(state["theta"])
+        self._init_queue = [tuple(int(v) for v in c) for c in state["init_queue"]]
+        self.trace = SearchTrace()
+        for cfg, rate, cost, feas, est in state["trace"]:
+            self.trace.record(cfg, rate, cost, feas, estimated=est)
+
+
+def run_ribbon(space: SearchSpace, evaluate_qos, qos_target: float = 0.99,
+               budget: int = 60, start=None, theta: float = 0.01,
+               cost_aware: bool = False) -> SearchTrace:
+    """Convenience runner: drive RibbonOptimizer against a QoS oracle."""
+    opt = RibbonOptimizer(space, qos_target=qos_target, start=start,
+                          theta=theta, cost_aware=cost_aware)
+    for _ in range(budget):
+        config = opt.ask()
+        if config is None or opt.done:
+            break
+        opt.tell(config, float(evaluate_qos(config)))
+    return opt.trace

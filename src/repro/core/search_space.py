@@ -1,0 +1,101 @@
+"""Integer configuration lattice for heterogeneous pool search.
+
+A pool configuration is an integer vector ``x = [x_1, ..., x_n]`` where ``x_i``
+is the number of instances (or serving cells) of type ``i``.  The search space
+is the full integer lattice ``prod_i {0, ..., m_i}`` bounded by the per-type
+upper bounds ``m_i`` (paper §4: the smallest count beyond which the QoS
+satisfaction rate stops improving).
+
+RIBBON's BO, the baselines, and the pruning logic all operate over this
+enumerated lattice: the spaces in the paper are small (1000s of configs for
+three types), so enumeration is both faithful and exact.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SearchSpace:
+    """Bounded integer lattice over ``n`` instance types."""
+
+    bounds: tuple[int, ...]               # m_i per type (inclusive upper bound)
+    prices: tuple[float, ...]             # p_i unit-time price per type
+
+    def __post_init__(self):
+        if len(self.bounds) != len(self.prices):
+            raise ValueError("bounds and prices must have the same length")
+        if any(m < 0 for m in self.bounds):
+            raise ValueError("bounds must be non-negative")
+        if any(p <= 0 for p in self.prices):
+            raise ValueError("prices must be positive")
+
+    @property
+    def n_types(self) -> int:
+        return len(self.bounds)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod([m + 1 for m in self.bounds]))
+
+    def enumerate(self) -> np.ndarray:
+        """All configurations, shape (size, n_types), int32.
+
+        Paper §4 ("RIBBON maintains a smooth distribution of configurations"):
+        within each dimension configurations are arranged in increasing
+        instance-count order, which `itertools.product` over ``range`` gives us
+        for free — this is the smooth per-dimension ordering the GP relies on.
+        """
+        grids = [range(m + 1) for m in self.bounds]
+        return np.array(list(itertools.product(*grids)), dtype=np.int32)
+
+    def costs(self, configs: np.ndarray) -> np.ndarray:
+        """Unit-time price of each configuration: sum_i p_i * x_i."""
+        return np.asarray(configs, dtype=np.float64) @ np.asarray(self.prices)
+
+    @property
+    def max_cost(self) -> float:
+        """sum_i p_i * m_i — the Eq. 2 normalizer."""
+        return float(np.dot(self.prices, self.bounds))
+
+    def normalize(self, configs: np.ndarray) -> np.ndarray:
+        """Map configs to [0, 1]^n for GP lengthscale conditioning."""
+        denom = np.maximum(np.asarray(self.bounds, dtype=np.float32), 1.0)
+        return np.asarray(configs, dtype=np.float32) / denom
+
+    def index_of(self, config) -> int:
+        """Row index of ``config`` in :meth:`enumerate` ordering."""
+        idx = 0
+        for x, m in zip(config, self.bounds):
+            if not (0 <= x <= m):
+                raise ValueError(f"config {config} outside bounds {self.bounds}")
+            idx = idx * (m + 1) + int(x)
+        return idx
+
+
+def estimate_upper_bounds(evaluate_qos, n_types: int, hard_cap: int = 24,
+                          tol: float = 1e-4) -> tuple[int, ...]:
+    """Estimate m_i per the paper: grow a homogeneous pool of type ``i`` until
+    the QoS satisfaction rate stops improving; m_i is the count at saturation.
+
+    ``evaluate_qos(config) -> float`` is the (expensive) QoS-rate oracle.
+    """
+    bounds = []
+    for i in range(n_types):
+        prev_rate = -1.0
+        m_i = 1
+        for count in range(1, hard_cap + 1):
+            config = [0] * n_types
+            config[i] = count
+            rate = float(evaluate_qos(config))
+            if rate <= prev_rate + tol:
+                m_i = count - 1
+                break
+            prev_rate = rate
+            m_i = count
+        bounds.append(max(m_i, 1))
+    return tuple(bounds)

@@ -1,0 +1,3 @@
+"""Data pipeline: synthetic + memmap token sources with prefetch."""
+from .pipeline import MemmapTokens, Prefetcher, SyntheticTokens
+__all__ = ["SyntheticTokens", "MemmapTokens", "Prefetcher"]

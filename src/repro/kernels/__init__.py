@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the serving hot path.
+
+Each kernel lives in <name>.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), with jit'd wrappers in ops.py and pure-jnp oracles in ref.py.
+Validated in interpret mode on CPU; identical call sites compile to Mosaic
+on TPU.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,90 @@
+"""Split-KV decode attention kernel (flash-decoding adapted to TPU).
+
+One new query token per sequence attends to a long KV cache.  On GPU,
+flash-decoding parallelizes over KV splits and combines partials with
+atomics/a second kernel; the TPU-native rethink: the KV-split axis is the
+innermost *sequential* grid dimension, so partial (m, l, acc) accumulate in
+VMEM scratch deterministically and the combine is a @pl.when epilogue — no
+atomics, no second kernel, same O(T) HBM traffic (the cache is streamed
+through VMEM exactly once).
+
+Validity masking comes from the ring-cache position table (pos >= 0), so the
+kernel serves both full and sliding-window caches.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float, block_k: int):
+    i_k = pl.program_id(1)
+
+    @pl.when(i_k == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                      # (G, D) query heads
+    k = k_ref[0]                                      # (bk, D)
+    v = v_ref[0]
+    valid = pos_ref[...] >= 0                         # (1, bk)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid, s, NEG_INF)                  # (G, bk)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(i_k == pl.num_programs(1) - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, pos, *, scale: float | None = None,
+                     block_k: int = 512, interpret: bool = False):
+    """q (B·KH, G, D) — the G query heads sharing each KV head;
+    k/v (B·KH, T, D); pos (T,) int32 slot-position table (-1 = empty).
+    Returns (B·KH, G, D)."""
+    bkh, g, d = q.shape
+    _, t, _ = k.shape
+    assert t % block_k == 0, (t, block_k)
+    if scale is None:
+        scale = d ** -0.5
+    grid = (bkh, t // block_k)
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda b, ik: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k), lambda b, ik: (0, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda b, ik: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bkh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, pos.reshape(1, t))

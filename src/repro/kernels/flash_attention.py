@@ -1,0 +1,112 @@
+"""FlashAttention-2-style prefill/train attention kernel (Pallas TPU).
+
+Design (TPU-native, not a CUDA port):
+  * grid = (B·H, S/block_q, T/block_k); the last grid axis is innermost and
+    sequential on TPU, so the online-softmax running state (m, l, acc) lives
+    in VMEM scratch with no atomics — the TPU grid IS the softmax loop;
+  * BlockSpec index maps implement GQA by mapping each query head's block to
+    its KV head's (B·KH) row, so KV tiles are DMA'd once per group;
+  * causal + sliding-window masking is computed from absolute positions via
+    iota inside the kernel (no (S,T) mask tensor in HBM);
+  * MXU alignment: block_q × block_k tiles (default 128×128) with the head
+    dim padded to a lane multiple by ops.py.
+
+Numerics: scores/softmax in fp32, accumulator fp32, output cast to q.dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, block_q: int, block_k: int, causal: bool,
+               window: int):
+    i_q = pl.program_id(1)
+    i_k = pl.program_id(2)
+
+    @pl.when(i_k == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                     # (bq, D)
+    k = k_ref[0]                                     # (bk, D)
+    v = v_ref[0]                                     # (bk, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = i_q * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (block_q, block_k), 0)
+    k_pos = i_k * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                              # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                           # (bq, bk)
+
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(i_k == pl.num_programs(2) - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q (BH, S, D); k/v (BKH, T, D) with BH = B·H, BKH = B·KH.
+
+    The (B,H)→(B,KH) GQA mapping is encoded in the K/V index maps.
+    S % block_q == 0 and T % block_k == 0 are required (ops.py pads).
+    """
+    bh, s, d = q.shape
+    bkh, t, _ = k.shape
+    assert bh % bkh == 0, (bh, bkh)
+    group = bh // bkh
+    if scale is None:
+        scale = d ** -0.5
+    grid = (bh, s // block_q, t // block_k)
+
+    kernel = functools.partial(_fa_kernel, scale=scale, block_q=block_q,
+                               block_k=block_k, causal=causal, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda b, iq, ik, g=group: (b // g, ik, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda b, iq, ik, g=group: (b // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,123 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles layout glue (B,S,H,D ↔ kernel-native collapsed layouts), lane
+padding of head dims to multiples of 128 (zero-padded QK dot and sliced PV
+output are exact), and block-size/sequence padding.  ``interpret=True``
+executes the kernel bodies in Python — the CPU-container validation mode;
+on TPU the same calls compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention as _decode_kernel
+from .embedding_bag import embedding_bag as _bag_kernel
+from .flash_attention import flash_attention as _fa_kernel
+from .ssd_scan import ssd_scan as _ssd_kernel
+
+LANE = 128
+
+
+def _pad_last(x, mult):
+    d = x.shape[-1]
+    pad = (-d) % mult
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, cfg)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=False):
+    """q (B,S,H,D); k/v (B,T,KH,D) → (B,S,H,D).  GQA-aware."""
+    b, s, h, d = q.shape
+    _, t, kh, _ = k.shape
+    scale = d ** -0.5
+    bq = min(block_q, s)
+    bk = min(block_k, t)
+    # sequence padding to block multiples (k-padding masked by positions)
+    s_pad = (-s) % bq
+    t_pad = (-t) % bk
+    qq = jnp.moveaxis(q, 2, 1).reshape(b * h, s, d)
+    kk = jnp.moveaxis(k, 2, 1).reshape(b * kh, t, d)
+    vv = jnp.moveaxis(v, 2, 1).reshape(b * kh, t, d)
+    if s_pad:
+        qq = jnp.pad(qq, ((0, 0), (0, s_pad), (0, 0)))
+    if t_pad:
+        kk = jnp.pad(kk, ((0, 0), (0, t_pad), (0, 0)))
+        vv = jnp.pad(vv, ((0, 0), (0, t_pad), (0, 0)))
+        # padded keys sit at positions > every query → masked by causal;
+        # for non-causal they would leak: forbid for now
+        assert causal or t_pad == 0, "non-causal needs t % block_k == 0"
+    qq, kk, vv = _pad_last(qq, LANE), _pad_last(kk, LANE), _pad_last(vv, LANE)
+    out = _fa_kernel(qq, kk, vv, causal=causal, window=window, scale=scale,
+                     block_q=bq, block_k=bk, interpret=interpret)
+    out = out[:, :s, :d].reshape(b, h, s, d)
+    return jnp.moveaxis(out, 1, 2)
+
+
+@partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k, v, pos, *, block_k=512, interpret=False):
+    """q (B,1,H,D); k/v (B,T,KH,D); pos (T,) → (B,1,H,D)."""
+    b, _, h, d = q.shape
+    _, t, kh, _ = k.shape
+    g = h // kh
+    scale = d ** -0.5
+    bk = min(block_k, t)
+    t_pad = (-t) % bk
+    # (B,1,H,D) → (B,KH,G,D) → (B·KH, G, D)
+    qq = q.reshape(b, kh, g, d).reshape(b * kh, g, d)
+    kk = jnp.moveaxis(k, 2, 1).reshape(b * kh, t, d)
+    vv = jnp.moveaxis(v, 2, 1).reshape(b * kh, t, d)
+    pp = pos
+    if t_pad:
+        kk = jnp.pad(kk, ((0, 0), (0, t_pad), (0, 0)))
+        vv = jnp.pad(vv, ((0, 0), (0, t_pad), (0, 0)))
+        pp = jnp.pad(pos, (0, t_pad), constant_values=-1)  # masked out
+    qq, kk, vv = _pad_last(qq, LANE), _pad_last(kk, LANE), _pad_last(vv, LANE)
+    out = _decode_kernel(qq, kk, vv, pp, scale=scale, block_k=bk,
+                         interpret=interpret)
+    out = out[..., :d].reshape(b, kh, g, d).reshape(b, 1, h, d)
+    return out
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a_log, b, c, *, chunk=128, interpret=False):
+    """Mamba2 SSD with the same contract as models.ssm.ssd_chunked:
+    x (B,L,H,P), dt (B,L,H) softplus'd, a_log (H,), b/c (B,L,G,N).
+    Returns y (B,L,H,P) and final state (B,H,P,N) fp32."""
+    bsz, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    ch = chunk if l % chunk == 0 else l
+    nc = l // ch
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    da = dt.astype(jnp.float32) * a                       # (B,L,H)
+    xdt = x * dt[..., None].astype(x.dtype)
+
+    def arrange(z):                                       # (B,L,H,·)→(B,H,nc,ch,·)
+        z = jnp.moveaxis(z, 2, 1)                         # (B,H,L,·)
+        return z.reshape(z.shape[0], z.shape[1], nc, ch, *z.shape[3:])
+
+    bh = jnp.repeat(b, rep, axis=2)
+    chh = jnp.repeat(c, rep, axis=2)
+    da_arr = jnp.moveaxis(da, 2, 1).reshape(bsz, h, nc, ch)
+    y, state = _ssd_kernel(arrange(xdt), da_arr, arrange(bh), arrange(chh),
+                           interpret=interpret)
+    y = jnp.moveaxis(y.reshape(bsz, h, l, p), 1, 2)       # (B,L,H,P)
+    return y, jnp.swapaxes(state, -1, -2)                 # (B,H,P,N)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(indices, table, weights=None, *, interpret=False):
+    """indices (n_bags, bag_size) int32; table (V,D) → (n_bags, D)."""
+    d = table.shape[-1]
+    tt = _pad_last(table, LANE)
+    out = _bag_kernel(indices, tt, weights, interpret=interpret)
+    return out[:, :d]

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every kernel (the correctness contract).
+
+Deliberately naive: full score matrices, O(L) sequential state recurrences,
+plain gathers — nothing clever, so they are easy to audit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q (BH,S,D); k/v (BKH,T,D); GQA via BH = BKH·G."""
+    bh, s, d = q.shape
+    bkh, t, _ = k.shape
+    g = bh // bkh
+    if scale is None:
+        scale = d ** -0.5
+    k = jnp.repeat(k, g, axis=0)
+    v = jnp.repeat(v, g, axis=0)
+    scores = jnp.einsum("bsd,btd->bst", q, k).astype(jnp.float32) * scale
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bst,btd->bsd", probs, v)
+
+
+def decode_attention_ref(q, k, v, pos, *, scale=None):
+    """q (BKH,G,D); k/v (BKH,T,D); pos (T,) validity table."""
+    d = q.shape[-1]
+    if scale is None:
+        scale = d ** -0.5
+    scores = jnp.einsum("bgd,btd->bgt", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(pos[None, None, :] >= 0, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bgt,btd->bgd", probs, v)
+
+
+def ssd_scan_ref(xdt, da, b, c):
+    """Sequential O(L) SSD recurrence.  xdt (B,H,nc,Q,P) already dt-scaled,
+    da (B,H,nc,Q) log decays, b/c (B,H,nc,Q,N).
+    Returns y (B,H,nc,Q,P), final state (B,H,N,P) fp32."""
+    bsz, h, nc, q, p = xdt.shape
+    n = b.shape[-1]
+    x2 = xdt.reshape(bsz, h, nc * q, p).astype(jnp.float32)
+    da2 = da.reshape(bsz, h, nc * q).astype(jnp.float32)
+    b2 = b.reshape(bsz, h, nc * q, n).astype(jnp.float32)
+    c2 = c.reshape(bsz, h, nc * q, n).astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dat, bt, ct = inp          # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        state = state * jnp.exp(dat)[..., None, None] + \
+            jnp.einsum("bhn,bhp->bhnp", bt, xt)
+        y = jnp.einsum("bhn,bhnp->bhp", ct, state)
+        return state, y
+
+    s0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    final, ys = jax.lax.scan(
+        step, s0, (jnp.moveaxis(x2, 2, 0), jnp.moveaxis(da2, 2, 0),
+                   jnp.moveaxis(b2, 2, 0), jnp.moveaxis(c2, 2, 0)))
+    y = jnp.moveaxis(ys, 0, 2).reshape(bsz, h, nc, q, p).astype(xdt.dtype)
+    return y, final
+
+
+def embedding_bag_ref(indices, table, weights=None):
+    rows = table[indices]                       # (n_bags, bag_size, D)
+    if weights is not None:
+        rows = rows * weights[..., None]
+    return rows.sum(axis=1).astype(table.dtype)

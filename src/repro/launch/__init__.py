@@ -1,0 +1,1 @@
+"""Launch layer: meshes, sharding policy, dry-run, train/serve drivers."""

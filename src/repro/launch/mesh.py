@@ -1,0 +1,29 @@
+"""Production meshes (spec'd in the dry-run contract).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  In a 512-placeholder-device dry-run process the single-pod 16x16 mesh
+is built from the first 256 devices.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — run "
+            "under dryrun.py (XLA_FLAGS=--xla_force_host_platform_device_count=512)")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_local_mesh():
+    """1-device mesh with the production axis names (smoke tests, examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])

@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct input specs for every (architecture × input-shape) cell.
+
+Nothing here allocates: params/opt-state/cache specs come from
+jax.eval_shape over the model init functions, inputs are synthesized
+ShapeDtypeStructs — the pattern the dry-run contract requires.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, get_arch
+from ..models.transformer import get_model
+from ..optim import adamw
+
+PARAM_DTYPE = jnp.bfloat16
+CACHE_DTYPE = jnp.bfloat16
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def n_microbatches(cfg, shape_name: str) -> int:
+    """Grad-accumulation depth for train cells: bounds per-microbatch logits
+    (B/n · S · V/model_shard fp32) and MoE dispatch buffers."""
+    if shape_name != "train_4k":
+        return 1
+    return 8
+
+
+def _extra_spec(cfg, batch):
+    if cfg.family == "vlm":
+        return sds((batch, cfg.n_patches, cfg.d_model), PARAM_DTYPE)
+    if cfg.family == "encdec":
+        return sds((batch, cfg.encoder_seq, cfg.d_model), PARAM_DTYPE)
+    return None
+
+
+def input_specs(arch: str, shape: str) -> dict:
+    """Model-input ShapeDtypeStructs for one cell (no params/cache)."""
+    cfg = get_arch(arch)
+    seq, gbatch, kind = SHAPES[shape]
+    if kind == "train":
+        batch = {"tokens": sds((gbatch, seq), jnp.int32),
+                 "labels": sds((gbatch, seq), jnp.int32)}
+        extra = _extra_spec(cfg, gbatch)
+        if extra is not None:
+            batch["extra"] = extra
+        return batch
+    if kind == "prefill":
+        batch = {"tokens": sds((gbatch, seq), jnp.int32)}
+        extra = _extra_spec(cfg, gbatch)
+        if extra is not None:
+            batch["extra"] = extra
+        return batch
+    # decode: one new token against a seq-length cache
+    return {"tokens": sds((gbatch, 1), jnp.int32)}
+
+
+def param_specs(api) -> dict:
+    return jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0),
+                                                  PARAM_DTYPE))
+
+
+def opt_specs(param_sds) -> adamw.AdamWState:
+    return jax.eval_shape(adamw.init, param_sds)
+
+
+def cache_specs(api, arch: str, shape: str):
+    cfg = api.cfg
+    seq, gbatch, kind = SHAPES[shape]
+    assert kind == "decode"
+    return jax.eval_shape(
+        lambda: api.init_cache(gbatch, seq, CACHE_DTYPE))

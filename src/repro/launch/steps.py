@@ -1,0 +1,89 @@
+"""Step builders: train (microbatched grad-accumulation + AdamW), prefill,
+decode — the three lowering targets of the dry-run contract.
+
+train_step handles the large-vocab memory wall by scanning over microbatches
+(per-microbatch logits are the live peak; remat inside the model bounds layer
+activations).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import ModelApi
+from ..optim import adamw
+
+
+def make_train_step(api: ModelApi, n_micro: int, lr: float = 3e-4,
+                    param_dtype=None, grad_shardings=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    batch = {"tokens": (B,S), "labels": (B,S)[, "extra": (B,T,D)]}; the batch
+    is split into n_micro microbatches along B, gradients accumulate in fp32.
+    `grad_shardings` (a NamedSharding pytree matching params) pins the
+    accumulated gradients to the parameter layout so FSDP weight-gradient
+    reductions lower to reduce-scatter rather than all-reduce.
+    """
+    def train_step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        extra = batch.get("extra")
+        b = tokens.shape[0]
+        mb = b // n_micro
+        mtok = tokens.reshape(n_micro, mb, *tokens.shape[1:])
+        mlab = labels.reshape(n_micro, mb, *labels.shape[1:])
+        mext = (extra.reshape(n_micro, mb, *extra.shape[1:])
+                if extra is not None else None)
+
+        def loss_of(p, tok, lab, ext):
+            return api.loss(p, tok, lab, ext)
+
+        def micro(acc, xs):
+            if mext is None:
+                tok, lab = xs
+                ext = None
+            else:
+                tok, lab, ext = xs
+            loss, g = jax.value_and_grad(loss_of)(params, tok, lab, ext)
+            g32 = jax.tree.map(lambda a: a.astype(jnp.float32), g)
+            if grad_shardings is not None:
+                g32 = jax.tree.map(jax.lax.with_sharding_constraint, g32,
+                                   grad_shardings)
+            acc = jax.tree.map(jnp.add, acc, g32)
+            return acc, loss
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        xs = (mtok, mlab) if mext is None else (mtok, mlab, mext)
+        if n_micro == 1:
+            grads, losses = micro(zeros, jax.tree.map(lambda a: a[0], xs))
+            losses = losses[None]
+        else:
+            grads, losses = jax.lax.scan(micro, zeros, xs)
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+
+        gnorm = jnp.sqrt(sum(jnp.vdot(g, g)
+                             for g in jax.tree.leaves(grads)).real)
+        new_params, new_opt = adamw.update(grads, opt_state, lr=lr,
+                                           param_dtype=param_dtype)
+        return new_params, new_opt, {"loss": losses.mean(),
+                                     "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(api: ModelApi, max_len: int):
+    def prefill_step(params, batch):
+        return api.prefill(params, batch["tokens"], max_len,
+                           batch.get("extra"))
+    return prefill_step
+
+
+def make_decode_step(api: ModelApi):
+    def serve_step(params, cache, tokens):
+        """One new token for every sequence against the standing cache."""
+        logits, cache = api.decode_step(params, cache, tokens)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+    return serve_step

@@ -1,0 +1,90 @@
+"""Decode-time caches as pytrees (stacked over layers for scan).
+
+Variants (DESIGN.md §4):
+  * full KV cache       — (L,B,W,K,hd) with absolute-position slots
+  * sliding-window ring — same arrays, slot = t mod W (W = window)
+  * MLA latent cache    — (L,B,W,r) compressed latents + (L,B,W,rd) rope keys
+  * SSM state           — (L,B,H,P,N) float32 state + conv carry
+  * enc-dec             — self cache + precomputed cross K/V
+
+`pos` is a shared (W,) table of absolute positions per slot (-1 = empty);
+`t` the global decode step.  All sequences in the serving batch decode in
+lock-step (continuous batching groups same-phase requests per cell).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def init_kv_cache(cfg, n_layers, batch, window, dtype=jnp.bfloat16,
+                  n_kv=None, d_head=None, quant=None):
+    k = n_kv if n_kv is not None else cfg.n_kv_heads
+    hd = d_head if d_head is not None else cfg.d_head
+    if quant is None:
+        quant = getattr(cfg, "kv_quant_int8", False)
+    if quant:
+        return {
+            "k": jnp.zeros((n_layers, batch, window, k, hd), jnp.int8),
+            "v": jnp.zeros((n_layers, batch, window, k, hd), jnp.int8),
+            "k_scale": jnp.zeros((n_layers, batch, window, k), dtype),
+            "v_scale": jnp.zeros((n_layers, batch, window, k), dtype),
+            "pos": jnp.full((window,), -1, jnp.int32),
+            "t": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((n_layers, batch, window, k, hd), dtype),
+        "v": jnp.zeros((n_layers, batch, window, k, hd), dtype),
+        "pos": jnp.full((window,), -1, jnp.int32),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def quantize_kv(x):
+    """x (..., hd) → (int8 values, per-vector scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(x.dtype)
+
+
+def dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+            ).astype(dtype)
+
+
+def init_mla_cache(cfg, n_layers, batch, window, dtype=jnp.bfloat16):
+    return {
+        "ckv": jnp.zeros((n_layers, batch, window, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((n_layers, batch, window, cfg.qk_rope_dim), dtype),
+        "pos": jnp.full((window,), -1, jnp.int32),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_ssm_cache(cfg, n_layers, batch):
+    h, p, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "state": jnp.zeros((n_layers, batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, cfg.conv_kernel - 1, conv_dim),
+                          jnp.float32),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_window(cfg, max_len: int) -> int:
+    """Ring size: the sliding window if the arch has one, else max_len."""
+    if cfg.sliding_window > 0:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def ring_slot(t, window):
+    return jnp.mod(t, window)
+
+
+def write_slot(cache_layer, slot, value):
+    """cache_layer (B,W,...) ← value (B,1,...) at slot."""
+    return cache_layer.at[:, slot].set(value[:, 0])

@@ -1,0 +1,229 @@
+"""Mamba2 (SSD — state-space duality) layer: chunked scan + stateful decode.
+
+Implements the minimal discrete SSD recurrence of Dao & Gu (arXiv:2405.21060):
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t^T      (per head)
+    y_t = C_t · h_t + D ⊙ x_t
+
+Training/prefill uses the chunked form: quadratic attention-like term inside
+chunks + a cross-chunk state recurrence (sub-quadratic overall).  The pure-jnp
+implementation here is the oracle for kernels/ssd_scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..launch.sharding import constrain
+from .layers import dense, rmsnorm
+
+
+def init_ssm_params(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_in = cfg.d_inner
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    nh = cfg.ssm_nheads
+    conv_dim = d_in + 2 * g * n
+    ks = jax.random.split(key, 5)
+    s = d ** -0.5
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * d_in + 2 * g * n + nh))
+                    * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, conv_dim))
+                   * cfg.conv_kernel ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "ssm_norm": jnp.ones((d_in,), dtype),
+        "out_proj": (jax.random.normal(ks[4], (d_in, d)) * d_in ** -0.5
+                     ).astype(dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_in = cfg.d_inner
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:2 * d_in + 2 * g * n]
+    dt = zxbcdt[..., 2 * d_in + 2 * g * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, carry=None):
+    """Depthwise causal conv1d.  xbc (B,L,C); conv_w (K,C).
+    If carry (B,K-1,C) is given, it prefixes the sequence (decode/prefill
+    continuation) and the new carry is returned."""
+    k = conv_w.shape[0]
+    if carry is None:
+        carry = jnp.zeros(xbc.shape[:1] + (k - 1,) + xbc.shape[2:], xbc.dtype)
+    padded = jnp.concatenate([carry, xbc], axis=1)
+    out = sum(padded[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(k))
+    new_carry = padded[:, -(k - 1):] if k > 1 else carry
+    return out + conv_b, new_carry
+
+
+def segsum(x):
+    """Lower-triangular cumulative segment sums: out[..., i, j] = sum_{j<k<=i} x_k.
+
+    x (..., T) → (..., T, T) with -inf above the diagonal."""
+    t = x.shape[-1]
+    xx = jnp.broadcast_to(x[..., None, :], x.shape + (t,))
+    xx = jnp.swapaxes(xx, -1, -2)          # (..., T(i), T(k)) value x_k
+    mask = jnp.tril(jnp.ones((t, t), bool), k=-1)
+    xx = jnp.where(mask, xx, 0.0)
+    out = jnp.cumsum(xx, axis=-2)
+    valid = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(valid, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk: int):
+    """Chunked SSD scan (oracle for the Pallas kernel).
+
+    x  (B,L,H,P)   inputs per head
+    dt (B,L,H)     positive step sizes (already softplus'd)
+    a_log (H,)     A = -exp(a_log)
+    b,c (B,L,G,N)  input/output projections (groups broadcast onto heads)
+    Returns y (B,L,H,P) and final state (B,H,P,N).
+    """
+    bsz, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert l % chunk == 0, f"seq {l} not divisible by chunk {chunk}"
+    nc = l // chunk
+    rep = h // g
+
+    a = -jnp.exp(a_log.astype(jnp.float32))              # (H,)
+    da = dt.astype(jnp.float32) * a                      # (B,L,H) log-decay
+    xdt = x * dt[..., None].astype(x.dtype)              # dt-scaled input
+
+    # reshape into chunks
+    xc = xdt.reshape(bsz, nc, chunk, h, p)
+    dac = da.reshape(bsz, nc, chunk, h)
+    bc_ = b.reshape(bsz, nc, chunk, g, n)
+    cc_ = c.reshape(bsz, nc, chunk, g, n)
+    bh = jnp.repeat(bc_, rep, axis=3)                    # (B,nc,Q,H,N)
+    ch = jnp.repeat(cc_, rep, axis=3)
+
+    da_t = jnp.moveaxis(dac, -1, 2)                      # (B,nc,H,Q)
+    lmat = jnp.exp(segsum(da_t))                         # (B,nc,H,Q,Q)
+
+    # 1) intra-chunk (diagonal blocks)
+    scores = jnp.einsum("bzqhn,bzkhn->bzhqk", ch, bh).astype(jnp.float32)
+    y_diag = jnp.einsum("bzhqk,bzkhp->bzqhp",
+                        (scores * lmat).astype(x.dtype), xc)
+
+    # 2) per-chunk final states
+    da_cum = jnp.cumsum(da_t, axis=-1)                   # (B,nc,H,Q)
+    decay_to_end = jnp.exp(da_cum[..., -1:] - da_cum)    # (B,nc,H,Q)
+    states = jnp.einsum("bzqhn,bzhq,bzqhp->bzhpn",
+                        bh, decay_to_end.astype(bh.dtype), xc)
+
+    # 3) inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(da_cum[..., -1])               # (B,nc,H)
+
+    def step(h_prev, inputs):
+        s_z, dec_z = inputs
+        h_new = h_prev * dec_z[..., None, None] + s_z
+        return h_new, h_prev
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(states.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (B,nc,H,P,N)
+
+    # 4) contribution of carried-in states
+    state_decay = jnp.exp(da_cum)                        # (B,nc,H,Q)
+    y_off = jnp.einsum("bzqhn,bzhpn,bzhq->bzqhp",
+                       ch.astype(jnp.float32), prev_states, state_decay)
+
+    y = y_diag.astype(jnp.float32) + y_off
+    return y.reshape(bsz, l, h, p).astype(x.dtype), final
+
+
+def ssm_forward(params, x, cfg, carry=None):
+    """Full-sequence Mamba2 block.  x (B,L,D).
+
+    carry = None (fresh) or dict(state, conv) for chunked continuation.
+    Returns (out (B,L,D), new_carry)."""
+    bsz, l, d = x.shape
+    h, p, n, g = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    zxbcdt = dense(x, params["in_proj"])
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    conv_carry = None if carry is None else carry["conv"]
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_carry)
+    xbc = jax.nn.silu(xbc)
+    x_in = xbc[..., :cfg.d_inner].reshape(bsz, l, h, p)
+    b = xbc[..., cfg.d_inner:cfg.d_inner + g * n].reshape(bsz, l, g, n)
+    c = xbc[..., cfg.d_inner + g * n:].reshape(bsz, l, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    # chunk size must divide L; fall back to full-length single chunk
+    chunk = cfg.ssm_chunk if l % cfg.ssm_chunk == 0 else l
+    y, state = ssd_chunked(x_in, dt, params["A_log"], b, c, chunk)
+    y = y + params["D"].astype(x.dtype)[:, None] * x_in
+    y = y.reshape(bsz, l, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), params["ssm_norm"], cfg.norm_eps)
+    out = dense(y, params["out_proj"])
+    new_carry = {"state": state, "conv": new_conv}
+    return constrain(out, "batch", None, None), new_carry
+
+
+def ssm_decode_step(params, x, cfg, carry):
+    """Single-token recurrent step.  x (B,1,D); carry dict(state (B,H,P,N)
+    float32, conv (B,K-1,convdim))."""
+    bsz = x.shape[0]
+    h, p, n, g = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    zxbcdt = dense(x, params["in_proj"])
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 carry["conv"])
+    xbc = jax.nn.silu(xbc)[:, 0]                          # (B,convdim)
+    x_in = xbc[..., :cfg.d_inner].reshape(bsz, h, p)
+    b = xbc[..., cfg.d_inner:cfg.d_inner + g * n].reshape(bsz, g, n)
+    c = xbc[..., cfg.d_inner + g * n:].reshape(bsz, g, n)
+    rep = h // g
+    bh = jnp.repeat(b, rep, axis=1)                       # (B,H,N)
+    ch = jnp.repeat(c, rep, axis=1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * a)                               # (B,H)
+    state = carry["state"] * decay[..., None, None] + jnp.einsum(
+        "bhp,bhn,bh->bhpn", x_in.astype(jnp.float32), bh.astype(jnp.float32), dt)
+    y = jnp.einsum("bhpn,bhn->bhp", state, ch.astype(jnp.float32))
+    y = y + params["D"][:, None] * x_in.astype(jnp.float32)
+    y = y.reshape(bsz, 1, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["ssm_norm"], cfg.norm_eps)
+    out = dense(y, params["out_proj"])
+    return out, {"state": state, "conv": new_conv}
+
+
+def ssd_reference_sequential(x, dt, a_log, b, c):
+    """O(L) sequential reference (token-by-token recurrence) used to validate
+    the chunked form."""
+    bsz, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    bh = jnp.repeat(b, rep, axis=2).astype(jnp.float32)
+    ch = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * a)                           # (B,H)
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn", xt, bt, dtt)
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    s0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final, ys = jax.lax.scan(step, s0, (jnp.moveaxis(x32, 1, 0),
+                                        jnp.moveaxis(dt32, 1, 0),
+                                        jnp.moveaxis(bh, 1, 0),
+                                        jnp.moveaxis(ch, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final

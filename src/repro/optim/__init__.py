@@ -1,0 +1,3 @@
+"""Optimizers (pure JAX; no optax offline)."""
+from . import adamw
+__all__ = ["adamw"]

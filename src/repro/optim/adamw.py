@@ -1,0 +1,66 @@
+"""AdamW with fp32 master weights (optax is not available offline).
+
+The optimizer state holds fp32 (master, m, v); model params may be bf16 —
+gradients then all-reduce in bf16 (the framework's gradient-compression path:
+half the DP collective bytes) while the update itself stays fp32.  ZeRO-1
+style sharding of the state over the 'data' axis is applied by the launch
+layer via out_shardings (see sharding.opt_state_shardings).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    master: dict     # fp32 copy of params
+    m: dict
+    v: dict
+
+
+def init(params) -> AdamWState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def update(grads, state: AdamWState, lr=3e-4, b1=0.9, b2=0.95, eps=1e-8,
+           weight_decay=0.1, param_dtype=None):
+    """Returns (new_params, new_state).  grads may be low-precision; moments
+    accumulate in fp32."""
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(g, master, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / c1
+        vhat = v / c2
+        new_master = master - lr * (mhat / (jnp.sqrt(vhat) + eps)
+                                    + weight_decay * master)
+        return new_master, m, v
+
+    flat = jax.tree.map(upd, grads, state.master, state.m, state.v,
+                        is_leaf=lambda x: isinstance(x, jnp.ndarray))
+    new_master = jax.tree.map(lambda t3: t3[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t3: t3[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t3: t3[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    dtype_of = (lambda mp: mp.astype(param_dtype)) if param_dtype else (lambda mp: mp)
+    new_params = jax.tree.map(dtype_of, new_master)
+    return new_params, AdamWState(step=step, master=new_master, m=new_m,
+                                  v=new_v)

@@ -1,0 +1,5 @@
+"""Roofline analysis from dry-run artifacts."""
+from .analysis import (HBM_BW, ICI_BW, PEAK_FLOPS, RooflineTerms,
+                       collective_bytes, count_params, model_flops)
+__all__ = ["RooflineTerms", "collective_bytes", "count_params", "model_flops",
+           "PEAK_FLOPS", "HBM_BW", "ICI_BW"]

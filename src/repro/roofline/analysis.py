@@ -1,0 +1,173 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware constants (TPU v5e-like target):
+    197 TFLOP/s bf16 per chip · 819 GB/s HBM · ~50 GB/s/link ICI.
+
+Terms (per the dry-run contract; HLO numbers from the per-device SPMD module,
+so the three formulas reduce to per-device quantities over per-chip rates):
+
+    compute    = HLO_FLOPs_global   / (chips × peak FLOP/s) = flops_dev / peak
+    memory     = HLO_bytes_global   / (chips × HBM bw)      = bytes_dev / bw
+    collective = coll_bytes_global  / (chips × link bw)     = coll_dev  / link
+
+collective bytes are NOT in cost_analysis(): we parse the compiled HLO text
+and sum operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+# shaped operand like  bf16[128,1024]{1,0}  or  f32[] or s32[5]
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# a collective instruction line:  %x = TYPE op-name(operands...)
+_INSTR_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum of operand bytes per collective op kind (per-device module)."""
+    out: dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if kind.endswith("-done)"):
+            continue
+        # operand shapes: everything after the op-name's opening paren
+        args = line[m.end():]
+        total = 0
+        for sm in _SHAPE_RE.finditer(args):
+            total += _shape_bytes(sm.group(1), sm.group(2))
+        out[kind] += total
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_per_device: float
+    n_chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the bound set by the dominant term that is the
+        compute term (useful-compute efficiency upper bound)."""
+        if self.bound_time_s == 0:
+            return 0.0
+        return self.compute_s / self.bound_time_s
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_per_device": self.collective_per_device,
+            "n_chips": self.n_chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, shape_kind: str, n_tokens: int) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) for training,
+    2·N·D for inference forward."""
+    n_params = count_params(cfg, active_only=True)
+    mult = 6.0 if shape_kind == "train" else 2.0
+    return mult * n_params * n_tokens
+
+
+def count_params(cfg, active_only: bool = False) -> float:
+    """Analytical parameter count (active params only when requested)."""
+    d, v, l = cfg.d_model, cfg.vocab_size, cfg.n_layers
+    total = 2 * v * d                      # embed + head
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        d_in = cfg.d_inner
+        g, n = cfg.ssm_ngroups, cfg.ssm_state
+        nh = cfg.ssm_nheads
+        per = d * (2 * d_in + 2 * g * n + nh) + d_in * d \
+            + cfg.conv_kernel * (d_in + 2 * g * n)
+        n_mamba = l if cfg.family == "ssm" else l
+        total += n_mamba * per
+        if cfg.family == "hybrid":
+            h = cfg.n_heads * cfg.d_head
+            kvd = cfg.n_kv_heads * cfg.d_head
+            total += d * h + 2 * d * kvd + h * d + 3 * d * cfg.d_ff
+        return total
+    h = cfg.n_heads * cfg.d_head
+    kvd = cfg.n_kv_heads * cfg.d_head
+    if cfg.attention == "mla":
+        attn = (d * cfg.q_lora_rank
+                + cfg.q_lora_rank * cfg.n_heads * (cfg.qk_nope_dim + cfg.qk_rope_dim)
+                + d * cfg.kv_lora_rank + d * cfg.qk_rope_dim
+                + cfg.kv_lora_rank * cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim)
+                + cfg.n_heads * cfg.v_head_dim * d)
+    else:
+        attn = d * h + 2 * d * kvd + h * d
+    if cfg.is_moe:
+        e_used = cfg.top_k if active_only else cfg.n_experts
+        ff = 3 * d * cfg.expert_ff * e_used + d * cfg.n_experts  # + router
+    else:
+        ff = 3 * d * cfg.d_ff
+    n_dec = l
+    total += n_dec * (attn + ff)
+    if cfg.family == "encdec":
+        total += cfg.n_encoder_layers * (attn + 2 * d * cfg.d_ff) \
+            + l * (d * h + 2 * d * kvd + h * d)   # cross attention
+    return total

@@ -1,0 +1,400 @@
+"""Trip-count-aware HLO accounting.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of
+trip count (verified experimentally), so for scan-over-layers models it
+underestimates FLOPs/bytes/collectives by ~n_layers.  This walker parses the
+compiled HLO text, builds the computation call graph (while → body×trip,
+fusion/call → ×1), infers each loop's trip count from the integer constant in
+its condition computation (the jax scan pattern ``i < N``), and accumulates:
+
+  * flops            — 2·M·N·K over every ``dot`` (batch dims included)
+  * hbm_bytes        — Σ (operand + result bytes) of top-level instructions
+                       (fusion-internal ops excluded: fused ops don't touch
+                       HBM; control ops excluded)
+  * collective operand bytes per kind (the dry-run contract's number), and
+  * collective wire bytes (ring-model coefficients: all-reduce 2x operand,
+    all-gather 1x result, reduce-scatter 1x operand, all-to-all /
+    collective-permute 1x operand) — used for the roofline collective term.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_OP_RE = re.compile(r"\s*([a-z][a-z0-9\-]*)\(")
+
+
+def _parse_instr_line(line: str):
+    """Returns (name, type_str, op, rest_after_open_paren) or None.
+
+    The result type may be a tuple containing `/*index=N*/` comments (which
+    contain '='), so the type is scanned with balanced parens rather than
+    regexed."""
+    m = _INSTR_HEAD_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    if i >= len(line):
+        return None
+    if line[i] == "(":            # tuple type: scan to balanced close
+        depth = 0
+        j = i
+        while j < len(line):
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        type_str = line[i:j + 1]
+        k = j + 1
+    else:                          # array type: dtype[dims]{layout}
+        tm = re.match(r"[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?", line[i:])
+        if not tm:
+            return None
+        type_str = tm.group(0)
+        k = i + tm.end()
+    om = _OP_RE.match(line, k)
+    if not om:
+        return None
+    return name, type_str, om.group(1), line[om.end():]
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+CONTROL_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "add-dependency", "partition-id",
+               "replica-id"}
+COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute"}
+
+# Ops that materialize HBM traffic on the TPU target.  The CPU backend leaves
+# elementwise chains unfused at top level; on TPU they fuse into neighboring
+# dots/fusions, so only these count toward the memory roofline term
+# (documented approximation — see module docstring).
+MATERIALIZING_OPS = {"dot", "fusion", "convolution", "dynamic-update-slice",
+                     "dynamic-slice", "copy", "reduce", "reduce-window",
+                     "sort", "gather", "scatter", "concatenate", "pad",
+                     "transpose", "iota", "rng-bit-generator", "custom-call"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        nbytes = _DTYPE_BYTES.get(m.group(1))
+        if nbytes is None:
+            continue
+        n = 1
+        dims = m.group(2)
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def _dims_of(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: list[str]
+    attrs: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list[Instr] = field(default_factory=list)
+    shapes: dict[str, str] = field(default_factory=dict)
+
+
+def _split_operands(rest: str) -> tuple[list[str], str]:
+    """rest starts right after the op's '('.  Returns (operand names, attrs)."""
+    depth = 1
+    i = 0
+    while i < len(rest) and depth > 0:
+        c = rest[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+        i += 1
+    inner, attrs = rest[:i - 1], rest[i:]
+    names = re.findall(r"%([\w.\-]+)", inner)
+    return names, attrs
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    current: Computation | None = None
+    entry_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and ("->" in line) and line.endswith("{"):
+            m = _COMP_RE.match(line.strip())
+            if m:
+                current = Computation(m.group(1))
+                comps[current.name] = current
+                if line.startswith("ENTRY"):
+                    entry_name = current.name
+                continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        parsed = _parse_instr_line(line)
+        if parsed is None:
+            continue
+        name, type_str, op, rest = parsed
+        operands, attrs = _split_operands(rest)
+        current.instrs.append(Instr(name, type_str, op, operands, attrs,
+                                    line))
+        current.shapes[name] = type_str
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """jax loops lower to `i < N` with N a constant inside the condition."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.search(r"constant\((\d+)\)", ins.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    """Execution count of each computation starting from ENTRY."""
+    mult: dict[str, float] = {}
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {name: 1.0 for name in comps}
+
+    def visit(comp: Computation, m: float):
+        mult[comp.name] = mult.get(comp.name, 0.0) + m
+        for ins in comp.instrs:
+            if ins.op == "while":
+                bm = re.search(r"body=%([\w.\-]+)", ins.attrs)
+                cm = re.search(r"condition=%([\w.\-]+)", ins.attrs)
+                if bm and cm and cm.group(1) in comps and bm.group(1) in comps:
+                    trips = _trip_count(comps[cm.group(1)])
+                    visit(comps[bm.group(1)], m * trips)
+                    visit(comps[cm.group(1)], m * (trips + 1))
+            else:
+                for key in ("calls", "to_apply", "true_computation",
+                            "false_computation"):
+                    for cm2 in re.finditer(key + r"=%([\w.\-]+)", ins.attrs):
+                        child = comps.get(cm2.group(1))
+                        if child is not None:
+                            visit(child, m)
+    visit(entry, 1.0)
+    return mult
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    lhs_dims = _dims_of(comp.shapes.get(ins.operands[0], ""))
+    out_dims = _dims_of(ins.type_str)
+    if not lhs_dims:
+        return 0.0
+    contracting = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    k = 1
+    if contracting and contracting.group(1):
+        for d in contracting.group(1).split(","):
+            k *= lhs_dims[int(d)]
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    return 2.0 * n_out * k
+
+
+@dataclass
+class HloAccounting:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_operand_bytes: dict = field(default_factory=dict)
+    collective_wire_bytes: float = 0.0
+    collective_counts: dict = field(default_factory=dict)
+
+    def to_dict(self):
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_operand_bytes": dict(self.collective_operand_bytes),
+            "collective_wire_bytes": self.collective_wire_bytes,
+            "collective_counts": dict(self.collective_counts),
+        }
+
+
+_WIRE_COEFF = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def instr_bytes(ins: Instr, comp: Computation, comps: dict) -> float:
+    """Alias/slice-aware HBM traffic model for one top-level instruction."""
+    rb = _type_bytes(ins.type_str)
+    obs = [_type_bytes(comp.shapes.get(o, "")) for o in ins.operands]
+    if ins.op == "dynamic-update-slice":
+        # in-place: read+write the update slice only
+        upd = obs[1] if len(obs) > 1 else rb
+        return 2.0 * upd
+    if ins.op == "dynamic-slice":
+        return 2.0 * rb
+    if ins.op in ("iota", "rng-bit-generator", "constant"):
+        return rb
+    if ins.op == "fusion":
+        cm = re.search(r"calls=%([\w.\-]+)", ins.attrs)
+        callee = comps.get(cm.group(1)) if cm else None
+        if callee is None:
+            return rb + sum(obs)
+        by_name = {i.name: i for i in callee.instrs}
+        _THIN = ("convert", "bitcast", "copy", "reshape")
+
+        def _through(name, limit=6):
+            """Follow producer chains through dtype/layout wrappers (the
+            CPU backend emulates bf16 with f32 + convert round-trips; on
+            TPU these wrappers don't exist)."""
+            for _ in range(limit):
+                i2 = by_name.get(name)
+                if i2 is None or i2.op not in _THIN or not i2.operands:
+                    return name
+                name = i2.operands[0]
+            return name
+
+        root = callee.instrs[-1] if callee.instrs else None
+        if root is not None and root.op in _THIN:
+            root = by_name.get(_through(root.name))
+
+        # in-place DUS root: identify the aliased buffer param
+        excluded = None
+        upd_bytes = 0.0
+        if root is not None and root.op == "dynamic-update-slice":
+            if len(root.operands) > 1:
+                upd_bytes = _type_bytes(
+                    callee.shapes.get(root.operands[1], ""))
+            excluded = _through(root.operands[0])
+
+        param_names = {}
+        for ci in callee.instrs:
+            if ci.op == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", ci.line)
+                if pm:
+                    param_names[int(pm.group(1))] = ci.name
+
+        def _effective_consumers(pname):
+            out, frontier = [], [pname]
+            for _ in range(6):
+                nxt = []
+                for ci in callee.instrs:
+                    if any(f in ci.operands for f in frontier):
+                        if ci.op in _THIN:
+                            nxt.append(ci.name)
+                        else:
+                            out.append(ci)
+                if not nxt:
+                    break
+                frontier = nxt
+            return out
+
+        read = 0.0
+        for idx, ob in enumerate(obs):
+            pname = param_names.get(idx)
+            if pname is None:
+                read += ob
+                continue
+            if excluded is not None and pname == excluded:
+                continue      # aliased in-place buffer
+            consumers = _effective_consumers(pname)
+            if consumers and all(ci.op == "dynamic-slice"
+                                 for ci in consumers):
+                read += sum(_type_bytes(ci.type_str) for ci in consumers)
+            elif consumers and all(
+                    ci.op == "dynamic-update-slice"
+                    and ci.operands
+                    and _through(ci.operands[0]) == pname
+                    for ci in consumers):
+                read += 0.0   # in-place buffer
+            else:
+                read += ob
+        if root is not None and root.op == "dynamic-update-slice":
+            return read + upd_bytes
+        return read + rb
+    return rb + sum(obs)
+
+
+def analyze(text: str) -> HloAccounting:
+    comps = parse_module(text)
+    mult = _multipliers(comps)
+    acc = HloAccounting()
+    acc.collective_operand_bytes = {k: 0.0 for k in COLLECTIVES}
+    acc.collective_counts = {k: 0.0 for k in COLLECTIVES}
+
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        fused = "fused" in name or "wrapped" in name or "region" not in name
+        for ins in comp.instrs:
+            if ins.op == "dot" or ins.op == "convolution":
+                if ins.op == "dot":
+                    acc.flops += m * _dot_flops(ins, comp)
+            base = ins.op
+            for suffix in ("-start", "-done"):
+                if base.endswith(suffix):
+                    base = base[: -len(suffix)]
+            if base in COLLECTIVES and not ins.op.endswith("-done"):
+                op_bytes = sum(_type_bytes(comp.shapes.get(o, ""))
+                               for o in ins.operands)
+                if base == "all-gather":
+                    wire = _type_bytes(ins.type_str)
+                else:
+                    wire = _WIRE_COEFF[base] * op_bytes
+                acc.collective_operand_bytes[base] += m * op_bytes
+                acc.collective_counts[base] += m
+                acc.collective_wire_bytes += m * wire
+
+    # HBM bytes: top-level instructions only (fusion bodies execute in
+    # registers/VMEM; the caller's fusion line carries the HBM traffic).
+    top_level = {n for n, c in comps.items()
+                 if n == "__entry__" or "region" in n}
+    entry_real = comps.get("__entry__")
+
+    for name in top_level:
+        comp = comps[name]
+        if comp is entry_real and name != "__entry__":
+            continue  # avoid double-visiting the aliased entry
+        m = mult.get(comp.name, 0.0) if name != "__entry__" else 1.0
+        if m == 0.0:
+            continue
+        for ins in comp.instrs:
+            if ins.op not in MATERIALIZING_OPS:
+                continue
+            acc.hbm_bytes += m * max(instr_bytes(ins, comp, comps), 0.0)
+    return acc

@@ -1,0 +1,19 @@
+"""Serving substrate: workloads, instance catalog, FCFS queueing simulator,
+pool evaluation, live engine, autoscaling, fault handling, checkpointing."""
+
+from .instance import (AWS_INSTANCES, MODEL_PROFILES, PAPER_POOLS, TPU_CELLS,
+                       InstanceType, ModelProfile, service_time_table)
+from .pool import (DEFAULT_BOUNDS, DEFAULT_RATES, PoolEvaluator,
+                   best_homogeneous, cost_effectiveness, make_paper_setup)
+from .simulator import PoolSimulator
+from .workload import (Workload, gaussian_batches, generate_workload,
+                       lognormal_batches)
+
+__all__ = [
+    "AWS_INSTANCES", "MODEL_PROFILES", "PAPER_POOLS", "TPU_CELLS",
+    "InstanceType", "ModelProfile", "service_time_table",
+    "PoolEvaluator", "best_homogeneous", "cost_effectiveness",
+    "make_paper_setup", "DEFAULT_RATES", "DEFAULT_BOUNDS",
+    "PoolSimulator",
+    "Workload", "generate_workload", "lognormal_batches", "gaussian_batches",
+]

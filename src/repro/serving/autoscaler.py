@@ -1,0 +1,79 @@
+"""Elastic scaling: load-change detection → RIBBON warm restart (paper §4,
+"RIBBON promptly responds to load changes", and §5.5).
+
+Detection follows the paper: "when the load goes up, more queries get queued
+in the query queue, and the QoS satisfaction rate will drop significantly due
+to the wait time.  By monitoring the query queue size and the current QoS
+rate, one can determine whether the load has changed."
+
+The same machinery doubles as the failure-recovery path (serving/fault.py):
+a lost cell is just a load increase per remaining cell.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.ribbon import RibbonOptimizer
+
+
+@dataclass
+class LoadMonitor:
+    qos_target: float = 0.99
+    qos_drop_threshold: float = 0.05    # rate drop that signals a shift
+    queue_growth_threshold: float = 2.0  # mean queue-depth growth factor
+    window: int = 200                    # queries per monitoring window
+    _baseline_rate: float | None = field(default=None, init=False)
+    _baseline_queue: float | None = field(default=None, init=False)
+
+    def observe(self, latencies: np.ndarray, waits: np.ndarray,
+                qos_latency: float) -> bool:
+        """Feed one window; True when a load change is detected."""
+        rate = float(np.mean(latencies <= qos_latency))
+        depth = float(np.mean(waits > 1e-9))  # fraction of queries that waited
+        if self._baseline_rate is None:
+            self._baseline_rate, self._baseline_queue = rate, max(depth, 1e-3)
+            return False
+        rate_drop = self._baseline_rate - rate
+        queue_growth = depth / self._baseline_queue
+        return (rate_drop > self.qos_drop_threshold
+                or (queue_growth > self.queue_growth_threshold
+                    and rate < self.qos_target))
+
+    def reset(self):
+        self._baseline_rate = None
+        self._baseline_queue = None
+
+
+@dataclass
+class ScaleEvent:
+    kind: str                 # "load_change" | "cell_failure"
+    old_best: tuple
+    old_cost: float
+    new_best: tuple | None
+    new_cost: float | None
+    samples_used: int
+
+
+def rescale(optimizer: RibbonOptimizer, evaluate_qos, budget: int = 40,
+            kind: str = "load_change") -> ScaleEvent:
+    """Respond to a detected change: measure the incumbent on the new load,
+    warm-restart the BO with the paper's estimation/pruning transfer, and
+    search to the new optimum."""
+    old_best = optimizer.best_config
+    old_cost = optimizer.best_cost
+    new_rate = float(evaluate_qos(old_best))
+    optimizer.warm_restart(new_rate)
+    n0 = optimizer.trace.n_samples
+    while optimizer.trace.n_samples - n0 < budget and not optimizer.done:
+        cfg = optimizer.ask()
+        if cfg is None:
+            break
+        optimizer.tell(cfg, float(evaluate_qos(cfg)))
+    best = optimizer.trace.best_feasible()
+    return ScaleEvent(kind=kind, old_best=old_best, old_cost=old_cost,
+                      new_best=best.config if best else None,
+                      new_cost=best.cost if best else None,
+                      samples_used=optimizer.trace.n_samples - n0 + 1)

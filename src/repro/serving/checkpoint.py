@@ -1,0 +1,87 @@
+"""Atomic, versioned checkpointing (npz payload + msgpack manifest).
+
+Used by both planes: the training driver (params + AdamW state + step) and
+the serving control plane (RIBBON optimizer state + pool config).  Writes are
+atomic (tmp + rename), checkpoints are step-numbered with keep-last-k
+retention, and an async mode hands the write to a background thread so the
+step loop never blocks on IO (the distributed-training requirement).
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir, state, step: int, keep: int = 3,
+         async_write: bool = False):
+    """Write checkpoint `step`.  Returns the final path (or a Thread when
+    async_write=True; join it to guarantee durability)."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = _flatten(state)
+    host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+
+    def _write():
+        path = ckpt_dir / f"step_{step:010d}.npz"
+        tmp = path.with_suffix(".tmp.npz")
+        np.savez(tmp, **{f"leaf_{i}": l for i, l in enumerate(host_leaves)})
+        manifest = {"step": step, "n_leaves": len(host_leaves),
+                    "treedef": str(treedef)}
+        mtmp = path.with_suffix(".tmp.json")
+        mtmp.write_text(json.dumps(manifest))
+        tmp.rename(path)
+        mtmp.rename(path.with_suffix(".json"))
+        _retain(ckpt_dir, keep)
+        return path
+
+    if async_write:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    return _write()
+
+
+def _retain(ckpt_dir: Path, keep: int):
+    ckpts = sorted(ckpt_dir.glob("step_*.npz"))
+    for old in ckpts[:-keep]:
+        old.unlink(missing_ok=True)
+        old.with_suffix(".json").unlink(missing_ok=True)
+
+
+def latest_step(ckpt_dir) -> int | None:
+    ckpt_dir = Path(ckpt_dir)
+    ckpts = sorted(ckpt_dir.glob("step_*.npz"))
+    if not ckpts:
+        return None
+    return int(ckpts[-1].stem.split("_")[1])
+
+
+def restore(ckpt_dir, state_like, step: int | None = None):
+    """Restore into the structure of `state_like` (shapes must match).
+    Returns (state, step) or (None, None) when no checkpoint exists."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            return None, None
+    path = ckpt_dir / f"step_{step:010d}.npz"
+    payload = np.load(path, allow_pickle=False)
+    leaves, treedef = _flatten(state_like)
+    restored = [payload[f"leaf_{i}"] for i in range(len(leaves))]
+    for got, want in zip(restored, leaves):
+        if tuple(got.shape) != tuple(np.shape(want)):
+            raise ValueError(
+                f"checkpoint leaf shape {got.shape} != expected "
+                f"{np.shape(want)} — wrong state structure for step {step}")
+    state = jax.tree_util.tree_unflatten(treedef, restored)
+    return state, step

@@ -1,0 +1,130 @@
+"""Fault tolerance: cell-failure recovery and straggler mitigation.
+
+* **Cell failure** — a lost node shrinks the pool; the remaining pool usually
+  violates QoS.  Recovery reuses RIBBON's load-change machinery (a failure is
+  indistinguishable from a per-cell load increase): measure the degraded
+  config, warm-restart the BO with the exploration-record transfer, converge
+  to the new optimum over the surviving capacity.
+
+* **Stragglers** — slow instances (noisy neighbors, thermal throttling) break
+  tail QoS even in feasible configs.  Mitigation: hedged requests — when a
+  query's queue wait exceeds a p99-derived threshold it is duplicated to the
+  next-free instance and the earlier finish wins (engine + simulator paths).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.ribbon import RibbonOptimizer
+from .autoscaler import ScaleEvent, rescale
+from .instance import InstanceType, ModelProfile
+from .workload import Workload
+
+
+def fail_instances(config, type_index: int, count: int = 1) -> tuple:
+    """Pool config after losing `count` instances of one type."""
+    cfg = list(int(c) for c in config)
+    cfg[type_index] = max(0, cfg[type_index] - count)
+    return tuple(cfg)
+
+
+def recover_from_failure(optimizer: RibbonOptimizer, evaluate_qos,
+                         failed_type: int, lost: int = 1,
+                         budget: int = 40) -> tuple[RibbonOptimizer,
+                                                    ScaleEvent]:
+    """Failure recovery (beyond-paper extension of RIBBON's machinery).
+
+    A lost node caps the available count of its cell type.  Unlike a load
+    change, the *load is unchanged*, so every measurement of a configuration
+    that still fits the reduced capacity remains VALID: recovery builds a new
+    optimizer over the reduced search space and replays the still-valid
+    history as real observations (no estimation needed), then continues the
+    search.  Returns (new_optimizer, event)."""
+    from ..core.search_space import SearchSpace
+
+    old_best = optimizer.best_config
+    old_cost = optimizer.best_cost
+    space = optimizer.space
+    new_bounds = list(space.bounds)
+    new_bounds[failed_type] = max(0, new_bounds[failed_type] - lost)
+    new_space = SearchSpace(bounds=tuple(new_bounds), prices=space.prices)
+
+    new_opt = RibbonOptimizer(new_space, qos_target=optimizer.qos_target,
+                              theta=optimizer.theta,
+                              start=tuple(min(b, c) for b, c in
+                                          zip(new_bounds, old_best))
+                              if old_best else None)
+    replayed = 0
+    for e in optimizer.trace.evaluations:
+        if e.estimated:
+            continue
+        if all(c <= b for c, b in zip(e.config, new_bounds)):
+            if not new_opt.sampled[new_space.index_of(e.config)]:
+                new_opt.tell(e.config, e.qos_rate)
+                replayed += 1
+    n0 = new_opt.trace.n_samples
+    while new_opt.trace.n_samples - n0 < budget and not new_opt.done:
+        cfg = new_opt.ask()
+        if cfg is None:
+            break
+        new_opt.tell(cfg, float(evaluate_qos(cfg)))
+    best = new_opt.trace.best_feasible()
+    event = ScaleEvent(kind="cell_failure", old_best=old_best,
+                       old_cost=old_cost,
+                       new_best=best.config if best else None,
+                       new_cost=best.cost if best else None,
+                       samples_used=new_opt.trace.n_samples - n0)
+    return new_opt, event
+
+
+# ----------------------------------------------------------- stragglers
+
+
+@dataclass
+class StragglerModel:
+    """Multiplies service time of afflicted instances."""
+    slow_factor: float = 4.0
+    afflicted: tuple = ()      # instance slot indices
+
+
+def simulate_fcfs_hedged(workload: Workload, types: list[InstanceType],
+                         counts, profile: ModelProfile,
+                         straggler: StragglerModel | None = None,
+                         hedge_threshold: float | None = None):
+    """Python FCFS simulation with optional stragglers + hedged requests.
+
+    Returns per-query latencies.  (The jax-scan simulator covers the fast
+    path; this variant exists for fault studies where per-slot behavior
+    matters.)"""
+    slots = []
+    for t_idx, c in enumerate(counts):
+        slots += [t_idx] * int(c)
+    free = [0.0] * len(slots)
+    slow = set(straggler.afflicted) if straggler else set()
+    lat = []
+    for arr, b in zip(workload.arrivals, workload.batches):
+        idle = [i for i, f in enumerate(free) if f <= arr]
+        pick = idle[0] if idle else int(np.argmin(free))
+        start = max(arr, free[pick])
+        svc = float(types[slots[pick]].latency(profile, b))
+        if pick in slow:
+            svc *= straggler.slow_factor
+        finish = start + svc
+        free[pick] = finish
+        if hedge_threshold is not None and start - arr > hedge_threshold \
+                and len(free) > 1:
+            others = [i for i in range(len(free)) if i != pick]
+            alt = min(others, key=lambda i: free[i])
+            alt_start = max(arr, free[alt])
+            alt_svc = float(types[slots[alt]].latency(profile, b))
+            if alt in slow:
+                alt_svc *= straggler.slow_factor
+            alt_finish = alt_start + alt_svc
+            if alt_finish < finish:
+                free[alt] = alt_finish
+                finish = alt_finish
+        lat.append(finish - arr)
+    return np.asarray(lat)

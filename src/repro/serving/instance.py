@@ -1,0 +1,169 @@
+"""Instance-type catalog and analytical latency models.
+
+The paper profiles real AWS EC2 instances; the raw profiles are not public, so
+this substrate models each instance type with a roofline-style latency model
+
+    latency(model, b) = overhead + max( b * flops_per_sample / (F * eff),
+                                        (weight_bytes + b * act_bytes) / B )
+
+with per-type effective compute rate ``F`` (FLOP/s), effective memory
+bandwidth ``B`` (B/s), fixed dispatch overhead, and a per-(model, instance)
+efficiency multiplier ``eff`` (how well that model family utilizes that
+hardware — e.g. conv nets vectorize well on AVX-512, embedding-gather recsys
+models do not; science fp32 models underutilize the T4).  Prices are real
+on-demand us-east-1 prices (2021, $/hour) for the sizes in paper Table 2.
+
+Constants are calibrated so the structural relationships the paper exploits
+hold (validated by tests/test_calibration.py + bench_tradeoff):
+
+  * Fig. 3a: perf ranking flips with batch size — g4dn clearly best for large
+    batches (>1.4x), mid-pack at small ones; instances cluster at small batch.
+  * Fig. 3b: cost-effectiveness ranking differs from perf ranking — r5/r5n on
+    top, g4dn at the bottom for small batches.  (Deviation from the paper,
+    recorded in EXPERIMENTS.md: at batch 128 our g4dn is *not* CE-lowest —
+    with real prices, an instance 4x faster at 1.5x the price cannot be; the
+    relationship RIBBON actually exploits — cheap memory-optimized types form
+    the CE frontier while the GPU is the only type meeting tail QoS at large
+    batch — holds.)
+  * Table 3: g4dn is the only type able to serve large-batch recsys queries
+    within the 20/30 ms QoS (hence the optimal homogeneous type), while for
+    CANDLE/ResNet/VGG (40/400/800 ms targets) c5a is the cost-optimal
+    homogeneous type; t3/m5/r5n serve small batches within QoS but violate on
+    large ones — the "lower performance, lower cost" filler role of §3.2.
+
+The same dataclass also describes **TPU serving-cell types** (the hardware
+adaptation of this repro — see DESIGN.md §3): a cell is a submesh slice priced
+per chip-hour, with effective F/B derived from chip counts.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ModelProfile:
+    """Analytical per-query resource profile of a served model."""
+
+    name: str
+    flops_per_sample: float
+    act_bytes_per_sample: float   # gathered embeddings / activations per sample
+    weight_bytes: float           # weights streamed per query batch
+    qos_latency: float            # paper §5.1 tail-latency target (seconds)
+    max_batch: int = 256          # workload batch-size cap for this model
+    median_batch: float = 24.0    # lognormal median for this model's stream
+    efficiency: dict = field(default_factory=dict)   # per-instance F multiplier
+
+    def eff(self, instance_name: str) -> float:
+        return self.efficiency.get(instance_name, 1.0)
+
+
+@dataclass(frozen=True)
+class InstanceType:
+    name: str
+    price: float          # $ / hour
+    flops: float          # effective FLOP/s (base; model efficiency multiplies)
+    mem_bw: float         # effective bytes/s
+    overhead: float       # fixed per-query dispatch seconds
+    chips: int = 0        # >0 for TPU cell types
+
+    def latency(self, profile: ModelProfile, batch) -> np.ndarray:
+        b = np.asarray(batch, dtype=np.float64)
+        f_eff = self.flops * profile.eff(self.name)
+        compute = b * profile.flops_per_sample / f_eff
+        memory = (profile.weight_bytes + b * profile.act_bytes_per_sample) / self.mem_bw
+        return self.overhead + np.maximum(compute, memory)
+
+
+# --------------------------------------------------------------------------
+# AWS catalog (paper Table 2 sizes; real on-demand prices).
+# Base F is the recsys-effective rate; other model families scale via eff.
+# --------------------------------------------------------------------------
+AWS_INSTANCES: dict[str, InstanceType] = {
+    # general purpose
+    "t3":   InstanceType("t3",   price=0.1664, flops=1.15e10, mem_bw=1.8e10, overhead=1.2e-3),
+    "m5":   InstanceType("m5",   price=0.192,  flops=1.50e10, mem_bw=1.9e10, overhead=1.0e-3),
+    "m5n":  InstanceType("m5n",  price=0.238,  flops=1.60e10, mem_bw=2.0e10, overhead=1.0e-3),
+    # compute optimized
+    "c5":   InstanceType("c5",   price=0.34,   flops=1.90e10, mem_bw=2.4e10, overhead=0.8e-3),
+    "c5a":  InstanceType("c5a",  price=0.308,  flops=1.80e10, mem_bw=2.2e10, overhead=0.8e-3),
+    # memory optimized
+    "r5":   InstanceType("r5",   price=0.126,  flops=1.20e10, mem_bw=2.4e10, overhead=1.1e-3),
+    "r5n":  InstanceType("r5n",  price=0.149,  flops=1.35e10, mem_bw=2.6e10, overhead=1.1e-3),
+    # GPU accelerator
+    "g4dn": InstanceType("g4dn", price=0.526,  flops=9.0e11,  mem_bw=1.6e11, overhead=4.2e-3),
+}
+
+
+# --------------------------------------------------------------------------
+# TPU serving-cell catalog (hardware adaptation; see DESIGN.md §3).
+# v5e-like chips at $1.2/chip-hour; effective rates assume serving efficiency
+# ~40% of peak (197 TFLOP/s bf16, 819 GB/s HBM per chip).  Bigger TP cells
+# gain compute/bandwidth sub-linearly (ICI) and pay higher dispatch overhead.
+# --------------------------------------------------------------------------
+_CHIP_F = 197e12 * 0.4
+_CHIP_B = 819e9 * 0.5
+TPU_CELLS: dict[str, InstanceType] = {
+    "cell1": InstanceType("cell1", price=1.2, chips=1,
+                          flops=_CHIP_F, mem_bw=_CHIP_B, overhead=1.5e-3),
+    "cell4": InstanceType("cell4", price=4.8, chips=4,
+                          flops=_CHIP_F * 4 * 0.85, mem_bw=_CHIP_B * 4 * 0.9,
+                          overhead=2.0e-3),
+    "cell8": InstanceType("cell8", price=9.6, chips=8,
+                          flops=_CHIP_F * 8 * 0.75, mem_bw=_CHIP_B * 8 * 0.85,
+                          overhead=2.4e-3),
+}
+
+
+# Efficiency of the dense/conv science models per instance family: conv/GEMM
+# vectorizes well on AVX-512 server cores (c5/c5a best, m5 good, t3 throttled
+# burstable, r5 fewer cores), and these fp32 single-stream models underutilize
+# the T4 (PCIe + launch bound).
+_DENSE_EFF = {"t3": 1.8, "m5": 2.5, "m5n": 2.5, "c5": 3.8, "c5a": 4.0,
+              "r5": 2.0, "r5n": 2.0, "g4dn": 0.12,
+              "cell1": 1.0, "cell4": 1.0, "cell8": 1.0}
+
+# --------------------------------------------------------------------------
+# Model profiles (paper Table 1).  QoS targets from paper §5.1: MT-WND 20 ms,
+# DIEN 30 ms, CANDLE 40 ms, ResNet50 400 ms, VGG19 800 ms.
+# Recsys models: small dense compute + embedding-gather traffic → the GPU is
+# the only type serving large batches within QoS.  CANDLE/ResNet/VGG: FLOP
+# dominated → compute-optimized CPUs are the cost-optimal QoS anchors.
+# --------------------------------------------------------------------------
+MODEL_PROFILES: dict[str, ModelProfile] = {
+    "mtwnd":    ModelProfile("mtwnd",    flops_per_sample=3.0e6,
+                             act_bytes_per_sample=4.0e5, weight_bytes=2.4e7,
+                             qos_latency=0.020, max_batch=256, median_batch=24),
+    "dien":     ModelProfile("dien",     flops_per_sample=3.5e6,
+                             act_bytes_per_sample=6.0e5, weight_bytes=3.0e7,
+                             qos_latency=0.030, max_batch=256, median_batch=24),
+    "candle":   ModelProfile("candle",   flops_per_sample=1.2e7,
+                             act_bytes_per_sample=6.0e4, weight_bytes=8.0e7,
+                             qos_latency=0.040, max_batch=128, median_batch=24,
+                             efficiency=_DENSE_EFF),
+    "resnet50": ModelProfile("resnet50", flops_per_sample=1.1e8,
+                             act_bytes_per_sample=2.0e5, weight_bytes=1.0e8,
+                             qos_latency=0.400, max_batch=64, median_batch=8,
+                             efficiency=_DENSE_EFF),
+    "vgg19":    ModelProfile("vgg19",    flops_per_sample=5.0e8,
+                             act_bytes_per_sample=2.5e5, weight_bytes=5.6e8,
+                             qos_latency=0.800, max_batch=64, median_batch=8,
+                             efficiency=_DENSE_EFF),
+}
+
+# Paper Table 3: homogeneous base type and diverse pool per model.
+PAPER_POOLS: dict[str, dict] = {
+    "candle":   {"homogeneous": "c5a",  "diverse": ("c5a", "m5", "t3")},
+    "resnet50": {"homogeneous": "c5a",  "diverse": ("c5a", "m5", "t3")},
+    "vgg19":    {"homogeneous": "c5a",  "diverse": ("c5a", "m5", "t3")},
+    "mtwnd":    {"homogeneous": "g4dn", "diverse": ("g4dn", "c5", "r5n")},
+    "dien":     {"homogeneous": "g4dn", "diverse": ("g4dn", "c5", "r5n")},
+}
+
+
+def service_time_table(model: ModelProfile, types: list[InstanceType],
+                       batches: np.ndarray) -> np.ndarray:
+    """(n_types, n_queries) service time matrix for a query stream."""
+    return np.stack([t.latency(model, batches) for t in types], axis=0)

@@ -1,0 +1,119 @@
+"""Pool evaluation glue: QoS oracle + cost metrics for the search strategies.
+
+``PoolEvaluator`` is the black-box f(x) the paper's BO samples: it deploys a
+pool configuration against the query stream (simulation plane) and returns the
+measured QoS satisfaction rate.  Results are memoized — the physical analogue
+is that an already-profiled configuration need not be re-deployed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.search_space import SearchSpace
+from .instance import (AWS_INSTANCES, MODEL_PROFILES, PAPER_POOLS,
+                       InstanceType, ModelProfile)
+from .simulator import PoolSimulator
+from .workload import Workload, generate_workload
+
+
+def cost_effectiveness(perf_qps: float, price_per_hour: float) -> float:
+    """Paper Eq. 1: 3600 * Perf / Price  (queries per dollar)."""
+    return 3600.0 * perf_qps / price_per_hour
+
+
+@dataclass
+class PoolEvaluator:
+    """QoS oracle over a fixed (model, type order, workload)."""
+
+    model: ModelProfile
+    types: list[InstanceType]
+    workload: Workload
+    max_instances: int = 40
+    n_evals: int = field(default=0, init=False)
+
+    def __post_init__(self):
+        self.sim = PoolSimulator(self.model, self.types, self.workload,
+                                 max_instances=self.max_instances)
+        self._cache: dict[tuple[int, ...], float] = {}
+
+    def __call__(self, config) -> float:
+        key = tuple(int(c) for c in config)
+        if key not in self._cache:
+            self._cache[key] = self.sim.qos_rate(key)
+            self.n_evals += 1
+        return self._cache[key]
+
+    def exhaustive(self, space: SearchSpace, qos_target: float):
+        """Ground-truth optimum + total exhaustive cost (paper Fig. 13
+        normalizer).  Returns (best_config, best_cost, exhaustive_cost)."""
+        lattice = space.enumerate()
+        costs = space.costs(lattice)
+        best_cfg, best_cost = None, np.inf
+        total = 0.0
+        for cfg, cost in zip(lattice, costs):
+            total += float(cost)
+            rate = self(tuple(int(c) for c in cfg))
+            if rate >= qos_target and cost < best_cost:
+                best_cfg, best_cost = tuple(int(c) for c in cfg), float(cost)
+        return best_cfg, best_cost, total
+
+
+def best_homogeneous(evaluator: PoolEvaluator, type_index: int, prices,
+                     qos_target: float, cap: int = 24):
+    """Minimum-count homogeneous pool of one type meeting QoS.
+    Returns (count, cost) or (None, inf)."""
+    n = len(evaluator.types)
+    for count in range(1, cap + 1):
+        cfg = [0] * n
+        cfg[type_index] = count
+        if evaluator(cfg) >= qos_target:
+            return count, count * prices[type_index]
+    return None, np.inf
+
+
+def make_paper_setup(model_name: str, seed: int = 0, n_queries: int = 1500,
+                     rate_qps: float | None = None,
+                     batch_dist: str = "lognormal"):
+    """Standard experimental setup for one of the paper's five models:
+    returns (evaluator, space, model_profile) with the Table 3 diverse pool.
+
+    Arrival rates are chosen per model so that the optimal homogeneous pool
+    needs ~4-8 instances (the regime of paper Fig. 4).
+    """
+    profile = MODEL_PROFILES[model_name]
+    pool_names = PAPER_POOLS[model_name]["diverse"]
+    types = [AWS_INSTANCES[n] for n in pool_names]
+    if rate_qps is None:
+        rate_qps = DEFAULT_RATES[model_name]
+    wl = generate_workload(seed, n_queries, rate_qps, batch_dist=batch_dist,
+                           median_batch=profile.median_batch,
+                           mean_batch=2.0 * profile.median_batch,
+                           std_batch=profile.median_batch,
+                           max_batch=profile.max_batch)
+    evaluator = PoolEvaluator(profile, types, wl)
+    prices = tuple(t.price for t in types)
+    bounds = DEFAULT_BOUNDS[model_name]
+    space = SearchSpace(bounds=bounds, prices=prices)
+    return evaluator, space, profile
+
+
+# Arrival rates giving paper-like pool sizes (validated by bench_pool_example).
+DEFAULT_RATES: dict[str, float] = {
+    "mtwnd": 800.0,
+    "dien": 850.0,
+    "candle": 550.0,
+    "resnet50": 275.0,
+    "vgg19": 36.0,
+}
+
+# Per-type search bounds m_i (paper: count at which QoS rate saturates).
+DEFAULT_BOUNDS: dict[str, tuple[int, ...]] = {
+    "mtwnd": (8, 10, 12),
+    "dien": (8, 10, 12),
+    "candle": (10, 12, 14),
+    "resnet50": (10, 12, 14),
+    "vgg19": (10, 12, 14),
+}

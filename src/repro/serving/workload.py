@@ -1,0 +1,77 @@
+"""Query-stream workload generation (paper §5.1).
+
+* Query inter-arrival times follow a **Poisson process** (exponential
+  inter-arrival), as in DeepRecSys / MLPerf-inference and the other works the
+  paper cites.
+* Batch sizes follow a **heavy-tail log-normal** distribution (the paper's
+  default, after DeepRecSys), with a **Gaussian** alternative used for the
+  robustness study (paper Fig. 11).
+
+Generation is jax.random-based so streams are reproducible from a single seed
+across the whole framework.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Workload:
+    """A concrete query stream."""
+
+    arrivals: np.ndarray      # (n,) absolute arrival times, seconds, sorted
+    batches: np.ndarray       # (n,) int batch size per query
+    rate_qps: float           # nominal arrival rate
+
+    @property
+    def n_queries(self) -> int:
+        return len(self.arrivals)
+
+    def scaled(self, load_factor: float) -> "Workload":
+        """Same query sequence under a different load level (paper §5.5:
+        'the load becomes 1.5 times heavier' compresses inter-arrivals)."""
+        return Workload(arrivals=self.arrivals / load_factor,
+                        batches=self.batches,
+                        rate_qps=self.rate_qps * load_factor)
+
+
+def lognormal_batches(key, n: int, median: float = 24.0, sigma: float = 0.8,
+                      max_batch: int = 256) -> jnp.ndarray:
+    """Heavy-tail log-normal batch sizes, clipped to [1, max_batch]."""
+    z = jax.random.normal(key, (n,))
+    raw = jnp.exp(jnp.log(median) + sigma * z)
+    return jnp.clip(jnp.round(raw), 1, max_batch).astype(jnp.int32)
+
+
+def gaussian_batches(key, n: int, mean: float = 48.0, std: float = 24.0,
+                     max_batch: int = 256) -> jnp.ndarray:
+    """Gaussian batch sizes (paper Fig. 11 robustness study)."""
+    raw = mean + std * jax.random.normal(key, (n,))
+    return jnp.clip(jnp.round(raw), 1, max_batch).astype(jnp.int32)
+
+
+def generate_workload(seed: int, n_queries: int, rate_qps: float,
+                      batch_dist: str = "lognormal",
+                      median_batch: float = 24.0, sigma: float = 0.8,
+                      mean_batch: float = 48.0, std_batch: float = 24.0,
+                      max_batch: int = 256) -> Workload:
+    key = jax.random.PRNGKey(seed)
+    k_arr, k_batch = jax.random.split(key)
+    gaps = jax.random.exponential(k_arr, (n_queries,)) / rate_qps
+    arrivals = jnp.cumsum(gaps)
+    if batch_dist == "lognormal":
+        batches = lognormal_batches(k_batch, n_queries, median_batch, sigma,
+                                    max_batch)
+    elif batch_dist == "gaussian":
+        batches = gaussian_batches(k_batch, n_queries, mean_batch, std_batch,
+                                   max_batch)
+    else:
+        raise ValueError(f"unknown batch_dist {batch_dist!r}")
+    return Workload(arrivals=np.asarray(jax.device_get(arrivals), dtype=np.float64),
+                    batches=np.asarray(jax.device_get(batches), dtype=np.int64),
+                    rate_qps=float(rate_qps))

@@ -1,0 +1,71 @@
+"""Structural calibration of the instance catalog against paper Figs. 3/4 and
+Table 3 (see instance.py docstring for the deviation notes)."""
+
+import numpy as np
+import pytest
+
+from repro.serving import (AWS_INSTANCES, MODEL_PROFILES, PAPER_POOLS,
+                           PoolEvaluator, best_homogeneous, generate_workload)
+from repro.serving.pool import DEFAULT_RATES
+
+ALL = list(AWS_INSTANCES)
+
+
+def _lat(model, name, b):
+    return float(AWS_INSTANCES[name].latency(MODEL_PROFILES[model], b))
+
+
+def test_fig3a_perf_ranking_flips_with_batch():
+    """GPU clearly best at batch 128 (>1.4x margin), near-parity at 32."""
+    lat128 = {n: _lat("mtwnd", n, 128) for n in ALL}
+    best = min(lat128, key=lat128.get)
+    assert best == "g4dn"
+    second = sorted(lat128.values())[1]
+    assert second / lat128["g4dn"] > 1.4
+
+    lat32 = {n: _lat("mtwnd", n, 32) for n in ALL}
+    spread = max(lat32.values()) / min(lat32.values())
+    assert spread < 3.0   # "similarly high performance"
+
+
+def test_fig3b_cost_effectiveness_ranking():
+    """r5 most cost-effective, g4dn least — at small batch (paper Fig. 3b)."""
+    for model in ("mtwnd", "dien"):
+        ce = {n: 1.0 / (_lat(model, n, 32) * AWS_INSTANCES[n].price)
+              for n in ALL}
+        assert max(ce, key=ce.get) in ("r5", "r5n")
+        assert min(ce, key=ce.get) == "g4dn"
+
+
+def test_recsys_only_gpu_serves_large_batches_within_qos():
+    """§3.2: cost-effective types violate QoS for large batches; the GPU is
+    the only type meeting the 20ms target at the batch-size cap."""
+    prof = MODEL_PROFILES["mtwnd"]
+    for n in ALL:
+        ok = _lat("mtwnd", n, prof.max_batch) <= prof.qos_latency
+        assert ok == (n == "g4dn"), n
+
+
+def test_cheap_types_serve_small_batches_within_qos():
+    prof = MODEL_PROFILES["mtwnd"]
+    for n in ("r5n", "c5", "t3"):
+        assert _lat("mtwnd", n, 32) <= prof.qos_latency
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("model", ["mtwnd", "candle"])
+def test_table3_homogeneous_optimum(model):
+    """Cost-optimal homogeneous type matches paper Table 3."""
+    prof = MODEL_PROFILES[model]
+    wl = generate_workload(0, 1200, DEFAULT_RATES[model],
+                           median_batch=prof.median_batch,
+                           max_batch=prof.max_batch)
+    types = [AWS_INSTANCES[n] for n in ALL]
+    ev = PoolEvaluator(prof, types, wl)
+    prices = [t.price for t in types]
+    best_name, best_cost = None, np.inf
+    for i, n in enumerate(ALL):
+        cnt, cost = best_homogeneous(ev, i, prices, 0.99, cap=20)
+        if cnt is not None and cost < best_cost:
+            best_name, best_cost = n, cost
+    assert best_name == PAPER_POOLS[model]["homogeneous"]

@@ -1,0 +1,50 @@
+"""Integration: the dry-run pipeline end-to-end in a subprocess (the driver
+forces 512 placeholder devices, which must not leak into this test process)."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess(tmp_path):
+    """Smallest arch × decode on the single-pod mesh: lower + compile + full
+    roofline record through the real CLI."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper-tiny", "--shape", "decode_32k",
+         "--mesh", "single", "--out", str(tmp_path)],
+        cwd=REPO, capture_output=True, text=True, timeout=420,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    rec = json.loads((tmp_path / "whisper-tiny_decode_32k_single.json")
+                     .read_text())
+    assert rec["chips"] == 256
+    r = rec["roofline"]
+    assert r["compute_s"] > 0 and r["bytes_per_device"] > 0
+    assert rec["flops_per_device"] > 0
+    assert r["dominant"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.slow
+def test_dryrun_skip_record_subprocess(tmp_path):
+    """long_500k on a quadratic-attention arch must produce a skip record."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen2.5-3b", "--shape", "long_500k",
+         "--mesh", "single", "--out", str(tmp_path)],
+        cwd=REPO, capture_output=True, text=True, timeout=180,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    rec = json.loads((tmp_path / "qwen2_5-3b_long_500k_single.json")
+                     .read_text())
+    assert "skipped" in rec

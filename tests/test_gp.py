@@ -1,0 +1,89 @@
+"""GP surrogate: Matern 5/2, rounding transform (Eq. 3 / Fig. 7), masking."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gp import (GaussianProcess, gp_posterior, matern52,
+                           round_counts, rounded_matern52)
+
+
+def test_matern52_basics():
+    x = jnp.array([[0.0, 0.0], [1.0, 1.0], [0.0, 0.1]])
+    k = np.asarray(matern52(x, x, 0.5, 2.0))
+    # symmetric PSD with variance on the diagonal
+    np.testing.assert_allclose(k, k.T, atol=1e-6)
+    np.testing.assert_allclose(np.diag(k), 2.0, rtol=1e-5)
+    evals = np.linalg.eigvalsh(k)
+    assert evals.min() > -1e-5
+    # closer points have higher covariance
+    assert k[0, 2] > k[0, 1]
+
+
+def test_rounding_kernel_constant_within_integer_cell():
+    """Paper Fig. 7: with k'(x,y)=k(R(x),R(y)) the surrogate is constant
+    inside an integer cell, so the GP matches the step-shaped truth."""
+    denom = jnp.array([10.0, 10.0])
+    a = jnp.array([[3.2, 4.4]])
+    b = jnp.array([[2.8, 4.4]])   # rounds to (3,4) just like a
+    c = jnp.array([[3.6, 4.4]])   # rounds to (4,4) — different cell
+    q = jnp.array([[7.0, 2.0]])
+    ka = np.asarray(rounded_matern52(a, q, 0.3, 1.0, denom))
+    kb = np.asarray(rounded_matern52(b, q, 0.3, 1.0, denom))
+    kc = np.asarray(rounded_matern52(c, q, 0.3, 1.0, denom))
+    np.testing.assert_allclose(ka, kb, atol=1e-7)
+    assert abs(float(ka[0, 0]) - float(kc[0, 0])) > 1e-6
+
+
+def test_posterior_interpolates_observations():
+    gp = GaussianProcess(2, bounds=(8, 8), max_obs=16)
+    pts = [(0, 0), (4, 4), (8, 0), (2, 6)]
+    vals = [0.1, 0.9, 0.4, 0.6]
+    for p, v in zip(pts, vals):
+        gp.add(np.array(p, dtype=np.float32), v)
+    mean, std = gp.predict(np.array(pts, dtype=np.float32))
+    np.testing.assert_allclose(np.asarray(mean), vals, atol=0.05)
+    assert np.all(np.asarray(std) < 0.15)
+
+
+def test_posterior_constant_within_cell():
+    gp = GaussianProcess(2, bounds=(8, 8), max_obs=16)
+    gp.add(np.array([2.0, 2.0]), 0.3)
+    gp.add(np.array([6.0, 6.0]), 0.8)
+    q = np.array([[3.9, 5.1], [4.2, 4.8], [4.4, 5.4]])  # all round to (4,5)
+    mean, std = gp.predict(q)
+    assert np.ptp(np.asarray(mean)) < 1e-6
+    assert np.ptp(np.asarray(std)) < 1e-6
+
+
+def test_mask_padding_equivalence():
+    """Padded buffers with mask must give the same posterior as exact-size."""
+    bounds = (8, 8)
+    pts = np.array([[1, 1], [5, 3], [7, 7]], dtype=np.float32)
+    vals = np.array([0.2, 0.7, 0.5], dtype=np.float32)
+    q = np.array([[4, 4], [0, 8]], dtype=np.float32)
+    small = GaussianProcess(2, bounds, max_obs=3)
+    big = GaussianProcess(2, bounds, max_obs=64)
+    for p, v in zip(pts, vals):
+        small.add(p, float(v))
+        big.add(p, float(v))
+    ms, ss = small.predict(q)
+    mb, sb = big.predict(q)
+    np.testing.assert_allclose(np.asarray(ms), np.asarray(mb), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ss), np.asarray(sb), atol=1e-4)
+
+
+def test_uncertainty_grows_away_from_data():
+    gp = GaussianProcess(1, bounds=(20,), max_obs=8)
+    gp.add(np.array([10.0]), 0.5)
+    _, std = gp.predict(np.array([[10.0], [11.0], [18.0]], dtype=np.float32))
+    s = np.asarray(std)
+    assert s[0] < s[1] < s[2]
+
+
+def test_buffer_overflow_raises():
+    gp = GaussianProcess(1, bounds=(4,), max_obs=2)
+    gp.add(np.array([0.0]), 0.1)
+    gp.add(np.array([1.0]), 0.2)
+    with pytest.raises(RuntimeError):
+        gp.add(np.array([2.0]), 0.3)

@@ -1,0 +1,209 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+TOLS = {jnp.float32: dict(rtol=2e-3, atol=2e-3),
+        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _tols(dtype):
+    return TOLS[jnp.bfloat16 if dtype == jnp.bfloat16 else jnp.float32]
+
+
+# ---------------------------------------------------------------- flash attn
+@pytest.mark.parametrize("b,s,h,kh,d", [
+    (1, 128, 4, 4, 64),      # MHA
+    (2, 256, 8, 2, 64),      # GQA 4:1
+    (1, 256, 4, 1, 128),     # MQA
+    (2, 128, 4, 4, 80),      # non-lane head dim (padding path)
+    (1, 384, 6, 6, 64),      # seq not a block multiple
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(b, s, h, kh, d, dtype):
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = (jax.random.normal(kq, (b, s, h, d)) * 0.5).astype(dtype)
+    k = (jax.random.normal(kk, (b, s, kh, d)) * 0.5).astype(dtype)
+    v = (jax.random.normal(kv, (b, s, kh, d)) * 0.5).astype(dtype)
+    got = ops.flash_attention(q, k, v, block_q=128, block_k=128,
+                              interpret=True)
+    want = ref.flash_attention_ref(
+        q.reshape(b, s, kh, h // kh, d).transpose(0, 2, 3, 1, 4)
+         .reshape(b * h, s, d) if False else
+        jnp.moveaxis(q, 2, 1).reshape(b * h, s, d),
+        jnp.moveaxis(k, 2, 1).reshape(b * kh, s, d),
+        jnp.moveaxis(v, 2, 1).reshape(b * kh, s, d))
+    want = jnp.moveaxis(want.reshape(b, h, s, d), 1, 2)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tols(dtype))
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_attention_sliding_window(window):
+    key = jax.random.PRNGKey(1)
+    b, s, h, d = 1, 256, 2, 64
+    q, k, v = (jax.random.normal(kk, (b, s, h, d)) * 0.5
+               for kk in jax.random.split(key, 3))
+    got = ops.flash_attention(q, k, v, window=window, block_q=64, block_k=64,
+                              interpret=True)
+    want = ref.flash_attention_ref(
+        jnp.moveaxis(q, 2, 1).reshape(b * h, s, d),
+        jnp.moveaxis(k, 2, 1).reshape(b * h, s, d),
+        jnp.moveaxis(v, 2, 1).reshape(b * h, s, d), window=window)
+    want = jnp.moveaxis(want.reshape(b, h, s, d), 1, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_flash_attention_matches_model_layer():
+    """Kernel ≡ the model substrate's attention_full (the integration oracle)."""
+    from repro.models.layers import attention_full
+    key = jax.random.PRNGKey(2)
+    b, s, h, kh, d = 2, 256, 8, 2, 64
+    q = jax.random.normal(key, (b, s, h, d)) * 0.5
+    k = jax.random.normal(key, (b, s, kh, d)) * 0.5
+    v = jax.random.normal(key, (b, s, kh, d)) * 0.5
+    pos = jnp.arange(s, dtype=jnp.int32)
+    want = attention_full(q, k, v, pos, pos, 0, d ** -0.5)
+    got = ops.flash_attention(q, k, v, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3,
+                               atol=2e-3)
+
+
+# ------------------------------------------------------------- decode attn
+@pytest.mark.parametrize("b,h,kh,d,t", [
+    (2, 8, 2, 64, 1024),
+    (1, 4, 4, 128, 512),
+    (4, 4, 1, 80, 768),     # MQA + padded head dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_shapes(b, h, kh, d, t, dtype):
+    key = jax.random.PRNGKey(3)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = (jax.random.normal(kq, (b, 1, h, d)) * 0.5).astype(dtype)
+    k = (jax.random.normal(kk, (b, t, kh, d)) * 0.5).astype(dtype)
+    v = (jax.random.normal(kv, (b, t, kh, d)) * 0.5).astype(dtype)
+    # ring cache with some empty slots
+    pos = jnp.where(jnp.arange(t) < t - 100, jnp.arange(t), -1).astype(jnp.int32)
+    got = ops.decode_attention(q, k, v, pos, block_k=256, interpret=True)
+    g = h // kh
+    qq = q.reshape(b, kh, g, d).reshape(b * kh, g, d)
+    kk2 = jnp.moveaxis(k, 2, 1).reshape(b * kh, t, d)
+    vv2 = jnp.moveaxis(v, 2, 1).reshape(b * kh, t, d)
+    want = ref.decode_attention_ref(qq, kk2, vv2, pos)
+    want = want.reshape(b, kh, g, d).reshape(b, 1, h, d)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tols(dtype))
+
+
+def test_decode_attention_matches_model_decode():
+    """Kernel ≡ the substrate's masked attention_core decode path."""
+    from repro.models.layers import attention_core
+    key = jax.random.PRNGKey(4)
+    b, h, kh, d, t = 2, 4, 2, 64, 512
+    q = jax.random.normal(key, (b, 1, h, d)) * 0.5
+    k = jax.random.normal(key, (b, t, kh, d)) * 0.5
+    v = jax.random.normal(key, (b, t, kh, d)) * 0.5
+    pos = jnp.where(jnp.arange(t) < 300, jnp.arange(t), -1).astype(jnp.int32)
+    want = attention_core(q, k, v, (pos >= 0)[None, :], d ** -0.5)
+    got = ops.decode_attention(q, k, v, pos, block_k=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3,
+                               atol=2e-3)
+
+
+# ---------------------------------------------------------------- ssd scan
+@pytest.mark.parametrize("b,l,h,p,g,n,chunk", [
+    (2, 64, 4, 16, 1, 16, 16),
+    (1, 128, 2, 64, 1, 128, 32),     # mamba2-130m-like dims
+    (2, 96, 4, 32, 2, 32, 32),       # grouped B/C
+])
+def test_ssd_scan_shapes(b, l, h, p, g, n, chunk):
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (b, l, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    a_log = jnp.log(jnp.linspace(0.5, 4.0, h))
+    bb = jax.random.normal(ks[2], (b, l, g, n)) * 0.5
+    cc = jax.random.normal(ks[3], (b, l, g, n)) * 0.5
+    y, state = ops.ssd_scan(x, dt, a_log, bb, cc, chunk=chunk,
+                            interpret=True)
+
+    # oracle via the same pre-scaling the wrapper does
+    a = -jnp.exp(a_log)
+    da = dt * a
+    xdt = x * dt[..., None]
+    rep = h // g
+    nc = l // chunk
+    def arr(z):
+        z = jnp.moveaxis(z, 2, 1)
+        return z.reshape(z.shape[0], z.shape[1], nc, chunk, *z.shape[3:])
+    y_ref, s_ref = ref.ssd_scan_ref(
+        arr(xdt), jnp.moveaxis(da, 2, 1).reshape(b, h, nc, chunk),
+        arr(jnp.repeat(bb, rep, axis=2)), arr(jnp.repeat(cc, rep, axis=2)))
+    y_ref = jnp.moveaxis(y_ref.reshape(b, h, l, p), 1, 2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-3,
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(state),
+                               np.asarray(jnp.swapaxes(s_ref, -1, -2)),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_scan_matches_model_ssd():
+    """Kernel ≡ models.ssm.ssd_chunked (the substrate integration oracle)."""
+    from repro.models.ssm import ssd_chunked
+    key = jax.random.PRNGKey(6)
+    b, l, h, p, g, n = 2, 64, 4, 16, 1, 16
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (b, l, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    a_log = jnp.log(jnp.linspace(0.5, 4.0, h))
+    bb = jax.random.normal(ks[2], (b, l, g, n)) * 0.5
+    cc = jax.random.normal(ks[3], (b, l, g, n)) * 0.5
+    y_want, s_want = ssd_chunked(x, dt, a_log, bb, cc, 16)
+    y_got, s_got = ops.ssd_scan(x, dt, a_log, bb, cc, chunk=16,
+                                interpret=True)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s_got), np.asarray(s_want),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------------------ embedding bag
+@pytest.mark.parametrize("n_bags,bag,v,d", [
+    (4, 8, 64, 32), (8, 4, 128, 64), (2, 16, 32, 80),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag_shapes(n_bags, bag, v, d, dtype):
+    key = jax.random.PRNGKey(7)
+    table = (jax.random.normal(key, (v, d)) * 0.5).astype(dtype)
+    idx = jax.random.randint(key, (n_bags, bag), 0, v).astype(jnp.int32)
+    got = ops.embedding_bag(idx, table, interpret=True)
+    want = ref.embedding_bag_ref(idx, table)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tols(dtype))
+
+
+def test_embedding_bag_weighted():
+    key = jax.random.PRNGKey(8)
+    table = jax.random.normal(key, (64, 32))
+    idx = jax.random.randint(key, (4, 8), 0, 64).astype(jnp.int32)
+    w = jax.random.uniform(key, (4, 8))
+    got = ops.embedding_bag(idx, table, w, interpret=True)
+    want = ref.embedding_bag_ref(idx, table, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_embedding_bag_duplicate_indices():
+    """Multi-hot bags repeat rows; the sum must count multiplicity."""
+    table = jnp.eye(8, 16)
+    idx = jnp.array([[3, 3, 3, 1]], dtype=jnp.int32)
+    got = ops.embedding_bag(idx, table, interpret=True)
+    want = 3 * table[3] + table[1]
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want))

@@ -1,0 +1,146 @@
+"""Model-substrate correctness: per-arch smoke tests + the decode invariant.
+
+The decode invariant is the strongest cache test: running prefill on a prompt
+and then decode_step for the next token must produce the same logits (within
+fp tolerance) as one full forward pass over the prompt + token.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models.transformer import get_model
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _inputs(cfg, key, batch=2, seq=16):
+    kt, ke = jax.random.split(key)
+    tokens = jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size)
+    extra = None
+    if cfg.family == "vlm":
+        extra = jax.random.normal(ke, (batch, cfg.n_patches, cfg.d_model)) * 0.1
+    if cfg.family == "encdec":
+        extra = jax.random.normal(ke, (batch, cfg.encoder_seq, cfg.d_model)) * 0.1
+    return tokens, extra
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_train_step(arch):
+    """Reduced config: one forward + one grad step on CPU; shapes + no NaNs."""
+    cfg = ARCHS[arch].reduced()
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(key, jnp.float32)
+    tokens, extra = _inputs(cfg, key)
+    logits, aux = api.forward(params, tokens, extra)
+    assert logits.shape[-1] == cfg.vocab_size
+    assert logits.shape[0] == tokens.shape[0]
+    assert not np.any(np.isnan(np.asarray(logits, dtype=np.float32)))
+
+    loss, grads = jax.value_and_grad(api.loss)(params, tokens, tokens, extra)
+    assert np.isfinite(float(loss))
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g, dtype=np.float32)))
+               for g in flat)
+    # gradients actually flow to the embedding and deepest layer
+    assert float(jnp.abs(grads["embed"]).max()) > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_matches_forward(arch):
+    """prefill(prompt) + decode(next) ≡ forward(prompt+next)[-1]."""
+    cfg = ARCHS[arch].reduced()
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(1)
+    params = api.init_params(key, jnp.float32)
+    batch, seq = 2, 12
+    tokens, extra = _inputs(cfg, key, batch, seq + 1)
+    prompt, nxt = tokens[:, :seq], tokens[:, seq:seq + 1]
+
+    full_logits, _ = api.forward(params, tokens, extra)
+    want = np.asarray(full_logits[:, -1], dtype=np.float32)
+
+    max_len = seq + 8 + (cfg.n_patches if cfg.family == "vlm" else 0)
+    cache, last = api.prefill(params, prompt, max_len=max_len, extra=extra)
+    got_prefill = np.asarray(last[:, 0], dtype=np.float32)
+    # prefill's last-position logits must match forward at that position
+    # (forward emits logits for every position incl. the VLM patch prefix)
+    prefix = cfg.n_patches if cfg.family == "vlm" else 0
+    np.testing.assert_allclose(
+        got_prefill,
+        np.asarray(full_logits[:, prefix + seq - 1], dtype=np.float32),
+        rtol=2e-3, atol=2e-3)
+
+    logits, cache = api.decode_step(params, cache, nxt)
+    got = np.asarray(logits[:, 0], dtype=np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x22b", "zamba2-2.7b"])
+def test_sliding_window_ring_cache_multi_step(arch):
+    """Decode several steps past the window size: ring cache must keep
+    matching the windowed full-attention forward."""
+    cfg = ARCHS[arch].reduced()     # window reduced to 16
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(2)
+    params = api.init_params(key, jnp.float32)
+    batch = 2
+    total = cfg.sliding_window + 6   # decode beyond one window
+    tokens, extra = _inputs(cfg, key, batch, total)
+    prompt_len = cfg.sliding_window - 2
+
+    cache, _ = api.prefill(params, tokens[:, :prompt_len],
+                           max_len=total, extra=extra)
+    for i in range(prompt_len, total):
+        logits, cache = api.decode_step(params, cache, tokens[:, i:i + 1])
+    full_logits, _ = api.forward(params, tokens, extra)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0], dtype=np.float32),
+        np.asarray(full_logits[:, -1], dtype=np.float32),
+        rtol=5e-3, atol=5e-3)
+
+
+def test_moe_aux_loss_positive_and_bounded():
+    cfg = ARCHS["olmoe-1b-7b"].reduced()
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), jnp.float32)
+    tokens, _ = _inputs(cfg, jax.random.PRNGKey(3))
+    _, aux = api.forward(params, tokens, None)
+    # Switch-style aux loss ~1 for balanced routing
+    assert 0.0 < float(aux) < 10.0 * cfg.n_layers
+
+
+def test_vlm_patch_prefix_changes_logits():
+    cfg = ARCHS["internvl2-1b"].reduced()
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), jnp.float32)
+    key = jax.random.PRNGKey(4)
+    tokens, extra = _inputs(cfg, key)
+    l1, _ = api.forward(params, tokens, extra)
+    l2, _ = api.forward(params, tokens, extra * 2.0)
+    assert not np.allclose(np.asarray(l1[:, -1]), np.asarray(l2[:, -1]))
+
+
+def test_banded_sliding_window_attention_exact():
+    """The banded SWA fast path (K sliced to the window band per q-block)
+    must equal naive windowed attention exactly."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models.layers import (attention_core, attention_full,
+                                     causal_window_mask)
+    key = jax.random.PRNGKey(7)
+    b, s, h, d = 1, 1024, 2, 32
+    q = jax.random.normal(key, (b, s, h, d)) * 0.5
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, d)) * 0.5
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, d)) * 0.5
+    pos = jnp.arange(s, dtype=jnp.int32)
+    for window in (64, 300):
+        banded = attention_full(q, k, v, pos, pos, window, d ** -0.5,
+                                q_block=256)
+        mask = causal_window_mask(pos[None], pos[None], window)[:, None]
+        naive = attention_core(q, k, v, mask, d ** -0.5)
+        np.testing.assert_allclose(np.asarray(banded), np.asarray(naive),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,72 @@
+"""Properties of RIBBON's Eq. 2 objective."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.objective import (naive_cost_objective, ribbon_objective,
+                                  ribbon_objective_batch)
+
+QOS = 0.99
+MAXC = 10.0
+
+
+@given(rate=st.floats(0.0, 1.0), cost=st.floats(0.0, MAXC))
+@settings(max_examples=200, deadline=None)
+def test_range_is_unit_interval(rate, cost):
+    f = ribbon_objective(rate, cost, QOS, MAXC)
+    assert 0.0 <= f <= 1.0
+
+
+@given(rate_bad=st.floats(0.0, QOS - 1e-6), rate_ok=st.floats(QOS, 1.0),
+       cost_bad=st.floats(0.0, MAXC), cost_ok=st.floats(0.0, MAXC))
+@settings(max_examples=200, deadline=None)
+def test_feasible_always_beats_infeasible(rate_bad, rate_ok, cost_bad, cost_ok):
+    """Paper: 'any configuration that satisfies the QoS is superior than a QoS
+    violation configuration regardless of the serving price'."""
+    f_bad = ribbon_objective(rate_bad, cost_bad, QOS, MAXC)
+    f_ok = ribbon_objective(rate_ok, cost_ok, QOS, MAXC)
+    assert f_ok >= 0.5 > f_bad
+
+
+@given(rate=st.floats(QOS, 1.0), c1=st.floats(0.0, MAXC), c2=st.floats(0.0, MAXC))
+@settings(max_examples=200, deadline=None)
+def test_feasible_region_prefers_cheaper(rate, c1, c2):
+    lo, hi = min(c1, c2), max(c1, c2)
+    assert (ribbon_objective(rate, lo, QOS, MAXC)
+            >= ribbon_objective(rate, hi, QOS, MAXC))
+
+
+@given(r1=st.floats(0.0, QOS - 1e-6), r2=st.floats(0.0, QOS - 1e-6),
+       cost=st.floats(0.0, MAXC))
+@settings(max_examples=200, deadline=None)
+def test_violating_region_prefers_higher_qos(r1, r2, cost):
+    lo, hi = min(r1, r2), max(r1, r2)
+    assert (ribbon_objective(hi, cost, QOS, MAXC)
+            >= ribbon_objective(lo, cost, QOS, MAXC))
+
+
+def test_boundary_continuity():
+    """The paper avoids 'a steep jump' at the QoS boundary: crossing the
+    boundary at zero cost the objective jumps by at most 1/2 (smooth halves)."""
+    just_below = ribbon_objective(QOS - 1e-9, 0.0, QOS, MAXC)
+    just_above = ribbon_objective(QOS, MAXC, QOS, MAXC)
+    assert abs(just_above - just_below) < 1e-6 + 0.5
+
+
+def test_batch_matches_scalar():
+    rates = np.array([0.5, 0.98, 0.99, 1.0, 0.0])
+    costs = np.array([1.0, 5.0, 5.0, 10.0, 0.0])
+    batch = np.asarray(ribbon_objective_batch(rates, costs, QOS, MAXC))
+    scalar = [ribbon_objective(r, c, QOS, MAXC) for r, c in zip(rates, costs)]
+    np.testing.assert_allclose(batch, scalar, rtol=1e-6)
+
+
+def test_naive_objective_is_flat_when_violating():
+    """The ablated single-metric objective: flat 0 in the violating region
+    (the paper's stated failure mode: 'a large portion of the search space
+    will be flat')."""
+    assert naive_cost_objective(0.1, 3.0, QOS, MAXC) == 0.0
+    assert naive_cost_objective(0.97, 8.0, QOS, MAXC) == 0.0
+    assert naive_cost_objective(0.995, 5.0, QOS, MAXC) == 0.5

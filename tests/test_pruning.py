@@ -1,0 +1,54 @@
+"""Prune-set rules: dominance down-set + incumbent cost (paper §4)."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.pruning import PruneSet
+from repro.core.search_space import SearchSpace
+
+SPACE = SearchSpace(bounds=(4, 5, 3), prices=(0.5, 0.2, 0.1))
+
+
+def test_down_set_bruteforce():
+    ps = PruneSet(SPACE)
+    ps.prune_down_set((2, 3, 1))
+    lattice = SPACE.enumerate()
+    expect = np.all(lattice <= np.array([2, 3, 1]), axis=1)
+    np.testing.assert_array_equal(ps.mask, expect)
+
+
+def test_down_set_is_monotone_union():
+    ps = PruneSet(SPACE)
+    n1 = ps.prune_down_set((1, 1, 1))
+    n2 = ps.prune_down_set((1, 1, 1))   # idempotent
+    assert n1 == 2 * 2 * 2 and n2 == 0
+    n3 = ps.prune_down_set((2, 1, 1))   # superset adds only the new slab
+    assert n3 == (3 * 2 * 2) - (2 * 2 * 2)
+
+
+def test_cost_rule():
+    ps = PruneSet(SPACE)
+    ps.prune_cost_at_least(1.0)
+    costs = SPACE.costs(SPACE.enumerate())
+    np.testing.assert_array_equal(ps.mask, costs >= 1.0 - 1e-12)
+
+
+@given(st.tuples(st.integers(0, 4), st.integers(0, 5), st.integers(0, 3)),
+       st.tuples(st.integers(0, 4), st.integers(0, 5), st.integers(0, 3)))
+@settings(max_examples=100, deadline=None)
+def test_down_set_membership_property(violator, probe):
+    """x is pruned by prune_down_set(v) iff x <= v componentwise."""
+    ps = PruneSet(SPACE)
+    ps.prune_down_set(violator)
+    should = all(p <= v for p, v in zip(probe, violator))
+    assert ps.is_pruned(probe) == should
+
+
+def test_state_roundtrip():
+    ps = PruneSet(SPACE)
+    ps.prune_down_set((1, 2, 3))
+    state = ps.state_dict()
+    ps2 = PruneSet(SPACE)
+    ps2.load_state_dict(state)
+    np.testing.assert_array_equal(ps.mask, ps2.mask)

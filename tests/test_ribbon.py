@@ -1,0 +1,149 @@
+"""RibbonOptimizer end-to-end on deterministic synthetic oracles."""
+
+import numpy as np
+import pytest
+
+from repro.core import (RibbonOptimizer, run_hill_climb, run_random,
+                        run_ribbon, run_rsm)
+from repro.core.search_space import SearchSpace
+
+
+def monotone_oracle(space, capacity_per_type, demand):
+    """QoS rate = min(1, capacity/demand): monotone in every dimension."""
+    caps = np.asarray(capacity_per_type, dtype=np.float64)
+
+    def f(config):
+        cap = float(np.dot(caps, np.asarray(config, dtype=np.float64)))
+        return min(1.0, cap / demand)
+    return f
+
+
+SPACE = SearchSpace(bounds=(6, 8), prices=(1.0, 0.35))
+ORACLE = monotone_oracle(SPACE, capacity_per_type=(10.0, 3.0), demand=33.0)
+
+
+def brute_force_optimum(space, oracle, qos_target):
+    lat = space.enumerate()
+    costs = space.costs(lat)
+    best, bc = None, np.inf
+    for cfg, c in zip(lat, costs):
+        if oracle(tuple(cfg)) >= qos_target and c < bc:
+            best, bc = tuple(int(v) for v in cfg), float(c)
+    return best, bc
+
+
+def test_ribbon_finds_global_optimum_monotone():
+    best, bc = brute_force_optimum(SPACE, ORACLE, 0.99)
+    trace = run_ribbon(SPACE, ORACLE, qos_target=0.99, budget=40)
+    found = trace.best_feasible()
+    assert found is not None
+    assert found.cost == pytest.approx(bc)
+
+
+def test_ribbon_beats_exhaustive_sample_count():
+    trace = run_ribbon(SPACE, ORACLE, qos_target=0.99, budget=60)
+    assert trace.n_samples < SPACE.size * 0.5
+
+
+def test_ask_idempotent_until_tell():
+    opt = RibbonOptimizer(SPACE, qos_target=0.99)
+    a = opt.ask()
+    b = opt.ask()
+    assert a == b
+    opt.tell(a, ORACLE(a))
+    c = opt.ask()
+    assert c != a
+
+
+def test_tell_prunes_down_set_of_violator():
+    opt = RibbonOptimizer(SPACE, qos_target=0.99, theta=0.01)
+    opt.tell((1, 1), 0.30)   # deep violation
+    assert opt.prune.is_pruned((0, 0))
+    assert opt.prune.is_pruned((1, 1))
+    assert not opt.prune.is_pruned((2, 1))
+
+
+def test_tell_mild_violation_does_not_prune():
+    opt = RibbonOptimizer(SPACE, qos_target=0.99, theta=0.01)
+    opt.tell((1, 1), 0.985)  # within θ of target
+    assert not opt.prune.is_pruned((0, 0))
+
+
+def test_feasible_tell_prunes_expensive_configs():
+    opt = RibbonOptimizer(SPACE, qos_target=0.99)
+    opt.tell((3, 2), 1.0)    # feasible at cost 3.7
+    assert opt.best_config == (3, 2)
+    assert opt.prune.is_pruned((6, 8))       # most expensive config
+    assert not opt.prune.is_pruned((3, 1))   # cheaper config stays open
+
+
+def test_never_resamples_same_config():
+    opt = RibbonOptimizer(SPACE, qos_target=0.99)
+    seen = set()
+    for _ in range(25):
+        cfg = opt.ask()
+        if cfg is None:
+            break
+        assert cfg not in seen
+        seen.add(cfg)
+        opt.tell(cfg, ORACLE(cfg))
+
+
+def test_warm_restart_prunes_and_estimates():
+    opt = RibbonOptimizer(SPACE, qos_target=0.99)
+    for _ in range(20):
+        cfg = opt.ask()
+        if cfg is None or opt.done:
+            break
+        opt.tell(cfg, ORACLE(cfg))
+    old_best = opt.best_config
+    assert old_best is not None
+    n_real_before = opt.trace.n_samples
+
+    # load jumps 1.5x: old best now violates badly
+    opt.warm_restart(new_qos_of_best=0.66)
+    # old best re-recorded as a real (measured) observation
+    assert opt.trace.n_samples == 1
+    assert opt.trace.evaluations[0].config == old_best
+    # estimated observations present and flagged
+    estimated = [e for e in opt.trace.evaluations if e.estimated]
+    assert len(estimated) >= 1
+    # search can continue and finds the new optimum
+    new_oracle = monotone_oracle(SPACE, (10.0, 3.0), demand=33.0 * 1.5)
+    for _ in range(40):
+        cfg = opt.ask()
+        if cfg is None or opt.done:
+            break
+        opt.tell(cfg, new_oracle(cfg))
+    best, bc = brute_force_optimum(SPACE, new_oracle, 0.99)
+    found = opt.trace.best_feasible()
+    assert found is not None and found.cost <= bc * 1.15
+
+
+def test_state_dict_roundtrip():
+    opt = RibbonOptimizer(SPACE, qos_target=0.99)
+    for _ in range(6):
+        cfg = opt.ask()
+        opt.tell(cfg, ORACLE(cfg))
+    state = opt.state_dict()
+    opt2 = RibbonOptimizer(SPACE, qos_target=0.99)
+    opt2.load_state_dict(state)
+    assert opt2.best_config == opt.best_config
+    assert opt2.ask() == opt.ask()
+    np.testing.assert_array_equal(opt2.sampled, opt.sampled)
+
+
+def test_baselines_reach_feasible():
+    for fn in (run_random, run_hill_climb, run_rsm):
+        trace = fn(SPACE, ORACLE, qos_target=0.99, budget=120, seed=3)
+        assert trace.best_feasible() is not None, fn.__name__
+
+
+def test_ribbon_uses_fewer_samples_than_random():
+    _, bc = brute_force_optimum(SPACE, ORACLE, 0.99)
+    tr_r = run_ribbon(SPACE, ORACLE, qos_target=0.99, budget=80)
+    tr_x = run_random(SPACE, ORACLE, qos_target=0.99, budget=200, seed=11)
+    s_r = tr_r.samples_to_reach_cost(bc)
+    s_x = tr_x.samples_to_reach_cost(bc)
+    assert s_r is not None
+    assert s_x is None or s_r <= s_x

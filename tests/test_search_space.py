@@ -1,0 +1,56 @@
+"""SearchSpace lattice enumeration, costs, index round-trips."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.search_space import SearchSpace, estimate_upper_bounds
+
+
+def test_enumeration_shape_and_order():
+    sp = SearchSpace(bounds=(2, 1), prices=(1.0, 2.0))
+    lat = sp.enumerate()
+    assert lat.shape == (6, 2)
+    # increasing order within each dimension (paper's smoothness arrangement)
+    np.testing.assert_array_equal(
+        lat, [[0, 0], [0, 1], [1, 0], [1, 1], [2, 0], [2, 1]])
+
+
+@given(st.tuples(st.integers(0, 5), st.integers(0, 4), st.integers(0, 3)))
+@settings(max_examples=60, deadline=None)
+def test_index_roundtrip(cfg):
+    sp = SearchSpace(bounds=(5, 4, 3), prices=(1.0, 1.0, 1.0))
+    lat = sp.enumerate()
+    idx = sp.index_of(cfg)
+    assert tuple(lat[idx]) == cfg
+
+
+def test_costs_and_max_cost():
+    sp = SearchSpace(bounds=(2, 3), prices=(0.5, 0.25))
+    assert sp.max_cost == pytest.approx(2 * 0.5 + 3 * 0.25)
+    lat = sp.enumerate()
+    np.testing.assert_allclose(sp.costs(lat), lat @ np.array([0.5, 0.25]))
+
+
+def test_invalid_args():
+    with pytest.raises(ValueError):
+        SearchSpace(bounds=(1,), prices=(1.0, 2.0))
+    with pytest.raises(ValueError):
+        SearchSpace(bounds=(-1,), prices=(1.0,))
+    with pytest.raises(ValueError):
+        SearchSpace(bounds=(2,), prices=(0.0,))
+    sp = SearchSpace(bounds=(2, 2), prices=(1.0, 1.0))
+    with pytest.raises(ValueError):
+        sp.index_of((3, 0))
+
+
+def test_estimate_upper_bounds_saturation():
+    """m_i is the count at which the QoS rate saturates (paper §4)."""
+    def oracle(config):
+        # type 0 saturates at 3 instances, type 1 at 5
+        caps = (3, 5)
+        rates = [min(c, cap) / cap for c, cap in zip(config, caps) if c > 0]
+        return rates[0] if rates else 0.0
+    bounds = estimate_upper_bounds(oracle, 2, hard_cap=10)
+    assert bounds == (3, 5)

@@ -1,0 +1,98 @@
+"""FCFS pool simulator: invariants + equivalence with a pure-python oracle."""
+
+import numpy as np
+import pytest
+
+from repro.serving.instance import InstanceType, ModelProfile
+from repro.serving.simulator import PoolSimulator
+from repro.serving.workload import Workload, generate_workload
+
+FAST = InstanceType("fast", price=1.0, flops=1e9, mem_bw=1e9, overhead=1e-3)
+SLOW = InstanceType("slow", price=0.3, flops=2e8, mem_bw=5e8, overhead=2e-3)
+PROF = ModelProfile("toy", flops_per_sample=1e6, act_bytes_per_sample=1e4,
+                    weight_bytes=1e5, qos_latency=0.05)
+
+
+def _wl(seed=0, n=200, rate=120.0):
+    return generate_workload(seed, n, rate, median_batch=8.0, max_batch=32)
+
+
+def python_fcfs_oracle(workload: Workload, types, counts, profile):
+    """Straightforward FCFS reference: first idle instance in type order,
+    else earliest-freeing instance."""
+    slots = []
+    for t_idx, c in enumerate(counts):
+        slots += [t_idx] * c
+    free = [0.0] * len(slots)
+    lat = []
+    for arr, b in zip(workload.arrivals, workload.batches):
+        idle = [i for i, f in enumerate(free) if f <= arr]
+        pick = idle[0] if idle else int(np.argmin(free))
+        start = max(arr, free[pick])
+        svc = float(types[slots[pick]].latency(profile, b))
+        free[pick] = start + svc
+        lat.append(free[pick] - arr)
+    return np.array(lat)
+
+
+@pytest.mark.parametrize("counts", [(1, 0), (2, 0), (1, 2), (3, 3), (0, 2)])
+def test_scan_matches_python_oracle(counts):
+    wl = _wl()
+    sim = PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=8)
+    got = sim.latencies(counts)
+    want = python_fcfs_oracle(wl, [FAST, SLOW], counts, PROF)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_latency_at_least_service_time():
+    wl = _wl()
+    sim = PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=8)
+    lat = sim.latencies((2, 1))
+    min_service = np.minimum(FAST.latency(PROF, wl.batches),
+                             SLOW.latency(PROF, wl.batches))
+    # simulator runs float32; allow for rounding
+    assert np.all(lat >= min_service * (1 - 1e-5) - 1e-6)
+
+
+def test_single_instance_serializes():
+    wl = _wl(n=50, rate=500.0)   # heavy overload on one instance
+    sim = PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=8)
+    lat = sim.latencies((1, 0))
+    svc = FAST.latency(PROF, wl.batches)
+    finish = wl.arrivals + lat
+    start = finish - svc
+    # non-overlapping service windows on the single instance
+    assert np.all(start[1:] >= (start[:-1] + svc[:-1]) - 1e-6)
+
+
+def test_more_fast_instances_weakly_better_qos():
+    wl = _wl(n=400, rate=300.0)
+    sim = PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=10)
+    rates = [sim.qos_rate((k, 0)) for k in (1, 2, 4, 6)]
+    assert all(b >= a - 0.01 for a, b in zip(rates, rates[1:]))
+    assert rates[-1] > rates[0]
+
+
+def test_empty_pool_all_violations():
+    wl = _wl(n=20)
+    sim = PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=4)
+    assert sim.qos_rate((0, 0)) == 0.0
+
+
+def test_type_order_priority():
+    """With both types idle, the first type in pool order must be used."""
+    arrivals = np.array([0.0, 10.0, 20.0])  # fully spaced out: no queueing
+    batches = np.array([8, 8, 8])
+    wl = Workload(arrivals=arrivals, batches=batches, rate_qps=0.1)
+    sim = PoolSimulator(PROF, [SLOW, FAST], wl, max_instances=4)
+    lat = sim.latencies((1, 1))  # SLOW listed first → every query on SLOW
+    svc_slow = SLOW.latency(PROF, batches)
+    np.testing.assert_allclose(lat, svc_slow, rtol=1e-5)
+
+
+def test_workload_scaling():
+    wl = _wl(n=100, rate=100.0)
+    hot = wl.scaled(2.0)
+    assert hot.rate_qps == pytest.approx(200.0)
+    np.testing.assert_allclose(hot.arrivals, wl.arrivals / 2.0)
+    np.testing.assert_array_equal(hot.batches, wl.batches)

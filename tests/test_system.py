@@ -1,0 +1,43 @@
+"""End-to-end behaviour tests: RIBBON over the full simulation plane.
+
+This is the paper's headline loop: build the Table-3 diverse pool for a model,
+drive the FCFS simulator with a production-like query stream, and verify that
+the BO engine lands on the exhaustive-search optimum with a small fraction of
+the samples and exploration cost.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import run_ribbon
+from repro.serving import make_paper_setup
+
+
+@pytest.mark.slow
+def test_ribbon_finds_exhaustive_optimum_mtwnd():
+    ev, space, prof = make_paper_setup("mtwnd", seed=0, n_queries=1200)
+    best_cfg, best_cost, exhaustive_cost = ev.exhaustive(space, 0.99)
+    assert best_cfg is not None
+
+    trace = run_ribbon(space, ev, qos_target=0.99, budget=60, start=(5, 0, 0))
+    found = trace.best_feasible()
+    assert found is not None
+    # lands on the true optimum cost
+    assert found.cost == pytest.approx(best_cost)
+    # paper: < 40 samples out of 1000+ configs, < 3% of exhaustive cost
+    assert trace.n_samples < 60
+    assert trace.exploration_cost / exhaustive_cost < 0.03
+
+
+@pytest.mark.slow
+def test_diverse_pool_beats_homogeneous_optimum():
+    """Paper Fig. 9: the optimal heterogeneous configuration costs less than
+    the optimal homogeneous configuration."""
+    from repro.serving import best_homogeneous
+    ev, space, prof = make_paper_setup("mtwnd", seed=0, n_queries=1200)
+    cnt, homog_cost = best_homogeneous(ev, 0, space.prices, 0.99)
+    assert cnt is not None
+    best_cfg, best_cost, _ = ev.exhaustive(space, 0.99)
+    assert best_cost < homog_cost
+    # diverse optimum genuinely mixes types
+    assert sum(1 for c in best_cfg if c > 0) >= 2
