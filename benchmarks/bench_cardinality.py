@@ -40,13 +40,12 @@ def run(quick: bool = False):
                                 prices=tuple(t.price for t in types))
             lattice = space.enumerate()
             costs = space.costs(lattice)
-            better, best_cost = 0, np.inf
-            for cfg, c in zip(lattice, costs):
-                if c >= homog_cost:
-                    continue
-                if ev(tuple(int(x) for x in cfg)) >= 0.99:
-                    better += 1
-                    best_cost = min(best_cost, float(c))
+            # one batched sweep over every candidate cheaper than homogeneous
+            cheaper = costs < homog_cost
+            feasible = ev.batch(lattice[cheaper]) >= 0.99
+            better = int(feasible.sum())
+            best_cost = (float(costs[cheaper][feasible].min())
+                         if feasible.any() else np.inf)
             better_counts.append(better)
             top_savings.append(0.0 if np.isinf(best_cost)
                                else 100 * (1 - best_cost / homog_cost))

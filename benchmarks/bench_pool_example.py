@@ -10,9 +10,10 @@ def run(quick: bool = False):
     # pool type order: (g4dn, c5, r5n); filler = r5n (cheapest)
     configs = [(4, 0, 0), (5, 0, 0), (0, 0, 12),
                (4, 0, 4), (3, 0, 4), (2, 0, 4), (4, 0, 1), (3, 0, 2)]
+    rates = ev.batch(configs)   # one vmapped dispatch for the whole figure
     rows, payload = [], {}
-    for cfg in configs:
-        rate = ev(cfg)
+    for cfg, rate in zip(configs, rates):
+        rate = float(rate)
         price = float(ctx.space.costs(
             __import__("numpy").asarray(cfg)[None, :])[0])
         ok = rate >= 0.99

@@ -84,6 +84,23 @@ def write_json(name: str, payload) -> Path:
     return path
 
 
+# Stable machine-readable schema for perf-tracking artifacts
+# (BENCH_*.json).  scripts/check_bench.py and future trend tooling parse
+# these; bump the version on any breaking field change.
+BENCH_SCHEMA_VERSION = 1
+
+
+def write_bench_json(name: str, payload: dict, also: Path | None = None) -> Path:
+    """Write ``BENCH_<name>.json`` with the stable envelope
+    ``{schema_version, bench, **payload}``; optionally mirror to ``also``
+    (e.g. the repo root for committed perf baselines)."""
+    doc = {"schema_version": BENCH_SCHEMA_VERSION, "bench": name, **payload}
+    path = write_json(f"BENCH_{name}", doc)
+    if also is not None:
+        also.write_text(path.read_text())
+    return path
+
+
 def print_table(title: str, headers: list[str], rows: list[list]):
     print(f"\n== {title} ==")
     widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows

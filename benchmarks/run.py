@@ -11,10 +11,12 @@ import argparse
 import time
 import traceback
 
-from . import (bench_ablation_objective, bench_batch_dist, bench_cardinality,
-               bench_convergence, bench_cost_savings, bench_exploration_cost,
-               bench_load_change, bench_pool_example, bench_qos_relax,
-               bench_qos_violations, bench_tpu_cells, bench_tradeoff)
+from . import (bench_ablation_objective, bench_batch_dist, bench_batch_eval,
+               bench_cardinality, bench_convergence, bench_cost_savings,
+               bench_exploration_cost, bench_load_change, bench_pool_example,
+               bench_qos_relax, bench_qos_violations, bench_tpu_cells,
+               bench_tradeoff)
+from .common import write_bench_json
 
 BENCHES = [
     ("fig3_tradeoff", bench_tradeoff),
@@ -29,6 +31,7 @@ BENCHES = [
     ("fig16_load_change", bench_load_change),
     ("ablation_objective", bench_ablation_objective),
     ("beyond_tpu_cells", bench_tpu_cells),
+    ("perf_batch_eval", bench_batch_eval),
 ]
 
 
@@ -39,7 +42,7 @@ def main():
     args = ap.parse_args()
     only = {s.strip() for s in args.only.split(",") if s.strip()}
 
-    failures = []
+    failures, summary = [], []
     for name, mod in BENCHES:
         if only and not any(name.startswith(o) or o in name for o in only):
             continue
@@ -47,10 +50,18 @@ def main():
         print(f"\n##### {name} #####")
         try:
             mod.run(quick=args.quick)
+            status = "ok"
             print(f"[{name}] done in {time.time() - t0:.1f}s")
         except Exception:
             traceback.print_exc()
+            status = "failed"
             failures.append(name)
+        summary.append({"name": name, "status": status,
+                        "wall_time_s": time.time() - t0})
+    # Machine-readable run record (stable schema) so the perf trajectory of
+    # every bench is trackable across PRs, not just printed tables.
+    write_bench_json("run_summary",
+                     {"quick": bool(args.quick), "benches": summary})
     if failures:
         print(f"\nFAILED benches: {failures}")
         raise SystemExit(1)

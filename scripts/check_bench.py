@@ -1,0 +1,49 @@
+#!/usr/bin/env python
+"""CI gate on the batched evaluation engine's perf baseline.
+
+Reads BENCH_batch_eval.json (the committed artifact of
+benchmarks/bench_batch_eval.py, or a path passed as argv[1]) and fails if
+batched throughput at B=32 is below 5x the sequential single-config path —
+the tentpole guarantee every later scaling PR builds on.
+
+    python scripts/check_bench.py [path/to/BENCH_batch_eval.json]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+MIN_SPEEDUP_AT_32 = 5.0
+
+
+def main() -> int:
+    default = Path(__file__).resolve().parent.parent / "BENCH_batch_eval.json"
+    path = Path(sys.argv[1]) if len(sys.argv) > 1 else default
+    if not path.exists():
+        print(f"check_bench: {path} not found — run "
+              f"`PYTHONPATH=src python -m benchmarks.bench_batch_eval` first")
+        return 1
+    doc = json.loads(path.read_text())
+    if doc.get("schema_version") != 1 or doc.get("bench") != "batch_eval":
+        print(f"check_bench: {path} has unexpected schema "
+              f"(schema_version={doc.get('schema_version')!r}, "
+              f"bench={doc.get('bench')!r})")
+        return 1
+    by_b = {r["batch_size"]: r for r in doc["results"]}
+    if 32 not in by_b:
+        print("check_bench: no B=32 measurement in results")
+        return 1
+    speedup = float(by_b[32]["speedup"])
+    if speedup < MIN_SPEEDUP_AT_32:
+        print(f"check_bench: FAIL — batched B=32 speedup {speedup:.2f}x "
+              f"< required {MIN_SPEEDUP_AT_32:.1f}x")
+        return 1
+    print(f"check_bench: OK — batched B=32 speedup {speedup:.2f}x "
+          f"(>= {MIN_SPEEDUP_AT_32:.1f}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

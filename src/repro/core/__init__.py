@@ -9,7 +9,7 @@ Public API:
     PruneSet, SearchTrace
 """
 
-from .acquisition import expected_improvement, select_next
+from .acquisition import expected_improvement, select_batch, select_next
 from .baselines import (central_composite_design, run_hill_climb, run_random,
                         run_rsm)
 from .gp import GaussianProcess, matern52, round_counts, rounded_matern52
@@ -27,6 +27,6 @@ __all__ = [
     "ribbon_objective", "ribbon_objective_batch", "naive_cost_objective",
     "is_feasible",
     "GaussianProcess", "matern52", "rounded_matern52", "round_counts",
-    "expected_improvement", "select_next",
+    "expected_improvement", "select_next", "select_batch",
     "PruneSet", "SearchTrace", "Evaluation",
 ]

@@ -15,8 +15,12 @@ The acquisition respects two masks:
 
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
+
+from .gp import gp_posterior
 
 _NEG = -1e30
 
@@ -57,3 +61,49 @@ def select_next_cost_aware(mean, std, best_y, sampled_mask, pruned_mask,
     blocked = jnp.logical_or(sampled_mask, pruned_mask)
     masked = jnp.where(blocked, _NEG, score)
     return jnp.argmax(masked), masked
+
+
+@partial(jax.jit, static_argnames=("q",))
+def select_batch(x_obs, y_obs, mask, lattice, denom, best_y, blocked,
+                 weights, q: int):
+    """Fused top-q selection with the constant-liar rule, one device dispatch.
+
+    Runs q BO iterations — GP refit, EI, masked argmax — inside a single
+    jitted ``fori_loop``.  After each pick the chosen lattice point is
+    appended to the observation buffers with a "lie" of ``best_y`` (the
+    constant liar of Ginsbourger et al.), so the refitted posterior collapses
+    its variance there and the next pick is pushed away from it — a batch of
+    q *diverse* candidates instead of the top-q of a single EI surface.
+
+    x_obs/y_obs/mask: padded GP buffers with >= q free rows (caller clamps q).
+    lattice:          (size, d) float32 candidate configs (raw counts).
+    blocked:          (size,) bool, True = sampled or pruned.
+    weights:          (size,) EI multiplier (ones, or 1/cost^gamma for the
+                      cost-aware acquisition).
+    Returns (picks (q,) int32 lattice indices, scores (q,) masked EI at pick
+    time; a score <= _NEG/2 flags an exhausted pick the caller must drop).
+    The q=1 case is exactly ``select_next`` on the current posterior.
+    """
+    lattice = lattice.astype(x_obs.dtype)
+
+    def body(k, carry):
+        x_obs, y_obs, mask, blocked, picks, scores = carry
+        mean, std = gp_posterior(x_obs, y_obs, mask, lattice, denom)
+        ei = expected_improvement(mean, std, best_y)
+        masked = jnp.where(blocked, _NEG, ei * weights)
+        idx = jnp.argmax(masked)
+        picks = picks.at[k].set(idx.astype(jnp.int32))
+        scores = scores.at[k].set(masked[idx])
+        blocked = blocked.at[idx].set(True)
+        # constant liar: pretend the pick was observed at the incumbent value
+        slot = jnp.sum(mask).astype(jnp.int32)
+        x_obs = x_obs.at[slot].set(lattice[idx])
+        y_obs = y_obs.at[slot].set(best_y)
+        mask = mask.at[slot].set(1.0)
+        return x_obs, y_obs, mask, blocked, picks, scores
+
+    picks0 = jnp.zeros((q,), dtype=jnp.int32)
+    scores0 = jnp.zeros((q,), dtype=jnp.float32)
+    carry = (x_obs, y_obs, mask, blocked, picks0, scores0)
+    carry = jax.lax.fori_loop(0, q, body, carry)
+    return carry[4], carry[5]

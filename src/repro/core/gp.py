@@ -25,6 +25,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 SQRT5 = 2.2360679774997896
 
@@ -126,40 +127,69 @@ def gp_posterior(x_obs, y_obs, mask, x_query, denom):
 
 
 class GaussianProcess:
-    """Thin stateful wrapper holding padded observation buffers."""
+    """Stateful wrapper holding padded observation buffers.
+
+    Observations are staged in host numpy buffers — ``add`` is a plain array
+    write, not a device ``.at[i].set`` (which copies the whole padded buffer
+    through the device per observation).  The staged buffers are uploaded to
+    the device at most once per fit/predict, only when dirty.
+    """
 
     def __init__(self, n_dims: int, bounds, max_obs: int = 192):
         self.n_dims = n_dims
         self.max_obs = max_obs
         self.denom = jnp.maximum(jnp.asarray(bounds, dtype=jnp.float32), 1.0)
-        self.x = jnp.zeros((max_obs, n_dims), dtype=jnp.float32)
-        self.y = jnp.zeros((max_obs,), dtype=jnp.float32)
-        self.mask = jnp.zeros((max_obs,), dtype=jnp.float32)
+        self._x_host = np.zeros((max_obs, n_dims), dtype=np.float32)
+        self._y_host = np.zeros((max_obs,), dtype=np.float32)
+        self._mask_host = np.zeros((max_obs,), dtype=np.float32)
+        self._dev: tuple | None = None   # (x, y, mask) device mirror
         self.n_obs = 0
 
     def add(self, x, y: float) -> None:
         if self.n_obs >= self.max_obs:
             raise RuntimeError(f"GP observation buffer full ({self.max_obs})")
         i = self.n_obs
-        self.x = self.x.at[i].set(jnp.asarray(x, dtype=jnp.float32))
-        self.y = self.y.at[i].set(float(y))
-        self.mask = self.mask.at[i].set(1.0)
+        self._x_host[i] = np.asarray(x, dtype=np.float32)
+        self._y_host[i] = float(y)
+        self._mask_host[i] = 1.0
+        self._dev = None
         self.n_obs += 1
+
+    def buffers(self) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Device-resident (x, y, mask), uploading staged rows if needed."""
+        if self._dev is None:
+            self._dev = (jnp.asarray(self._x_host), jnp.asarray(self._y_host),
+                         jnp.asarray(self._mask_host))
+        return self._dev
+
+    @property
+    def x(self) -> jnp.ndarray:
+        return self.buffers()[0]
+
+    @property
+    def y(self) -> jnp.ndarray:
+        return self.buffers()[1]
+
+    @property
+    def mask(self) -> jnp.ndarray:
+        return self.buffers()[2]
 
     def predict(self, x_query) -> tuple[jnp.ndarray, jnp.ndarray]:
         xq = jnp.asarray(x_query, dtype=jnp.float32)
-        return gp_posterior(self.x, self.y, self.mask, xq, self.denom)
+        x, y, mask = self.buffers()
+        return gp_posterior(x, y, mask, xq, self.denom)
 
     def state_dict(self) -> dict:
         return {
-            "x": jax.device_get(self.x),
-            "y": jax.device_get(self.y),
-            "mask": jax.device_get(self.mask),
+            "x": self._x_host.copy(),
+            "y": self._y_host.copy(),
+            "mask": self._mask_host.copy(),
             "n_obs": self.n_obs,
         }
 
     def load_state_dict(self, state: dict) -> None:
-        self.x = jnp.asarray(state["x"])
-        self.y = jnp.asarray(state["y"])
-        self.mask = jnp.asarray(state["mask"])
+        self._x_host = np.asarray(state["x"], dtype=np.float32).copy()
+        self._y_host = np.asarray(state["y"], dtype=np.float32).copy()
+        self._mask_host = np.asarray(state["mask"], dtype=np.float32).copy()
+        self._dev = None
         self.n_obs = int(state["n_obs"])

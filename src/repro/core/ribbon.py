@@ -1,4 +1,4 @@
-"""RibbonOptimizer — the paper's BO engine as an ask/tell loop.
+"""RibbonOptimizer — the paper's BO engine as a batched ask/tell loop.
 
 Components wired together exactly as §4 of the paper:
   * GP surrogate with Matern 5/2 + integer-rounding kernel (gp.py),
@@ -7,10 +7,28 @@ Components wired together exactly as §4 of the paper:
   * active pruning ℙ via dominance-down and incumbent-cost rules (pruning.py),
   * load-change warm restart: estimation set 𝕊 with linear QoS rescaling.
 
-The optimizer is deliberately *black-box*: it only ever sees
-(configuration → measured QoS satisfaction rate); prices are static metadata.
-The evaluation itself (queueing simulator or the live serving engine) plugs in
-through ``tell``.
+Batched architecture (this is the device-resident evaluation engine's BO
+half; the simulator half lives in serving/simulator.py):
+
+  * ``ask_batch(q)`` returns the top-q EI candidates in one fused device
+    dispatch — GP refit, EI, masked argmax and the constant-liar update run
+    inside a single jitted loop (acquisition.select_batch), so a batched
+    QoS oracle (``PoolSimulator.qos_rate_batch``) can evaluate all q configs
+    in one vmapped simulation.  ``ask()`` is the q=1 special case.
+  * the sampled/pruned masks and lattice are mirrored as device arrays and
+    re-uploaded only when a ``tell`` dirties them — asks between tells reuse
+    the cached device copies.
+  * the incumbent objective is an incrementally maintained scalar (updated
+    per ``tell``), not an O(n)-per-ask recomputation over the trace.
+  * GP observations are staged host-side and uploaded once per fit (gp.py).
+
+The optimizer stays *black-box*: it only ever sees (configuration → measured
+QoS satisfaction rate); prices are static metadata.  The evaluation itself
+(queueing simulator or the live serving engine) plugs in through ``tell``.
+
+Convergence-stall bookkeeping (the low-EI streak) is updated in ``tell``,
+keyed to the config the ``ask`` answered — calling ``ask`` repeatedly without
+a ``tell`` is idempotent and cannot trip ``done`` early.
 """
 
 from __future__ import annotations
@@ -18,7 +36,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from .acquisition import select_next, select_next_cost_aware
+from .acquisition import _NEG, select_batch
 from .gp import GaussianProcess
 from .objective import ribbon_objective
 from .pruning import PruneSet
@@ -51,6 +69,25 @@ class RibbonOptimizer:
         self.cost_aware = cost_aware
         self._low_ei_streak = 0
         self.exhausted = False
+        # Device-resident acquisition inputs: the lattice and EI weights are
+        # uploaded once; the blocked mask is mirrored lazily (see _blocked).
+        self._lattice_dev = jnp.asarray(self.lattice, dtype=jnp.float32)
+        if cost_aware:
+            weights = 1.0 / np.maximum(self.lattice_costs, 1e-9)
+        else:
+            weights = np.ones(space.size)
+        self._weights_dev = jnp.asarray(weights, dtype=jnp.float32)
+        self._blocked_dev: jnp.ndarray | None = None
+        # Incrementally maintained max of Eq. 2 over everything told so far.
+        self._best_obs_objective = 0.0
+        # config -> masked EI score at selection time; consumed by tell.
+        self._pending_ei: dict[tuple[int, ...], float] = {}
+
+    def _blocked(self) -> jnp.ndarray:
+        """Device mirror of sampled|pruned, re-uploaded only after a tell."""
+        if self._blocked_dev is None:
+            self._blocked_dev = jnp.asarray(self.sampled | self.prune.mask)
+        return self._blocked_dev
 
     # ------------------------------------------------------------------ ask
     def ask(self) -> tuple[int, ...] | None:
@@ -58,35 +95,60 @@ class RibbonOptimizer:
 
         Idempotent until the matching ``tell`` arrives.
         """
-        while self._init_queue:
-            cand = self._init_queue[0]
+        batch = self.ask_batch(1)
+        return batch[0] if batch else None
+
+    def ask_batch(self, q: int) -> list[tuple[int, ...]]:
+        """Top-q configurations to evaluate next, duplicate-free.
+
+        Drains valid warm-start entries first, then fills the rest with the
+        fused constant-liar EI selection (one device dispatch for all picks).
+        Never returns sampled or pruned lattice points; returns fewer than q
+        (possibly zero, setting ``exhausted``) when the open set runs out.
+        Idempotent until the matching ``tell``s arrive.
+        """
+        if q <= 0:
+            return []
+        out: list[tuple[int, ...]] = []
+        i = 0
+        while i < len(self._init_queue) and len(out) < q:
+            cand = self._init_queue[i]
             idx = self.space.index_of(cand)
-            if not self.sampled[idx] and not self.prune.mask[idx]:
-                return cand
-            self._init_queue.pop(0)
+            if self.sampled[idx] or self.prune.mask[idx]:
+                self._init_queue.pop(i)
+                continue
+            if cand not in out:
+                out.append(cand)
+            i += 1
 
         open_mask = ~(self.sampled | self.prune.mask)
-        if not open_mask.any():
-            self.exhausted = True
-            return None
+        n_open = int(open_mask.sum()) - len(out)
+        need = min(q - len(out), n_open)
+        if need > 0:
+            x, y, mask = self.gp.buffers()
+            blocked = self._blocked()
+            if out:
+                init_idx = jnp.asarray(
+                    [self.space.index_of(c) for c in out], dtype=jnp.int32)
+                blocked = blocked.at[init_idx].set(True)
+            # The constant liar appends q-1 fake rows; clamp to the free GP
+            # buffer rows (q=1 never writes a row that survives the trace).
+            free_rows = self.gp.max_obs - self.gp.n_obs
+            q_eff = min(need, max(free_rows, 1))
+            picks, scores = select_batch(
+                x, y, mask, self._lattice_dev, self.gp.denom,
+                float(self._best_obs_objective), blocked, self._weights_dev,
+                q_eff)
+            for idx, score in zip(np.asarray(picks), np.asarray(scores)):
+                if score <= _NEG / 2:   # everything left was blocked
+                    break
+                cfg = tuple(int(v) for v in self.lattice[int(idx)])
+                out.append(cfg)
+                self._pending_ei[cfg] = float(score)
 
-        mean, std = self.gp.predict(self.lattice)
-        if self.cost_aware:
-            idx, ei = select_next_cost_aware(
-                mean, std, float(self.best_objective_observed()),
-                self.sampled, self.prune.mask,
-                jnp.asarray(self.lattice_costs, dtype=jnp.float32))
-        else:
-            idx, ei = select_next(mean, std,
-                                  float(self.best_objective_observed()),
-                                  self.sampled, self.prune.mask)
-        idx = int(idx)
-        ei_val = float(np.asarray(ei)[idx])
-        if ei_val <= self.ei_tol:
-            self._low_ei_streak += 1
-        else:
-            self._low_ei_streak = 0
-        return tuple(int(v) for v in self.lattice[idx])
+        if not out:
+            self.exhausted = True
+        return out
 
     # ----------------------------------------------------------------- tell
     def tell(self, config, qos_rate: float, estimated: bool = False) -> None:
@@ -101,6 +163,17 @@ class RibbonOptimizer:
         self.sampled[idx] = True
         self.gp.add(np.asarray(config, dtype=np.float32), obj)
         self.trace.record(config, qos_rate, cost, feasible, estimated=estimated)
+        self._best_obs_objective = max(self._best_obs_objective, obj)
+
+        # Low-EI streak, keyed to the ask that proposed this config: telling
+        # an un-asked config (warm restart, external measurements) leaves the
+        # streak alone, and repeated asks without a tell cannot double-count.
+        ei = self._pending_ei.pop(config, None)
+        if ei is not None:
+            if ei <= self.ei_tol:
+                self._low_ei_streak += 1
+            else:
+                self._low_ei_streak = 0
 
         if feasible:
             if obj > self.best_objective:
@@ -112,11 +185,11 @@ class RibbonOptimizer:
         elif qos_rate < self.qos_target - self.theta:
             # Dominance rule: the whole down-set of a >θ violator is infeasible.
             self.prune.prune_down_set(config)
+        self._blocked_dev = None
 
     def best_objective_observed(self) -> float:
-        ys = [ribbon_objective(e.qos_rate, e.cost, self.qos_target,
-                               self.space.max_cost) for e in self.trace.evaluations]
-        return max(ys) if ys else 0.0
+        """Max Eq. 2 value over all tells — an O(1) maintained scalar."""
+        return self._best_obs_objective
 
     @property
     def done(self) -> bool:
@@ -164,6 +237,9 @@ class RibbonOptimizer:
         self._init_queue = []
         self._low_ei_streak = 0
         self.exhausted = False
+        self._blocked_dev = None
+        self._best_obs_objective = 0.0
+        self._pending_ei = {}
 
         self.tell(old_best, new_qos_of_best)
         for e in estimate_set:
@@ -200,19 +276,42 @@ class RibbonOptimizer:
         self.theta = float(state["theta"])
         self._init_queue = [tuple(int(v) for v in c) for c in state["init_queue"]]
         self.trace = SearchTrace()
+        self._blocked_dev = None
+        self._pending_ei = {}
+        self._best_obs_objective = 0.0
         for cfg, rate, cost, feas, est in state["trace"]:
             self.trace.record(cfg, rate, cost, feas, estimated=est)
+            self._best_obs_objective = max(
+                self._best_obs_objective,
+                ribbon_objective(rate, cost, self.qos_target,
+                                 self.space.max_cost))
 
 
 def run_ribbon(space: SearchSpace, evaluate_qos, qos_target: float = 0.99,
                budget: int = 60, start=None, theta: float = 0.01,
-               cost_aware: bool = False) -> SearchTrace:
-    """Convenience runner: drive RibbonOptimizer against a QoS oracle."""
+               cost_aware: bool = False, batch_q: int = 1,
+               evaluate_qos_batch=None) -> SearchTrace:
+    """Convenience runner: drive RibbonOptimizer against a QoS oracle.
+
+    ``batch_q > 1`` asks for constant-liar batches and, when
+    ``evaluate_qos_batch(configs) -> rates`` is given (e.g.
+    ``PoolEvaluator.batch``), evaluates each batch in one simulator dispatch.
+    ``budget`` counts evaluations, not iterations.
+    """
     opt = RibbonOptimizer(space, qos_target=qos_target, start=start,
                           theta=theta, cost_aware=cost_aware)
-    for _ in range(budget):
-        config = opt.ask()
-        if config is None or opt.done:
+    n = 0
+    while n < budget and not opt.done:
+        configs = opt.ask_batch(min(batch_q, budget - n))
+        if not configs:
             break
-        opt.tell(config, float(evaluate_qos(config)))
+        if evaluate_qos_batch is not None and len(configs) > 1:
+            rates = np.asarray(evaluate_qos_batch(configs), dtype=np.float64)
+        else:
+            rates = [float(evaluate_qos(c)) for c in configs]
+        for config, rate in zip(configs, rates):
+            opt.tell(config, float(rate))
+            n += 1
+            if opt.done:
+                break
     return opt.trace

@@ -163,7 +163,34 @@ PAPER_POOLS: dict[str, dict] = {
 }
 
 
+# Memoized service tables: constructing several PoolSimulators over the same
+# (model, pool, batch stream) — e.g. one per load level in bench_load_change,
+# where scaling compresses arrivals but keeps batches — must not recompute the
+# (n_types, n_queries) matrix.  Keyed on value (not identity) so equal toy
+# profiles built in tests also hit.  Bounded FIFO to keep memory flat.
+_SERVICE_TABLE_CACHE: dict[tuple, np.ndarray] = {}
+_SERVICE_TABLE_CACHE_MAX = 64
+
+
+def _profile_key(model: ModelProfile) -> tuple:
+    return (model.name, model.flops_per_sample, model.act_bytes_per_sample,
+            model.weight_bytes, tuple(sorted(model.efficiency.items())))
+
+
 def service_time_table(model: ModelProfile, types: list[InstanceType],
                        batches: np.ndarray) -> np.ndarray:
-    """(n_types, n_queries) service time matrix for a query stream."""
-    return np.stack([t.latency(model, batches) for t in types], axis=0)
+    """(n_types, n_queries) service time matrix for a query stream.
+
+    Cached per (model, types, batches); the returned array is read-only —
+    copy before mutating.
+    """
+    batches = np.asarray(batches)
+    key = (_profile_key(model), tuple(types), batches.shape, batches.tobytes())
+    table = _SERVICE_TABLE_CACHE.get(key)
+    if table is None:
+        table = np.stack([t.latency(model, batches) for t in types], axis=0)
+        table.setflags(write=False)
+        if len(_SERVICE_TABLE_CACHE) >= _SERVICE_TABLE_CACHE_MAX:
+            _SERVICE_TABLE_CACHE.pop(next(iter(_SERVICE_TABLE_CACHE)))
+        _SERVICE_TABLE_CACHE[key] = table
+    return table

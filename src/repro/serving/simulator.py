@@ -1,4 +1,4 @@
-"""Event-driven FCFS queueing simulator over a heterogeneous instance pool.
+"""Batched, device-resident FCFS queueing simulator over heterogeneous pools.
 
 Implements the paper's serving discipline (§5.1): "query processing follows a
 simple first-come-first-serve (FCFS) manner, with the first arrived query
@@ -10,12 +10,26 @@ Dispatch rule per query (in arrival order):
     idle instance in pool type order;
   * otherwise wait for the earliest-freeing instance (head-of-line FCFS).
 
-The core is a ``jax.lax.scan`` over the query stream with the per-instance
-next-free times as carry.  Instance slots are padded to a fixed maximum so the
-scan compiles once per (n_queries, max_instances) shape and every pool
-configuration reuses the same executable — the BO loop evaluates hundreds of
-configurations, so this is the hot path of the *search*, exactly the paper's
-"costly evaluation" being amortized.
+Architecture (the batched evaluation engine):
+
+  * the core is a ``jax.lax.scan`` over the query stream with per-instance
+    next-free times as carry, padded to ``max_instances`` slots so one
+    executable serves every pool configuration;
+  * the scan is **vmapped over a batch axis of slot layouts**: a single
+    compiled executable evaluates ``B`` pool configurations in one device
+    dispatch (``latencies_batch`` / ``qos_rate_batch``).  The arrival stream
+    and the (n_types, n_queries) service table are shared across the batch —
+    only the (B, max_instances) slot layout varies;
+  * config→slot expansion is fully vectorized (cumulative-count searchsorted,
+    no per-slot Python loops) so host-side prep is O(B·max_instances) numpy;
+  * the service table is memoized per (model, types, batches) — see
+    ``instance.service_time_table``.
+
+The BO loop evaluates hundreds of configurations — this batched path is the
+hot path of the *search*, exactly the paper's "costly evaluation" being
+amortized.  Single-config ``latencies``/``qos_rate`` are kept as the q=1
+special case and agree bit-for-bit with row ``i`` of the batched result
+(tests/test_batch_eval.py).
 """
 
 from __future__ import annotations
@@ -30,6 +44,13 @@ from .instance import InstanceType, ModelProfile, service_time_table
 from .workload import Workload
 
 _INF = 1e30
+# Offset ranking idle slots strictly below any busy slot's next-free time.
+# Must be (a) far above any simulated timestamp and (b) small enough that
+# float32 keeps unit-spaced priorities distinct after the shift (ulp(1e6) =
+# 0.0625).  1e6 simulated seconds is ~11 days of traffic — float32 arrival
+# times lose ms resolution two orders of magnitude earlier, so the envelope
+# is bounded by the simulator's own precision, not this constant.
+_BIG = 1e6
 
 
 @partial(jax.jit, static_argnames=())
@@ -43,18 +64,18 @@ def _simulate_scan(arrivals, service, type_of_slot, priority, active):
     active:       (max_inst,) bool   slot exists in this configuration
     Returns (latencies, start_times, slot_idx) per query.
     """
-    n_slots = type_of_slot.shape[0]
     free0 = jnp.where(active, 0.0, _INF)
 
     def step(free, inputs):
         arrival, svc_by_type = inputs
+        # Single fused dispatch key: idle slots rank by type-order priority
+        # shifted below every possible next-free time, busy active slots by
+        # next-free time, inactive slots at +inf.  One argmin replaces the
+        # idle-argmin / busy-argmin / any() triple and picks the identical
+        # slot: first idle in type order if any, else earliest-freeing.
         idle = (free <= arrival) & active
-        # first idle slot in type order
-        idle_priority = jnp.where(idle, priority, _INF)
-        pick_idle = jnp.argmin(idle_priority)
-        # earliest-freeing slot otherwise
-        pick_busy = jnp.argmin(jnp.where(active, free, _INF))
-        slot = jnp.where(idle.any(), pick_idle, pick_busy)
+        key = jnp.where(idle, priority - _BIG, jnp.where(active, free, _INF))
+        slot = jnp.argmin(key)
         start = jnp.maximum(arrival, free[slot])
         finish = start + svc_by_type[type_of_slot[slot]]
         free = free.at[slot].set(finish)
@@ -62,6 +83,12 @@ def _simulate_scan(arrivals, service, type_of_slot, priority, active):
 
     _, (lat, start, slot) = jax.lax.scan(step, free0, (arrivals, service.T))
     return lat, start, slot
+
+
+# Batch axis over slot layouts only; the query stream and service table are
+# shared.  One executable per (B, nq, max_instances) shape.
+_simulate_scan_batch = jax.jit(
+    jax.vmap(_simulate_scan, in_axes=(None, None, 0, None, 0)))
 
 
 class PoolSimulator:
@@ -77,29 +104,44 @@ class PoolSimulator:
             service_time_table(model, self.types, workload.batches),
             dtype=jnp.float32)
         self._arrivals = jnp.asarray(workload.arrivals, dtype=jnp.float32)
+        self._priority = jnp.arange(max_instances, dtype=jnp.float32)
+
+    def _slots_batch(self, configs) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized config→slot expansion for a (B, n_types) batch.
+
+        Slot ``s`` of row ``b`` holds type ``t`` iff
+        ``cumsum(configs[b])[t-1] <= s < cumsum(configs[b])[t]``; counting the
+        cumulative sums <= s gives ``t`` without any per-slot loop.
+        Returns (type_of_slot (B, max_inst) int32, active (B, max_inst) bool).
+        """
+        counts = np.asarray(configs, dtype=np.int64)
+        if counts.ndim != 2 or counts.shape[1] != len(self.types):
+            raise ValueError(f"expected (B, {len(self.types)}) config batch, "
+                             f"got shape {counts.shape}")
+        cum = np.cumsum(counts, axis=1)                      # (B, T)
+        total = cum[:, -1]
+        if (total > self.max_instances).any():
+            raise ValueError("config exceeds max_instances padding")
+        slots = np.arange(self.max_instances)
+        active = slots[None, :] < total[:, None]             # (B, S)
+        type_of_slot = (slots[None, None, :] >= cum[:, :, None]).sum(
+            axis=1).astype(np.int32)                         # (B, S)
+        return np.where(active, type_of_slot, 0).astype(np.int32), active
 
     def _slots(self, config) -> tuple[np.ndarray, np.ndarray]:
-        type_of_slot = np.zeros(self.max_instances, dtype=np.int32)
-        active = np.zeros(self.max_instances, dtype=bool)
-        s = 0
-        for t_idx, count in enumerate(config):
-            for _ in range(int(count)):
-                if s >= self.max_instances:
-                    raise ValueError("config exceeds max_instances padding")
-                type_of_slot[s] = t_idx
-                active[s] = True
-                s += 1
-        return type_of_slot, active
+        type_of_slot, active = self._slots_batch(
+            np.asarray(config, dtype=np.int64)[None, :])
+        return type_of_slot[0], active[0]
 
+    # ------------------------------------------------------------- single
     def latencies(self, config) -> np.ndarray:
         """Per-query end-to-end latency (wait + service) for a pool config."""
         if sum(int(c) for c in config) == 0:
             return np.full(self.workload.n_queries, np.inf)
         type_of_slot, active = self._slots(config)
-        priority = np.arange(self.max_instances, dtype=np.float32)
         lat, _, _ = _simulate_scan(self._arrivals, self._service,
                                    jnp.asarray(type_of_slot),
-                                   jnp.asarray(priority),
+                                   self._priority,
                                    jnp.asarray(active))
         return np.asarray(jax.device_get(lat), dtype=np.float64)
 
@@ -111,3 +153,32 @@ class PoolSimulator:
 
     def tail_latency(self, config, pct: float = 99.0) -> float:
         return float(np.percentile(self.latencies(config), pct))
+
+    # ------------------------------------------------------------- batched
+    def latencies_batch(self, configs) -> np.ndarray:
+        """Per-query latencies for a batch of pool configs in one dispatch.
+
+        configs: (B, n_types) integer array-like.  Returns (B, n_queries)
+        float64; rows of all-zero configs are +inf (no pool, every query
+        violates).  Row ``i`` equals ``latencies(configs[i])`` bit-for-bit.
+        """
+        configs = np.asarray(configs, dtype=np.int64)
+        if configs.size == 0:
+            return np.zeros((0, self.workload.n_queries), dtype=np.float64)
+        type_of_slot, active = self._slots_batch(configs)
+        lat, _, _ = _simulate_scan_batch(self._arrivals, self._service,
+                                         jnp.asarray(type_of_slot),
+                                         self._priority,
+                                         jnp.asarray(active))
+        out = np.asarray(jax.device_get(lat), dtype=np.float64)
+        out[configs.sum(axis=1) == 0, :] = np.inf
+        return out
+
+    def qos_rate_batch(self, configs) -> np.ndarray:
+        """QoS satisfaction rate per config of a (B, n_types) batch.
+
+        Element ``i`` equals ``qos_rate(configs[i])`` (same device latencies,
+        same host-side threshold comparison).
+        """
+        lat = self.latencies_batch(configs)
+        return np.mean(lat <= self.model.qos_latency, axis=1)

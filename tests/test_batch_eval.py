@@ -1,0 +1,165 @@
+"""Batched evaluation engine: single/batched equivalence + ask_batch rules."""
+
+import numpy as np
+import pytest
+
+from repro.core import RibbonOptimizer
+from repro.core.search_space import SearchSpace
+from repro.serving.instance import (InstanceType, ModelProfile,
+                                    service_time_table)
+from repro.serving.pool import PoolEvaluator
+from repro.serving.simulator import PoolSimulator
+from repro.serving.workload import generate_workload
+
+FAST = InstanceType("fast", price=1.0, flops=1e9, mem_bw=1e9, overhead=1e-3)
+SLOW = InstanceType("slow", price=0.3, flops=2e8, mem_bw=5e8, overhead=2e-3)
+PROF = ModelProfile("toy", flops_per_sample=1e6, act_bytes_per_sample=1e4,
+                    weight_bytes=1e5, qos_latency=0.05)
+
+MAX_INST = 8
+
+
+def _sim(seed=0, n=200, rate=120.0):
+    wl = generate_workload(seed, n, rate, median_batch=8.0, max_batch=32)
+    return PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=MAX_INST)
+
+
+# ------------------------------------------------------- simulator equivalence
+def test_latencies_batch_matches_single_exactly():
+    """Property: latencies_batch(configs)[i] == latencies(configs[i]) bit-for-
+    bit, over random configs including the empty and max-capacity pools."""
+    sim = _sim()
+    rng = np.random.default_rng(0)
+    configs = rng.integers(0, 5, size=(30, 2))
+    configs[0] = (0, 0)                       # empty pool
+    configs[1] = (MAX_INST // 2, MAX_INST // 2)   # max-capacity padding
+    configs[2] = (MAX_INST, 0)
+    batch = sim.latencies_batch(configs)
+    assert batch.shape == (len(configs), sim.workload.n_queries)
+    for i, cfg in enumerate(configs):
+        single = sim.latencies(tuple(int(c) for c in cfg))
+        np.testing.assert_array_equal(batch[i], single)
+
+
+def test_qos_rate_batch_matches_single():
+    sim = _sim(seed=3, n=150, rate=200.0)
+    rng = np.random.default_rng(1)
+    configs = rng.integers(0, 4, size=(16, 2))
+    configs[0] = (0, 0)
+    rates = sim.qos_rate_batch(configs)
+    for i, cfg in enumerate(configs):
+        assert rates[i] == sim.qos_rate(tuple(int(c) for c in cfg))
+
+
+def test_batch_rejects_overflow_and_bad_shape():
+    sim = _sim()
+    with pytest.raises(ValueError):
+        sim.latencies_batch([[MAX_INST, MAX_INST]])   # exceeds padding
+    with pytest.raises(ValueError):
+        sim.latencies_batch([[1, 1, 1]])              # wrong n_types
+
+
+def test_empty_batch():
+    sim = _sim()
+    out = sim.latencies_batch(np.zeros((0, 2), dtype=np.int64))
+    assert out.shape == (0, sim.workload.n_queries)
+
+
+# ------------------------------------------------------------ evaluator batch
+def test_pool_evaluator_batch_consistent_with_call():
+    wl = generate_workload(0, 150, 150.0, median_batch=8.0, max_batch=32)
+    ev = PoolEvaluator(PROF, [FAST, SLOW], wl, max_instances=MAX_INST)
+    configs = [(1, 0), (2, 1), (0, 3), (1, 0)]        # includes a duplicate
+    rates = ev.batch(configs)
+    assert rates[0] == rates[3]
+    for cfg, r in zip(configs, rates):
+        assert r == ev(cfg)
+    # duplicate + cache hits: only 3 distinct sims counted
+    assert ev.n_evals == 3
+
+
+def test_service_time_table_cached():
+    batches = np.array([1, 8, 32])
+    a = service_time_table(PROF, [FAST, SLOW], batches)
+    b = service_time_table(PROF, [FAST, SLOW], batches)
+    assert a is b
+    assert not a.flags.writeable
+    c = service_time_table(PROF, [SLOW, FAST], batches)   # order matters
+    assert c is not a
+
+
+# ----------------------------------------------------------------- ask_batch
+SPACE = SearchSpace(bounds=(6, 8), prices=(1.0, 0.35))
+
+
+def _oracle(config):
+    cap = float(np.dot((10.0, 3.0), np.asarray(config, dtype=np.float64)))
+    return min(1.0, cap / 33.0)
+
+
+def test_ask_batch_no_duplicates_sampled_or_pruned():
+    opt = RibbonOptimizer(SPACE, qos_target=0.99)
+    for _ in range(4):                         # build up sampled/pruned state
+        cfg = opt.ask()
+        opt.tell(cfg, _oracle(cfg))
+    batch = opt.ask_batch(8)
+    assert len(batch) == len(set(batch))
+    for cfg in batch:
+        idx = SPACE.index_of(cfg)
+        assert not opt.sampled[idx]
+        assert not opt.prune.mask[idx]
+
+
+def test_ask_batch_q1_equals_ask():
+    a = RibbonOptimizer(SPACE, qos_target=0.99)
+    b = RibbonOptimizer(SPACE, qos_target=0.99)
+    for _ in range(6):
+        ca, cb = a.ask(), b.ask_batch(1)
+        assert cb == [ca]
+        a.tell(ca, _oracle(ca))
+        b.tell(ca, _oracle(ca))
+
+
+def test_ask_twice_does_not_advance_low_ei_streak():
+    """Repeated ask without tell must not double-count the low-EI streak or
+    trip `done` early (streak accounting lives in tell, keyed by config)."""
+    opt = RibbonOptimizer(SPACE, qos_target=0.99, patience=1, ei_tol=1e9)
+    for _ in range(5):                 # every EI is "low" with ei_tol=1e9 ...
+        cfg = opt.ask()
+        assert cfg is not None
+        assert not opt.done            # ... yet asks alone never trip done
+        assert opt._low_ei_streak == 0
+    opt.tell(cfg, _oracle(cfg))
+    cfg2 = opt.ask()                   # EI-selected (init start consumed)
+    opt.tell(cfg2, _oracle(cfg2))
+    assert opt._low_ei_streak == 1 and opt.done
+
+
+def test_incremental_incumbent_matches_trace_recompute():
+    from repro.core.objective import ribbon_objective
+    opt = RibbonOptimizer(SPACE, qos_target=0.99)
+    for _ in range(10):
+        cfg = opt.ask()
+        if cfg is None:
+            break
+        opt.tell(cfg, _oracle(cfg))
+        recomputed = max(ribbon_objective(e.qos_rate, e.cost, opt.qos_target,
+                                          SPACE.max_cost)
+                         for e in opt.trace.evaluations)
+        assert opt.best_objective_observed() == pytest.approx(recomputed)
+
+
+def test_ask_batch_exhausts_cleanly():
+    tiny = SearchSpace(bounds=(1, 1), prices=(1.0, 1.0))
+    opt = RibbonOptimizer(tiny, qos_target=0.99, start=(0, 0))
+    seen = set()
+    while True:
+        batch = opt.ask_batch(3)
+        if not batch:
+            break
+        for cfg in batch:
+            assert cfg not in seen
+            seen.add(cfg)
+            opt.tell(cfg, 0.0 if sum(cfg) == 0 else 0.992)
+    assert opt.exhausted
+    assert opt.ask() is None
