@@ -1,0 +1,21 @@
+"""Benchmark package bootstrap: host-device sharding for the grid engine.
+
+The joint (workload x config) sweep engine (PoolSimulator.qos_rate_grid)
+shards its flattened lane axis across XLA host-platform devices.  A CPU
+process defaults to a single device, so opt in to one device per core before
+jax initializes.  No-op when jax is already imported (the flag would be
+ignored) or when the operator set the flag themselves.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        _n = min(os.cpu_count() or 1, 8)
+        if _n > 1:
+            _flag = f"--xla_force_host_platform_device_count={_n}"
+            os.environ["XLA_FLAGS"] = f"{_flags} {_flag}".strip()

@@ -5,7 +5,7 @@ breaks convergence because most of the search space gives no gradient."""
 import numpy as np
 
 from repro.core import RibbonOptimizer
-from repro.core.objective import naive_cost_objective, ribbon_objective
+from repro.core.objective import naive_cost_objective
 
 from .common import HOMOG_START, get_context, print_table, write_json
 
@@ -17,8 +17,7 @@ class NaiveObjectiveOptimizer(RibbonOptimizer):
         # intercept the objective computation by monkeypatching the module
         import repro.core.ribbon as rb
         orig = rb.ribbon_objective
-        rb.ribbon_objective = (
-            lambda r, c, t, mx: naive_cost_objective(r, c, t, mx))
+        rb.ribbon_objective = naive_cost_objective
         try:
             super().tell(config, qos_rate, estimated=estimated)
         finally:

@@ -1,26 +1,42 @@
-"""Perf: batched vs single-config pool evaluation throughput.
+"""Perf: batched and grid pool evaluation vs their sequential baselines.
 
-The tentpole metric of the batched evaluation engine: one vmapped device
-dispatch evaluating B pool configurations must beat B sequential
-``qos_rate`` round-trips.  Measures post-warmup wall clock for batch sizes
-{1, 8, 32, 128} on the MT-WND paper setup and emits ``BENCH_batch_eval.json``
-(stable schema, see common.BENCH_SCHEMA_VERSION) both under ``bench_out/``
-and at the repo root, where ``scripts/check_bench.py`` gates on the B=32
-speedup staying >= 5x.
+Two tentpole metrics of the device-resident evaluation engine:
+
+* **batched**: one vmapped dispatch evaluating B pool configurations must
+  beat B sequential ``qos_rate`` round-trips (B in {1, 8, 32, 128}); the
+  committed gate is B=32 >= 5x.
+* **grid**: one joint (workload x config) dispatch sweeping W load levels x
+  B configs (``qos_rate_grid``) must beat W sequential ``qos_rate_batch``
+  calls on per-level simulators — the pre-grid cost of a load sweep
+  (bench_load_change, autoscaler rescale).  Gate: W=4, B=32 >= 3x, and the
+  grid cells must be bit-identical to the sequential results.
+
+Measures post-warmup wall clock on the MT-WND paper setup and emits
+``BENCH_batch_eval.json`` (stable schema, see common.BENCH_SCHEMA_VERSION)
+under ``bench_out/`` and — for full-size runs — at the repo root, where
+``scripts/check_bench.py`` gates both speedups.  ``--smoke`` is the CI alias
+for ``--quick`` (shrunken workload, bench_out only).
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 from pathlib import Path
 
 import numpy as np
 
-from repro.serving import make_paper_setup
+from repro.serving import PoolSimulator, make_paper_setup
 
 from .common import print_table, write_bench_json
 
 BATCH_SIZES = (1, 8, 32, 128)
+GRID_FACTORS = (1.0, 1.25, 1.5, 2.0)
+GRID_BATCH = 32
+# The grid section always measures the full-size workload, even in smoke
+# mode: one W=4 x B=32 sweep is cheap, and at short streams the ratio is
+# dominated by per-dispatch overhead noise rather than engine throughput.
+GRID_N_QUERIES = 1500
 # Interleaved min-of-N: the shared container's background noise swings
 # individual timings by 2x, so each path is timed N times alternating with
 # the other and the minimum (the least-perturbed run) is reported.
@@ -39,11 +55,7 @@ def _sample_configs(space, n: int, seed: int) -> np.ndarray:
     return cfgs
 
 
-def run(quick: bool = False):
-    n_queries = 400 if quick else 1500
-    ev, space, _ = make_paper_setup("mtwnd", seed=0, n_queries=n_queries)
-    sim = ev.sim
-
+def _measure_batched(sim, space):
     rows, results = [], []
     for bsz in BATCH_SIZES:
         cfgs = _sample_configs(space, bsz, seed=bsz)
@@ -75,27 +87,105 @@ def run(quick: bool = False):
         })
         rows.append([bsz, f"{bsz / t_single:.1f}", f"{bsz / t_batch:.1f}",
                      f"{speedup:.1f}x"])
+    return rows, results
 
+
+def _measure_grid(sim, space):
+    """Grid dispatch vs W sequential qos_rate_batch calls (pre-grid path)."""
+    cfgs = _sample_configs(space, GRID_BATCH, seed=GRID_BATCH)
+    seq_sims = [PoolSimulator(sim.model, sim.types, sim.workload.scaled(f),
+                              max_instances=sim.max_instances)
+                for f in GRID_FACTORS]
+
+    # Warm-up compiles + bit-identity of every (workload, config) cell.
+    grid_rates = sim.qos_rate_grid(cfgs, GRID_FACTORS)
+    seq_rates = np.stack([s.qos_rate_batch(cfgs) for s in seq_sims])
+    bit_identical = bool(np.array_equal(grid_rates, seq_rates))
+
+    t_seq, t_grid = np.inf, np.inf
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        for s in seq_sims:
+            s.qos_rate_batch(cfgs)
+        t_seq = min(t_seq, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        sim.qos_rate_grid(cfgs, GRID_FACTORS)
+        t_grid = min(t_grid, time.perf_counter() - t0)
+
+    cells = len(GRID_FACTORS) * GRID_BATCH
+    return {
+        "n_queries": sim.workload.n_queries,
+        "n_workloads": len(GRID_FACTORS),
+        "load_factors": list(GRID_FACTORS),
+        "batch_size": GRID_BATCH,
+        "wall_time_sequential_s": t_seq,
+        "wall_time_grid_s": t_grid,
+        "sequential_cells_per_s": cells / t_seq,
+        "grid_cells_per_s": cells / t_grid,
+        "speedup": t_seq / t_grid,
+        "bit_identical": bit_identical,
+    }
+
+
+def run(quick: bool = False):
+    n_queries = 400 if quick else 1500
+    ev, space, _ = make_paper_setup("mtwnd", seed=0, n_queries=n_queries)
+    sim = ev.sim
+
+    rows, results = _measure_batched(sim, space)
     print_table("Batched evaluation engine — configs/sec (MT-WND, "
                 f"{n_queries} queries)",
                 ["batch size", "single cfg/s", "batched cfg/s", "speedup"],
                 rows)
+
+    if quick:
+        ev_grid, space_grid, _ = make_paper_setup("mtwnd", seed=0,
+                                                  n_queries=GRID_N_QUERIES)
+        grid = _measure_grid(ev_grid.sim, space_grid)
+    else:
+        grid = _measure_grid(sim, space)
+    print_table("Grid sweep engine — (workload x config) cells/sec",
+                ["W x B", "seq cells/s", "grid cells/s", "speedup",
+                 "bit-identical"],
+                [[f"{grid['n_workloads']} x {grid['batch_size']}",
+                  f"{grid['sequential_cells_per_s']:.1f}",
+                  f"{grid['grid_cells_per_s']:.1f}",
+                  f"{grid['speedup']:.1f}x",
+                  grid["bit_identical"]]])
+
+    # Thresholds mirror scripts/check_bench.py: B=32 >= 5x (smoke floor 4x —
+    # the shrunken workload shifts the dispatch-overhead balance and CI
+    # runners are noisy) and grid >= 3x (always full-size, one threshold).
+    min_b32 = 4.0 if quick else 5.0
+    min_grid = 3.0
     by_b = {r["batch_size"]: r for r in results}
-    checks = {"b32_speedup_ge_5": bool(by_b[32]["speedup"] >= 5.0)}
+    checks = {
+        "b32_speedup_ge_min": bool(by_b[32]["speedup"] >= min_b32),
+        "grid_w4_b32_speedup_ge_min": bool(grid["speedup"] >= min_grid),
+        "grid_bit_identical": grid["bit_identical"],
+        "thresholds": {"b32": min_b32, "grid": min_grid},
+    }
     print("checks:", checks)
     payload = {
         "model": "mtwnd",
         "n_queries": n_queries,
         "repeats": REPEATS,
         "results": results,
+        "grid": grid,
         "checks": checks,
     }
-    # Only full-size runs update the committed repo-root baseline; --quick
-    # measurements (shrunken workload) stay in bench_out/.
+    # Only full-size runs update the committed repo-root baseline; --quick /
+    # --smoke measurements (shrunken workload) stay in bench_out/.
     write_bench_json("batch_eval", payload,
                      also=None if quick else ROOT_JSON)
     return payload
 
 
 if __name__ == "__main__":
-    run()
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--quick", action="store_true",
+                        help="shrunken workload; skip repo-root baseline")
+    parser.add_argument("--smoke", action="store_true",
+                        help="CI smoke mode (alias for --quick)")
+    args = parser.parse_args()
+    run(quick=args.quick or args.smoke)

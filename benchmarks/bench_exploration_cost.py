@@ -1,7 +1,6 @@
 """Fig. 13: total exploration cost to find the optimum, as % of evaluating
 every configuration exhaustively.  Paper claim: RIBBON < 3%, others 10-20%."""
 
-import numpy as np
 
 from .common import MODELS, get_context, print_table, run_method, write_json
 

@@ -1,16 +1,31 @@
 """Fig. 16: response to a 1.5x load increase — warm-restarted RIBBON
 re-converges faster than the original search and lands near 1.5x the old
 cost.  Also compares against a cold restart (beyond-paper ablation showing
-the value of the exploration-record transfer)."""
+the value of the exploration-record transfer).
+
+Driven end-to-end by the joint (workload x config) grid engine:
+
+* the hot-load ground truth is one ``PoolEvaluator.grid`` sweep of the full
+  lattice at the new load level (no second evaluator/simulator is built —
+  the load levels share the base evaluator's memo and service table);
+* the warm restart goes through ``rescale(..., load_factors=(1.0, 1.5))``:
+  every BO round evaluates the candidate batch across both monitored load
+  levels in one ``qos_rate_grid`` dispatch, incumbent re-measurement
+  included (the autoscaler-in-the-loop search);
+* the cold-restart ablation searches the hot level through the same grid
+  path (W=1 rows of the shared memo).
+"""
 
 import numpy as np
 
-from repro.core import RibbonOptimizer
-from repro.serving import PoolEvaluator, make_paper_setup
+from repro.core import RibbonOptimizer, run_ribbon
+from repro.serving import rescale
 
 from .common import HOMOG_START, MODELS, get_context, print_table, write_json
 
 LOAD_FACTOR = 1.5
+QOS_TARGET = 0.99
+BATCH_Q = 8
 
 
 def _search(opt, evaluate, budget):
@@ -28,41 +43,37 @@ def run(quick: bool = False):
     rows, payload = [], {}
     for m in models:
         ctx = get_context(m)
-        ev1 = ctx.evaluator
+        ev = ctx.evaluator
 
-        # heavier load on the same stream
-        hot_wl = ev1.workload.scaled(LOAD_FACTOR)
-        ev2 = PoolEvaluator(ctx.profile, ev1.types, hot_wl)
-        best2, cost2, _ = ev2.exhaustive(ctx.space, 0.99)
+        best2, cost2, _ = ev.exhaustive(ctx.space, QOS_TARGET,
+                                        load_factor=LOAD_FACTOR)
 
         # phase 1: converge on base load
-        opt = RibbonOptimizer(ctx.space, qos_target=0.99,
+        opt = RibbonOptimizer(ctx.space, qos_target=QOS_TARGET,
                               start=HOMOG_START[m])
-        n_base = _search(opt, ev1, budget=80)
+        _search(opt, ev, budget=80)
         s_base = opt.trace.samples_to_reach_cost(ctx.best_cost)
 
-        # phase 2: load change → warm restart
-        series = []
+        # phase 2: load change → grid rescale (incumbent + candidate batches
+        # swept across both monitored levels, one dispatch per round)
         old_cost = opt.best_cost
-        opt.warm_restart(float(ev2(opt.best_config)))
-        n0 = opt.trace.n_samples
-        while opt.trace.n_samples - n0 < 80 and not opt.done:
-            cfg = opt.ask()
-            if cfg is None:
-                break
-            rate = float(ev2(cfg))
-            opt.tell(cfg, rate)
-            e = opt.trace.evaluations[-1]
-            series.append({"violation_pct": 100 * (1 - rate),
-                           "norm_cost": e.cost / old_cost})
+        event = rescale(opt, ev, budget=80,
+                        load_factors=(1.0, LOAD_FACTOR), batch_q=BATCH_Q)
+        series = [{"violation_pct": 100 * (1 - e.qos_rate),
+                   "norm_cost": e.cost / old_cost}
+                  for e in opt.trace.evaluations if not e.estimated][1:]
         s_new = (opt.trace.samples_to_reach_cost(cost2)
                  if best2 is not None else None)
 
-        # cold-restart ablation
-        cold = RibbonOptimizer(ctx.space, qos_target=0.99,
-                               start=HOMOG_START[m])
-        _search(cold, ev2, budget=80)
-        s_cold = (cold.trace.samples_to_reach_cost(cost2)
+        # cold-restart ablation on the hot level: a fresh run_ribbon search
+        # fed by one-row grid sweeps (same memo, same batched-ask loop)
+        cold_trace = run_ribbon(
+            ctx.space,
+            lambda c: float(ev.grid([c], [LOAD_FACTOR])[0][0]),
+            qos_target=QOS_TARGET, budget=80, start=HOMOG_START[m],
+            batch_q=BATCH_Q,
+            evaluate_qos_batch=lambda cfgs: ev.grid(cfgs, [LOAD_FACTOR])[0])
+        s_cold = (cold_trace.samples_to_reach_cost(cost2)
                   if best2 is not None else None)
 
         found = opt.trace.best_feasible()
@@ -73,12 +84,14 @@ def run(quick: bool = False):
             "new_over_old_cost": (found.cost / old_cost) if found else None,
             "exhaustive_new_cost_ratio": (cost2 / old_cost
                                           if best2 else None),
+            "qos_by_load": event.qos_by_load,
             "series": series,
         }
         rows.append([m, s_base, s_new, s_cold,
                      f"{payload[m]['new_over_old_cost']:.2f}x"
                      if found else "-"])
-    print_table(f"Fig.16 — adaptation to a {LOAD_FACTOR}x load change",
+    print_table(f"Fig.16 — adaptation to a {LOAD_FACTOR}x load change "
+                "(grid-driven)",
                 ["model", "samples→opt (base)", "warm restart",
                  "cold restart", "new/old cost"], rows)
     checks = {m: {

@@ -2,7 +2,6 @@
 the optimum, per method.  Paper: RIBBON fewest (e.g. ~20 vs up to 100 on
 CANDLE)."""
 
-import numpy as np
 
 from .common import MODELS, get_context, print_table, run_method, write_json
 

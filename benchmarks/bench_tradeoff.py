@@ -1,7 +1,6 @@
 """Fig. 3: per-instance performance and cost-effectiveness flip with batch
 size (MT-WND, batches 32 vs 128)."""
 
-import numpy as np
 
 from repro.serving import AWS_INSTANCES, MODEL_PROFILES
 from repro.serving.pool import cost_effectiveness

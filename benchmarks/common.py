@@ -7,7 +7,6 @@ import json
 from dataclasses import dataclass
 from pathlib import Path
 
-import numpy as np
 
 from repro.core import (run_hill_climb, run_random, run_ribbon, run_rsm)
 from repro.serving import best_homogeneous, make_paper_setup

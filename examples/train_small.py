@@ -29,7 +29,7 @@ def main():
         _, _, losses1 = train(args.arch, steps=args.steps // 2, batch_size=8,
                               seq_len=64, smoke=True, n_micro=2,
                               ckpt_dir=ckpt_dir, ckpt_every=20)
-        print(f"\n=== phase 2: 'crash' and resume from checkpoint ===")
+        print("\n=== phase 2: 'crash' and resume from checkpoint ===")
         _, _, losses2 = train(args.arch, steps=args.steps // 2, batch_size=8,
                               seq_len=64, smoke=True, n_micro=2,
                               ckpt_dir=ckpt_dir, ckpt_every=20, resume=True)

@@ -6,7 +6,7 @@ Public API:
     run_random, run_hill_climb, run_rsm, central_composite_design
     ribbon_objective, ribbon_objective_batch
     GaussianProcess, matern52, rounded_matern52
-    PruneSet, SearchTrace
+    PruneSet, apply_prune_rules, SearchTrace
 """
 
 from .acquisition import expected_improvement, select_batch, select_next
@@ -15,7 +15,7 @@ from .baselines import (central_composite_design, run_hill_climb, run_random,
 from .gp import GaussianProcess, matern52, round_counts, rounded_matern52
 from .objective import (is_feasible, naive_cost_objective, ribbon_objective,
                         ribbon_objective_batch)
-from .pruning import PruneSet
+from .pruning import PruneSet, apply_prune_rules
 from .ribbon import RibbonOptimizer, run_ribbon
 from .search_space import SearchSpace, estimate_upper_bounds
 from .trace import Evaluation, SearchTrace
@@ -28,5 +28,5 @@ __all__ = [
     "is_feasible",
     "GaussianProcess", "matern52", "rounded_matern52", "round_counts",
     "expected_improvement", "select_next", "select_batch",
-    "PruneSet", "SearchTrace", "Evaluation",
+    "PruneSet", "apply_prune_rules", "SearchTrace", "Evaluation",
 ]

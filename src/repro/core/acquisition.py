@@ -77,12 +77,20 @@ def select_batch(x_obs, y_obs, mask, lattice, denom, best_y, blocked,
 
     x_obs/y_obs/mask: padded GP buffers with >= q free rows (caller clamps q).
     lattice:          (size, d) float32 candidate configs (raw counts).
-    blocked:          (size,) bool, True = sampled or pruned.
+    blocked:          (size,) bool, True = sampled or pruned.  Taken and
+                      returned as device-resident state: the returned copy
+                      has the q picks marked, composing with the device-side
+                      prune updates (pruning.apply_prune_rules) without a
+                      host round-trip.  NB: RibbonOptimizer deliberately
+                      discards the returned mask — persisting it would break
+                      ask idempotency; picks only enter the optimizer's own
+                      mask when their ``tell`` arrives.
     weights:          (size,) EI multiplier (ones, or 1/cost^gamma for the
                       cost-aware acquisition).
     Returns (picks (q,) int32 lattice indices, scores (q,) masked EI at pick
-    time; a score <= _NEG/2 flags an exhausted pick the caller must drop).
-    The q=1 case is exactly ``select_next`` on the current posterior.
+    time, blocked' (size,) bool with the picks set; a score <= _NEG/2 flags
+    an exhausted pick the caller must drop).  The q=1 case is exactly
+    ``select_next`` on the current posterior.
     """
     lattice = lattice.astype(x_obs.dtype)
 
@@ -106,4 +114,4 @@ def select_batch(x_obs, y_obs, mask, lattice, denom, best_y, blocked,
     scores0 = jnp.zeros((q,), dtype=jnp.float32)
     carry = (x_obs, y_obs, mask, blocked, picks0, scores0)
     carry = jax.lax.fori_loop(0, q, body, carry)
-    return carry[4], carry[5]
+    return carry[4], carry[5], carry[3]

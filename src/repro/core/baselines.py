@@ -149,7 +149,8 @@ def central_composite_design(bounds) -> list[tuple[int, ...]]:
     hi = list(bounds)
     mid = [m // 2 for m in bounds]
     pts: list[tuple[int, ...]] = []
-    for corner in itertools.product(*[(l, h) for l, h in zip(lo, hi)]):
+    for corner in itertools.product(*[(lo_v, hi_v)
+                                      for lo_v, hi_v in zip(lo, hi)]):
         pts.append(tuple(int(v) for v in corner))
     for dim in range(n):
         for v in (lo[dim], hi[dim]):

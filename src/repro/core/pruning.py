@@ -13,13 +13,49 @@ Two sound pruning rules derived from the objective's structure:
 
 The prune set is a boolean mask over the enumerated lattice and is applied as a
 hard constraint on the acquisition argmax (see acquisition.select_next).
+
+Two mirrors of the same rules live here:
+
+* ``PruneSet`` — the host-side numpy mask: cheap python bookkeeping for the
+  init-queue filter, exhaustion counting, checkpointing and the tests;
+* ``apply_prune_rules`` — the fused device-side update ``RibbonOptimizer.tell``
+  applies to its resident blocked mask (sampled | pruned), so the mask the
+  acquisition argmax consumes is maintained entirely on device and never
+  round-trips the host between tells (tests/test_grid_eval.py asserts the two
+  mirrors stay bit-identical over recorded BO runs).
 """
 
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .search_space import SearchSpace
+
+
+@jax.jit
+def apply_prune_rules(blocked, lattice, costs, idx, config, cost_cut,
+                      apply_down, apply_cost):
+    """Fused device-side ``tell`` update of the blocked (sampled|pruned) mask.
+
+    blocked:   (size,) bool device mask, True = never propose again
+    lattice:   (size, d) float32 lattice counts
+    costs:     (size,) float32 lattice prices
+    idx:       scalar int32 — lattice index of the config just evaluated
+    config:    (d,) float32 — its counts (dominance-down anchor)
+    cost_cut:  scalar float32 — incumbent feasible cost (+inf disables)
+    apply_down/apply_cost: scalar bools selecting which rules fire
+
+    One dispatch marks the sample and applies both paper rules; all operands
+    are device-resident so nothing is re-uploaded per tell.  Counts are exact
+    in float32 (small integers) and price gaps are far above float32 ulp, so
+    the result matches the float64 host rules elementwise.
+    """
+    blocked = blocked.at[idx].set(True)
+    down = jnp.all(lattice <= config[None, :], axis=1) & apply_down
+    over = (costs >= cost_cut - 1e-12) & apply_cost
+    return blocked | down | over
 
 
 class PruneSet:

@@ -13,11 +13,16 @@ half; the simulator half lives in serving/simulator.py):
   * ``ask_batch(q)`` returns the top-q EI candidates in one fused device
     dispatch — GP refit, EI, masked argmax and the constant-liar update run
     inside a single jitted loop (acquisition.select_batch), so a batched
-    QoS oracle (``PoolSimulator.qos_rate_batch``) can evaluate all q configs
-    in one vmapped simulation.  ``ask()`` is the q=1 special case.
-  * the sampled/pruned masks and lattice are mirrored as device arrays and
-    re-uploaded only when a ``tell`` dirties them — asks between tells reuse
-    the cached device copies.
+    QoS oracle (``PoolSimulator.qos_rate_batch`` / ``qos_rate_grid``) can
+    evaluate all q configs in one vmapped simulation.  ``ask()`` is the q=1
+    special case.
+  * the blocked mask (sampled | pruned) is **device-resident state**: every
+    ``tell`` applies the sample mark plus the dominance-down and incumbent-
+    cost prune rules in one fused dispatch (pruning.apply_prune_rules), and
+    ``select_batch`` takes and returns the mask — the prune state never
+    round-trips the host.  The numpy ``sampled``/``PruneSet`` mirrors stay
+    maintained for cheap host bookkeeping (init queue, exhaustion counts,
+    checkpoints) and are asserted bit-identical to the device mask in tests.
   * the incumbent objective is an incrementally maintained scalar (updated
     per ``tell``), not an O(n)-per-ask recomputation over the trace.
   * GP observations are staged host-side and uploaded once per fit (gp.py).
@@ -39,7 +44,7 @@ import numpy as np
 from .acquisition import _NEG, select_batch
 from .gp import GaussianProcess
 from .objective import ribbon_objective
-from .pruning import PruneSet
+from .pruning import PruneSet, apply_prune_rules
 from .search_space import SearchSpace
 from .trace import SearchTrace
 
@@ -69,25 +74,30 @@ class RibbonOptimizer:
         self.cost_aware = cost_aware
         self._low_ei_streak = 0
         self.exhausted = False
-        # Device-resident acquisition inputs: the lattice and EI weights are
-        # uploaded once; the blocked mask is mirrored lazily (see _blocked).
+        # Device-resident acquisition inputs: the lattice, costs and EI
+        # weights are uploaded once; the blocked mask lives on device and is
+        # updated in place by the fused tell rules (never re-uploaded).
         self._lattice_dev = jnp.asarray(self.lattice, dtype=jnp.float32)
+        self._costs_dev = jnp.asarray(self.lattice_costs, dtype=jnp.float32)
         if cost_aware:
             weights = 1.0 / np.maximum(self.lattice_costs, 1e-9)
         else:
             weights = np.ones(space.size)
         self._weights_dev = jnp.asarray(weights, dtype=jnp.float32)
-        self._blocked_dev: jnp.ndarray | None = None
+        self._blocked_dev = jnp.zeros(space.size, dtype=bool)
         # Incrementally maintained max of Eq. 2 over everything told so far.
         self._best_obs_objective = 0.0
         # config -> masked EI score at selection time; consumed by tell.
         self._pending_ei: dict[tuple[int, ...], float] = {}
 
     def _blocked(self) -> jnp.ndarray:
-        """Device mirror of sampled|pruned, re-uploaded only after a tell."""
-        if self._blocked_dev is None:
-            self._blocked_dev = jnp.asarray(self.sampled | self.prune.mask)
+        """The device-resident sampled|pruned mask (maintained per tell)."""
         return self._blocked_dev
+
+    def _rebuild_blocked_dev(self) -> None:
+        """One-off upload from the host mirrors — only for state restores
+        (checkpoint load), never on the tell/ask hot path."""
+        self._blocked_dev = jnp.asarray(self.sampled | self.prune.mask)
 
     # ------------------------------------------------------------------ ask
     def ask(self) -> tuple[int, ...] | None:
@@ -135,7 +145,7 @@ class RibbonOptimizer:
             # buffer rows (q=1 never writes a row that survives the trace).
             free_rows = self.gp.max_obs - self.gp.n_obs
             q_eff = min(need, max(free_rows, 1))
-            picks, scores = select_batch(
+            picks, scores, _ = select_batch(
                 x, y, mask, self._lattice_dev, self.gp.denom,
                 float(self._best_obs_objective), blocked, self._weights_dev,
                 q_eff)
@@ -175,6 +185,7 @@ class RibbonOptimizer:
             else:
                 self._low_ei_streak = 0
 
+        apply_down = False
         if feasible:
             if obj > self.best_objective:
                 self.best_objective = obj
@@ -185,7 +196,14 @@ class RibbonOptimizer:
         elif qos_rate < self.qos_target - self.theta:
             # Dominance rule: the whole down-set of a >θ violator is infeasible.
             self.prune.prune_down_set(config)
-        self._blocked_dev = None
+            apply_down = True
+        # Same two rules fused on device: the acquisition's blocked mask is
+        # resident state, updated in one dispatch instead of re-uploaded.
+        self._blocked_dev = apply_prune_rules(
+            self._blocked_dev, self._lattice_dev, self._costs_dev,
+            jnp.int32(idx), jnp.asarray(config, dtype=jnp.float32),
+            jnp.float32(self.best_cost if feasible else np.inf),
+            apply_down, feasible)
 
     def best_objective_observed(self) -> float:
         """Max Eq. 2 value over all tells — an O(1) maintained scalar."""
@@ -237,7 +255,7 @@ class RibbonOptimizer:
         self._init_queue = []
         self._low_ei_streak = 0
         self.exhausted = False
-        self._blocked_dev = None
+        self._blocked_dev = jnp.zeros(self.space.size, dtype=bool)
         self._best_obs_objective = 0.0
         self._pending_ei = {}
 
@@ -276,7 +294,7 @@ class RibbonOptimizer:
         self.theta = float(state["theta"])
         self._init_queue = [tuple(int(v) for v in c) for c in state["init_queue"]]
         self.trace = SearchTrace()
-        self._blocked_dev = None
+        self._rebuild_blocked_dev()
         self._pending_ei = {}
         self._best_obs_objective = 0.0
         for cfg, rate, cost, feas, est in state["trace"]:

@@ -14,7 +14,7 @@ three types), so enumeration is both faithful and exact.
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

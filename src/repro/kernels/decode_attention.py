@@ -54,8 +54,8 @@ def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, m_scr, l_scr,
 
     @pl.when(i_k == pl.num_programs(1) - 1)
     def _finish():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
 
 
 def decode_attention(q, k, v, pos, *, scale: float | None = None,

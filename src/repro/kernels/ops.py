@@ -92,10 +92,10 @@ def ssd_scan(x, dt, a_log, b, c, *, chunk=128, interpret=False):
     """Mamba2 SSD with the same contract as models.ssm.ssd_chunked:
     x (B,L,H,P), dt (B,L,H) softplus'd, a_log (H,), b/c (B,L,G,N).
     Returns y (B,L,H,P) and final state (B,H,P,N) fp32."""
-    bsz, l, h, p = x.shape
+    bsz, slen, h, p = x.shape
     g, n = b.shape[2], b.shape[3]
-    ch = chunk if l % chunk == 0 else l
-    nc = l // ch
+    ch = chunk if slen % chunk == 0 else slen
+    nc = slen // ch
     rep = h // g
     a = -jnp.exp(a_log.astype(jnp.float32))
     da = dt.astype(jnp.float32) * a                       # (B,L,H)
@@ -110,7 +110,7 @@ def ssd_scan(x, dt, a_log, b, c, *, chunk=128, interpret=False):
     da_arr = jnp.moveaxis(da, 2, 1).reshape(bsz, h, nc, ch)
     y, state = _ssd_kernel(arrange(xdt), da_arr, arrange(bh), arrange(chh),
                            interpret=interpret)
-    y = jnp.moveaxis(y.reshape(bsz, h, l, p), 1, 2)       # (B,L,H,P)
+    y = jnp.moveaxis(y.reshape(bsz, h, slen, p), 1, 2)       # (B,L,H,P)
     return y, jnp.swapaxes(state, -1, -2)                 # (B,H,P,N)
 
 

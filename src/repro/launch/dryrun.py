@@ -23,7 +23,6 @@ import traceback      # noqa: E402
 from pathlib import Path  # noqa: E402
 
 import jax            # noqa: E402
-import numpy as np    # noqa: E402
 
 from ..configs import SHAPES, cell_is_applicable, get_arch  # noqa: E402
 from ..models.transformer import get_model                  # noqa: E402

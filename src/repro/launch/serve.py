@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import argparse
 
-import numpy as np
 
 from ..core import RibbonOptimizer, SearchSpace
 from ..serving.engine import DEFAULT_TPU_CELLS, ClusterEngine

@@ -11,7 +11,6 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import SHAPES, get_arch
-from ..models.transformer import get_model
 from ..optim import adamw
 
 PARAM_DTYPE = jnp.bfloat16
@@ -69,7 +68,6 @@ def opt_specs(param_sds) -> adamw.AdamWState:
 
 
 def cache_specs(api, arch: str, shape: str):
-    cfg = api.cfg
     seq, gbatch, kind = SHAPES[shape]
     assert kind == "decode"
     return jax.eval_shape(

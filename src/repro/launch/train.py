@@ -13,11 +13,9 @@ from __future__ import annotations
 
 import argparse
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs import get_arch
 from ..data import Prefetcher, SyntheticTokens

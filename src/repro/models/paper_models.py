@@ -14,7 +14,6 @@ embedding lookups through kernels.ops.embedding_bag when use_kernel=True.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -30,8 +29,8 @@ def _mlp_params(key, dims, dtype=jnp.float32):
 
 
 def _mlp_apply(layers, x, act=jax.nn.relu, last_act=False):
-    for i, l in enumerate(layers):
-        x = x @ l["w"] + l["b"]
+    for i, layer in enumerate(layers):
+        x = x @ layer["w"] + layer["b"]
         if i < len(layers) - 1 or last_act:
             x = act(x)
     return x

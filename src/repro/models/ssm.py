@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..launch.sharding import constrain
 from .layers import dense, rmsnorm
@@ -88,10 +87,10 @@ def ssd_chunked(x, dt, a_log, b, c, chunk: int):
     b,c (B,L,G,N)  input/output projections (groups broadcast onto heads)
     Returns y (B,L,H,P) and final state (B,H,P,N).
     """
-    bsz, l, h, p = x.shape
+    bsz, slen, h, p = x.shape
     g, n = b.shape[2], b.shape[3]
-    assert l % chunk == 0, f"seq {l} not divisible by chunk {chunk}"
-    nc = l // chunk
+    assert slen % chunk == 0, f"seq {slen} not divisible by chunk {chunk}"
+    nc = slen // chunk
     rep = h // g
 
     a = -jnp.exp(a_log.astype(jnp.float32))              # (H,)
@@ -141,7 +140,7 @@ def ssd_chunked(x, dt, a_log, b, c, chunk: int):
                        ch.astype(jnp.float32), prev_states, state_decay)
 
     y = y_diag.astype(jnp.float32) + y_off
-    return y.reshape(bsz, l, h, p).astype(x.dtype), final
+    return y.reshape(bsz, slen, h, p).astype(x.dtype), final
 
 
 def ssm_forward(params, x, cfg, carry=None):
@@ -149,7 +148,7 @@ def ssm_forward(params, x, cfg, carry=None):
 
     carry = None (fresh) or dict(state, conv) for chunked continuation.
     Returns (out (B,L,D), new_carry)."""
-    bsz, l, d = x.shape
+    bsz, slen, d = x.shape
     h, p, n, g = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
     zxbcdt = dense(x, params["in_proj"])
     z, xbc, dt = _split_proj(cfg, zxbcdt)
@@ -157,15 +156,15 @@ def ssm_forward(params, x, cfg, carry=None):
     xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
                                  conv_carry)
     xbc = jax.nn.silu(xbc)
-    x_in = xbc[..., :cfg.d_inner].reshape(bsz, l, h, p)
-    b = xbc[..., cfg.d_inner:cfg.d_inner + g * n].reshape(bsz, l, g, n)
-    c = xbc[..., cfg.d_inner + g * n:].reshape(bsz, l, g, n)
+    x_in = xbc[..., :cfg.d_inner].reshape(bsz, slen, h, p)
+    b = xbc[..., cfg.d_inner:cfg.d_inner + g * n].reshape(bsz, slen, g, n)
+    c = xbc[..., cfg.d_inner + g * n:].reshape(bsz, slen, g, n)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
     # chunk size must divide L; fall back to full-length single chunk
-    chunk = cfg.ssm_chunk if l % cfg.ssm_chunk == 0 else l
+    chunk = cfg.ssm_chunk if slen % cfg.ssm_chunk == 0 else slen
     y, state = ssd_chunked(x_in, dt, params["A_log"], b, c, chunk)
     y = y + params["D"].astype(x.dtype)[:, None] * x_in
-    y = y.reshape(bsz, l, cfg.d_inner)
+    y = y.reshape(bsz, slen, cfg.d_inner)
     y = rmsnorm(y * jax.nn.silu(z), params["ssm_norm"], cfg.norm_eps)
     out = dense(y, params["out_proj"])
     new_carry = {"state": state, "conv": new_conv}
@@ -204,7 +203,7 @@ def ssm_decode_step(params, x, cfg, carry):
 def ssd_reference_sequential(x, dt, a_log, b, c):
     """O(L) sequential reference (token-by-token recurrence) used to validate
     the chunked form."""
-    bsz, l, h, p = x.shape
+    bsz, slen, h, p = x.shape
     g, n = b.shape[2], b.shape[3]
     rep = h // g
     a = -jnp.exp(a_log.astype(jnp.float32))

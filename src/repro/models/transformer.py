@@ -17,18 +17,16 @@ jax.checkpoint.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs.base import ArchConfig
 from ..launch.sharding import constrain
 from .cache import (cache_window, dequantize_kv, init_kv_cache,
                     init_mla_cache, init_ssm_cache, quantize_kv)
-from .layers import (attention_core, attention_full, causal_window_mask,
-                     dense, gelu_mlp,
+from .layers import (attention_core, attention_full, dense, gelu_mlp,
                      gqa_attention, gqa_project_qkv, init_gqa_params,
                      init_mla_params, init_moe_params, layernorm,
                      mla_attention, mla_decode_absorbed, mla_latents,

@@ -23,8 +23,12 @@ class AdamWState(NamedTuple):
 
 
 def init(params) -> AdamWState:
-    f32 = lambda p: p.astype(jnp.float32)
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def f32(p):
+        return p.astype(jnp.float32)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
     return AdamWState(
         step=jnp.zeros((), jnp.int32),
         master=jax.tree.map(f32, params),

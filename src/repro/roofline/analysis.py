@@ -135,7 +135,7 @@ def model_flops(cfg, shape_kind: str, n_tokens: int) -> float:
 
 def count_params(cfg, active_only: bool = False) -> float:
     """Analytical parameter count (active params only when requested)."""
-    d, v, l = cfg.d_model, cfg.vocab_size, cfg.n_layers
+    d, v, n_layers = cfg.d_model, cfg.vocab_size, cfg.n_layers
     total = 2 * v * d                      # embed + head
     if cfg.family == "ssm" or cfg.family == "hybrid":
         d_in = cfg.d_inner
@@ -143,7 +143,7 @@ def count_params(cfg, active_only: bool = False) -> float:
         nh = cfg.ssm_nheads
         per = d * (2 * d_in + 2 * g * n + nh) + d_in * d \
             + cfg.conv_kernel * (d_in + 2 * g * n)
-        n_mamba = l if cfg.family == "ssm" else l
+        n_mamba = n_layers
         total += n_mamba * per
         if cfg.family == "hybrid":
             h = cfg.n_heads * cfg.d_head
@@ -165,9 +165,9 @@ def count_params(cfg, active_only: bool = False) -> float:
         ff = 3 * d * cfg.expert_ff * e_used + d * cfg.n_experts  # + router
     else:
         ff = 3 * d * cfg.d_ff
-    n_dec = l
+    n_dec = n_layers
     total += n_dec * (attn + ff)
     if cfg.family == "encdec":
         total += cfg.n_encoder_layers * (attn + 2 * d * cfg.d_ff) \
-            + l * (d * h + 2 * d * kvd + h * d)   # cross attention
+            + n_layers * (d * h + 2 * d * kvd + h * d)   # cross attention
     return total

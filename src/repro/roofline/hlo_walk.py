@@ -360,7 +360,6 @@ def analyze(text: str) -> HloAccounting:
         m = mult.get(name, 0.0)
         if m == 0.0:
             continue
-        fused = "fused" in name or "wrapped" in name or "region" not in name
         for ins in comp.instrs:
             if ins.op == "dot" or ins.op == "convolution":
                 if ins.op == "dot":

@@ -1,6 +1,7 @@
 """Serving substrate: workloads, instance catalog, FCFS queueing simulator,
 pool evaluation, live engine, autoscaling, fault handling, checkpointing."""
 
+from .autoscaler import LoadMonitor, ScaleEvent, rescale
 from .instance import (AWS_INSTANCES, MODEL_PROFILES, PAPER_POOLS, TPU_CELLS,
                        InstanceType, ModelProfile, service_time_table)
 from .pool import (DEFAULT_BOUNDS, DEFAULT_RATES, PoolEvaluator,
@@ -15,5 +16,6 @@ __all__ = [
     "PoolEvaluator", "best_homogeneous", "cost_effectiveness",
     "make_paper_setup", "DEFAULT_RATES", "DEFAULT_BOUNDS",
     "PoolSimulator",
+    "LoadMonitor", "ScaleEvent", "rescale",
     "Workload", "generate_workload", "lognormal_batches", "gaussian_batches",
 ]

@@ -55,15 +55,71 @@ class ScaleEvent:
     new_best: tuple | None
     new_cost: float | None
     samples_used: int
+    # Grid path only: measured QoS rate of the new optimum at every
+    # monitored load level {factor: rate} — the autoscaler's robustness view.
+    qos_by_load: dict | None = None
 
 
 def rescale(optimizer: RibbonOptimizer, evaluate_qos, budget: int = 40,
-            kind: str = "load_change") -> ScaleEvent:
+            kind: str = "load_change", load_factors=None,
+            target_index: int = -1, batch_q: int = 8) -> ScaleEvent:
     """Respond to a detected change: measure the incumbent on the new load,
     warm-restart the BO with the paper's estimation/pruning transfer, and
-    search to the new optimum."""
+    search to the new optimum.
+
+    Two evaluation planes:
+
+    * **Grid path** (``load_factors`` given, ``evaluate_qos`` a
+      ``PoolEvaluator``-like object with a ``.grid`` method): the autoscaler-
+      in-the-loop search.  Every round asks a constant-liar batch of up to
+      ``batch_q`` candidates and evaluates **all of them across all monitored
+      load levels in one device dispatch** (``PoolEvaluator.grid`` →
+      ``PoolSimulator.qos_rate_grid``); the BO optimizes for
+      ``load_factors[target_index]`` (default: the last, i.e. the new load)
+      while the other monitored levels ride along in the same dispatch —
+      deliberate extra lanes that buy the autoscaler its cross-level view
+      (``ScaleEvent.qos_by_load``) and a warm memo for every level should
+      the load shift again.  The incumbent's re-measurement under the new
+      load is the first grid column.
+    * **Legacy path** (``load_factors`` omitted): sequential single-config
+      calls of ``evaluate_qos(config)`` — kept for plain-callable oracles
+      (fault recovery, tests).
+
+    ``budget`` counts post-restart evaluations at the target level.
+    """
     old_best = optimizer.best_config
     old_cost = optimizer.best_cost
+    if load_factors is not None:
+        if not hasattr(evaluate_qos, "grid"):
+            raise TypeError("rescale with load_factors needs an evaluator "
+                            "with a .grid(configs, load_factors) method")
+        factors = [float(f) for f in load_factors]
+        incumbent = evaluate_qos.grid([old_best], factors)
+        optimizer.warm_restart(float(incumbent[target_index, 0]))
+        n0 = optimizer.trace.n_samples
+        while optimizer.trace.n_samples - n0 < budget and not optimizer.done:
+            room = budget - (optimizer.trace.n_samples - n0)
+            configs = optimizer.ask_batch(min(batch_q, room))
+            if not configs:
+                break
+            rates = evaluate_qos.grid(configs, factors)
+            for j, cfg in enumerate(configs):
+                optimizer.tell(cfg, float(rates[target_index, j]))
+                if (optimizer.trace.n_samples - n0 >= budget
+                        or optimizer.done):
+                    break
+        best = optimizer.trace.best_feasible()
+        qos_by_load = None
+        if best is not None:
+            # Cache hits: the winner was already swept across every level.
+            column = evaluate_qos.grid([best.config], factors)[:, 0]
+            qos_by_load = {f: float(r) for f, r in zip(factors, column)}
+        return ScaleEvent(kind=kind, old_best=old_best, old_cost=old_cost,
+                          new_best=best.config if best else None,
+                          new_cost=best.cost if best else None,
+                          samples_used=optimizer.trace.n_samples - n0 + 1,
+                          qos_by_load=qos_by_load)
+
     new_rate = float(evaluate_qos(old_best))
     optimizer.warm_restart(new_rate)
     n0 = optimizer.trace.n_samples

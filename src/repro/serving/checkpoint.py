@@ -29,12 +29,13 @@ def save(ckpt_dir, state, step: int, keep: int = 3,
     ckpt_dir = Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     leaves, treedef = _flatten(state)
-    host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+    host_leaves = [np.asarray(jax.device_get(leaf)) for leaf in leaves]
 
     def _write():
         path = ckpt_dir / f"step_{step:010d}.npz"
         tmp = path.with_suffix(".tmp.npz")
-        np.savez(tmp, **{f"leaf_{i}": l for i, l in enumerate(host_leaves)})
+        np.savez(tmp, **{f"leaf_{i}": leaf
+                         for i, leaf in enumerate(host_leaves)})
         manifest = {"step": step, "n_leaves": len(host_leaves),
                     "treedef": str(treedef)}
         mtmp = path.with_suffix(".tmp.json")

@@ -17,13 +17,12 @@ simulator so QoS semantics are identical across planes.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import numpy as np
 
 from ..models.paper_models import PAPER_MODELS, make_random_batch
-from .instance import InstanceType
 from .workload import Workload
 
 

@@ -26,7 +26,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from ..core.ribbon import RibbonOptimizer
-from .autoscaler import ScaleEvent, rescale
+from .autoscaler import ScaleEvent
 from .instance import InstanceType, ModelProfile
 from .workload import Workload
 

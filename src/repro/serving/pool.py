@@ -45,6 +45,9 @@ class PoolEvaluator:
         self.sim = PoolSimulator(self.model, self.types, self.workload,
                                  max_instances=self.max_instances)
         self._cache: dict[tuple[int, ...], float] = {}
+        # (load_factor, config) -> rate for factors != 1.0; the unit factor
+        # shares self._cache so grid sweeps and plain calls see one memo.
+        self._grid_cache: dict[tuple[float, tuple[int, ...]], float] = {}
 
     def __call__(self, config) -> float:
         key = tuple(int(c) for c in config)
@@ -52,6 +55,31 @@ class PoolEvaluator:
             self._cache[key] = self.sim.qos_rate(key)
             self.n_evals += 1
         return self._cache[key]
+
+    def _cell_get(self, factor: float, key: tuple[int, ...]):
+        if factor == 1.0:
+            return self._cache.get(key)
+        return self._grid_cache.get((factor, key))
+
+    def _cell_put(self, factor: float, key: tuple[int, ...], rate: float):
+        if factor == 1.0:
+            self._cache[key] = rate
+        else:
+            self._grid_cache[(factor, key)] = rate
+
+    def _pow2_chunks(self, arr: np.ndarray):
+        """Yield (padded_chunk, start, n) pieces of ``arr``: ``_chunk``-
+        bounded slices padded to the next power of two with repeats of their
+        first row, so small batches share a handful of compiled executables
+        (both ``batch`` and ``grid`` dispatch through this policy)."""
+        for i in range(0, len(arr), self._chunk):
+            chunk = arr[i:i + self._chunk]
+            n = len(chunk)
+            width = 1 << (n - 1).bit_length()   # next power of two
+            if width > n:
+                chunk = np.concatenate(
+                    [chunk, np.repeat(chunk[:1], width - n, axis=0)])
+            yield chunk, i, n
 
     def batch(self, configs) -> np.ndarray:
         """QoS rates for many configs via the batched simulator.
@@ -63,15 +91,9 @@ class PoolEvaluator:
         keys = [tuple(int(c) for c in cfg) for cfg in configs]
         missing = [k for k in dict.fromkeys(keys) if k not in self._cache]
         if missing:
-            arr = np.asarray(missing, dtype=np.int64)
             rates = []
-            for i in range(0, len(arr), self._chunk):
-                chunk = arr[i:i + self._chunk]
-                n = len(chunk)
-                width = 1 << (n - 1).bit_length()   # next power of two
-                if width > n:
-                    chunk = np.concatenate(
-                        [chunk, np.repeat(chunk[:1], width - n, axis=0)])
+            for chunk, _, n in self._pow2_chunks(
+                    np.asarray(missing, dtype=np.int64)):
                 rates.append(self.sim.qos_rate_batch(chunk)[:n])
             rates = np.concatenate(rates)
             for k, r in zip(missing, rates):
@@ -79,13 +101,55 @@ class PoolEvaluator:
             self.n_evals += len(missing)
         return np.asarray([self._cache[k] for k in keys], dtype=np.float64)
 
-    def exhaustive(self, space: SearchSpace, qos_target: float):
+    def grid(self, configs, load_factors) -> np.ndarray:
+        """QoS rates on the (load level × config) grid, one sweep.
+
+        ``load_factors`` scale the bound workload (``Workload.scaled``
+        semantics: factor 1.5 = 1.5x heavier traffic).  Returns (W, B)
+        float64 aligned with the inputs; cell ``[w, b]`` equals what a
+        ``PoolEvaluator`` bound to ``workload.scaled(load_factors[w])``
+        would measure for ``configs[b]``.
+
+        Memoized per (load factor, config) cell.  Misses are evaluated as a
+        cross product — every load level with any miss × every config missing
+        somewhere — in ``_chunk``-bounded ``qos_rate_grid`` dispatches, so a
+        rescale loop's incumbent + candidates × monitored levels costs one
+        device round-trip.  ``n_evals`` counts newly simulated cells only.
+        """
+        keys = [tuple(int(c) for c in cfg) for cfg in configs]
+        factors = [float(f) for f in load_factors]
+        uniq_keys = list(dict.fromkeys(keys))
+        uniq_factors = list(dict.fromkeys(factors))
+        missing = {(f, k) for f in uniq_factors for k in uniq_keys
+                   if self._cell_get(f, k) is None}
+        if missing:
+            cols = [k for k in uniq_keys if any((f, k) in missing
+                                                for f in uniq_factors)]
+            rows = [f for f in uniq_factors if any((f, k) in missing
+                                                   for k in cols)]
+            for chunk, i, n in self._pow2_chunks(
+                    np.asarray(cols, dtype=np.int64)):
+                rates = self.sim.qos_rate_grid(chunk, rows)[:, :n]
+                for w, f in enumerate(rows):
+                    for b, k in enumerate(cols[i:i + self._chunk]):
+                        self._cell_put(f, k, float(rates[w, b]))
+            self.n_evals += len(missing)
+        return np.asarray([[self._cell_get(f, k) for k in keys]
+                           for f in factors], dtype=np.float64)
+
+    def exhaustive(self, space: SearchSpace, qos_target: float,
+                   load_factor: float = 1.0):
         """Ground-truth optimum + total exhaustive cost (paper Fig. 13
-        normalizer), swept through the batched simulator in one pass.
+        normalizer), swept through the batched simulator in one pass —
+        or, for ``load_factor != 1``, through a one-row grid sweep of the
+        scaled workload (shared memo, no second evaluator).
         Returns (best_config, best_cost, exhaustive_cost)."""
         lattice = space.enumerate()
         costs = space.costs(lattice)
-        rates = self.batch(lattice)
+        if load_factor == 1.0:
+            rates = self.batch(lattice)
+        else:
+            rates = self.grid(lattice, [load_factor])[0]
         total = float(costs.sum())
         feasible = rates >= qos_target
         if not feasible.any():

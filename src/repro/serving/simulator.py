@@ -20,16 +20,26 @@ Architecture (the batched evaluation engine):
     dispatch (``latencies_batch`` / ``qos_rate_batch``).  The arrival stream
     and the (n_types, n_queries) service table are shared across the batch —
     only the (B, max_instances) slot layout varies;
+  * a second **workload axis** joins the batch axis for load-level sweeps
+    (``latencies_grid`` / ``qos_rate_grid``): one dispatch simulates
+    ``W`` scaled arrival streams × ``B`` configs.  ``qos_rate_grid`` runs a
+    leaner fused executable — QoS counting folded into the scan carry, slot
+    padding trimmed to the batch's occupancy, and the flattened ``W·B`` lane
+    axis sharded across XLA host devices when more than one is configured
+    (``--xla_force_host_platform_device_count``, see benchmarks/__init__.py);
   * config→slot expansion is fully vectorized (cumulative-count searchsorted,
     no per-slot Python loops) so host-side prep is O(B·max_instances) numpy;
   * the service table is memoized per (model, types, batches) — see
-    ``instance.service_time_table``.
+    ``instance.service_time_table``.  ``Workload.scaled`` keeps the batch
+    stream, so every load level of a grid shares one table.
 
 The BO loop evaluates hundreds of configurations — this batched path is the
 hot path of the *search*, exactly the paper's "costly evaluation" being
 amortized.  Single-config ``latencies``/``qos_rate`` are kept as the q=1
-special case and agree bit-for-bit with row ``i`` of the batched result
-(tests/test_batch_eval.py).
+special case and agree bit-for-bit with row ``i`` of the batched result, and
+cell ``[w, b]`` of the grid agrees bit-for-bit with the single path bound to
+``workload.scaled(load_factors[w])`` (tests/test_batch_eval.py,
+tests/test_grid_eval.py).
 """
 
 from __future__ import annotations
@@ -90,6 +100,81 @@ def _simulate_scan(arrivals, service, type_of_slot, priority, active):
 _simulate_scan_batch = jax.jit(
     jax.vmap(_simulate_scan, in_axes=(None, None, 0, None, 0)))
 
+# Grid axes: workloads (stacked arrival streams) × slot layouts.  The service
+# table stays shared — load scaling compresses arrivals but keeps batches.
+_simulate_scan_grid = jax.jit(
+    jax.vmap(jax.vmap(_simulate_scan, in_axes=(None, None, 0, None, 0)),
+             in_axes=(0, None, None, None, None)))
+
+# Unroll factor of the fused QoS-count scan: amortizes while-loop trip
+# overhead without changing any per-step arithmetic (bit-identical results).
+_GRID_UNROLL = 2
+
+
+def _qos_threshold_f32(qos_latency: float) -> float:
+    """Largest float32 ``t`` with {f32 x: x <= t} == {f32 x: x <= qos}.
+
+    The host paths compare float64-cast latencies against the float64 target;
+    the fused grid path compares on-device in float32.  Rounding the target
+    *down* to the nearest not-greater float32 makes the two comparisons admit
+    exactly the same set of float32 latencies, so the grid's device-side
+    counts reproduce the host-side mean bit-for-bit.
+    """
+    t = np.float32(qos_latency)
+    if float(t) > qos_latency:
+        t = np.nextafter(t, np.float32(-np.inf))
+    return float(t)
+
+
+def _grid_lane_qos_counts(arrivals, service_T, type_of_slot, priority, active,
+                          iota, qos_t):
+    """QoS-pass count of one (workload, config) lane — the lean FCFS scan.
+
+    Same dispatch recurrence as ``_simulate_scan`` with three fused-engine
+    reductions, none of which change a single emitted float:
+      * the idle test needs no ``active`` mask — inactive slots carry
+        ``free == _INF`` forever, so ``free <= arrival`` is already False and
+        busy/inactive keys coincide with the three-way select;
+      * the slot update is a one-hot ``where`` instead of a scatter (XLA CPU
+        scatters dominate the step cost at these shapes);
+      * the QoS comparison accumulates an int32 count in the carry instead of
+        materializing (n_queries,) latencies for a host-side mean.
+    """
+    free0 = jnp.where(active, 0.0, _INF)
+
+    def step(carry, inputs):
+        free, count = carry
+        arrival, svc_by_type = inputs
+        key = jnp.where(free <= arrival, priority - _BIG, free)
+        slot = jnp.argmin(key)
+        start = jnp.maximum(arrival, free[slot])
+        finish = start + svc_by_type[type_of_slot[slot]]
+        free = jnp.where(iota == slot, finish, free)
+        count = count + ((finish - arrival) <= qos_t).astype(jnp.int32)
+        return (free, count), None
+
+    (_, count), _ = jax.lax.scan(step, (free0, jnp.int32(0)),
+                                 (arrivals, service_T), unroll=_GRID_UNROLL)
+    return count
+
+
+# Nested (workload, config) axes: the outer vmap maps arrival streams, the
+# inner maps slot layouts, so a dispatch uploads only (W, nq) arrivals plus
+# one (B, S) layout — never a flattened W·B replica of either.
+_grid_counts_wb = jax.vmap(
+    jax.vmap(_grid_lane_qos_counts,
+             in_axes=(None, None, 0, None, 0, None, None)),
+    in_axes=(0, None, None, None, None, None, None))
+_grid_counts_jit = jax.jit(_grid_counts_wb)
+# Sharded flavor for multi-host-device processes (single-process CPU
+# parallelism, see benchmarks/__init__.py).  Every argument is mapped over
+# the device axis — broadcast-style args are pre-replicated device buffers
+# (cached in PoolSimulator), because pmap's per-call broadcast of in_axes=
+# None operands re-transfers them to every device on every dispatch, which
+# costs more than the sweep itself at rescale-loop call rates.
+_grid_counts_pmap = jax.pmap(_grid_counts_wb,
+                             in_axes=(0, 0, 0, 0, 0, 0, 0))
+
 
 class PoolSimulator:
     """Simulator bound to (model profile, instance type order, workload)."""
@@ -105,6 +190,11 @@ class PoolSimulator:
             dtype=jnp.float32)
         self._arrivals = jnp.asarray(workload.arrivals, dtype=jnp.float32)
         self._priority = jnp.arange(max_instances, dtype=jnp.float32)
+        # Grid-engine device caches: replicated constants per (n_dev, width)
+        # and arrival grids per load-factor tuple (rescale loops re-sweep the
+        # same monitored levels every round).  Both are small and bounded.
+        self._grid_consts: dict[tuple, tuple] = {}
+        self._grid_arrs: dict[tuple, jnp.ndarray] = {}
 
     def _slots_batch(self, configs) -> tuple[np.ndarray, np.ndarray]:
         """Vectorized config→slot expansion for a (B, n_types) batch.
@@ -182,3 +272,173 @@ class PoolSimulator:
         """
         lat = self.latencies_batch(configs)
         return np.mean(lat <= self.model.qos_latency, axis=1)
+
+    # ---------------------------------------------------------------- grid
+    def _stacked_arrivals(self, load_factors) -> np.ndarray:
+        """(W, n_queries) float64 arrival grid for ``workload.scaled`` levels.
+
+        Division happens in float64 *before* the float32 device cast, exactly
+        as a ``PoolSimulator`` bound to ``workload.scaled(f)`` would see its
+        arrivals — the root of the grid's per-cell bit-identity.
+        """
+        factors = np.asarray(load_factors, dtype=np.float64)
+        if factors.ndim != 1 or factors.size == 0:
+            raise ValueError("load_factors must be a non-empty 1-D sequence")
+        if (factors <= 0).any() or not np.isfinite(factors).all():
+            raise ValueError("load factors must be finite and > 0")
+        base = np.asarray(self.workload.arrivals, dtype=np.float64)
+        return base[None, :] / factors[:, None]
+
+    def latencies_grid(self, configs, load_factors) -> np.ndarray:
+        """Per-query latencies on the (workload × config) grid, one dispatch.
+
+        configs: (B, n_types) integer array-like; load_factors: (W,) > 0.
+        Returns (W, B, n_queries) float64 where cell ``[w, b]`` equals
+        ``PoolSimulator(..., workload.scaled(load_factors[w])).latencies(
+        configs[b])`` bit-for-bit (all-zero config rows are +inf).
+        """
+        configs = np.asarray(configs, dtype=np.int64)
+        arrivals = self._stacked_arrivals(load_factors)
+        if configs.size == 0:
+            return np.zeros((len(arrivals), 0, self.workload.n_queries),
+                            dtype=np.float64)
+        type_of_slot, active = self._slots_batch(configs)
+        lat, _, _ = _simulate_scan_grid(jnp.asarray(arrivals, jnp.float32),
+                                        self._service,
+                                        jnp.asarray(type_of_slot),
+                                        self._priority,
+                                        jnp.asarray(active))
+        out = np.asarray(jax.device_get(lat), dtype=np.float64)
+        out[:, configs.sum(axis=1) == 0, :] = np.inf
+        return out
+
+    def _grid_slot_pad(self, totals: np.ndarray) -> int:
+        """Occupancy-trimmed slot padding: smallest power of two covering the
+        largest pool in the batch (>= 8 so tiny batches share an executable),
+        capped at ``max_instances``.  Inactive slots never win the dispatch
+        argmin, so trimming them is invisible to the results."""
+        need = max(int(totals.max(initial=1)), 1)
+        width = max(8, 1 << (need - 1).bit_length())
+        return min(width, self.max_instances)
+
+    def qos_rate_grid(self, configs, load_factors) -> np.ndarray:
+        """QoS satisfaction rates on the (workload × config) grid.
+
+        Returns (W, B) float64; cell ``[w, b]`` equals
+        ``PoolSimulator(..., workload.scaled(load_factors[w])).qos_rate(
+        configs[b])`` exactly.  This is the fused fast path: the lean count
+        scan (see ``_grid_lane_qos_counts``) over nested (workload, config)
+        axes, sharded across XLA host devices when several are configured,
+        with only (W, B) int32 counts crossing back to the host.
+        """
+        configs = np.asarray(configs, dtype=np.int64)
+        arrivals = self._stacked_arrivals(load_factors)
+        n_w = len(arrivals)
+        if configs.size == 0:
+            return np.zeros((n_w, 0), dtype=np.float64)
+        type_of_slot, active = self._slots_batch(configs)
+        width = self._grid_slot_pad(configs.sum(axis=1))
+
+        arr = np.asarray(arrivals, np.float32)                # (W, nq)
+        tos = np.ascontiguousarray(type_of_slot[:, :width])   # (B, S)
+        act = np.ascontiguousarray(active[:, :width])
+
+        n_dev = jax.local_device_count()
+        if n_dev > 1:
+            factors = tuple(float(f) for f in np.asarray(load_factors,
+                                                         dtype=np.float64))
+            counts = self._dispatch_grid_sharded(arr, tos, act, width,
+                                                 n_dev, factors)
+        else:
+            qos_t = jnp.float32(_qos_threshold_f32(self.model.qos_latency))
+            counts = np.asarray(jax.device_get(_grid_counts_jit(
+                jnp.asarray(arr), self._service.T, jnp.asarray(tos),
+                self._priority[:width], jnp.asarray(act),
+                jnp.arange(width, dtype=jnp.int32), qos_t)))
+        return counts.astype(np.float64) / self.workload.n_queries
+
+    def _grid_replicated_consts(self, width: int, n_dev: int) -> tuple:
+        """Per-device replicas of the sweep constants (service table,
+        priority, slot iota, QoS threshold), uploaded once and cached."""
+        key = (n_dev, width)
+        if key not in self._grid_consts:
+            devices = jax.local_devices()[:n_dev]
+            self._grid_consts[key] = (
+                jax.device_put_replicated(self._service.T, devices),
+                jax.device_put_replicated(self._priority[:width], devices),
+                jax.device_put_replicated(
+                    jnp.arange(width, dtype=jnp.int32), devices),
+                jax.device_put_replicated(
+                    jnp.float32(_qos_threshold_f32(self.model.qos_latency)),
+                    devices),
+            )
+        return self._grid_consts[key]
+
+    def _grid_arr_shards(self, arr: np.ndarray, mode: str, n_dev: int,
+                         factors: tuple) -> jnp.ndarray:
+        """Device layout of the (W, nq) arrival grid, cached per load-factor
+        tuple: workload-axis shards ("w", padded with duplicate levels) or
+        per-device replicas ("b")."""
+        key = (mode, n_dev, factors)
+        out = self._grid_arrs.get(key)
+        if out is None:
+            n_w = len(arr)
+            if mode == "w":
+                pad_w = (-n_w) % n_dev
+                if pad_w:
+                    # Cyclic padding: pad_w may exceed n_w (e.g. one load
+                    # level on an 8-device host), so wrap the row index.
+                    arr = np.concatenate(
+                        [arr, arr[np.arange(pad_w) % n_w]])
+                out = jnp.asarray(
+                    arr.reshape(n_dev, (n_w + pad_w) // n_dev, -1))
+            else:
+                out = jnp.asarray(np.ascontiguousarray(
+                    np.broadcast_to(arr, (n_dev,) + arr.shape)))
+            if len(self._grid_arrs) >= 8:
+                self._grid_arrs.pop(next(iter(self._grid_arrs)))
+            self._grid_arrs[key] = out
+        return out
+
+    def _dispatch_grid_sharded(self, arr, tos, act, width, n_dev,
+                               factors) -> np.ndarray:
+        """One pmapped sweep across the host devices.
+
+        Splits the workload axis (padding with duplicate levels when it does
+        not divide) unless the config axis divides more cleanly — e.g. a
+        single-level sweep over many configs.  All broadcast operands arrive
+        pre-replicated; only the per-call slot layouts cross the host
+        boundary.
+        """
+        n_w, n_b = len(arr), len(tos)
+        service_r, prio_r, iota_r, qos_r = self._grid_replicated_consts(
+            width, n_dev)
+
+        def replicate(x):
+            return jnp.asarray(np.ascontiguousarray(
+                np.broadcast_to(x, (n_dev,) + x.shape)))
+
+        # Split whichever axis wastes fewer lanes per device; both axes pad
+        # cyclically (duplicate levels / duplicate configs, results of the
+        # pad rows dropped), so neither split requires exact divisibility.
+        pad_w = (-n_w) % n_dev
+        pad_b = (-n_b) % n_dev
+        lanes_w_split = ((n_w + pad_w) // n_dev) * n_b
+        lanes_b_split = n_w * ((n_b + pad_b) // n_dev)
+        if lanes_b_split < lanes_w_split:
+            if pad_b:
+                idx = np.arange(n_b + pad_b) % n_b
+                tos, act = tos[idx], act[idx]
+            counts = _grid_counts_pmap(
+                self._grid_arr_shards(arr, "b", n_dev, factors), service_r,
+                jnp.asarray(tos.reshape(n_dev, -1, width)), prio_r,
+                jnp.asarray(act.reshape(n_dev, -1, width)),
+                iota_r, qos_r)
+            counts = np.asarray(jax.device_get(counts))
+            counts = counts.transpose(1, 0, 2).reshape(n_w, n_b + pad_b)
+            return counts[:, :n_b]
+        counts = _grid_counts_pmap(
+            self._grid_arr_shards(arr, "w", n_dev, factors), service_r,
+            replicate(tos), prio_r, replicate(act), iota_r, qos_r)
+        counts = np.asarray(jax.device_get(counts))
+        return counts.reshape(-1, n_b)[:n_w]

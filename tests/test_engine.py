@@ -1,6 +1,5 @@
 """Live execution plane: ClusterEngine with real (smoke-scale) models."""
 
-import numpy as np
 import pytest
 
 from repro.serving.engine import CellType, ClusterEngine

@@ -60,12 +60,13 @@ def test_checkpoint_empty_dir(tmp_path):
 def test_ribbon_optimizer_checkpoint_roundtrip(tmp_path):
     space = SearchSpace(bounds=(4, 4), prices=(1.0, 0.4))
     opt = RibbonOptimizer(space)
-    oracle = lambda c: min(1.0, (3 * c[0] + c[1]) / 10.0)
+    def oracle(c):
+        return min(1.0, (3 * c[0] + c[1]) / 10.0)
+
     for _ in range(5):
         cfg = opt.ask()
         opt.tell(cfg, oracle(cfg))
     checkpoint.save(tmp_path, opt.state_dict(), step=5)
-    like = RibbonOptimizer(space).state_dict()
     # state_dict contains python scalars/lists — restore only array leaves
     restored, _ = checkpoint.restore(tmp_path, opt.state_dict())
     opt2 = RibbonOptimizer(space)

@@ -4,8 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.gp import (GaussianProcess, gp_posterior, matern52,
-                           round_counts, rounded_matern52)
+from repro.core.gp import GaussianProcess, matern52, rounded_matern52
 
 
 def test_matern52_basics():

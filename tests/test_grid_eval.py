@@ -1,0 +1,376 @@
+"""Joint (workload × config) grid engine + device-side pruning + rescale.
+
+Three equivalence contracts of the PR:
+
+* grid bit-identity — every cell of ``latencies_grid`` / ``qos_rate_grid``
+  equals the single-config path bound to the scaled workload, bit for bit;
+* device-side prune masks — the fused on-device tell update
+  (``pruning.apply_prune_rules``) stays bit-identical to the host-side
+  ``PruneSet`` + sampled mirrors over whole recorded BO runs;
+* grid-driven ``rescale`` — the autoscaler-in-the-loop search lands on a
+  configuration that is genuinely feasible under the scaled load.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import RibbonOptimizer, select_batch
+from repro.core.search_space import SearchSpace
+from repro.serving.autoscaler import rescale
+from repro.serving.instance import InstanceType, ModelProfile
+from repro.serving.pool import PoolEvaluator
+from repro.serving.simulator import PoolSimulator, _qos_threshold_f32
+from repro.serving.workload import generate_workload
+
+FAST = InstanceType("fast", price=1.0, flops=1e9, mem_bw=1e9, overhead=1e-3)
+SLOW = InstanceType("slow", price=0.3, flops=2e8, mem_bw=5e8, overhead=2e-3)
+PROF = ModelProfile("toy", flops_per_sample=1e6, act_bytes_per_sample=1e4,
+                    weight_bytes=1e5, qos_latency=0.05)
+
+MAX_INST = 8
+FACTORS = (1.0, 1.2, 1.5, 2.0)
+
+
+def _workload(seed=0, n=200, rate=120.0):
+    return generate_workload(seed, n, rate, median_batch=8.0, max_batch=32)
+
+
+def _sim(wl=None):
+    wl = wl or _workload()
+    return PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=MAX_INST)
+
+
+def _scaled_sim(wl, factor):
+    return PoolSimulator(PROF, [FAST, SLOW], wl.scaled(factor),
+                         max_instances=MAX_INST)
+
+
+def _configs(n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    cfgs = rng.integers(0, 5, size=(n, 2))
+    cfgs[0] = (0, 0)                              # empty pool
+    cfgs[1] = (MAX_INST // 2, MAX_INST // 2)      # max-capacity padding
+    return cfgs
+
+
+# ----------------------------------------------------------- grid bit-identity
+def test_latencies_grid_matches_scaled_single_exactly():
+    """latencies_grid[w, b] == latencies of a simulator bound to
+    workload.scaled(factor_w), bit for bit (4 workloads x 8 configs)."""
+    wl = _workload()
+    sim = _sim(wl)
+    cfgs = _configs()
+    grid = sim.latencies_grid(cfgs, FACTORS)
+    assert grid.shape == (len(FACTORS), len(cfgs), wl.n_queries)
+    for w, f in enumerate(FACTORS):
+        scaled = _scaled_sim(wl, f)
+        for b, cfg in enumerate(cfgs):
+            single = scaled.latencies(tuple(int(c) for c in cfg))
+            np.testing.assert_array_equal(grid[w, b], single)
+
+
+def test_qos_rate_grid_matches_scaled_single_exactly():
+    """The acceptance grid: qos_rate_grid[w, b] == qos_rate(workload_w,
+    config_b) elementwise over a 4-workload x 8-config grid."""
+    wl = _workload(seed=3, n=150, rate=200.0)
+    sim = _sim(wl)
+    cfgs = _configs(seed=1)
+    rates = sim.qos_rate_grid(cfgs, FACTORS)
+    assert rates.shape == (len(FACTORS), len(cfgs))
+    for w, f in enumerate(FACTORS):
+        scaled = _scaled_sim(wl, f)
+        for b, cfg in enumerate(cfgs):
+            assert rates[w, b] == scaled.qos_rate(tuple(int(c) for c in cfg))
+
+
+def test_qos_rate_grid_matches_batch_rows():
+    """Row w of the grid == qos_rate_batch on the scaled simulator."""
+    wl = _workload(seed=5)
+    sim = _sim(wl)
+    cfgs = _configs(seed=2)
+    rates = sim.qos_rate_grid(cfgs, FACTORS)
+    for w, f in enumerate(FACTORS):
+        np.testing.assert_array_equal(
+            rates[w], _scaled_sim(wl, f).qos_rate_batch(cfgs))
+
+
+def test_grid_unit_factor_row_matches_unscaled_paths():
+    sim = _sim()
+    cfgs = _configs(seed=4)
+    rates = sim.qos_rate_grid(cfgs, (1.0,))
+    np.testing.assert_array_equal(rates[0], sim.qos_rate_batch(cfgs))
+    lat = sim.latencies_grid(cfgs, (1.0,))
+    np.testing.assert_array_equal(lat[0], sim.latencies_batch(cfgs))
+
+
+def test_grid_empty_and_zero_configs():
+    sim = _sim()
+    empty = sim.latencies_grid(np.zeros((0, 2), dtype=np.int64), FACTORS)
+    assert empty.shape == (len(FACTORS), 0, sim.workload.n_queries)
+    assert sim.qos_rate_grid(np.zeros((0, 2), dtype=np.int64),
+                             FACTORS).shape == (len(FACTORS), 0)
+    # the all-zero config row: +inf latencies, zero satisfaction
+    grid = sim.latencies_grid([(0, 0)], FACTORS)
+    assert np.isinf(grid).all()
+    assert (sim.qos_rate_grid([(0, 0)], FACTORS) == 0.0).all()
+
+
+def test_grid_rejects_bad_load_factors():
+    sim = _sim()
+    with pytest.raises(ValueError):
+        sim.qos_rate_grid([(1, 1)], [])
+    with pytest.raises(ValueError):
+        sim.qos_rate_grid([(1, 1)], [0.0])
+    with pytest.raises(ValueError):
+        sim.qos_rate_grid([(1, 1)], [-1.5])
+    with pytest.raises(ValueError):
+        sim.latencies_grid([(1, 1)], [np.inf])
+
+
+def test_grid_arr_shards_pads_cyclically_beyond_workload_count():
+    """The workload-axis pad may exceed W (one load level on an 8-device
+    host): rows must wrap cyclically instead of silently under-filling the
+    reshape."""
+    sim = _sim()
+    for n_w, n_dev in [(1, 4), (2, 8), (3, 4), (5, 8), (4, 4)]:
+        factors = tuple(1.0 + 0.1 * i for i in range(n_w))
+        arr = np.asarray(sim._stacked_arrivals(factors), np.float32)
+        out = np.asarray(sim._grid_arr_shards(arr, "w", n_dev, factors))
+        pad_w = (-n_w) % n_dev
+        assert out.shape == (n_dev, (n_w + pad_w) // n_dev,
+                             sim.workload.n_queries)
+        flat = out.reshape(-1, sim.workload.n_queries)
+        for i in range(n_w + pad_w):
+            np.testing.assert_array_equal(flat[i], arr[i % n_w])
+
+
+@pytest.mark.slow
+def test_grid_bit_identity_under_forced_multi_device(tmp_path):
+    """qos_rate_grid must survive (and stay exact on) hosts where
+    benchmarks/__init__.py forces many XLA host devices — including the
+    W=1, odd-B case whose workload-axis pad exceeds W."""
+    import os
+    import subprocess
+    import sys
+    script = tmp_path / "grid_multidev.py"
+    script.write_text(
+        "import numpy as np\n"
+        "from repro.serving.simulator import PoolSimulator\n"
+        "from repro.serving.instance import InstanceType, ModelProfile\n"
+        "from repro.serving.workload import generate_workload\n"
+        "import jax\n"
+        "assert jax.local_device_count() == 4\n"
+        "fast = InstanceType('fast', price=1.0, flops=1e9, mem_bw=1e9,\n"
+        "                    overhead=1e-3)\n"
+        "slow = InstanceType('slow', price=0.3, flops=2e8, mem_bw=5e8,\n"
+        "                    overhead=2e-3)\n"
+        "prof = ModelProfile('toy', flops_per_sample=1e6,\n"
+        "                    act_bytes_per_sample=1e4, weight_bytes=1e5,\n"
+        "                    qos_latency=0.05)\n"
+        "wl = generate_workload(0, 100, 120.0, median_batch=8.0,\n"
+        "                       max_batch=32)\n"
+        "sim = PoolSimulator(prof, [fast, slow], wl, max_instances=8)\n"
+        "cfgs = np.array([[1, 0], [2, 1], [0, 3]])  # odd B\n"
+        "for factors in [(1.5,), (1.0, 1.2), (1.0, 1.2, 1.5)]:\n"
+        "    got = sim.qos_rate_grid(cfgs, factors)\n"
+        "    for w, f in enumerate(factors):\n"
+        "        ref = PoolSimulator(prof, [fast, slow], wl.scaled(f),\n"
+        "                            max_instances=8).qos_rate_batch(cfgs)\n"
+        "        np.testing.assert_array_equal(got[w], ref)\n"
+        "print('MULTIDEV-OK')\n")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, str(script)], env=env,
+                          capture_output=True, text=True, timeout=300,
+                          cwd=str(__import__("pathlib").Path(
+                              __file__).resolve().parent.parent))
+    assert proc.returncode == 0, proc.stderr
+    assert "MULTIDEV-OK" in proc.stdout
+
+
+def test_qos_threshold_f32_admits_same_latency_set():
+    """The rounded-down float32 target classifies every float32 latency
+    exactly as the float64 host comparison does."""
+    for qos in (0.02, 0.03, 0.04, 0.4, 0.8, 0.05):
+        t = _qos_threshold_f32(qos)
+        probes = np.array([qos, t], dtype=np.float32)
+        probes = np.concatenate([probes,
+                                 np.nextafter(probes, np.float32(np.inf)),
+                                 np.nextafter(probes, np.float32(-np.inf))])
+        for x in probes:
+            assert (float(x) <= qos) == (x <= np.float32(t))
+
+
+# ------------------------------------------------------------- evaluator grid
+def test_evaluator_grid_consistent_with_call_and_memoized():
+    ev = PoolEvaluator(PROF, [FAST, SLOW], _workload(n=150, rate=150.0),
+                       max_instances=MAX_INST)
+    cfgs = [(1, 0), (2, 1), (0, 3), (1, 0)]       # includes a duplicate
+    rates = ev.grid(cfgs, FACTORS)
+    assert rates.shape == (len(FACTORS), len(cfgs))
+    np.testing.assert_array_equal(rates[:, 0], rates[:, 3])
+    n_after_grid = ev.n_evals
+    assert n_after_grid == 3 * len(FACTORS)       # distinct cells only
+    # unit-factor row shares the plain memo: no new evaluations
+    for cfg, rate in zip(cfgs, rates[0]):
+        assert rate == ev(cfg)
+    assert ev.n_evals == n_after_grid
+    # repeat grid: fully cached
+    np.testing.assert_array_equal(ev.grid(cfgs, FACTORS), rates)
+    assert ev.n_evals == n_after_grid
+    # a subset at a subset of factors: still fully cached
+    sub = ev.grid(cfgs[:2], FACTORS[1:3])
+    np.testing.assert_array_equal(sub, rates[1:3, :2])
+    assert ev.n_evals == n_after_grid
+
+
+def test_evaluator_grid_matches_scaled_evaluator():
+    wl = _workload(seed=7, n=150, rate=150.0)
+    ev = PoolEvaluator(PROF, [FAST, SLOW], wl, max_instances=MAX_INST)
+    hot = PoolEvaluator(PROF, [FAST, SLOW], wl.scaled(1.5),
+                        max_instances=MAX_INST)
+    cfgs = [(2, 0), (1, 2), (3, 3)]
+    rates = ev.grid(cfgs, [1.5])[0]
+    for cfg, rate in zip(cfgs, rates):
+        assert rate == hot(cfg)
+
+
+# -------------------------------------------------------- device-side pruning
+SPACE = SearchSpace(bounds=(6, 8), prices=(1.0, 0.35))
+
+
+def _oracle(config):
+    cap = float(np.dot((10.0, 3.0), np.asarray(config, dtype=np.float64)))
+    return min(1.0, cap / 33.0)
+
+
+def _assert_masks_equal(opt):
+    np.testing.assert_array_equal(np.asarray(opt._blocked_dev),
+                                  opt.sampled | opt.prune.mask)
+
+
+def test_device_mask_tracks_host_pruneset_over_bo_run():
+    """Over a recorded BO run, the device-resident blocked mask stays
+    bit-identical to the host PruneSet|sampled after every tell (both prune
+    rules fire along the way: feasible incumbents and >θ violators)."""
+    opt = RibbonOptimizer(SPACE, qos_target=0.99)
+    fired = {"down": False, "cost": False}
+    for _ in range(20):
+        cfg = opt.ask()
+        if cfg is None:
+            break
+        rate = _oracle(cfg)
+        fired["cost" if rate >= 0.99 else "down"] = True
+        opt.tell(cfg, rate)
+        _assert_masks_equal(opt)
+    assert fired["cost"] and fired["down"]
+
+
+def test_device_mask_tracks_host_after_warm_restart():
+    opt = RibbonOptimizer(SPACE, qos_target=0.99)
+    for _ in range(8):
+        cfg = opt.ask()
+        opt.tell(cfg, _oracle(cfg))
+    opt.warm_restart(new_qos_of_best=0.7)
+    _assert_masks_equal(opt)
+    for _ in range(5):
+        cfg = opt.ask()
+        if cfg is None:
+            break
+        opt.tell(cfg, 0.8 * _oracle(cfg))
+        _assert_masks_equal(opt)
+
+
+def test_device_mask_rebuilt_on_state_restore():
+    opt = RibbonOptimizer(SPACE, qos_target=0.99)
+    for _ in range(6):
+        cfg = opt.ask()
+        opt.tell(cfg, _oracle(cfg))
+    state = opt.state_dict()
+    fresh = RibbonOptimizer(SPACE, qos_target=0.99)
+    fresh.load_state_dict(state)
+    _assert_masks_equal(fresh)
+    assert fresh.ask() == opt.ask()
+
+
+def test_select_batch_returns_updated_mask():
+    """select_batch takes the device mask and returns it with the q picks
+    marked — a strict superset of the input mask."""
+    opt = RibbonOptimizer(SPACE, qos_target=0.99)
+    for _ in range(4):
+        cfg = opt.ask()
+        opt.tell(cfg, _oracle(cfg))
+    x, y, mask = opt.gp.buffers()
+    blocked_in = opt._blocked_dev
+    picks, scores, blocked_out = select_batch(
+        x, y, mask, opt._lattice_dev, opt.gp.denom,
+        float(opt.best_objective_observed()), blocked_in,
+        opt._weights_dev, 4)
+    picks = np.asarray(picks)
+    b_in, b_out = np.asarray(blocked_in), np.asarray(blocked_out)
+    assert b_out[picks].all()
+    assert (b_out | b_in).sum() == b_out.sum()     # superset
+    assert b_out.sum() == b_in.sum() + len(set(picks.tolist()))
+    # taking-and-returning leaves the optimizer's own mask untouched (ask
+    # stays idempotent until the matching tells arrive)
+    assert opt.ask_batch(3) == opt.ask_batch(3)
+    _assert_masks_equal(opt)
+
+
+# ------------------------------------------------------------ rescale on grid
+def test_rescale_grid_integration():
+    """rescale with load_factors drives the grid path end-to-end: the new
+    optimum is feasible under the scaled load, and qos_by_load reports every
+    monitored level from cache."""
+    wl = _workload(seed=0, n=200, rate=120.0)
+    ev = PoolEvaluator(PROF, [FAST, SLOW], wl, max_instances=MAX_INST)
+    space = SearchSpace(bounds=(4, 4), prices=(1.0, 0.3))
+    opt = RibbonOptimizer(space, qos_target=0.9)
+    for _ in range(25):
+        cfg = opt.ask()
+        if cfg is None or opt.done:
+            break
+        opt.tell(cfg, ev(cfg))
+    assert opt.best_config is not None
+
+    n_before = ev.n_evals
+    event = rescale(opt, ev, budget=25, load_factors=(1.0, 1.5))
+    assert event.new_best is not None
+    assert event.qos_by_load is not None
+    assert set(event.qos_by_load) == {1.0, 1.5}
+    # the reported winner is genuinely feasible under the scaled workload
+    hot = PoolEvaluator(PROF, [FAST, SLOW], wl.scaled(1.5),
+                        max_instances=MAX_INST)
+    assert hot(event.new_best) >= 0.9
+    assert event.qos_by_load[1.5] == hot(event.new_best)
+    assert ev.n_evals > n_before
+
+
+def test_rescale_legacy_callable_path_unchanged():
+    space = SearchSpace(bounds=(5, 8), prices=(1.0, 0.3))
+
+    def oracle(cfg, demand=31.0 * 1.5):
+        return min(1.0, float(np.dot((10.0, 3.0),
+                                     np.asarray(cfg, float))) / demand)
+
+    opt = RibbonOptimizer(space, qos_target=0.99)
+    for _ in range(20):
+        cfg = opt.ask()
+        if cfg is None or opt.done:
+            break
+        opt.tell(cfg, min(1.0, oracle(cfg) * 1.5))
+    event = rescale(opt, oracle, budget=30)
+    assert event.new_best is not None
+    assert event.qos_by_load is None
+    assert oracle(event.new_best) >= 0.99
+
+
+def test_rescale_grid_requires_grid_evaluator():
+    space = SearchSpace(bounds=(3, 3), prices=(1.0, 0.3))
+    opt = RibbonOptimizer(space, qos_target=0.9)
+    for _ in range(5):
+        cfg = opt.ask()
+        opt.tell(cfg, _oracle(cfg))
+    with pytest.raises(TypeError):
+        rescale(opt, _oracle, budget=5, load_factors=(1.0, 1.5))

@@ -2,10 +2,9 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.roofline.hlo_walk import analyze, parse_module, _multipliers
+from repro.roofline.hlo_walk import analyze, parse_module
 
 
 def _compile_text(f, *args):
@@ -19,10 +18,11 @@ def test_scan_flops_scale_with_trip_count():
         h, _ = jax.lax.scan(body, x, w)
         return h
     x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
-    for l in (2, 8):
-        w = jax.ShapeDtypeStruct((l, 128, 128), jnp.float32)
+    for n_layers in (2, 8):
+        w = jax.ShapeDtypeStruct((n_layers, 128, 128), jnp.float32)
         acc = analyze(_compile_text(f, x, w))
-        assert acc.flops == pytest.approx(l * 2 * 64 * 128 * 128, rel=1e-6)
+        assert acc.flops == pytest.approx(n_layers * 2 * 64 * 128 * 128,
+                                          rel=1e-6)
 
 
 def test_nested_scan_flops():

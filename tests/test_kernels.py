@@ -118,19 +118,19 @@ def test_decode_attention_matches_model_decode():
 
 
 # ---------------------------------------------------------------- ssd scan
-@pytest.mark.parametrize("b,l,h,p,g,n,chunk", [
+@pytest.mark.parametrize("b,slen,h,p,g,n,chunk", [
     (2, 64, 4, 16, 1, 16, 16),
     (1, 128, 2, 64, 1, 128, 32),     # mamba2-130m-like dims
     (2, 96, 4, 32, 2, 32, 32),       # grouped B/C
 ])
-def test_ssd_scan_shapes(b, l, h, p, g, n, chunk):
+def test_ssd_scan_shapes(b, slen, h, p, g, n, chunk):
     key = jax.random.PRNGKey(5)
     ks = jax.random.split(key, 4)
-    x = jax.random.normal(ks[0], (b, l, h, p)) * 0.5
-    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    x = jax.random.normal(ks[0], (b, slen, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, slen, h)))
     a_log = jnp.log(jnp.linspace(0.5, 4.0, h))
-    bb = jax.random.normal(ks[2], (b, l, g, n)) * 0.5
-    cc = jax.random.normal(ks[3], (b, l, g, n)) * 0.5
+    bb = jax.random.normal(ks[2], (b, slen, g, n)) * 0.5
+    cc = jax.random.normal(ks[3], (b, slen, g, n)) * 0.5
     y, state = ops.ssd_scan(x, dt, a_log, bb, cc, chunk=chunk,
                             interpret=True)
 
@@ -139,14 +139,14 @@ def test_ssd_scan_shapes(b, l, h, p, g, n, chunk):
     da = dt * a
     xdt = x * dt[..., None]
     rep = h // g
-    nc = l // chunk
+    nc = slen // chunk
     def arr(z):
         z = jnp.moveaxis(z, 2, 1)
         return z.reshape(z.shape[0], z.shape[1], nc, chunk, *z.shape[3:])
     y_ref, s_ref = ref.ssd_scan_ref(
         arr(xdt), jnp.moveaxis(da, 2, 1).reshape(b, h, nc, chunk),
         arr(jnp.repeat(bb, rep, axis=2)), arr(jnp.repeat(cc, rep, axis=2)))
-    y_ref = jnp.moveaxis(y_ref.reshape(b, h, l, p), 1, 2)
+    y_ref = jnp.moveaxis(y_ref.reshape(b, h, slen, p), 1, 2)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-3,
                                atol=2e-3)
     np.testing.assert_allclose(np.asarray(state),
@@ -158,13 +158,13 @@ def test_ssd_scan_matches_model_ssd():
     """Kernel ≡ models.ssm.ssd_chunked (the substrate integration oracle)."""
     from repro.models.ssm import ssd_chunked
     key = jax.random.PRNGKey(6)
-    b, l, h, p, g, n = 2, 64, 4, 16, 1, 16
+    b, slen, h, p, g, n = 2, 64, 4, 16, 1, 16
     ks = jax.random.split(key, 4)
-    x = jax.random.normal(ks[0], (b, l, h, p)) * 0.5
-    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    x = jax.random.normal(ks[0], (b, slen, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, slen, h)))
     a_log = jnp.log(jnp.linspace(0.5, 4.0, h))
-    bb = jax.random.normal(ks[2], (b, l, g, n)) * 0.5
-    cc = jax.random.normal(ks[3], (b, l, g, n)) * 0.5
+    bb = jax.random.normal(ks[2], (b, slen, g, n)) * 0.5
+    cc = jax.random.normal(ks[3], (b, slen, g, n)) * 0.5
     y_want, s_want = ssd_chunked(x, dt, a_log, bb, cc, 16)
     y_got, s_got = ops.ssd_scan(x, dt, a_log, bb, cc, chunk=16,
                                 interpret=True)

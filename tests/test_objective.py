@@ -1,7 +1,6 @@
 """Properties of RIBBON's Eq. 2 objective."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,7 +1,6 @@
 """Paper Table-1 models: smoke forwards, shapes, no NaNs, kernel parity."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

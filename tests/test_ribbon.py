@@ -98,7 +98,6 @@ def test_warm_restart_prunes_and_estimates():
         opt.tell(cfg, ORACLE(cfg))
     old_best = opt.best_config
     assert old_best is not None
-    n_real_before = opt.trace.n_samples
 
     # load jumps 1.5x: old best now violates badly
     opt.warm_restart(new_qos_of_best=0.66)

@@ -89,9 +89,7 @@ def test_fsdp_augments_replicated_dim():
 
 
 def test_cache_shardings_seqpar_variant():
-    import dataclasses
     m = FakeMesh(data=16, model=16)
-    cfg = ARCHS["qwen2.5-3b"]
     cache_shape = {"k": jax.ShapeDtypeStruct((36, 128, 32768, 2, 128),
                                              jnp.bfloat16),
                    "pos": jax.ShapeDtypeStruct((32768,), jnp.int32)}
@@ -99,7 +97,6 @@ def test_cache_shardings_seqpar_variant():
                             cache_shape["k"].shape, m)
     # right-aligned over (L,B,W,K,hd): layer dim replicated, kv=2 unshardable
     assert base == P(None, "data", None, None, None)
-    cfg2 = dataclasses.replace(cfg, seq_parallel_kv=True)
     spec = shp.resolve_spec(("batch", "model", None, None),
                             cache_shape["k"].shape[1:], m)
     assert spec == P("data", "model", None, None)

@@ -11,13 +11,13 @@ from repro.models.ssm import (init_ssm_params, ssd_chunked,
                               ssm_forward)
 
 
-def _ssd_inputs(key, b=2, l=32, h=4, p=8, g=2, n=8):
+def _ssd_inputs(key, b=2, slen=32, h=4, p=8, g=2, n=8):
     ks = jax.random.split(key, 4)
-    x = jax.random.normal(ks[0], (b, l, h, p)) * 0.5
-    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    x = jax.random.normal(ks[0], (b, slen, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, slen, h)))
     a_log = jnp.log(jnp.linspace(0.5, 4.0, h))
-    bb = jax.random.normal(ks[2], (b, l, g, n)) * 0.5
-    cc = jax.random.normal(ks[3], (b, l, g, n)) * 0.5
+    bb = jax.random.normal(ks[2], (b, slen, g, n)) * 0.5
+    cc = jax.random.normal(ks[3], (b, slen, g, n)) * 0.5
     return x, dt, a_log, bb, cc
 
 
@@ -33,7 +33,7 @@ def test_chunked_matches_sequential(chunk):
 
 
 def test_chunk_invariance():
-    x, dt, a_log, b, c = _ssd_inputs(jax.random.PRNGKey(1), l=24)
+    x, dt, a_log, b, c = _ssd_inputs(jax.random.PRNGKey(1), slen=24)
     y1, s1 = ssd_chunked(x, dt, a_log, b, c, 8)
     y2, s2 = ssd_chunked(x, dt, a_log, b, c, 24)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
@@ -67,6 +67,6 @@ def test_forward_then_decode_continuity():
 
 def test_state_decays_with_positive_dt():
     """exp(dt*A) must be strictly in (0,1): state can't blow up."""
-    x, dt, a_log, b, c = _ssd_inputs(jax.random.PRNGKey(3), l=64)
+    x, dt, a_log, b, c = _ssd_inputs(jax.random.PRNGKey(3), slen=64)
     _, s = ssd_chunked(x, dt, a_log, b, c, 16)
     assert np.all(np.isfinite(np.asarray(s)))

@@ -6,7 +6,6 @@ the BO engine lands on the exhaustive-search optimum with a small fraction of
 the samples and exploration cost.
 """
 
-import numpy as np
 import pytest
 
 from repro.core import run_ribbon
