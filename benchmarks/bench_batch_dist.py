@@ -1,24 +1,86 @@
 """Fig. 11: cost savings hold when the batch-size distribution is Gaussian
-instead of heavy-tail log-normal."""
+instead of heavy-tail log-normal.
+
+Driven by the stacked per-workload service-table grid axis: the two
+distributions share one arrival stream (only the batch PRNG key differs in
+``paper_workload``), so both are swept in ONE ``qos_rate_grid`` dispatch
+per config chunk — service row 0 carries the log-normal batch stream's
+table, row 1 the Gaussian's.  No second evaluator/simulator is built; the
+log-normal row doubles as a consistency check against the shared context's
+memoized exhaustive sweep.  (The same axis is what the scenario engine's
+``dist-drift`` episode replays over time.)
+"""
+
+import numpy as np
+
+from repro.serving import paper_workload, service_time_table
 
 from .common import MODELS, get_context, print_table, write_json
+
+HOMOG_CAP = 20     # homogeneous sweep cap, matches common.get_context
+CHUNK = 64         # configs per grid dispatch
+
+
+def _stacked_dist_sweep(ctx, qos_target: float = 0.99):
+    """One (distribution x config) sweep: returns per-dist exhaustive best
+    and homogeneous-anchor cost, from stacked-table grid dispatches."""
+    ev, space, prof = ctx.evaluator, ctx.space, ctx.profile
+    wl_ln = ev.workload
+    wl_ga = paper_workload(ctx.name, seed=0, n_queries=wl_ln.n_queries,
+                           batch_dist="gaussian")
+    assert np.array_equal(wl_ln.arrivals, wl_ga.arrivals)
+    tables = np.stack([service_time_table(prof, ev.types, wl_ln.batches),
+                       service_time_table(prof, ev.types, wl_ga.batches)])
+
+    lattice = space.enumerate()
+    homog = np.zeros((HOMOG_CAP, space.n_types), dtype=np.int64)
+    homog[:, 0] = np.arange(1, HOMOG_CAP + 1)
+    cfgs = np.concatenate([lattice, homog])
+    rates = np.concatenate(
+        [ev.sim.qos_rate_grid(cfgs[i:i + CHUNK], [1.0, 1.0],
+                              service_tables=tables)
+         for i in range(0, len(cfgs), CHUNK)], axis=1)   # (2, B)
+
+    costs = space.costs(lattice)
+    out = {}
+    for row, dist in enumerate(("lognormal", "gaussian")):
+        feas = rates[row, :len(lattice)] >= qos_target
+        best_cost, best_cfg = np.inf, None
+        if feas.any():
+            i = int(np.argmin(np.where(feas, costs, np.inf)))
+            best_cost, best_cfg = float(costs[i]), tuple(
+                int(c) for c in lattice[i])
+        h_ok = np.nonzero(rates[row, len(lattice):] >= qos_target)[0]
+        h_cost = (float((int(h_ok[0]) + 1) * space.prices[0])
+                  if h_ok.size else np.inf)
+        saving = 1.0 - best_cost / h_cost if np.isfinite(h_cost) else 0.0
+        out[dist] = {"best_config": best_cfg, "best_cost": best_cost,
+                     "homog_cost": h_cost, "saving": saving}
+    return out
 
 
 def run(quick: bool = False):
     models = MODELS if not quick else ["mtwnd", "dien"]
     rows, payload = [], {}
     for m in models:
-        ln = get_context(m, batch_dist="lognormal")
-        ga = get_context(m, batch_dist="gaussian")
-        payload[m] = {"lognormal_saving_pct": 100 * ln.max_saving,
-                      "gaussian_saving_pct": 100 * ga.max_saving,
-                      "gaussian_best": list(ga.best_config)}
-        rows.append([m, f"{100*ln.max_saving:.1f}%",
-                     f"{100*ga.max_saving:.1f}%", str(ga.best_config)])
-    print_table("Fig.11 — savings under Gaussian batch distribution",
+        ctx = get_context(m)        # log-normal context, shared with figures
+        sweep = _stacked_dist_sweep(ctx)
+        ln, ga = sweep["lognormal"], sweep["gaussian"]
+        payload[m] = {"lognormal_saving_pct": 100 * ln["saving"],
+                      "gaussian_saving_pct": 100 * ga["saving"],
+                      "gaussian_best": list(ga["best_config"] or ()),
+                      "lognormal_grid_matches_context":
+                          ln["best_cost"] == ctx.best_cost}
+        rows.append([m, f"{100 * ln['saving']:.1f}%",
+                     f"{100 * ga['saving']:.1f}%",
+                     str(ga["best_config"])])
+    print_table("Fig.11 — savings under Gaussian batch distribution "
+                "(stacked-table grid sweep)",
                 ["model", "lognormal saving", "gaussian saving",
                  "gaussian diverse opt"], rows)
-    checks = {m: {"still_saves": payload[m]["gaussian_saving_pct"] > 0.0}
+    checks = {m: {"still_saves": payload[m]["gaussian_saving_pct"] > 0.0,
+                  "grid_matches_context":
+                      payload[m]["lognormal_grid_matches_context"]}
               for m in models}
     payload["checks"] = checks
     print("checks:", checks)

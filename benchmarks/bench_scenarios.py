@@ -1,0 +1,89 @@
+"""Scenario-engine episodes end-to-end on the simulator plane.
+
+Runs the registry's declarative multi-phase episodes (diurnal swing, flash
+crowd, spot churn, failure storm, batch-distribution drift) through the
+full adapt loop — monitor detection → grid rescale / history-replay
+recovery / repricing → reconfigure — and emits ``BENCH_scenarios.json``
+(stable schema) with the per-episode structured reports:
+
+  * per-phase QoS satisfaction rate + cumulative cost,
+  * per-window violation flags,
+  * per-injected-event adaptation latency in queries,
+  * BO evaluations spent by every control action.
+
+``--smoke`` (the CI alias for ``--quick``) runs the ``diurnal`` and
+``spot-churn`` episodes on shortened phases; the full run covers every
+registered episode.  ``scripts/check_bench.py`` gates the artifact: every
+injected event must show a finite adaptation latency (QoS recovered to
+target) and every number must be finite.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.scenario import EPISODES, ScenarioEngine, build_episode, \
+    paper_simulator_plane
+
+from .common import print_table, write_bench_json
+
+MODEL = "mtwnd"
+SMOKE_EPISODES = ("diurnal", "spot-churn")
+WINDOW = 100
+
+
+def run_episode(name: str, n: int, window: int = WINDOW,
+                model: str = MODEL) -> dict:
+    spec = build_episode(name, n=n, window=window)
+    plane, space = paper_simulator_plane(model, spec)
+    report = ScenarioEngine(spec, plane, space).run()
+    return report.to_dict()
+
+
+def run(quick: bool = False):
+    n = 400 if quick else 800
+    names = SMOKE_EPISODES if quick else tuple(EPISODES)
+    rows, episodes, checks = [], {}, {}
+    for name in names:
+        doc = run_episode(name, n=n)
+        episodes[name] = doc
+        recoveries = [e["recovery_queries"] for e in doc["events"]]
+        checks[name] = {
+            "recovered_all_events": doc["recovered_all_events"],
+            "ends_healthy": (not doc["windows"][-1]["violation"]
+                             if doc["windows"] else False),
+        }
+        rows.append([
+            name, len(doc["phases"]), doc["n_events"], len(doc["actions"]),
+            f"{doc['qos_rate']:.4f}",
+            f"{doc['violation_windows']}/{doc['n_windows']}",
+            f"{doc['total_cost']:.4f}", doc["bo_evals"],
+            ",".join("-" if r is None else str(r) for r in recoveries)
+            or "-",
+        ])
+    print_table(
+        f"Scenario episodes — {MODEL}, {n} queries/phase, "
+        f"window {WINDOW} (simulator plane)",
+        ["episode", "phases", "events", "actions", "QoS rate",
+         "viol. windows", "cost $", "BO evals", "recovery (queries)"],
+        rows)
+    print("checks:", checks)
+    payload = {
+        "model": MODEL,
+        "n_per_phase": n,
+        "window": WINDOW,
+        "episodes": episodes,
+        "checks": checks,
+    }
+    write_bench_json("scenarios", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--quick", action="store_true",
+                        help="short phases, smoke episode subset")
+    parser.add_argument("--smoke", action="store_true",
+                        help="CI smoke mode (alias for --quick)")
+    args = parser.parse_args()
+    run(quick=args.quick or args.smoke)

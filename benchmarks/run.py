@@ -14,8 +14,8 @@ import traceback
 from . import (bench_ablation_objective, bench_batch_dist, bench_batch_eval,
                bench_cardinality, bench_convergence, bench_cost_savings,
                bench_exploration_cost, bench_load_change, bench_pool_example,
-               bench_qos_relax, bench_qos_violations, bench_tpu_cells,
-               bench_tradeoff)
+               bench_qos_relax, bench_qos_violations, bench_scenarios,
+               bench_tpu_cells, bench_tradeoff)
 from .common import write_bench_json
 
 BENCHES = [
@@ -32,6 +32,7 @@ BENCHES = [
     ("ablation_objective", bench_ablation_objective),
     ("beyond_tpu_cells", bench_tpu_cells),
     ("perf_batch_eval", bench_batch_eval),
+    ("beyond_scenarios", bench_scenarios),
 ]
 
 

@@ -1,0 +1,88 @@
+"""Replay a named scenario episode through the full adapt loop.
+
+    PYTHONPATH=src python examples/run_scenario.py [episode] [--model m]
+    PYTHONPATH=src python examples/run_scenario.py --list
+    PYTHONPATH=src python examples/run_scenario.py spot-churn --live
+
+Default plane is the queueing simulator (fast path: vmapped segments, grid
+rescale, stacked-table phase sweep).  ``--live`` drives the same episode
+through a ``ClusterEngine`` of real serving cells — every query executes a
+compiled model on the local device, so keep it for the curious.
+"""
+
+import sys
+sys.path.insert(0, "src")
+
+import argparse
+
+from repro.scenario import (EPISODES, LivePlane, ScenarioEngine,
+                            build_episode, paper_simulator_plane)
+
+
+def summarize(report):
+    d = report.to_dict()
+    print(f"\nepisode {d['scenario']!r} on the {d['plane']} plane — "
+          f"QoS target {d['qos_target']:.2f}")
+    print(f"  overall QoS rate {d['qos_rate']:.4f}, "
+          f"{d['violation_windows']}/{d['n_windows']} violating windows, "
+          f"total cost ${d['total_cost']:.4f}, "
+          f"{d['bo_evals']} BO evaluations")
+    for p in d["phases"]:
+        print(f"  phase {p['name']:<12} x{p['load_factor']:<4g} "
+              f"{p['batch_dist']:<9} QoS {p['qos_rate']:.4f} "
+              f"cost ${p['cost']:.4f} "
+              f"({p['violation_windows']}/{p['n_windows']} viol.)")
+    for e in d["events"]:
+        rec = (f"recovered in {e['recovery_queries']} queries"
+               if e["recovery_queries"] is not None else "NOT recovered")
+        print(f"  event {e['kind']} ({e['detail']}) at query "
+              f"{e['at_query']}: {rec}")
+    for a in d["actions"]:
+        print(f"  action {a['kind']:<18} [{a['trigger']}] "
+              f"{a['old_config']} -> {a['new_config']} "
+              f"({a['bo_evals']} evals)")
+    print(f"  final config {d['final_config']}, per-phase QoS sweep "
+          f"{d['final_qos_by_phase']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("episode", nargs="?", default="spot-churn",
+                    choices=sorted(EPISODES))
+    ap.add_argument("--model", default="mtwnd")
+    ap.add_argument("--n", type=int, default=500,
+                    help="queries per phase")
+    ap.add_argument("--live", action="store_true",
+                    help="drive the live ClusterEngine instead")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list:
+        for name, builder in EPISODES.items():
+            print(f"{name:<15} {builder.__doc__.strip().splitlines()[0]}")
+        return
+
+    spec = build_episode(args.episode, n=args.n)
+    if args.live:
+        from repro.core.search_space import SearchSpace
+        from repro.serving.engine import DEFAULT_TPU_CELLS, ClusterEngine
+        from repro.serving.pool import paper_workload
+
+        cells = DEFAULT_TPU_CELLS[:2]
+        engine = ClusterEngine(args.model, cells, seed=spec.seed)
+        workloads = {d: paper_workload(args.model, seed=spec.seed,
+                                       n_queries=spec.n_base_queries,
+                                       rate_qps=40.0, batch_dist=d)
+                     for d in spec.batch_dists}
+        plane = LivePlane(engine, workloads, qos_latency=10.0,
+                          probe_queries=30)
+        space = SearchSpace(bounds=(3, 2),
+                            prices=tuple(c.price for c in cells))
+    else:
+        plane, space = paper_simulator_plane(args.model, spec)
+
+    report = ScenarioEngine(spec, plane, space).run()
+    summarize(report)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,30 +1,39 @@
 #!/usr/bin/env python
 """CI gate on benchmark artifacts.
 
-Two responsibilities:
+Three responsibilities:
 
 * **Schema validation** of every ``BENCH_*.json`` artifact (the committed
   repo-root baseline plus everything under ``bench_out/``): the stable
   envelope (``schema_version``, ``bench``) must be present and every number
   in the document must be finite — NaN/Infinity silently round-trip through
   ``json`` and would otherwise slip past threshold comparisons.
-* **Perf thresholds** on the batched evaluation engine
-  (``bench == "batch_eval"``): batched B=32 must stay >= 5x the sequential
-  single-config path, and the joint (workload x config) grid dispatch at
-  W=4 x B=32 must stay >= 3x the per-workload sequential sweep and remain
-  bit-identical to it.  Smoke artifacts (``--smoke``/``--quick`` runs on a
-  shrunken workload, ``n_queries < 1500``) gate B=32 at a reduced floor —
-  fixed per-dispatch overhead is a larger fraction of the shorter sweeps
-  and CI runners are noisy, but a real regression (the pre-batched
-  sequential path measures ~1x) still lands far below it.  The grid
-  measurement is always taken at full workload size, so its threshold is
-  uniform.
+* **Perf/behavior thresholds** per bench kind:
+  - ``bench == "batch_eval"``: batched B=32 must stay >= 5x the sequential
+    single-config path, and the joint (workload x config) grid dispatch at
+    W=4 x B=32 must stay >= 3x the per-workload sequential sweep and remain
+    bit-identical to it.  Smoke artifacts (``--smoke``/``--quick`` runs on a
+    shrunken workload, ``n_queries < 1500``) gate B=32 at a reduced floor —
+    fixed per-dispatch overhead is a larger fraction of the shorter sweeps
+    and CI runners are noisy, but a real regression (the pre-batched
+    sequential path measures ~1x) still lands far below it.  The grid
+    measurement is always taken at full workload size, so its threshold is
+    uniform.
+  - ``bench == "scenarios"``: every episode must report
+    ``recovered_all_events`` — each injected event's QoS returned to target
+    within the episode (finite adaptation latency).
+* **Perf-trend history** (``--history``): append every validated artifact's
+  trend metrics to ``bench_out/history.jsonl`` keyed by the current commit,
+  and WARN (non-fatal — CI runners are noisy and hardware varies) when a
+  metric regressed by more than 20% against the most recent prior entry for
+  the same bench.
 
 Usage::
 
     python scripts/check_bench.py                 # root baseline + bench_out
     python scripts/check_bench.py PATH [PATH...]  # explicit artifacts
     python scripts/check_bench.py --schema-only   # skip perf thresholds
+    python scripts/check_bench.py --history       # also append + trend-check
 
 ``--schema-only`` lets CI validate artifacts produced on arbitrary hardware
 without asserting hardware-dependent speedups.
@@ -35,6 +44,7 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import subprocess
 from pathlib import Path
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
@@ -143,6 +153,113 @@ def check_batch_eval(doc, label: str) -> list[str]:
     return errors
 
 
+def check_scenarios(doc, label: str) -> list[str]:
+    """Behavior gate for scenario-engine episode artifacts: every injected
+    event must have recovered (finite adaptation latency)."""
+    errors = []
+    episodes = doc.get("episodes")
+    if not isinstance(episodes, dict) or not episodes:
+        return [f"{label}: scenarios artifact has no 'episodes'"]
+    for name, ep in episodes.items():
+        if not isinstance(ep, dict):
+            errors.append(f"{label}: episode {name!r} is not an object")
+            continue
+        if not ep.get("recovered_all_events", False):
+            events = ep.get("events", [])
+            bad = [e.get("kind") for e in events if e.get("recovery_queries") is None]
+            errors.append(
+                f"{label}: episode {name!r} did not recover QoS to target "
+                f"after event(s) {bad}",
+            )
+    return errors
+
+
+# ---------------------------------------------------------------- history
+# Trend metrics per bench kind: name -> (value, direction), direction
+# "higher" or "lower" meaning which way is better.  Only these named
+# metrics participate in the >20% regression warning.
+REGRESSION_FRAC = 0.20
+
+
+def trend_metrics(doc) -> dict[str, tuple[float, str]]:
+    bench = doc.get("bench")
+    out: dict[str, tuple[float, str]] = {}
+    if bench == "batch_eval":
+        for row in doc.get("results", []):
+            if row.get("batch_size") == 32 and "speedup" in row:
+                out["b32_speedup"] = (float(row["speedup"]), "higher")
+        grid = doc.get("grid")
+        if isinstance(grid, dict) and "speedup" in grid:
+            out["grid_speedup"] = (float(grid["speedup"]), "higher")
+    elif bench == "scenarios":
+        for name, ep in (doc.get("episodes") or {}).items():
+            if isinstance(ep, dict) and "qos_rate" in ep:
+                out[f"{name}.qos_rate"] = (float(ep["qos_rate"]), "higher")
+            if isinstance(ep, dict) and "total_cost" in ep:
+                out[f"{name}.total_cost"] = (float(ep["total_cost"]), "lower")
+    return out
+
+
+def git_commit() -> str:
+    try:
+        proc = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True,
+            text=True,
+            timeout=10,
+            cwd=REPO_ROOT,
+        )
+    except OSError:
+        return "unknown"
+    return proc.stdout.strip() or "unknown"
+
+
+def update_history(doc, label: str, history_path: Path, commit: str) -> list[str]:
+    """Append this artifact's trend metrics to the history log; return
+    WARN strings for >20% regressions vs the most recent prior entry for
+    the same (bench, source) — the committed root baseline and a fresh
+    bench_out measurement trend independently."""
+    metrics = trend_metrics(doc)
+    warnings = []
+    last = None
+    if history_path.exists():
+        for line in history_path.read_text().splitlines():
+            try:
+                entry = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if entry.get("bench") == doc.get("bench") and entry.get("source") == label:
+                last = entry
+    if last is not None:
+        for name, (value, direction) in metrics.items():
+            prev = last.get("metrics", {}).get(name)
+            prev_value = prev[0] if isinstance(prev, list) else prev
+            if not isinstance(prev_value, (int, float)) or prev_value == 0:
+                continue
+            change = (value - prev_value) / abs(prev_value)
+            if direction == "higher":
+                regressed = change < -REGRESSION_FRAC
+            else:
+                regressed = change > REGRESSION_FRAC
+            if regressed:
+                warnings.append(
+                    f"{label}: {name} regressed "
+                    f"{100 * abs(change):.1f}% vs commit "
+                    f"{last.get('commit', '?')} "
+                    f"({prev_value:.4g} -> {value:.4g})",
+                )
+    record = {
+        "commit": commit,
+        "bench": doc.get("bench"),
+        "source": label,
+        "metrics": {k: [v, d] for k, (v, d) in metrics.items()},
+    }
+    history_path.parent.mkdir(exist_ok=True)
+    with history_path.open("a") as fh:
+        fh.write(json.dumps(record) + "\n")
+    return warnings
+
+
 def default_paths(bench_dir: Path) -> list[Path]:
     paths = []
     root_baseline = REPO_ROOT / "BENCH_batch_eval.json"
@@ -172,6 +289,17 @@ def main(argv=None) -> int:
         default=REPO_ROOT / "bench_out",
         help="directory scanned for BENCH_*.json in default mode",
     )
+    parser.add_argument(
+        "--history",
+        action="store_true",
+        help="append artifacts to history.jsonl (by commit); warn on regressions",
+    )
+    parser.add_argument(
+        "--history-file",
+        type=Path,
+        default=None,
+        help="history log location (default: <bench-dir>/history.jsonl)",
+    )
     args = parser.parse_args(argv)
 
     paths = list(args.paths) or default_paths(args.bench_dir)
@@ -182,7 +310,10 @@ def main(argv=None) -> int:
         )
         return 1
 
-    errors = []
+    history_path = args.history_file or (args.bench_dir / "history.jsonl")
+    commit = git_commit() if args.history else None
+
+    errors, warnings = [], []
     for path in paths:
         label = str(path)
         if not path.exists():
@@ -195,16 +326,25 @@ def main(argv=None) -> int:
             continue
         schema_errors = validate_schema(doc, label)
         errors.extend(schema_errors)
-        if args.schema_only or schema_errors:
+        if schema_errors:
             continue
-        if doc.get("bench") == "batch_eval":
-            errors.extend(check_batch_eval(doc, label))
+        if not args.schema_only:
+            if doc.get("bench") == "batch_eval":
+                errors.extend(check_batch_eval(doc, label))
+            elif doc.get("bench") == "scenarios":
+                errors.extend(check_scenarios(doc, label))
+        if args.history:
+            warnings.extend(update_history(doc, label, history_path, commit))
 
+    for warn in warnings:
+        print(f"check_bench: WARN — {warn}")
     if errors:
         for err in errors:
             print(f"check_bench: FAIL — {err}")
         return 1
     mode = "schemas" if args.schema_only else "schemas + perf gates"
+    if args.history:
+        mode += f" + history ({history_path})"
     print(f"check_bench: OK — {len(paths)} artifact(s), {mode}")
     return 0
 

@@ -264,6 +264,31 @@ class RibbonOptimizer:
             est_rate = float(np.clip(e.qos_rate * scale, 0.0, 1.0))
             self.tell(e.config, est_rate, estimated=True)
 
+    def replay_from(self, other: "RibbonOptimizer") -> int:
+        """Transfer still-valid history from another optimizer over the same
+        workload: every *real* (non-estimated) evaluation whose config fits
+        this space's bounds is replayed as a real observation.
+
+        This is the warm-restart plumbing shared by every event kind whose
+        QoS measurements stay valid — capacity loss/restock (the load per
+        instance is unchanged; serving/fault.recover_from_failure) and price
+        changes (QoS is price-independent; serving/fault.reprice).  Load
+        changes invalidate the measurements themselves and go through
+        ``warm_restart`` estimation instead.  Returns the number of
+        evaluations replayed.
+        """
+        replayed = 0
+        for e in other.trace.evaluations:
+            if e.estimated:
+                continue
+            if not all(0 <= c <= b for c, b in zip(e.config,
+                                                   self.space.bounds)):
+                continue
+            if not self.sampled[self.space.index_of(e.config)]:
+                self.tell(e.config, e.qos_rate)
+                replayed += 1
+        return replayed
+
     # ------------------------------------------------------------ checkpoint
     def state_dict(self) -> dict:
         return {

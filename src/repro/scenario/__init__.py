@@ -1,0 +1,21 @@
+"""Scenario engine: declarative multi-phase traffic episodes driving the
+full adapt loop (monitor detection → grid rescale / failure recovery /
+repricing → reconfigure) over the simulator or the live serving plane."""
+
+from .engine import ScenarioEngine
+from .planes import LivePlane, SimulatorPlane, paper_simulator_plane
+from .registry import EPISODES, build_episode
+from .report import (ControlAction, EpisodeReport, EventOutcome, PhaseReport,
+                     WindowStat)
+from .spec import (BATCH_DISTS, EVENT_KINDS, EventSpec, PhaseSpec,
+                   ScenarioSpec, Timeline)
+
+__all__ = [
+    "ScenarioSpec", "PhaseSpec", "EventSpec", "Timeline",
+    "EVENT_KINDS", "BATCH_DISTS",
+    "ScenarioEngine",
+    "SimulatorPlane", "LivePlane", "paper_simulator_plane",
+    "EpisodeReport", "PhaseReport", "WindowStat", "EventOutcome",
+    "ControlAction",
+    "EPISODES", "build_episode",
+]

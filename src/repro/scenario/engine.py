@@ -1,0 +1,425 @@
+"""Scenario engine: compiles a ScenarioSpec into the detection → adaptation
+event loop over an evaluation plane.
+
+The episode advances in *queries*, not wall seconds: each phase's stream is
+cut into segments at control-plane moments (injected events, monitor
+detections), every segment is served from an idle pool — the same
+whole-stream accounting every QoS path in this repo uses, so a constant
+episode reproduces ``PoolSimulator.qos_rate`` bit for bit — and fixed-size
+windows inside a segment feed the :class:`LoadMonitor` and the report.
+
+Control policy per event kind:
+
+  * **load changes** (phase boundaries, ``load_spike`` events) are *not*
+    told to the control plane — the monitor must detect them from the
+    served windows.  The engine then estimates the new load factor from the
+    window's arrival span (x a small provisioning headroom), and rescales:
+    on a grid-capable plane via the autoscaler's joint (load x config)
+    sweep, else via the sequential legacy path.  A monitor-independent
+    guard forces adaptation after ``forced_patience`` consecutive windows
+    more than ``forced_slack`` below target, so a mis-set baseline can
+    never wedge the loop in violation.
+  * **capacity events** (``cell_failure``, ``spot_preemption``) reach the
+    control plane directly (cloud providers signal both); recovery replays
+    the still-valid history into a reduced space
+    (``recover_from_failure``).  Preempted capacity is restocked at the
+    next phase boundary through the same plumbing with negative loss.
+  * **price changes** rebuild the optimizer over the same bounds with new
+    prices (``reprice``): QoS history replays wholesale, so the search is
+    usually memo-saturated and costs no new measurements.
+
+Re-optimization is instantaneous in episode time — its price is reported as
+BO evaluations (the paper's exploration cost), while *adaptation latency*
+is reported in queries: from an event's injection to the end of the first
+subsequent window back at the QoS target.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.ribbon import RibbonOptimizer
+from ..core.search_space import SearchSpace
+from ..serving.autoscaler import LoadMonitor, rescale
+from ..serving.fault import (continue_search, fail_instances,
+                             recover_from_failure, reprice)
+from .planes import slice_stream
+from .report import (ControlAction, EpisodeReport, EventOutcome, PhaseReport,
+                     WindowStat)
+from .spec import EventSpec, ScenarioSpec, Timeline
+
+
+class ScenarioEngine:
+    """Drives one episode over one plane.  Single-shot: build, ``run()``."""
+
+    def __init__(self, spec: ScenarioSpec, plane, space: SearchSpace,
+                 monitor: LoadMonitor | None = None, start=None,
+                 allow_downscale: bool = True, forced_slack: float = 0.03,
+                 forced_patience: int = 2, down_patience: int = 2,
+                 max_adapts_per_phase: int = 4):
+        self.spec = spec.validate()
+        self.plane = plane
+        self.space = space
+        self.monitor = monitor or LoadMonitor(qos_target=spec.qos_target)
+        self.start = start
+        self.allow_downscale = allow_downscale
+        self.forced_slack = float(forced_slack)
+        self.forced_patience = int(forced_patience)
+        # One slack window is Poisson noise; sustained slack is a trough.
+        self.down_patience = int(down_patience)
+        self.max_adapts_per_phase = int(max_adapts_per_phase)
+        self._factors: list[float] = []
+        # In-flight provisioning: (global query index, config) — the pool a
+        # capacity-event recovery booked, taking effect provision_queries
+        # after the event (spec.provision_queries > 0).
+        self._pending_switch: tuple[int, tuple] | None = None
+
+    # ------------------------------------------------------------- searches
+    def _drive(self, opt: RibbonOptimizer, dist: str, factor: float,
+               budget: int) -> int:
+        """Ask/tell `opt` against the plane at one load level; returns the
+        number of evaluations spent.  Uses the grid evaluator's batched
+        dispatch when the plane has one."""
+        ev = self.plane.grid_evaluator(dist)
+        if ev is None:
+            return continue_search(opt, self.plane.oracle(dist, factor),
+                                   budget)
+        n0 = opt.trace.n_samples
+        while opt.trace.n_samples - n0 < budget and not opt.done:
+            room = budget - (opt.trace.n_samples - n0)
+            cfgs = opt.ask_batch(min(self.spec.batch_q, room))
+            if not cfgs:
+                break
+            rates = ev.grid(cfgs, [factor])
+            for j, cfg in enumerate(cfgs):
+                opt.tell(cfg, float(rates[0, j]))
+                if opt.trace.n_samples - n0 >= budget or opt.done:
+                    break
+        return opt.trace.n_samples - n0
+
+    def _initial_search(self, bounds, prices, dist: str,
+                        factor: float) -> tuple[RibbonOptimizer, int]:
+        space = SearchSpace(bounds=tuple(bounds), prices=tuple(prices))
+        opt = RibbonOptimizer(space, qos_target=self.spec.qos_target,
+                              start=self.start)
+        used = self._drive(opt, dist, factor, self.spec.init_budget)
+        return opt, used
+
+    @staticmethod
+    def _pick_config(opt: RibbonOptimizer, bounds) -> tuple[int, ...]:
+        best = opt.trace.best_feasible()
+        if best is not None:
+            return tuple(int(c) for c in best.config)
+        return tuple(int(b) for b in bounds)    # over-provision, stay honest
+
+    def _estimate_factor(self, seg_arrivals, lo: int, hi: int,
+                         fallback: float) -> float:
+        """Load factor estimate from a window's observed arrival rate —
+        the engine never reads the spec's factors for control decisions."""
+        n = hi - lo
+        if n < 2:
+            return fallback
+        span = float(seg_arrivals[hi - 1] - seg_arrivals[lo])
+        if span <= 0:
+            return fallback
+        qps = (n - 1) / span
+        est = qps / float(self.plane.base_rate)
+        return float(np.clip(est, 0.05, 20.0))
+
+    def _adapt_load(self, opt: RibbonOptimizer, dist: str,
+                    factor_est: float, kind: str):
+        """Monitor-triggered re-optimization at an estimated load level."""
+        if kind == "rescale_down" or opt.best_config is None:
+            # Fresh bounded search.  Down-shifts cannot use the paper's
+            # warm-restart transfer: its linear rescaling models loads going
+            # *up* (rates only degrade), so it would replay the cheap
+            # previously-violating configs as still-violating samples —
+            # exactly the configurations a downscale must rediscover.  The
+            # incumbent seeds the start point; the memoized evaluator makes
+            # re-visits at known levels cheap.
+            start = opt.best_config or tuple(opt.space.bounds)
+            fresh = RibbonOptimizer(opt.space,
+                                    qos_target=self.spec.qos_target,
+                                    start=start)
+            used = self._drive(fresh, dist, factor_est,
+                               self.spec.rescale_budget)
+            best = fresh.trace.best_feasible()
+            return fresh, (best.config if best else None), used
+        ev = self.plane.grid_evaluator(dist)
+        if ev is not None:
+            factors = [f for f in self._factors[-3:]
+                       if abs(f - factor_est) > 1e-9] + [factor_est]
+            event = rescale(opt, ev, budget=self.spec.rescale_budget,
+                            kind=kind, load_factors=factors,
+                            batch_q=self.spec.batch_q)
+        else:
+            event = rescale(opt, self.plane.oracle(dist, factor_est),
+                            budget=self.spec.rescale_budget, kind=kind)
+        self._factors.append(factor_est)
+        return opt, event.new_best, event.samples_used
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> EpisodeReport:
+        spec, plane = self.spec, self.plane
+        timeline = Timeline.compile(spec)
+        qos_lat = plane.qos_latency
+        report = EpisodeReport(scenario=spec.name, plane=plane.name,
+                               qos_target=spec.qos_target)
+        bounds = list(self.space.bounds)
+        prices = [float(p) for p in self.space.prices]
+        restock_next: dict[int, int] = {}   # type -> count back next phase
+
+        dist0 = spec.phases[0].batch_dist
+        f0 = spec.phases[0].load_factor
+        self._factors = [f0]
+        opt, used = self._initial_search(bounds, prices, dist0, f0)
+        report.bo_evals += used
+        config = self._pick_config(opt, bounds)
+        plane.configure(config)
+        self.monitor.reset()
+        pending: list = []                  # open recovery trackers
+        gq = 0                              # global index of phase start
+
+        for p, phase in enumerate(spec.phases):
+            if self._pending_switch and self._pending_switch[0] <= gq:
+                config = self._pending_switch[1]
+                self._pending_switch = None
+                plane.configure(config)
+                self.monitor.reset()
+            if restock_next:
+                config, opt = self._restock(restock_next, p, gq, phase,
+                                            bounds, prices, config, opt,
+                                            report, pending)
+                restock_next = {}
+            factor = phase.load_factor
+            events = list(timeline.cuts[p])
+            stream = plane.phase_stream(phase.batch_dist, phase.n_queries,
+                                        factor)
+            i = 0
+            ph_passed = 0
+            ph_cost = 0.0
+            ph_windows = 0
+            ph_viol = 0
+            bad_streak = 0
+            down_streak = 0
+            down_blocked = False     # hysteresis: no-op downscales stop
+            adapts = 0
+            while i < phase.n_queries:
+                while events and events[0][0] <= i:
+                    pos, ev_spec = events.pop(0)
+                    config, opt, factor = self._apply_event(
+                        ev_spec, p, gq + pos, phase, factor, bounds, prices,
+                        config, opt, restock_next, report, pending)
+                    if ev_spec.kind == "load_spike":
+                        stream = plane.phase_stream(phase.batch_dist,
+                                                    phase.n_queries, factor)
+                    plane.configure(config)
+                    self.monitor.reset()
+                    down_blocked = False    # the regime changed
+                if (self._pending_switch
+                        and self._pending_switch[0] - gq <= i):
+                    config = self._pending_switch[1]
+                    self._pending_switch = None
+                    plane.configure(config)
+                    self.monitor.reset()
+                cut = events[0][0] if events else phase.n_queries
+                if self._pending_switch:
+                    cut = min(cut, self._pending_switch[0] - gq)
+                seg = slice_stream(stream, i, cut)
+                lat, waits = plane.measure(phase.batch_dist, seg, config)
+                consumed = len(lat)
+                w = 0
+                while w < len(lat):
+                    w_hi = min(w + spec.window, len(lat))
+                    wlat, wwaits = lat[w:w_hi], waits[w:w_hi]
+                    passed = int(np.sum(wlat <= qos_lat))
+                    rate = passed / (w_hi - w)
+                    price = float(np.dot(prices, config))
+                    span = float(seg.arrivals[w_hi - 1] - seg.arrivals[w])
+                    g_end = gq + i + w_hi
+                    viol = rate < spec.qos_target
+                    report.windows.append(WindowStat(
+                        phase=p, start=gq + i + w, end=g_end, qos_rate=rate,
+                        config=config, price=price,
+                        cost=price * span / 3600.0, violation=viol))
+                    ph_passed += passed
+                    ph_cost += price * span / 3600.0
+                    ph_windows += 1
+                    ph_viol += int(viol)
+                    if not viol:
+                        for rec in pending:
+                            rec.recovery_queries = g_end - rec.at_query
+                        pending.clear()
+                        bad_streak = 0
+                    else:
+                        bad_streak += 1
+                    up = self.monitor.observe(wlat, wwaits, qos_lat)
+                    forced = (bad_streak >= self.forced_patience
+                              and rate < spec.qos_target - self.forced_slack)
+                    down_streak = (down_streak + 1
+                                   if (not viol and self.allow_downscale
+                                       and self.monitor.downshift(
+                                           wlat, wwaits, qos_lat))
+                                   else 0)
+                    down = (down_streak >= self.down_patience
+                            and not down_blocked)
+                    if (((up and viol) or forced or down)
+                            and adapts < self.max_adapts_per_phase):
+                        kind = "rescale_down" if (down and not viol) \
+                            else "rescale_up"
+                        est = self._estimate_factor(seg.arrivals, w, w_hi,
+                                                    fallback=factor)
+                        est = float(np.clip(est * spec.headroom, 0.05, 20.0))
+                        opt, new_best, used = self._adapt_load(
+                            opt, phase.batch_dist, est, kind)
+                        if kind == "rescale_down":
+                            # only act on a strictly cheaper pool; a no-op
+                            # (or upsizing) result blocks further downscale
+                            # attempts until the regime changes
+                            new_p = (float(np.dot(prices, new_best))
+                                     if new_best is not None else price)
+                            if new_best is None or new_p >= price:
+                                down_blocked = True
+                                new_best = None
+                        else:
+                            down_blocked = False
+                        action = ControlAction(
+                            kind=kind, trigger="monitor", phase=p,
+                            at_query=g_end, old_config=config,
+                            new_config=new_best,
+                            old_price=price,
+                            new_price=float(np.dot(prices, new_best))
+                            if new_best else price,
+                            bo_evals=used)
+                        report.actions.append(action)
+                        pending.append(action)
+                        report.bo_evals += used
+                        if new_best is not None:
+                            config = tuple(int(c) for c in new_best)
+                            # a real redeployment supersedes in-flight
+                            # provisioning; a no-op keeps the booking
+                            self._pending_switch = None
+                        plane.configure(config)
+                        self.monitor.reset()
+                        adapts += 1
+                        bad_streak = 0
+                        down_streak = 0
+                        consumed = w_hi
+                        break
+                    w = w_hi
+                i += consumed
+            report.phases.append(PhaseReport(
+                name=phase.name, batch_dist=phase.batch_dist,
+                load_factor=factor, n_queries=phase.n_queries,
+                qos_rate=ph_passed / phase.n_queries, cost=ph_cost,
+                n_windows=ph_windows, violation_windows=ph_viol))
+            gq += phase.n_queries
+
+        report.total_queries = gq
+        report.total_cost = float(sum(w.cost for w in report.windows))
+        report.final_config = config
+        report.final_qos_by_phase = plane.phase_sweep(config,
+                                                      list(spec.phases))
+        return report
+
+    # ----------------------------------------------------------- event ops
+    def _apply_event(self, ev: EventSpec, p: int, at_q: int, phase, factor,
+                     bounds, prices, config, opt, restock_next, report,
+                     pending):
+        """Mutates bounds/prices/restock_next in place; returns the new
+        (config, optimizer, effective load factor)."""
+        outcome = EventOutcome(kind=ev.kind, phase=p, at_query=at_q)
+        report.events.append(outcome)
+        pending.append(outcome)
+        oracle = self.plane.oracle(phase.batch_dist, factor)
+
+        if ev.kind == "load_spike":
+            factor = factor * ev.factor
+            outcome.detail = f"x{ev.factor:g} traffic"
+            return config, opt, factor
+
+        t = ev.type_index
+        # Capacity and price events change the space/objective under any
+        # in-flight provisioning: the booking was computed for the old
+        # regime (it could even exceed the post-event bounds), and each
+        # handler below deploys or books its own replacement.
+        self._pending_switch = None
+        if ev.kind == "price_change":
+            old_price = float(np.dot(prices, config))
+            prices[t] = prices[t] * ev.factor
+            self.plane.apply_price(t, prices[t])
+            opt, sev = reprice(opt, prices, oracle,
+                               budget=self.spec.recover_budget)
+            outcome.detail = f"type {t} price x{ev.factor:g}"
+            new_cfg = sev.new_best or config
+            report.actions.append(ControlAction(
+                kind="reprice", trigger="event", phase=p, at_query=at_q,
+                old_config=config, new_config=new_cfg,
+                old_price=old_price,
+                new_price=float(np.dot(prices, new_cfg)),
+                bo_evals=sev.samples_used))
+            report.bo_evals += sev.samples_used
+            return tuple(int(c) for c in new_cfg), opt, factor
+
+        # cell_failure / spot_preemption: capacity loss
+        lost = min(int(ev.count), int(bounds[t]))
+        outcome.detail = f"type {t} -{lost}"
+        if lost == 0:
+            return config, opt, factor
+        self.plane.apply_capacity_loss(t, lost)
+        degraded = fail_instances(config, t, lost)
+        degraded = tuple(min(int(c), int(b) - (lost if j == t else 0))
+                         for j, (c, b) in enumerate(zip(degraded, bounds)))
+        bounds[t] -= lost
+        kind = ("recover_preemption" if ev.kind == "spot_preemption"
+                else "recover_failure")
+        opt, sev = recover_from_failure(opt, oracle, failed_type=t,
+                                        lost=lost,
+                                        budget=self.spec.recover_budget,
+                                        kind=kind)
+        if ev.kind == "spot_preemption":
+            restock_next[t] = restock_next.get(t, 0) + lost
+        new_cfg = tuple(int(c) for c in (sev.new_best or degraded))
+        report.actions.append(ControlAction(
+            kind=kind, trigger="event", phase=p, at_query=at_q,
+            old_config=config, new_config=new_cfg,
+            old_price=float(np.dot(prices, config)),
+            new_price=float(np.dot(prices, new_cfg)),
+            bo_evals=sev.samples_used))
+        report.bo_evals += sev.samples_used
+        if self.spec.provision_queries > 0 and new_cfg != degraded:
+            # replacement capacity boots asynchronously: the degraded pool
+            # serves until the booked switch point
+            self._pending_switch = (at_q + self.spec.provision_queries,
+                                    new_cfg)
+            return degraded, opt, factor
+        return new_cfg, opt, factor
+
+    def _restock(self, restock_next, p, gq, phase, bounds, prices, config,
+                 opt, report, pending):
+        """Return preempted spot capacity at a phase boundary: the same
+        replay plumbing as failure recovery, with negative loss."""
+        # the restock search supersedes any switch still booked for the
+        # degraded (pre-restock) space
+        self._pending_switch = None
+        for t, cnt in sorted(restock_next.items()):
+            oracle = self.plane.oracle(phase.batch_dist, phase.load_factor)
+            opt, sev = recover_from_failure(opt, oracle, failed_type=t,
+                                            lost=-cnt,
+                                            budget=self.spec.recover_budget,
+                                            kind="restock")
+            bounds[t] += cnt
+            new_cfg = sev.new_best or config
+            action = ControlAction(
+                kind="restock", trigger="phase_start", phase=p, at_query=gq,
+                old_config=config, new_config=new_cfg,
+                old_price=float(np.dot(prices, config)),
+                new_price=float(np.dot(prices, new_cfg)),
+                bo_evals=sev.samples_used)
+            report.actions.append(action)
+            pending.append(action)
+            report.bo_evals += sev.samples_used
+            config = tuple(int(c) for c in new_cfg)
+        self.plane.configure(config)
+        self.monitor.reset()
+        return config, opt

@@ -1,0 +1,224 @@
+"""Evaluation planes the scenario engine drives.
+
+Both planes speak one small protocol:
+
+  * ``phase_stream(dist, n, factor)`` — the phase's query stream (a prefix
+    of the episode base stream for that batch distribution, compressed by
+    the load factor);
+  * ``measure(dist, workload, config)`` — per-query ``(latencies, waits)``
+    float64 arrays of serving that stream with that pool, from an idle
+    start (the repo's whole-stream QoS accounting);
+  * ``oracle(dist, factor)`` — a sequential ``config -> QoS rate`` callable
+    for the search loops;
+  * ``grid_evaluator(dist)`` — a ``PoolEvaluator`` when the plane supports
+    the joint (load x config) grid fast path, else ``None`` (the engine
+    then drives the legacy sequential rescale path);
+  * ``configure(config)`` — deploy a pool (a no-op on the simulator).
+
+``SimulatorPlane`` is the fast path: segments run through the vmapped
+``PoolSimulator``, adaptation searches through the grid engine, and the
+episode summary sweeps every phase in one stacked service-table dispatch.
+``LivePlane`` is the measured path: the same loop drives a ``ClusterEngine``
+that executes every query on the real device — the roadmap follow-on of
+feeding batch evaluation through the live serving engine.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..serving.instance import (AWS_INSTANCES, MODEL_PROFILES, PAPER_POOLS,
+                                InstanceType, ModelProfile,
+                                service_time_table)
+from ..serving.pool import (DEFAULT_BOUNDS, PoolEvaluator, paper_workload)
+from ..serving.simulator import PoolSimulator
+from ..serving.workload import Workload
+from .spec import PhaseSpec, ScenarioSpec
+
+
+def _prefix(workload: Workload, n: int) -> Workload:
+    if n >= workload.n_queries:
+        return workload
+    return Workload(arrivals=workload.arrivals[:n],
+                    batches=workload.batches[:n],
+                    rate_qps=workload.rate_qps)
+
+
+def slice_stream(workload: Workload, lo: int, hi: int) -> Workload:
+    """A contiguous segment of a stream (absolute arrival times kept)."""
+    return Workload(arrivals=workload.arrivals[lo:hi],
+                    batches=workload.batches[lo:hi],
+                    rate_qps=workload.rate_qps)
+
+
+class SimulatorPlane:
+    """Queueing-simulator plane over per-distribution base workloads.
+
+    ``workloads`` maps batch-distribution name -> base :class:`Workload`.
+    All base workloads must share their arrival stream (generate them from
+    one seed/rate/length — only the batch key differs), which is what lets
+    ``phase_sweep`` stack per-phase service tables over one arrival grid.
+    """
+
+    name = "simulator"
+
+    def __init__(self, profile: ModelProfile, types: list[InstanceType],
+                 workloads: dict[str, Workload], max_instances: int = 40):
+        if not workloads:
+            raise ValueError("at least one base workload is required")
+        arrs = [wl.arrivals for wl in workloads.values()]
+        for a in arrs[1:]:
+            if not np.array_equal(a, arrs[0]):
+                raise ValueError("base workloads must share arrival times "
+                                 "(same seed/rate/length)")
+        self.profile = profile
+        self.types = list(types)
+        self.max_instances = max_instances
+        self.workloads = dict(workloads)
+        self.evaluators = {d: PoolEvaluator(profile, self.types, wl,
+                                            max_instances=max_instances)
+                           for d, wl in self.workloads.items()}
+
+    @property
+    def qos_latency(self) -> float:
+        return self.profile.qos_latency
+
+    @property
+    def base_rate(self) -> float:
+        return next(iter(self.workloads.values())).rate_qps
+
+    @property
+    def n_evals(self) -> int:
+        return sum(ev.n_evals for ev in self.evaluators.values())
+
+    def configure(self, config) -> None:     # the simulator pool is stateless
+        pass
+
+    def apply_capacity_loss(self, type_index: int, count: int) -> None:
+        """No-op: the simulator models capacity purely through the engine's
+        bounds + the configs it is asked to simulate."""
+
+    def apply_price(self, type_index: int, price: float) -> None:
+        """No-op: simulator QoS is price-free; cost accounting lives in the
+        scenario engine's price vector."""
+
+    def phase_stream(self, dist: str, n: int, factor: float) -> Workload:
+        return _prefix(self.workloads[dist].scaled(factor), n)
+
+    def measure(self, dist: str, workload: Workload, config):
+        sim = PoolSimulator(self.profile, self.types, workload,
+                            max_instances=self.max_instances)
+        return sim.latencies_waits(config)
+
+    def grid_evaluator(self, dist: str) -> PoolEvaluator:
+        return self.evaluators[dist]
+
+    def oracle(self, dist: str, factor: float):
+        ev = self.evaluators[dist]
+        return lambda cfg: float(ev.grid([cfg], [factor])[0, 0])
+
+    def phase_sweep(self, config, phases: list[PhaseSpec]) -> list[float]:
+        """Full-stream QoS of one config under every phase's conditions —
+        one stacked service-table grid dispatch (W = n_phases lanes over
+        the shared arrival grid, each with its phase's batch stream)."""
+        sim = next(iter(self.evaluators.values())).sim
+        tables = np.stack([
+            service_time_table(self.profile, self.types,
+                               self.workloads[ph.batch_dist].batches)
+            for ph in phases])
+        factors = [ph.load_factor for ph in phases]
+        rates = sim.qos_rate_grid([tuple(int(c) for c in config)], factors,
+                                  service_tables=tables)
+        return [float(r) for r in rates[:, 0]]
+
+
+class LivePlane:
+    """Measured plane: the same scenario loop over a live ``ClusterEngine``.
+
+    Every measurement executes real compiled models; service times are wall
+    clock (scaled by cell speed), so results are *measured, not simulated* —
+    and correspondingly expensive.  Search oracles serve only a short probe
+    prefix per candidate (``probe_queries``) to bound the cost of an
+    adaptation.  ``engine`` is a ``repro.serving.engine.ClusterEngine``;
+    ``qos_latency`` must be supplied (live cells measure a different speed
+    regime than the analytical instance profiles).
+    """
+
+    name = "live"
+
+    def __init__(self, engine, workloads: dict[str, Workload],
+                 qos_latency: float, time_scale: float = 1.0,
+                 probe_queries: int = 40):
+        self.engine = engine
+        self.workloads = dict(workloads)
+        self.qos_latency = float(qos_latency)
+        self.time_scale = float(time_scale)
+        self.probe_queries = int(probe_queries)
+        self.n_evals = 0
+
+    @property
+    def base_rate(self) -> float:
+        return next(iter(self.workloads.values())).rate_qps
+
+    def configure(self, config) -> None:
+        self.engine.configure(tuple(int(c) for c in config))
+
+    def apply_capacity_loss(self, type_index: int, count: int) -> None:
+        """The market reclaims live cells: they fail in place and keep
+        failing until the next re-provisioning `configure`."""
+        self.engine.preempt(type_index, count)
+
+    def apply_price(self, type_index: int, price: float) -> None:
+        self.engine.cell_types[type_index].price = float(price)
+
+    def phase_stream(self, dist: str, n: int, factor: float) -> Workload:
+        return _prefix(self.workloads[dist].scaled(factor), n)
+
+    def measure(self, dist: str, workload: Workload, config):
+        self.configure(config)
+        self.engine.serve(workload, self.qos_latency,
+                          time_scale=self.time_scale)
+        lat, waits = self.engine.served_arrays()
+        if len(lat) < workload.n_queries:
+            # an empty/fully-failed pool serves nothing: every query
+            # violates (the simulator plane's +inf convention)
+            n = workload.n_queries
+            return np.full(n, np.inf), np.full(n, np.inf)
+        return lat, waits
+
+    def grid_evaluator(self, dist: str):
+        return None                      # no batched path on the live plane
+
+    def oracle(self, dist: str, factor: float):
+        probe = _prefix(self.workloads[dist].scaled(factor),
+                        self.probe_queries)
+
+        def evaluate(cfg) -> float:
+            self.configure(cfg)
+            self.n_evals += 1
+            return float(self.engine.serve(probe, self.qos_latency,
+                                           time_scale=self.time_scale))
+        return evaluate
+
+    def phase_sweep(self, config, phases) -> None:
+        return None                      # re-serving every phase is not free
+
+
+def paper_simulator_plane(model_name: str, spec: ScenarioSpec,
+                          max_instances: int = 40):
+    """(plane, space) for a named paper model: Table 3 diverse pool, the
+    standard per-model stream for every batch distribution the spec's
+    phases use (shared arrivals from ``spec.seed``), and the default
+    search-space bounds."""
+    profile = MODEL_PROFILES[model_name]
+    types = [AWS_INSTANCES[n] for n in PAPER_POOLS[model_name]["diverse"]]
+    workloads = {d: paper_workload(model_name, seed=spec.seed,
+                                   n_queries=spec.n_base_queries,
+                                   batch_dist=d)
+                 for d in spec.batch_dists}
+    plane = SimulatorPlane(profile, types, workloads,
+                           max_instances=max_instances)
+    from ..core.search_space import SearchSpace
+    prices = tuple(t.price for t in types)
+    space = SearchSpace(bounds=DEFAULT_BOUNDS[model_name], prices=prices)
+    return plane, space

@@ -1,0 +1,119 @@
+"""Named canonical episodes.
+
+Each builder returns a :class:`ScenarioSpec` scaled by ``n`` (queries per
+phase) and ``window`` (queries per monitoring window) so the same episode
+runs as a CI smoke (small ``n``) or a full study.  Phases are prefixes of
+one base stream per batch distribution, so every episode is deterministic
+from its seed.
+"""
+
+from __future__ import annotations
+
+from .spec import EventSpec, PhaseSpec, ScenarioSpec
+
+
+def diurnal(n: int = 500, window: int = 100, seed: int = 0,
+            qos_target: float = 0.99) -> ScenarioSpec:
+    """Day/night traffic swing: no injected events — every adaptation is
+    monitor-detected (up on the morning ramp, down on the evening fall)."""
+    return ScenarioSpec(
+        name="diurnal", seed=seed, qos_target=qos_target, window=window,
+        phases=(
+            PhaseSpec("night", n, load_factor=0.7),
+            PhaseSpec("morning", n, load_factor=1.0),
+            PhaseSpec("peak", n, load_factor=1.4),
+            PhaseSpec("evening", n, load_factor=1.0),
+            PhaseSpec("late-night", n, load_factor=0.6),
+        ))
+
+
+def flash_crowd(n: int = 500, window: int = 100, seed: int = 0,
+                qos_target: float = 0.99) -> ScenarioSpec:
+    """A sudden mid-phase traffic spike (paper §5.5's load change, but
+    injected *inside* a phase so detection latency is measured)."""
+    return ScenarioSpec(
+        name="flash-crowd", seed=seed, qos_target=qos_target, window=window,
+        phases=(
+            PhaseSpec("steady", n, load_factor=1.0),
+            PhaseSpec("surge", n, load_factor=1.0),
+            PhaseSpec("cooldown", n, load_factor=1.0),
+        ),
+        events=(
+            EventSpec("load_spike", phase=1, at_frac=0.3, factor=1.6),
+        ))
+
+
+def spot_churn(n: int = 500, window: int = 100, seed: int = 0,
+               qos_target: float = 0.99) -> ScenarioSpec:
+    """Spot-market churn: the anchor type is preempted mid-phase (capacity
+    returns at the next phase boundary), then repriced upward — the
+    KAIROS/INFaaS heterogeneous-pool economics regime."""
+    return ScenarioSpec(
+        name="spot-churn", seed=seed, qos_target=qos_target, window=window,
+        provision_queries=window,
+        phases=(
+            PhaseSpec("steady", n, load_factor=1.0),
+            PhaseSpec("churn", n, load_factor=1.0),
+            PhaseSpec("restored", n, load_factor=1.0),
+        ),
+        events=(
+            EventSpec("spot_preemption", phase=1, at_frac=0.4, type_index=0,
+                      count=2),
+            EventSpec("price_change", phase=2, at_frac=0.5, type_index=0,
+                      factor=1.25),
+        ))
+
+
+def failure_storm(n: int = 500, window: int = 100, seed: int = 0,
+                  qos_target: float = 0.99) -> ScenarioSpec:
+    """Correlated node losses across consecutive phases; capacity never
+    comes back, so the pool must re-optimize over a shrinking space."""
+    return ScenarioSpec(
+        name="failure-storm", seed=seed, qos_target=qos_target,
+        window=window, provision_queries=window,
+        phases=(
+            PhaseSpec("calm", n, load_factor=1.0),
+            PhaseSpec("first-loss", n, load_factor=1.0),
+            PhaseSpec("second-loss", n, load_factor=1.0),
+        ),
+        events=(
+            EventSpec("cell_failure", phase=1, at_frac=0.4, type_index=0,
+                      count=1),
+            EventSpec("cell_failure", phase=2, at_frac=0.4, type_index=1,
+                      count=2),
+        ))
+
+
+def dist_drift(n: int = 500, window: int = 100, seed: int = 0,
+               qos_target: float = 0.99) -> ScenarioSpec:
+    """Batch-size distribution drift (paper Fig. 11): the arrival process is
+    unchanged but the batch stream flips log-normal → Gaussian and back, so
+    service times — and the optimal pool — move under the monitor's feet."""
+    return ScenarioSpec(
+        name="dist-drift", seed=seed, qos_target=qos_target, window=window,
+        phases=(
+            PhaseSpec("lognormal", n, load_factor=1.0,
+                      batch_dist="lognormal"),
+            PhaseSpec("gaussian", n, load_factor=1.0,
+                      batch_dist="gaussian"),
+            PhaseSpec("back", n, load_factor=1.0, batch_dist="lognormal"),
+        ))
+
+
+EPISODES = {
+    "diurnal": diurnal,
+    "flash-crowd": flash_crowd,
+    "spot-churn": spot_churn,
+    "failure-storm": failure_storm,
+    "dist-drift": dist_drift,
+}
+
+
+def build_episode(name: str, **kwargs) -> ScenarioSpec:
+    """Instantiate a named episode (see :data:`EPISODES`)."""
+    try:
+        builder = EPISODES[name]
+    except KeyError:
+        raise KeyError(f"unknown episode {name!r}; known: "
+                       f"{sorted(EPISODES)}") from None
+    return builder(**kwargs)

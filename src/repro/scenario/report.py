@@ -1,0 +1,163 @@
+"""Structured episode results: windows, events, control actions, phases.
+
+Everything is plain-data and JSON-safe (``EpisodeReport.to_dict`` emits only
+finite numbers, strings, lists and nulls) so ``BENCH_scenarios.json`` passes
+the ``scripts/check_bench.py`` schema sweep unmodified.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class WindowStat:
+    """One monitoring window: the unit of QoS accounting and detection."""
+
+    phase: int
+    start: int                 # episode-global query index (inclusive)
+    end: int                   # episode-global query index (exclusive)
+    qos_rate: float
+    config: tuple
+    price: float               # $/h of the pool during this window
+    cost: float                # price x window arrival span, in $
+    violation: bool
+
+
+@dataclass
+class EventOutcome:
+    """An injected event and how long QoS took to return to target.
+
+    ``recovery_queries`` is the adaptation latency in queries: from the
+    event's injection point to the end of the first subsequent window back
+    at the QoS target.  ``None`` means the episode ended still in violation.
+    """
+
+    kind: str
+    phase: int
+    at_query: int
+    detail: str = ""
+    recovery_queries: int | None = None
+
+
+@dataclass
+class ControlAction:
+    """One control-plane reaction (rescale / recover / reprice / restock)."""
+
+    kind: str                  # rescale_up|rescale_down|recover_failure|...
+    trigger: str               # "monitor" | "event" | "phase_start"
+    phase: int
+    at_query: int
+    old_config: tuple | None
+    new_config: tuple | None
+    old_price: float
+    new_price: float
+    bo_evals: int
+    recovery_queries: int | None = None
+
+
+@dataclass
+class PhaseReport:
+    name: str
+    batch_dist: str
+    load_factor: float
+    n_queries: int
+    qos_rate: float
+    cost: float
+    n_windows: int
+    violation_windows: int
+
+
+@dataclass
+class EpisodeReport:
+    """Everything the scenario engine measured over one episode."""
+
+    scenario: str
+    plane: str
+    qos_target: float
+    phases: list[PhaseReport] = field(default_factory=list)
+    windows: list[WindowStat] = field(default_factory=list)
+    events: list[EventOutcome] = field(default_factory=list)
+    actions: list[ControlAction] = field(default_factory=list)
+    total_queries: int = 0
+    total_cost: float = 0.0
+    bo_evals: int = 0
+    final_config: tuple = ()
+    # Simulator plane only: full-stream QoS of the final config under every
+    # phase's conditions, swept in one stacked-table grid dispatch.
+    final_qos_by_phase: list[float] | None = None
+
+    # ------------------------------------------------------------ summaries
+    @property
+    def qos_rate(self) -> float:
+        """Query-weighted mean QoS satisfaction rate over the episode."""
+        total = sum(p.n_queries for p in self.phases)
+        if total == 0:
+            return 0.0
+        return sum(p.qos_rate * p.n_queries for p in self.phases) / total
+
+    @property
+    def n_windows(self) -> int:
+        return len(self.windows)
+
+    @property
+    def violation_windows(self) -> int:
+        return sum(1 for w in self.windows if w.violation)
+
+    @property
+    def recovered_all_events(self) -> bool:
+        """True when every injected event's QoS recovered to target."""
+        return all(e.recovery_queries is not None for e in self.events)
+
+    def to_dict(self) -> dict:
+        return {
+            "scenario": self.scenario,
+            "plane": self.plane,
+            "qos_target": float(self.qos_target),
+            "qos_rate": float(self.qos_rate),
+            "total_queries": int(self.total_queries),
+            "total_cost": float(self.total_cost),
+            "bo_evals": int(self.bo_evals),
+            "final_config": [int(c) for c in self.final_config],
+            "final_qos_by_phase": (
+                None if self.final_qos_by_phase is None
+                else [float(r) for r in self.final_qos_by_phase]),
+            "n_windows": self.n_windows,
+            "violation_windows": self.violation_windows,
+            "n_events": len(self.events),
+            "recovered_all_events": bool(self.recovered_all_events),
+            "phases": [{
+                "name": p.name, "batch_dist": p.batch_dist,
+                "load_factor": float(p.load_factor),
+                "n_queries": int(p.n_queries),
+                "qos_rate": float(p.qos_rate), "cost": float(p.cost),
+                "n_windows": int(p.n_windows),
+                "violation_windows": int(p.violation_windows),
+            } for p in self.phases],
+            "events": [{
+                "kind": e.kind, "phase": int(e.phase),
+                "at_query": int(e.at_query), "detail": e.detail,
+                "recovery_queries": (None if e.recovery_queries is None
+                                     else int(e.recovery_queries)),
+            } for e in self.events],
+            "actions": [{
+                "kind": a.kind, "trigger": a.trigger, "phase": int(a.phase),
+                "at_query": int(a.at_query),
+                "old_config": (None if a.old_config is None
+                               else [int(c) for c in a.old_config]),
+                "new_config": (None if a.new_config is None
+                               else [int(c) for c in a.new_config]),
+                "old_price": float(a.old_price),
+                "new_price": float(a.new_price),
+                "bo_evals": int(a.bo_evals),
+                "recovery_queries": (None if a.recovery_queries is None
+                                     else int(a.recovery_queries)),
+            } for a in self.actions],
+            "windows": [{
+                "phase": int(w.phase), "start": int(w.start),
+                "end": int(w.end), "qos_rate": float(w.qos_rate),
+                "config": [int(c) for c in w.config],
+                "price": float(w.price), "cost": float(w.cost),
+                "violation": bool(w.violation),
+            } for w in self.windows],
+        }

@@ -1,0 +1,153 @@
+"""Declarative multi-phase traffic episodes (pure data).
+
+A :class:`ScenarioSpec` generalizes the paper's §5.5 adaptation studies into
+a long-running *episode*: an ordered sequence of traffic phases (length in
+queries, load factor relative to the bound base workload, batch
+distribution) plus a timeline of injected infrastructure events — the
+interleaved regime heterogeneous-serving systems (KAIROS, INFaaS) are
+evaluated under.  Specs are pure data: nothing here touches jax, the
+simulator, or the live engine.  The scenario engine (engine.py) compiles a
+spec into the detection → adaptation event loop over an evaluation plane
+(planes.py), and the registry (registry.py) names the canonical episodes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+EVENT_KINDS = ("cell_failure", "spot_preemption", "price_change",
+               "load_spike")
+BATCH_DISTS = ("lognormal", "gaussian")
+
+
+@dataclass(frozen=True)
+class PhaseSpec:
+    """One traffic phase: a window of the episode with stationary load.
+
+    The phase's query stream is the first ``n_queries`` of the episode base
+    stream for ``batch_dist``, compressed by ``load_factor``
+    (``Workload.scaled`` semantics: 1.5 = 1.5x heavier traffic).
+    """
+
+    name: str
+    n_queries: int
+    load_factor: float = 1.0
+    batch_dist: str = "lognormal"
+
+
+@dataclass(frozen=True)
+class EventSpec:
+    """One injected infrastructure event.
+
+    kind:
+      * ``cell_failure``     — ``count`` instances of ``type_index`` die;
+        capacity is gone for the rest of the episode.
+      * ``spot_preemption``  — like a failure, but the market returns the
+        capacity at the next phase boundary (the engine restocks).
+      * ``price_change``     — the unit price of ``type_index`` is
+        multiplied by ``factor``; QoS history stays valid, only the cost
+        landscape moves.
+      * ``load_spike``       — the remaining phase traffic is multiplied by
+        ``factor``.  Unlike the capacity events (which the control plane is
+        told about), a spike must be *detected* by the load monitor.
+
+    ``at_frac`` positions the event within its phase's query stream.
+    """
+
+    kind: str
+    phase: int
+    at_frac: float = 0.5
+    type_index: int = 0
+    count: int = 1
+    factor: float = 1.0
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """A complete episode: phases + events + control-loop parameters."""
+
+    name: str
+    phases: tuple[PhaseSpec, ...]
+    events: tuple[EventSpec, ...] = ()
+    seed: int = 0
+    qos_target: float = 0.99
+    window: int = 100            # queries per monitoring window
+    init_budget: int = 60        # BO evaluations for the initial search
+    rescale_budget: int = 25     # per load-change adaptation
+    recover_budget: int = 25     # per capacity/price adaptation
+    batch_q: int = 8             # constant-liar batch size (grid planes)
+    headroom: float = 1.05       # safety factor on estimated load upshifts
+    # Queries served on the degraded pool before a capacity-event recovery
+    # takes effect (cloud instances take time to boot).  0 = instantaneous.
+    provision_queries: int = 0
+
+    def validate(self) -> "ScenarioSpec":
+        if not self.phases:
+            raise ValueError("a scenario needs at least one phase")
+        for p, ph in enumerate(self.phases):
+            if ph.n_queries < 1:
+                raise ValueError(f"phase {p} ({ph.name}): n_queries < 1")
+            if not ph.load_factor > 0:
+                raise ValueError(f"phase {p} ({ph.name}): load_factor <= 0")
+            if ph.batch_dist not in BATCH_DISTS:
+                raise ValueError(f"phase {p} ({ph.name}): unknown "
+                                 f"batch_dist {ph.batch_dist!r}")
+        for e in self.events:
+            if e.kind not in EVENT_KINDS:
+                raise ValueError(f"unknown event kind {e.kind!r}")
+            if not 0 <= e.phase < len(self.phases):
+                raise ValueError(f"event {e.kind}: phase {e.phase} out of "
+                                 f"range for {len(self.phases)} phases")
+            if not 0.0 <= e.at_frac < 1.0:
+                raise ValueError(f"event {e.kind}: at_frac must be in "
+                                 f"[0, 1), got {e.at_frac}")
+            if e.kind in ("cell_failure", "spot_preemption") and e.count < 1:
+                raise ValueError(f"event {e.kind}: count must be >= 1")
+            if e.kind in ("price_change", "load_spike") and not e.factor > 0:
+                raise ValueError(f"event {e.kind}: factor must be > 0")
+        if self.window < 1:
+            raise ValueError("window must be >= 1")
+        if self.provision_queries < 0:
+            raise ValueError("provision_queries must be >= 0")
+        if not self.qos_target > 0:
+            raise ValueError("qos_target must be > 0")
+        return self
+
+    # ------------------------------------------------------------- queries
+    @property
+    def n_base_queries(self) -> int:
+        """Length of the episode base stream (phases are prefixes of it)."""
+        return max(ph.n_queries for ph in self.phases)
+
+    @property
+    def batch_dists(self) -> tuple[str, ...]:
+        """Distinct batch distributions, in first-phase order."""
+        out: list[str] = []
+        for ph in self.phases:
+            if ph.batch_dist not in out:
+                out.append(ph.batch_dist)
+        return tuple(out)
+
+    def events_in_phase(self, phase: int) -> list[EventSpec]:
+        """Events of one phase, in stream order."""
+        return sorted((e for e in self.events if e.phase == phase),
+                      key=lambda e: e.at_frac)
+
+
+@dataclass
+class Timeline:
+    """Compiled view of a spec: per-phase event cut positions.
+
+    ``cuts[p]`` is the list of (query index within phase, EventSpec) pairs,
+    sorted by position — the segment boundaries the engine iterates.
+    """
+
+    cuts: list[list[tuple[int, EventSpec]]] = field(default_factory=list)
+
+    @classmethod
+    def compile(cls, spec: ScenarioSpec) -> "Timeline":
+        cuts = []
+        for p, ph in enumerate(spec.phases):
+            cuts.append([(int(e.at_frac * ph.n_queries), e)
+                         for e in spec.events_in_phase(p)])
+        return cls(cuts=cuts)

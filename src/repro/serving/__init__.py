@@ -2,10 +2,12 @@
 pool evaluation, live engine, autoscaling, fault handling, checkpointing."""
 
 from .autoscaler import LoadMonitor, ScaleEvent, rescale
+from .fault import fail_instances, recover_from_failure, reprice
 from .instance import (AWS_INSTANCES, MODEL_PROFILES, PAPER_POOLS, TPU_CELLS,
                        InstanceType, ModelProfile, service_time_table)
 from .pool import (DEFAULT_BOUNDS, DEFAULT_RATES, PoolEvaluator,
-                   best_homogeneous, cost_effectiveness, make_paper_setup)
+                   best_homogeneous, cost_effectiveness, make_paper_setup,
+                   paper_workload)
 from .simulator import PoolSimulator
 from .workload import (Workload, gaussian_batches, generate_workload,
                        lognormal_batches)
@@ -14,8 +16,9 @@ __all__ = [
     "AWS_INSTANCES", "MODEL_PROFILES", "PAPER_POOLS", "TPU_CELLS",
     "InstanceType", "ModelProfile", "service_time_table",
     "PoolEvaluator", "best_homogeneous", "cost_effectiveness",
-    "make_paper_setup", "DEFAULT_RATES", "DEFAULT_BOUNDS",
+    "make_paper_setup", "paper_workload", "DEFAULT_RATES", "DEFAULT_BOUNDS",
     "PoolSimulator",
     "LoadMonitor", "ScaleEvent", "rescale",
+    "fail_instances", "recover_from_failure", "reprice",
     "Workload", "generate_workload", "lognormal_batches", "gaussian_batches",
 ]

@@ -28,11 +28,20 @@ class LoadMonitor:
     _baseline_rate: float | None = field(default=None, init=False)
     _baseline_queue: float | None = field(default=None, init=False)
 
+    @staticmethod
+    def window_stats(latencies: np.ndarray, waits: np.ndarray,
+                     qos_latency: float) -> tuple[float, float]:
+        """(QoS rate, queue depth proxy) of one monitoring window.  The
+        depth proxy is the fraction of queries that waited at all — the
+        paper's "queries get queued in the query queue" signal."""
+        rate = float(np.mean(latencies <= qos_latency))
+        depth = float(np.mean(waits > 1e-9))
+        return rate, depth
+
     def observe(self, latencies: np.ndarray, waits: np.ndarray,
                 qos_latency: float) -> bool:
-        """Feed one window; True when a load change is detected."""
-        rate = float(np.mean(latencies <= qos_latency))
-        depth = float(np.mean(waits > 1e-9))  # fraction of queries that waited
+        """Feed one window; True when an upward load change is detected."""
+        rate, depth = self.window_stats(latencies, waits, qos_latency)
         if self._baseline_rate is None:
             self._baseline_rate, self._baseline_queue = rate, max(depth, 1e-3)
             return False
@@ -41,6 +50,23 @@ class LoadMonitor:
         return (rate_drop > self.qos_drop_threshold
                 or (queue_growth > self.queue_growth_threshold
                     and rate < self.qos_target))
+
+    def downshift(self, latencies: np.ndarray, waits: np.ndarray,
+                  qos_latency: float) -> bool:
+        """True when the window shows sustained slack: QoS at target while
+        the queue shrank by the growth threshold against the baseline — the
+        mirror image of `observe` that lets an autoscaler release capacity
+        on diurnal troughs.  Never trips before a baseline exists, and a
+        baseline that never observed a queue (depth at the 1e-3 floor)
+        cannot "shrink" — zero-wait steady state is not a down signal.
+        Does not move the baseline."""
+        if self._baseline_rate is None or self._baseline_queue is None:
+            return False
+        if self._baseline_queue <= 1e-3:
+            return False
+        rate, depth = self.window_stats(latencies, waits, qos_latency)
+        return (rate >= self.qos_target
+                and depth * self.queue_growth_threshold < self._baseline_queue)
 
     def reset(self):
         self._baseline_rate = None

@@ -70,6 +70,7 @@ class QueryRecord:
     batch_size: int
     latency: float
     cell: str
+    wait: float = 0.0         # queue time before service started
     hedged: bool = False
 
 
@@ -119,6 +120,21 @@ class ClusterEngine:
         cell.failed = True
         return cell.cell_type
 
+    def preempt(self, type_index: int, count: int = 1) -> int:
+        """Spot-preemption hook: the market reclaims up to ``count`` live
+        cells of one type (scenario engine event).  Mechanically a batch of
+        cell failures — the capacity is gone until the pool is re-provisioned
+        by `configure`.  Returns the number of cells actually preempted."""
+        name = self.cell_types[type_index].name
+        hit = 0
+        for cell in self.cells:
+            if hit >= count:
+                break
+            if not cell.failed and cell.cell_type.name == name:
+                cell.failed = True
+                hit += 1
+        return hit
+
     def active_config(self) -> tuple[int, ...]:
         counts = {ct.name: 0 for ct in self.cell_types}
         for c in self.cells:
@@ -135,12 +151,12 @@ class ClusterEngine:
         real device (scaled by cell speed).  `time_scale` stretches arrival
         gaps so CPU-speed executions map onto the workload's regime.
         """
+        self.records = []
         live = [c for c in self.cells if not c.failed]
         if not live:
             return 0.0
         for c in live:
             c.busy_until = 0.0
-        self.records = []
         ok = 0
         for arrival, bsz in zip(workload.arrivals * time_scale,
                                 workload.batches):
@@ -154,6 +170,7 @@ class ClusterEngine:
                                       bucket)
             svc = cell.execute(batch)
             finish = start + svc
+            wait = start - arrival
             hedged = False
             if (self.hedge_threshold is not None
                     and start - arrival > self.hedge_threshold):
@@ -168,16 +185,26 @@ class ClusterEngine:
                     if alt_finish < finish:
                         finish = alt_finish
                         alt.busy_until = alt_finish
+                        wait = alt_start - arrival
                         hedged = True
             if not hedged:
                 cell.busy_until = finish
             latency = finish - arrival
             self.records.append(QueryRecord(float(arrival), int(bsz),
                                             float(latency),
-                                            cell.cell_type.name, hedged))
+                                            cell.cell_type.name,
+                                            wait=float(wait), hedged=hedged))
             if latency <= qos_latency:
                 ok += 1
         return ok / len(workload.arrivals)
+
+    def served_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        """(latencies, waits) of the last `serve` call, in arrival order —
+        the measured-plane feed for `LoadMonitor.observe` (the simulator's
+        analogue is `PoolSimulator.latencies_waits`)."""
+        lat = np.asarray([r.latency for r in self.records], dtype=np.float64)
+        waits = np.asarray([r.wait for r in self.records], dtype=np.float64)
+        return lat, waits
 
     def pool_price(self, config=None) -> float:
         if config is not None:

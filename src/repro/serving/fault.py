@@ -38,18 +38,38 @@ def fail_instances(config, type_index: int, count: int = 1) -> tuple:
     return tuple(cfg)
 
 
+def continue_search(opt: RibbonOptimizer, evaluate_qos, budget: int) -> int:
+    """Drive a (replayed) optimizer for up to `budget` more evaluations;
+    returns the number of samples actually spent."""
+    n0 = opt.trace.n_samples
+    while opt.trace.n_samples - n0 < budget and not opt.done:
+        cfg = opt.ask()
+        if cfg is None:
+            break
+        opt.tell(cfg, float(evaluate_qos(cfg)))
+    return opt.trace.n_samples - n0
+
+
 def recover_from_failure(optimizer: RibbonOptimizer, evaluate_qos,
                          failed_type: int, lost: int = 1,
-                         budget: int = 40) -> tuple[RibbonOptimizer,
-                                                    ScaleEvent]:
-    """Failure recovery (beyond-paper extension of RIBBON's machinery).
+                         budget: int = 40,
+                         kind: str = "cell_failure") -> tuple[RibbonOptimizer,
+                                                              ScaleEvent]:
+    """Capacity-change recovery (beyond-paper extension of RIBBON).
 
     A lost node caps the available count of its cell type.  Unlike a load
     change, the *load is unchanged*, so every measurement of a configuration
     that still fits the reduced capacity remains VALID: recovery builds a new
-    optimizer over the reduced search space and replays the still-valid
-    history as real observations (no estimation needed), then continues the
-    search.  Returns (new_optimizer, event)."""
+    optimizer over the reduced search space, replays the still-valid history
+    as real observations (``RibbonOptimizer.replay_from`` — no estimation
+    needed), then continues the search.  Returns (new_optimizer, event).
+
+    ``lost`` may be negative to model *restored* capacity (a preempted spot
+    type coming back): the bounds grow, the whole history replays, and the
+    continued search reclaims any cheaper configuration that needed the
+    restored instances.  ``kind`` labels the emitted ScaleEvent
+    ("cell_failure", "spot_preemption", "restock", ...).
+    """
     from ..core.search_space import SearchSpace
 
     old_best = optimizer.best_config
@@ -64,26 +84,45 @@ def recover_from_failure(optimizer: RibbonOptimizer, evaluate_qos,
                               start=tuple(min(b, c) for b, c in
                                           zip(new_bounds, old_best))
                               if old_best else None)
-    replayed = 0
-    for e in optimizer.trace.evaluations:
-        if e.estimated:
-            continue
-        if all(c <= b for c, b in zip(e.config, new_bounds)):
-            if not new_opt.sampled[new_space.index_of(e.config)]:
-                new_opt.tell(e.config, e.qos_rate)
-                replayed += 1
-    n0 = new_opt.trace.n_samples
-    while new_opt.trace.n_samples - n0 < budget and not new_opt.done:
-        cfg = new_opt.ask()
-        if cfg is None:
-            break
-        new_opt.tell(cfg, float(evaluate_qos(cfg)))
+    new_opt.replay_from(optimizer)
+    used = continue_search(new_opt, evaluate_qos, budget)
     best = new_opt.trace.best_feasible()
-    event = ScaleEvent(kind="cell_failure", old_best=old_best,
+    event = ScaleEvent(kind=kind, old_best=old_best,
                        old_cost=old_cost,
                        new_best=best.config if best else None,
                        new_cost=best.cost if best else None,
-                       samples_used=new_opt.trace.n_samples - n0)
+                       samples_used=used)
+    return new_opt, event
+
+
+def reprice(optimizer: RibbonOptimizer, new_prices, evaluate_qos,
+            budget: int = 20) -> tuple[RibbonOptimizer, ScaleEvent]:
+    """Price-change response (spot market repricing, scenario engine event).
+
+    QoS measurements are price-independent, so the *entire* real exploration
+    record stays valid — only the Eq. 2 objective landscape moved.  Rebuild
+    the optimizer over the same bounds with the new prices, replay the full
+    history, and let a (usually memo-saturated, near-free) continued search
+    re-converge to the new cost optimum.  Returns (new_optimizer, event)
+    with costs quoted at the new prices.
+    """
+    from ..core.search_space import SearchSpace
+
+    old_best = optimizer.best_config
+    new_space = SearchSpace(bounds=optimizer.space.bounds,
+                            prices=tuple(float(p) for p in new_prices))
+    new_opt = RibbonOptimizer(new_space, qos_target=optimizer.qos_target,
+                              theta=optimizer.theta, start=old_best)
+    new_opt.replay_from(optimizer)
+    used = continue_search(new_opt, evaluate_qos, budget)
+    best = new_opt.trace.best_feasible()
+    old_cost = (float(new_space.costs(np.asarray([old_best]))[0])
+                if old_best is not None else np.inf)
+    event = ScaleEvent(kind="price_change", old_best=old_best,
+                       old_cost=old_cost,
+                       new_best=best.config if best else None,
+                       new_cost=best.cost if best else None,
+                       samples_used=used)
     return new_opt, event
 
 

@@ -174,6 +174,25 @@ def best_homogeneous(evaluator: PoolEvaluator, type_index: int, prices,
     return count, count * prices[type_index]
 
 
+def paper_workload(model_name: str, seed: int = 0, n_queries: int = 1500,
+                   rate_qps: float | None = None,
+                   batch_dist: str = "lognormal") -> Workload:
+    """The standard per-model query stream (paper §5.1 parameters).
+
+    Streams that differ only in ``batch_dist`` share the same arrival times
+    (the arrival and batch PRNG keys are split independently), which is what
+    lets the stacked service-table grid axis sweep both distributions over
+    one arrival grid (paper Fig. 11, scenario dist-drift phases)."""
+    profile = MODEL_PROFILES[model_name]
+    if rate_qps is None:
+        rate_qps = DEFAULT_RATES[model_name]
+    return generate_workload(seed, n_queries, rate_qps, batch_dist=batch_dist,
+                             median_batch=profile.median_batch,
+                             mean_batch=2.0 * profile.median_batch,
+                             std_batch=profile.median_batch,
+                             max_batch=profile.max_batch)
+
+
 def make_paper_setup(model_name: str, seed: int = 0, n_queries: int = 1500,
                      rate_qps: float | None = None,
                      batch_dist: str = "lognormal"):
@@ -186,13 +205,8 @@ def make_paper_setup(model_name: str, seed: int = 0, n_queries: int = 1500,
     profile = MODEL_PROFILES[model_name]
     pool_names = PAPER_POOLS[model_name]["diverse"]
     types = [AWS_INSTANCES[n] for n in pool_names]
-    if rate_qps is None:
-        rate_qps = DEFAULT_RATES[model_name]
-    wl = generate_workload(seed, n_queries, rate_qps, batch_dist=batch_dist,
-                           median_batch=profile.median_batch,
-                           mean_batch=2.0 * profile.median_batch,
-                           std_batch=profile.median_batch,
-                           max_batch=profile.max_batch)
+    wl = paper_workload(model_name, seed=seed, n_queries=n_queries,
+                        rate_qps=rate_qps, batch_dist=batch_dist)
     evaluator = PoolEvaluator(profile, types, wl)
     prices = tuple(t.price for t in types)
     bounds = DEFAULT_BOUNDS[model_name]

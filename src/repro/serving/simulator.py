@@ -106,6 +106,14 @@ _simulate_scan_grid = jax.jit(
     jax.vmap(jax.vmap(_simulate_scan, in_axes=(None, None, 0, None, 0)),
              in_axes=(0, None, None, None, None)))
 
+# Per-workload service-table flavor: each workload row carries its own
+# (n_types, nq) table.  This is the batch-distribution axis (paper Fig. 11,
+# scenario dist-drift phases): rows share the arrival stream shape but their
+# batch streams — hence service times — differ.
+_simulate_scan_grid_tables = jax.jit(
+    jax.vmap(jax.vmap(_simulate_scan, in_axes=(None, None, 0, None, 0)),
+             in_axes=(0, 0, None, None, None)))
+
 # Unroll factor of the fused QoS-count scan: amortizes while-loop trip
 # overhead without changing any per-step arithmetic (bit-identical results).
 _GRID_UNROLL = 2
@@ -166,6 +174,12 @@ _grid_counts_wb = jax.vmap(
              in_axes=(None, None, 0, None, 0, None, None)),
     in_axes=(0, None, None, None, None, None, None))
 _grid_counts_jit = jax.jit(_grid_counts_wb)
+# Per-workload service tables (see _simulate_scan_grid_tables): the (nq, T)
+# transposed table is mapped with the arrival rows.
+_grid_counts_tables_jit = jax.jit(jax.vmap(
+    jax.vmap(_grid_lane_qos_counts,
+             in_axes=(None, None, 0, None, 0, None, None)),
+    in_axes=(0, 0, None, None, None, None, None)))
 # Sharded flavor for multi-host-device processes (single-process CPU
 # parallelism, see benchmarks/__init__.py).  Every argument is mapped over
 # the device axis — broadcast-style args are pre-replicated device buffers
@@ -235,6 +249,28 @@ class PoolSimulator:
                                    jnp.asarray(active))
         return np.asarray(jax.device_get(lat), dtype=np.float64)
 
+    def latencies_waits(self, config) -> tuple[np.ndarray, np.ndarray]:
+        """Per-query (latency, queue wait) arrays for a pool config.
+
+        The wait is ``start - arrival`` — exactly the queue time the paper's
+        load monitor watches ("more queries get queued in the query queue").
+        ``latencies_waits(c)[0]`` equals ``latencies(c)`` bit for bit (same
+        scan, same outputs); waits come from the scan's start times clamped
+        at zero against the float32 arrival cast.
+        """
+        n = self.workload.n_queries
+        if sum(int(c) for c in config) == 0:
+            return np.full(n, np.inf), np.full(n, np.inf)
+        type_of_slot, active = self._slots(config)
+        lat, start, _ = _simulate_scan(self._arrivals, self._service,
+                                       jnp.asarray(type_of_slot),
+                                       self._priority,
+                                       jnp.asarray(active))
+        lat = np.asarray(jax.device_get(lat), dtype=np.float64)
+        start = np.asarray(jax.device_get(start), dtype=np.float64)
+        arr = np.asarray(jax.device_get(self._arrivals), dtype=np.float64)
+        return lat, np.maximum(start - arr, 0.0)
+
     def qos_rate(self, config) -> float:
         """Fraction of queries whose latency is within the model's QoS tail
         latency target (the R_sat(x) of paper Eq. 2)."""
@@ -289,25 +325,51 @@ class PoolSimulator:
         base = np.asarray(self.workload.arrivals, dtype=np.float64)
         return base[None, :] / factors[:, None]
 
-    def latencies_grid(self, configs, load_factors) -> np.ndarray:
+    def _stacked_service(self, service_tables, n_w: int):
+        """Validate + device-cast an optional (W, n_types, n_queries) stack
+        of per-workload service tables (float64 in, float32 on device — the
+        same cast the bound table receives, so a row reproduces a simulator
+        built on that batch stream bit for bit)."""
+        if service_tables is None:
+            return None
+        tables = np.asarray(service_tables, dtype=np.float64)
+        expect = (n_w, len(self.types), self.workload.n_queries)
+        if tables.shape != expect:
+            raise ValueError(f"service_tables must have shape {expect} "
+                             f"(W, n_types, n_queries), got {tables.shape}")
+        return jnp.asarray(tables, dtype=jnp.float32)
+
+    def latencies_grid(self, configs, load_factors,
+                       service_tables=None) -> np.ndarray:
         """Per-query latencies on the (workload × config) grid, one dispatch.
 
         configs: (B, n_types) integer array-like; load_factors: (W,) > 0.
         Returns (W, B, n_queries) float64 where cell ``[w, b]`` equals
         ``PoolSimulator(..., workload.scaled(load_factors[w])).latencies(
         configs[b])`` bit-for-bit (all-zero config rows are +inf).
+
+        ``service_tables`` (optional, (W, n_types, n_queries)) gives each
+        workload row its own service table — the batch-distribution axis:
+        row ``w`` then reproduces a simulator bound to a workload with the
+        same arrivals but the batch stream behind ``service_tables[w]``.
         """
         configs = np.asarray(configs, dtype=np.int64)
         arrivals = self._stacked_arrivals(load_factors)
+        tables = self._stacked_service(service_tables, len(arrivals))
         if configs.size == 0:
             return np.zeros((len(arrivals), 0, self.workload.n_queries),
                             dtype=np.float64)
         type_of_slot, active = self._slots_batch(configs)
-        lat, _, _ = _simulate_scan_grid(jnp.asarray(arrivals, jnp.float32),
-                                        self._service,
-                                        jnp.asarray(type_of_slot),
-                                        self._priority,
-                                        jnp.asarray(active))
+        if tables is None:
+            lat, _, _ = _simulate_scan_grid(
+                jnp.asarray(arrivals, jnp.float32), self._service,
+                jnp.asarray(type_of_slot), self._priority,
+                jnp.asarray(active))
+        else:
+            lat, _, _ = _simulate_scan_grid_tables(
+                jnp.asarray(arrivals, jnp.float32), tables,
+                jnp.asarray(type_of_slot), self._priority,
+                jnp.asarray(active))
         out = np.asarray(jax.device_get(lat), dtype=np.float64)
         out[:, configs.sum(axis=1) == 0, :] = np.inf
         return out
@@ -321,7 +383,8 @@ class PoolSimulator:
         width = max(8, 1 << (need - 1).bit_length())
         return min(width, self.max_instances)
 
-    def qos_rate_grid(self, configs, load_factors) -> np.ndarray:
+    def qos_rate_grid(self, configs, load_factors,
+                      service_tables=None) -> np.ndarray:
         """QoS satisfaction rates on the (workload × config) grid.
 
         Returns (W, B) float64; cell ``[w, b]`` equals
@@ -330,10 +393,17 @@ class PoolSimulator:
         scan (see ``_grid_lane_qos_counts``) over nested (workload, config)
         axes, sharded across XLA host devices when several are configured,
         with only (W, B) int32 counts crossing back to the host.
+
+        ``service_tables`` (optional, (W, n_types, n_queries)) stacks one
+        service table per workload row — phases with *different batch
+        distributions* share the dispatch (see ``latencies_grid``).  The
+        stacked-table flavor runs the single-device executable: per-row
+        tables are a scenario/bench axis, not the BO rescale hot loop.
         """
         configs = np.asarray(configs, dtype=np.int64)
         arrivals = self._stacked_arrivals(load_factors)
         n_w = len(arrivals)
+        tables = self._stacked_service(service_tables, n_w)
         if configs.size == 0:
             return np.zeros((n_w, 0), dtype=np.float64)
         type_of_slot, active = self._slots_batch(configs)
@@ -343,14 +413,19 @@ class PoolSimulator:
         tos = np.ascontiguousarray(type_of_slot[:, :width])   # (B, S)
         act = np.ascontiguousarray(active[:, :width])
 
+        qos_t = jnp.float32(_qos_threshold_f32(self.model.qos_latency))
         n_dev = jax.local_device_count()
-        if n_dev > 1:
+        if tables is not None:
+            counts = np.asarray(jax.device_get(_grid_counts_tables_jit(
+                jnp.asarray(arr), jnp.transpose(tables, (0, 2, 1)),
+                jnp.asarray(tos), self._priority[:width], jnp.asarray(act),
+                jnp.arange(width, dtype=jnp.int32), qos_t)))
+        elif n_dev > 1:
             factors = tuple(float(f) for f in np.asarray(load_factors,
                                                          dtype=np.float64))
             counts = self._dispatch_grid_sharded(arr, tos, act, width,
                                                  n_dev, factors)
         else:
-            qos_t = jnp.float32(_qos_threshold_f32(self.model.qos_latency))
             counts = np.asarray(jax.device_get(_grid_counts_jit(
                 jnp.asarray(arr), self._service.T, jnp.asarray(tos),
                 self._priority[:width], jnp.asarray(act),

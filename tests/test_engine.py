@@ -2,6 +2,7 @@
 
 import pytest
 
+from repro.serving.autoscaler import LoadMonitor
 from repro.serving.engine import CellType, ClusterEngine
 from repro.serving.workload import generate_workload
 
@@ -48,6 +49,45 @@ def test_empty_pool_serves_nothing(engine):
     engine.configure((0, 0))
     wl = generate_workload(2, 5, rate_qps=10.0, median_batch=4, max_batch=8)
     assert engine.serve(wl, qos_latency=1.0) == 0.0
+
+
+def test_serve_records_waits_and_feeds_monitor(engine):
+    """The measured plane exposes (latencies, waits) windows so the load
+    monitor works on real records, not just the simulator."""
+    engine.configure((2, 1))
+    wl = generate_workload(4, 30, rate_qps=200.0, median_batch=4,
+                           max_batch=16)
+    engine.serve(wl, qos_latency=10.0)
+    lat, waits = engine.served_arrays()
+    assert lat.shape == waits.shape == (30,)
+    assert (waits >= 0).all()
+    assert (lat >= waits).all()           # wait is part of the latency
+    assert all(r.wait >= 0 for r in engine.records)
+    mon = LoadMonitor(qos_target=0.99)
+    assert mon.observe(lat, waits, qos_latency=10.0) is False   # baseline
+    assert isinstance(mon.observe(lat, waits, 10.0), bool)
+
+
+def test_empty_pool_clears_stale_records(engine):
+    engine.configure((2, 1))
+    wl = generate_workload(5, 8, rate_qps=20.0, median_batch=4, max_batch=8)
+    engine.serve(wl, qos_latency=1e6)
+    engine.configure((0, 0))
+    assert engine.serve(wl, qos_latency=1e6) == 0.0
+    lat, waits = engine.served_arrays()
+    assert lat.size == 0 and waits.size == 0
+
+
+def test_preempt_hook(engine):
+    engine.configure((2, 1))
+    assert engine.preempt(0, 1) == 1
+    assert engine.active_config() == (1, 1)
+    assert engine.preempt(1, 5) == 1      # only one cell4 to reclaim
+    assert engine.active_config() == (1, 0)
+    assert engine.preempt(1, 1) == 0      # nothing left of that type
+    # re-provisioning clears the preempted pool
+    engine.configure((1, 1))
+    assert engine.active_config() == (1, 1)
 
 
 def test_type_order_priority_live(engine):

@@ -11,7 +11,8 @@ from repro.core.search_space import SearchSpace
 from repro.serving import checkpoint
 from repro.serving.autoscaler import LoadMonitor, rescale
 from repro.serving.fault import (StragglerModel, fail_instances,
-                                 recover_from_failure, simulate_fcfs_hedged)
+                                 recover_from_failure, reprice,
+                                 simulate_fcfs_hedged)
 from repro.serving.instance import InstanceType, ModelProfile
 from repro.serving.workload import generate_workload
 
@@ -113,6 +114,87 @@ def test_recover_from_failure_replays_history():
     assert best.cost == pytest.approx(min(feas))
     # replay made the continued search cheap
     assert event.samples_used <= 30
+
+
+def test_replay_from_transfers_only_fitting_real_history():
+    space = SearchSpace(bounds=(5, 8), prices=(1.0, 0.3))
+    oracle = monotone_oracle((10.0, 3.0), demand=31.0)
+    opt = RibbonOptimizer(space, qos_target=0.99)
+    for _ in range(12):
+        cfg = opt.ask()
+        if cfg is None:
+            break
+        opt.tell(cfg, oracle(cfg))
+    small = SearchSpace(bounds=(3, 8), prices=(1.0, 0.3))
+    new_opt = RibbonOptimizer(small, qos_target=0.99)
+    n = new_opt.replay_from(opt)
+    fitting = {e.config for e in opt.trace.evaluations
+               if e.config[0] <= 3}
+    assert n == len(fitting)
+    assert new_opt.trace.n_samples == n
+    # replaying again is a no-op (already sampled)
+    assert new_opt.replay_from(opt) == 0
+
+
+def test_recover_with_negative_lost_restocks_capacity():
+    """Negative loss = restored capacity: bounds grow, history replays, and
+    the search can reclaim configs that need the restored instances."""
+    space = SearchSpace(bounds=(3, 8), prices=(1.0, 0.3))
+    oracle = monotone_oracle((10.0, 3.0), demand=31.0)
+    opt = RibbonOptimizer(space, qos_target=0.99)
+    for _ in range(25):
+        cfg = opt.ask()
+        if cfg is None or opt.done:
+            break
+        opt.tell(cfg, oracle(cfg))
+    new_opt, event = recover_from_failure(opt, oracle, failed_type=0,
+                                          lost=-2, budget=30,
+                                          kind="restock")
+    assert new_opt.space.bounds == (5, 8)
+    assert event.kind == "restock"
+    best = new_opt.trace.best_feasible()
+    assert best is not None
+    # the enlarged space's optimum is at least as cheap as the reduced one's
+    old_best = opt.trace.best_feasible()
+    assert best.cost <= old_best.cost + 1e-9
+
+
+def test_reprice_replays_history_without_new_evaluations():
+    """QoS is price-independent: once the space is fully explored, a price
+    change re-converges from the replayed record with zero new calls."""
+    space = SearchSpace(bounds=(2, 2), prices=(1.0, 0.3))
+    calls = {"n": 0}
+
+    def oracle(cfg):
+        calls["n"] += 1
+        return min(1.0, (3.0 * cfg[0] + 1.0 * cfg[1]) / 5.0)
+
+    opt = RibbonOptimizer(space, qos_target=0.99)
+    for cfg2 in space.enumerate():
+        opt.tell(tuple(int(c) for c in cfg2), oracle(tuple(cfg2)))
+    before = calls["n"]
+    new_prices = (0.2, 5.0)       # the cheap type became the expensive one
+    new_opt, event = reprice(opt, new_prices, oracle, budget=20)
+    assert calls["n"] == before   # memo-free, measurement-free re-search
+    assert event.kind == "price_change"
+    assert new_opt.space.prices == new_prices
+    # brute-force optimum under the new prices
+    lat = space.enumerate()
+    feas = [(float(np.dot(new_prices, c)), tuple(int(v) for v in c))
+            for c in lat if oracle(tuple(c)) >= 0.99]
+    assert event.new_cost == pytest.approx(min(f[0] for f in feas))
+
+
+def test_load_monitor_downshift_detects_slack():
+    mon = LoadMonitor(qos_target=0.9)
+    lat = np.full(100, 0.01)
+    waits = np.concatenate([np.full(50, 0.01), np.zeros(50)])
+    assert mon.downshift(lat, np.zeros(100), 0.02) is False   # no baseline
+    mon.observe(lat, waits, qos_latency=0.02)                 # baseline 0.5
+    assert mon.downshift(lat, np.zeros(100), 0.02) is True    # queue gone
+    assert mon.downshift(lat, waits, 0.02) is False           # unchanged
+    bad = np.full(100, 0.05)
+    assert mon.downshift(bad, np.zeros(100), 0.02) is False   # QoS violated
 
 
 # ------------------------------------------------------------ stragglers

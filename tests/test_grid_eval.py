@@ -17,7 +17,8 @@ import pytest
 from repro.core import RibbonOptimizer, select_batch
 from repro.core.search_space import SearchSpace
 from repro.serving.autoscaler import rescale
-from repro.serving.instance import InstanceType, ModelProfile
+from repro.serving.instance import (InstanceType, ModelProfile,
+                                    service_time_table)
 from repro.serving.pool import PoolEvaluator
 from repro.serving.simulator import PoolSimulator, _qos_threshold_f32
 from repro.serving.workload import generate_workload
@@ -187,6 +188,55 @@ def test_grid_bit_identity_under_forced_multi_device(tmp_path):
                               __file__).resolve().parent.parent))
     assert proc.returncode == 0, proc.stderr
     assert "MULTIDEV-OK" in proc.stdout
+
+
+def test_grid_stacked_service_tables_match_per_dist_sims():
+    """The per-workload service-table axis: row w of the grid with stacked
+    tables equals a simulator bound to that row's batch stream (same
+    arrivals, different batches), bit for bit, on both grid paths."""
+    wl_ln = _workload(seed=2, n=150, rate=150.0)
+    wl_ga = generate_workload(2, 150, 150.0, batch_dist="gaussian",
+                              mean_batch=10.0, std_batch=4.0, max_batch=32)
+    np.testing.assert_array_equal(wl_ln.arrivals, wl_ga.arrivals)
+    sim = _sim(wl_ln)
+    cfgs = _configs(seed=6)
+    tables = np.stack([
+        service_time_table(PROF, [FAST, SLOW], wl_ln.batches),
+        service_time_table(PROF, [FAST, SLOW], wl_ga.batches)])
+    factors = (1.0, 1.5)
+    rates = sim.qos_rate_grid(cfgs, factors, service_tables=tables)
+    lat = sim.latencies_grid(cfgs, factors, service_tables=tables)
+    for w, (f, wl) in enumerate(zip(factors, (wl_ln, wl_ga))):
+        ref = PoolSimulator(PROF, [FAST, SLOW], wl.scaled(f),
+                            max_instances=MAX_INST)
+        np.testing.assert_array_equal(rates[w], ref.qos_rate_batch(cfgs))
+        np.testing.assert_array_equal(lat[w], ref.latencies_batch(cfgs))
+
+
+def test_grid_stacked_service_tables_shape_validated():
+    sim = _sim()
+    nq = sim.workload.n_queries
+    with pytest.raises(ValueError):        # W mismatch
+        sim.qos_rate_grid([(1, 1)], (1.0, 1.5),
+                          service_tables=np.zeros((1, 2, nq)))
+    with pytest.raises(ValueError):        # type-axis mismatch
+        sim.latencies_grid([(1, 1)], (1.0,),
+                           service_tables=np.zeros((1, 3, nq)))
+    with pytest.raises(ValueError):        # query-axis mismatch
+        sim.qos_rate_grid([(1, 1)], (1.0,),
+                          service_tables=np.zeros((1, 2, nq - 1)))
+
+
+def test_latencies_waits_consistent_with_latencies():
+    sim = _sim()
+    for cfg in [(2, 1), (1, 0)]:
+        lat, waits = sim.latencies_waits(cfg)
+        np.testing.assert_array_equal(lat, sim.latencies(cfg))
+        assert (waits >= 0).all()
+        assert np.isfinite(waits).all()
+        assert (waits <= lat).all()        # wait is part of the latency
+    lat, waits = sim.latencies_waits((0, 0))
+    assert np.isinf(lat).all() and np.isinf(waits).all()
 
 
 def test_qos_threshold_f32_admits_same_latency_set():
