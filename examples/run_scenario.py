@@ -27,6 +27,8 @@ def summarize(report):
           f"{d['violation_windows']}/{d['n_windows']} violating windows, "
           f"total cost ${d['total_cost']:.4f}, "
           f"{d['bo_evals']} BO evaluations")
+    print(f"  queue backlog carried across control-plane cuts: "
+          f"{d['carried_wait_total']:.3f} busy-seconds")
     for p in d["phases"]:
         print(f"  phase {p['name']:<12} x{p['load_factor']:<4g} "
               f"{p['batch_dist']:<9} QoS {p['qos_rate']:.4f} "
@@ -54,6 +56,9 @@ def main():
                     help="queries per phase")
     ap.add_argument("--live", action="store_true",
                     help="drive the live ClusterEngine instead")
+    ap.add_argument("--idle-restart", action="store_true",
+                    help="legacy accounting: drop queue backlog at every "
+                         "control-plane cut instead of carrying it")
     ap.add_argument("--list", action="store_true")
     args = ap.parse_args()
     if args.list:
@@ -80,7 +85,8 @@ def main():
     else:
         plane, space = paper_simulator_plane(args.model, spec)
 
-    report = ScenarioEngine(spec, plane, space).run()
+    report = ScenarioEngine(spec, plane, space,
+                            carry_queue_state=not args.idle_restart).run()
     summarize(report)
 
 

@@ -21,12 +21,17 @@ Three responsibilities:
     uniform.
   - ``bench == "scenarios"``: every episode must report
     ``recovered_all_events`` — each injected event's QoS returned to target
-    within the episode (finite adaptation latency).
-* **Perf-trend history** (``--history``): append every validated artifact's
-  trend metrics to ``bench_out/history.jsonl`` keyed by the current commit,
-  and WARN (non-fatal — CI runners are noisy and hardware varies) when a
-  metric regressed by more than 20% against the most recent prior entry for
-  the same bench.
+    within the episode (finite adaptation latency) — and episodes with an
+    ``idle_baselines`` entry must report at least as many violation windows
+    as the idle-restart baseline (the continuous episode clock carries
+    queue backlog across control-plane cuts; losing that mass again would
+    be a regression to the optimistic accounting).
+* **Perf-trend history** (``--history``): upsert every validated artifact's
+  trend metrics into ``bench_out/history.jsonl`` keyed by
+  (commit, bench, source) — re-running on the same commit replaces the row,
+  so trends always compare distinct commits — and WARN (non-fatal — CI
+  runners are noisy and hardware varies) when a metric regressed by more
+  than 20% against the most recent entry from a different commit.
 
 Usage::
 
@@ -154,8 +159,17 @@ def check_batch_eval(doc, label: str) -> list[str]:
 
 
 def check_scenarios(doc, label: str) -> list[str]:
-    """Behavior gate for scenario-engine episode artifacts: every injected
-    event must have recovered (finite adaptation latency)."""
+    """Behavior gates for scenario-engine episode artifacts: every injected
+    event must have recovered (finite adaptation latency), and episodes with
+    a recorded idle-restart baseline must report at least as much
+    violation-window mass as that baseline — the continuous-time episode
+    clock carries queue backlog across control-plane cuts, which idle
+    restarts used to hide.  Both replays are deterministic per seed, so
+    this is a fidelity tripwire rather than a theorem: the two runs follow
+    their own control trajectories, and a control-policy change that
+    legitimately drops the carried run below the idle baseline (e.g. the
+    carried backlog triggering an *earlier*, better adaptation) should be
+    inspected and re-baselined in bench_scenarios, not silenced."""
     errors = []
     episodes = doc.get("episodes")
     if not isinstance(episodes, dict) or not episodes:
@@ -171,6 +185,22 @@ def check_scenarios(doc, label: str) -> list[str]:
                 f"{label}: episode {name!r} did not recover QoS to target "
                 f"after event(s) {bad}",
             )
+    baselines = doc.get("idle_baselines")
+    if isinstance(baselines, dict):
+        for name, base in baselines.items():
+            ep = episodes.get(name)
+            if not isinstance(ep, dict) or not isinstance(base, dict):
+                continue
+            warm = ep.get("violation_windows")
+            cold = base.get("violation_windows")
+            if isinstance(warm, (int, float)) and isinstance(cold, (int, float)):
+                if warm < cold:
+                    errors.append(
+                        f"{label}: episode {name!r} reports {warm} violation "
+                        f"windows under the carried-state clock, fewer than "
+                        f"its idle-restart baseline ({cold}) — backlog "
+                        f"accounting went missing",
+                    )
     return errors
 
 
@@ -215,12 +245,15 @@ def git_commit() -> str:
 
 
 def update_history(doc, label: str, history_path: Path, commit: str) -> list[str]:
-    """Append this artifact's trend metrics to the history log; return
-    WARN strings for >20% regressions vs the most recent prior entry for
-    the same (bench, source) — the committed root baseline and a fresh
+    """Upsert this artifact's trend metrics into the history log (keyed by
+    (commit, bench, source) — re-running on the same commit replaces the
+    prior row instead of appending a duplicate); return WARN strings for
+    >20% regressions vs the most recent entry for the same (bench, source)
+    from a *different* commit — the committed root baseline and a fresh
     bench_out measurement trend independently."""
     metrics = trend_metrics(doc)
     warnings = []
+    entries = []
     last = None
     if history_path.exists():
         for line in history_path.read_text().splitlines():
@@ -228,6 +261,11 @@ def update_history(doc, label: str, history_path: Path, commit: str) -> list[str
                 entry = json.loads(line)
             except json.JSONDecodeError:
                 continue
+            if (entry.get("commit") == commit
+                    and entry.get("bench") == doc.get("bench")
+                    and entry.get("source") == label):
+                continue       # superseded by this run's row (upsert)
+            entries.append(entry)
             if entry.get("bench") == doc.get("bench") and entry.get("source") == label:
                 last = entry
     if last is not None:
@@ -254,9 +292,11 @@ def update_history(doc, label: str, history_path: Path, commit: str) -> list[str
         "source": label,
         "metrics": {k: [v, d] for k, (v, d) in metrics.items()},
     }
+    entries.append(record)
     history_path.parent.mkdir(exist_ok=True)
-    with history_path.open("a") as fh:
-        fh.write(json.dumps(record) + "\n")
+    with history_path.open("w") as fh:
+        for entry in entries:
+            fh.write(json.dumps(entry) + "\n")
     return warnings
 
 

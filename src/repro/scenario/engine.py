@@ -1,12 +1,34 @@
 """Scenario engine: compiles a ScenarioSpec into the detection → adaptation
 event loop over an evaluation plane.
 
-The episode advances in *queries*, not wall seconds: each phase's stream is
-cut into segments at control-plane moments (injected events, monitor
-detections), every segment is served from an idle pool — the same
-whole-stream accounting every QoS path in this repo uses, so a constant
-episode reproduces ``PoolSimulator.qos_rate`` bit for bit — and fixed-size
-windows inside a segment feed the :class:`LoadMonitor` and the report.
+The episode advances in *queries* over a **continuous-time clock**: each
+phase's stream is cut into segments at control-plane moments (injected
+events, monitor detections, provisioning switches), and every segment is
+served **warm** from the pool state the previous segment left behind — the
+plane threads per-slot next-free times (plus a clock offset mapping each
+phase's local time into episode time) across cuts, reconfigurations
+(surviving instances keep their in-flight work, removed slots drop it,
+added slots start idle after any provisioning delay), and phase boundaries.
+Queue backlog therefore *survives* a control-plane cut instead of being
+silently dropped: the violation windows RIBBON's load monitor exists to
+catch ("more queries get queued in the query queue", paper §5) stay visible
+while the new pool drains them, and adaptation latency is measured against
+that warmed pool.  Each window's share of backlog that crossed its
+segment's opening cut is reported as ``WindowStat.carried_wait``.
+
+A constant no-event episode is a single segment from the idle carry at
+clock 0, which reproduces ``PoolSimulator.qos_rate`` bit for bit — the same
+whole-stream accounting every QoS path in this repo uses.  Passing
+``carry_queue_state=False`` restores the legacy idle-restart accounting
+(every segment from a drained pool); the scenario bench runs both and
+reports the violation mass the idle restarts were hiding.  Fixed-size
+windows inside a segment feed the :class:`LoadMonitor` and the report
+either way.
+
+Segments are measured speculatively: when an adaptation fires mid-segment,
+the engine rewinds to the cut and asks the plane to ``commit`` only the
+queries actually consumed, so the carried state never includes rolled-back
+serving.
 
 Control policy per event kind:
 
@@ -56,13 +78,17 @@ class ScenarioEngine:
                  monitor: LoadMonitor | None = None, start=None,
                  allow_downscale: bool = True, forced_slack: float = 0.03,
                  forced_patience: int = 2, down_patience: int = 2,
-                 max_adapts_per_phase: int = 4):
+                 max_adapts_per_phase: int = 4,
+                 carry_queue_state: bool = True):
         self.spec = spec.validate()
         self.plane = plane
         self.space = space
         self.monitor = monitor or LoadMonitor(qos_target=spec.qos_target)
         self.start = start
         self.allow_downscale = allow_downscale
+        # False = legacy idle-restart segment accounting (the bench's
+        # baseline mode): every segment served from a drained pool.
+        self.carry_queue_state = bool(carry_queue_state)
         self.forced_slack = float(forced_slack)
         self.forced_patience = int(forced_patience)
         # One slack window is Poisson noise; sustained slack is a trough.
@@ -172,10 +198,11 @@ class ScenarioEngine:
         dist0 = spec.phases[0].batch_dist
         f0 = spec.phases[0].load_factor
         self._factors = [f0]
+        plane.begin_episode(carry=self.carry_queue_state)
         opt, used = self._initial_search(bounds, prices, dist0, f0)
         report.bo_evals += used
         config = self._pick_config(opt, bounds)
-        plane.configure(config)
+        plane.deploy(config)
         self.monitor.reset()
         pending: list = []                  # open recovery trackers
         gq = 0                              # global index of phase start
@@ -184,7 +211,7 @@ class ScenarioEngine:
             if self._pending_switch and self._pending_switch[0] <= gq:
                 config = self._pending_switch[1]
                 self._pending_switch = None
-                plane.configure(config)
+                plane.deploy(config)
                 self.monitor.reset()
             if restock_next:
                 config, opt = self._restock(restock_next, p, gq, phase,
@@ -211,23 +238,34 @@ class ScenarioEngine:
                         ev_spec, p, gq + pos, phase, factor, bounds, prices,
                         config, opt, restock_next, report, pending)
                     if ev_spec.kind == "load_spike":
-                        stream = plane.phase_stream(phase.batch_dist,
-                                                    phase.n_queries, factor)
-                    plane.configure(config)
+                        new_stream = plane.phase_stream(phase.batch_dist,
+                                                        phase.n_queries,
+                                                        factor)
+                        # Re-anchor the episode clock: the next unserved
+                        # query keeps its episode arrival time across the
+                        # recompression, so carried backlog durations
+                        # survive the stream rebuild.
+                        k = min(i, phase.n_queries - 1)
+                        plane.advance_clock(float(stream.arrivals[k])
+                                            - float(new_stream.arrivals[k]))
+                        stream = new_stream
+                    plane.deploy(config)
                     self.monitor.reset()
                     down_blocked = False    # the regime changed
                 if (self._pending_switch
                         and self._pending_switch[0] - gq <= i):
                     config = self._pending_switch[1]
                     self._pending_switch = None
-                    plane.configure(config)
+                    plane.deploy(config)
                     self.monitor.reset()
                 cut = events[0][0] if events else phase.n_queries
                 if self._pending_switch:
                     cut = min(cut, self._pending_switch[0] - gq)
                 seg = slice_stream(stream, i, cut)
                 lat, waits = plane.measure(phase.batch_dist, seg, config)
+                carried = plane.last_carried_wait
                 consumed = len(lat)
+                redeploy = False
                 w = 0
                 while w < len(lat):
                     w_hi = min(w + spec.window, len(lat))
@@ -241,7 +279,8 @@ class ScenarioEngine:
                     report.windows.append(WindowStat(
                         phase=p, start=gq + i + w, end=g_end, qos_rate=rate,
                         config=config, price=price,
-                        cost=price * span / 3600.0, violation=viol))
+                        cost=price * span / 3600.0, violation=viol,
+                        carried_wait=carried if w == 0 else 0.0))
                     ph_passed += passed
                     ph_cost += price * span / 3600.0
                     ph_windows += 1
@@ -283,6 +322,20 @@ class ScenarioEngine:
                                 new_best = None
                         else:
                             down_blocked = False
+                            if new_best is None:
+                                # The transfer pruned the space (or the
+                                # budgeted search found nothing feasible at
+                                # the estimated level): over-provision to
+                                # the bounds — the _pick_config convention —
+                                # rather than stay wedged in violation.
+                                # Idle-restart accounting used to mask this
+                                # wedge by draining the queue for free at
+                                # the next cut; the continuous clock keeps
+                                # the backlog honest, so the control plane
+                                # must actually act.
+                                fallback = tuple(int(b) for b in bounds)
+                                if fallback != tuple(config):
+                                    new_best = fallback
                         action = ControlAction(
                             kind=kind, trigger="monitor", phase=p,
                             at_query=g_end, old_config=config,
@@ -299,7 +352,7 @@ class ScenarioEngine:
                             # a real redeployment supersedes in-flight
                             # provisioning; a no-op keeps the booking
                             self._pending_switch = None
-                        plane.configure(config)
+                        redeploy = True
                         self.monitor.reset()
                         adapts += 1
                         bad_streak = 0
@@ -307,12 +360,20 @@ class ScenarioEngine:
                         consumed = w_hi
                         break
                     w = w_hi
+                # Commit only the consumed prefix into the carried pool
+                # state, *then* redeploy: the remap must see the pool as it
+                # stood at the adaptation cut, not past rolled-back serving.
+                plane.commit(consumed)
+                if redeploy:
+                    plane.deploy(config)
                 i += consumed
             report.phases.append(PhaseReport(
                 name=phase.name, batch_dist=phase.batch_dist,
                 load_factor=factor, n_queries=phase.n_queries,
                 qos_rate=ph_passed / phase.n_queries, cost=ph_cost,
                 n_windows=ph_windows, violation_windows=ph_viol))
+            # The next phase's local t=0 is this phase's end.
+            plane.advance_clock(float(stream.arrivals[-1]))
             gq += phase.n_queries
 
         report.total_queries = gq
@@ -420,6 +481,6 @@ class ScenarioEngine:
             pending.append(action)
             report.bo_evals += sev.samples_used
             config = tuple(int(c) for c in new_cfg)
-        self.plane.configure(config)
+        self.plane.deploy(config)
         self.monitor.reset()
         return config, opt

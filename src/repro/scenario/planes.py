@@ -5,22 +5,41 @@ Both planes speak one small protocol:
   * ``phase_stream(dist, n, factor)`` — the phase's query stream (a prefix
     of the episode base stream for that batch distribution, compressed by
     the load factor);
+  * ``begin_episode(carry=True)`` — reset the continuous-time episode
+    clock; ``carry=False`` restores the legacy idle-restart accounting
+    (every segment from a drained pool — the scenario bench's baseline);
   * ``measure(dist, workload, config)`` — per-query ``(latencies, waits)``
-    float64 arrays of serving that stream with that pool, from an idle
-    start (the repo's whole-stream QoS accounting);
+    float64 arrays of serving that stream with that pool, warm-started
+    from the carried pool state (``last_carried_wait`` holds the backlog
+    that crossed the segment's opening cut).  The serve is speculative:
+  * ``commit(n_served)`` — roll the carried state forward past only the
+    first ``n_served`` queries of the last measured segment (the engine
+    rewinds a segment to an adaptation cut);
+  * ``deploy(config)`` — put a pool configuration in force, remapping the
+    carried slot state through the reconfiguration (surviving instances
+    keep their in-flight work, removed slots drop it, added slots start
+    idle — any provisioning delay was already modeled by the engine's
+    deferred switch);
+  * ``advance_clock(delta)`` — shift the local-time origin (phase
+    boundary: the previous stream's span; mid-phase stream rebuild, e.g. a
+    load spike: the anchor-arrival delta that keeps episode time
+    continuous);
   * ``oracle(dist, factor)`` — a sequential ``config -> QoS rate`` callable
-    for the search loops;
+    for the search loops (always cold whole-stream evaluations — search
+    probes are hypothetical deployments, not episode serving);
   * ``grid_evaluator(dist)`` — a ``PoolEvaluator`` when the plane supports
     the joint (load x config) grid fast path, else ``None`` (the engine
     then drives the legacy sequential rescale path);
-  * ``configure(config)`` — deploy a pool (a no-op on the simulator).
+  * ``configure(config)`` — raw pool plumbing (a no-op on the simulator);
+    the engine goes through ``deploy`` so state remapping is never skipped.
 
 ``SimulatorPlane`` is the fast path: segments run through the vmapped
-``PoolSimulator``, adaptation searches through the grid engine, and the
-episode summary sweeps every phase in one stacked service-table dispatch.
-``LivePlane`` is the measured path: the same loop drives a ``ClusterEngine``
-that executes every query on the real device — the roadmap follow-on of
-feeding batch evaluation through the live serving engine.
+``PoolSimulator`` (warm starts via ``PoolSimulator.segment_from``),
+adaptation searches through the grid engine, and the episode summary sweeps
+every phase in one stacked service-table dispatch.  ``LivePlane`` is the
+measured path: the same loop drives a ``ClusterEngine`` that executes every
+query on the real device — per-cell busy times thread across segments
+through ``ClusterEngine.serve(initial_busy=...)``.
 """
 
 from __future__ import annotations
@@ -31,7 +50,7 @@ from ..serving.instance import (AWS_INSTANCES, MODEL_PROFILES, PAPER_POOLS,
                                 InstanceType, ModelProfile,
                                 service_time_table)
 from ..serving.pool import (DEFAULT_BOUNDS, PoolEvaluator, paper_workload)
-from ..serving.simulator import PoolSimulator
+from ..serving.simulator import PoolSimulator, PoolState
 from ..serving.workload import Workload
 from .spec import PhaseSpec, ScenarioSpec
 
@@ -51,7 +70,49 @@ def slice_stream(workload: Workload, lo: int, hi: int) -> Workload:
                     rate_qps=workload.rate_qps)
 
 
-class SimulatorPlane:
+class _EpisodeClock:
+    """Continuous-time threading shared by both planes: the carried
+    :class:`PoolState`, the deployed config, and local-time bookkeeping.
+    Subclasses set ``_n_slots`` and implement ``measure``/``commit``."""
+
+    _n_slots: int
+
+    def _reset_clock(self, carry: bool) -> None:
+        self._carry = bool(carry)
+        self._state: PoolState | None = (
+            PoolState.idle(self._n_slots) if carry else None)
+        self._deployed: tuple[int, ...] | None = None
+        self._local_now = 0.0
+        self._pending = None
+        self.last_carried_wait = 0.0
+
+    def begin_episode(self, carry: bool = True) -> None:
+        """Reset the episode clock to an idle pool at episode time 0.
+        ``carry=False`` switches the plane to the legacy idle-restart
+        accounting (every segment from a drained pool)."""
+        self._reset_clock(carry)
+
+    def deploy(self, config) -> None:
+        """Put a pool configuration in force, threading the carried slot
+        state through the reconfiguration (``PoolState.remap``)."""
+        cfg = tuple(int(c) for c in config)
+        if (self._carry and self._state is not None
+                and self._deployed is not None and cfg != self._deployed):
+            now = self._state.clock + self._local_now
+            self._state = self._state.remap(self._deployed, cfg, now)
+        self._deployed = cfg
+        self.configure(cfg)
+
+    def advance_clock(self, delta: float) -> None:
+        """Shift the local-time origin ``delta`` episode seconds forward
+        (phase boundary / mid-phase stream rebuild)."""
+        if not self._carry or self._state is None:
+            return
+        self._state = self._state.rebased(float(delta))
+        self._local_now = max(self._local_now - float(delta), 0.0)
+
+
+class SimulatorPlane(_EpisodeClock):
     """Queueing-simulator plane over per-distribution base workloads.
 
     ``workloads`` maps batch-distribution name -> base :class:`Workload`.
@@ -74,10 +135,12 @@ class SimulatorPlane:
         self.profile = profile
         self.types = list(types)
         self.max_instances = max_instances
+        self._n_slots = max_instances
         self.workloads = dict(workloads)
         self.evaluators = {d: PoolEvaluator(profile, self.types, wl,
                                             max_instances=max_instances)
                            for d, wl in self.workloads.items()}
+        self._reset_clock(False)     # cold until an episode begins
 
     @property
     def qos_latency(self) -> float:
@@ -108,7 +171,28 @@ class SimulatorPlane:
     def measure(self, dist: str, workload: Workload, config):
         sim = PoolSimulator(self.profile, self.types, workload,
                             max_instances=self.max_instances)
-        return sim.latencies_waits(config)
+        if not self._carry:
+            self._pending = None
+            self.last_carried_wait = 0.0
+            return sim.latencies_waits(config)
+        seg = sim.segment_from(self._state, config)
+        at = float(workload.arrivals[0]) if workload.n_queries else 0.0
+        self.last_carried_wait = sim.carried_wait(self._state, config, at)
+        self._pending = (seg, np.asarray(workload.arrivals,
+                                         dtype=np.float64))
+        return seg.lat, seg.waits
+
+    def commit(self, n_served: int) -> None:
+        """Fold the first ``n_served`` queries of the last measured segment
+        into the carried state (the rest was rolled back by the engine)."""
+        if not self._carry or self._pending is None:
+            return
+        seg, arr = self._pending
+        self._pending = None
+        n = int(n_served)
+        self._state = seg.state_at(n)
+        if n > 0:
+            self._local_now = float(arr[n - 1])
 
     def grid_evaluator(self, dist: str) -> PoolEvaluator:
         return self.evaluators[dist]
@@ -132,29 +216,34 @@ class SimulatorPlane:
         return [float(r) for r in rates[:, 0]]
 
 
-class LivePlane:
+class LivePlane(_EpisodeClock):
     """Measured plane: the same scenario loop over a live ``ClusterEngine``.
 
     Every measurement executes real compiled models; service times are wall
     clock (scaled by cell speed), so results are *measured, not simulated* —
     and correspondingly expensive.  Search oracles serve only a short probe
     prefix per candidate (``probe_queries``) to bound the cost of an
-    adaptation.  ``engine`` is a ``repro.serving.engine.ClusterEngine``;
-    ``qos_latency`` must be supplied (live cells measure a different speed
-    regime than the analytical instance profiles).
+    adaptation; probes never touch the carried episode state.  ``engine``
+    is a ``repro.serving.engine.ClusterEngine``; ``qos_latency`` must be
+    supplied (live cells measure a different speed regime than the
+    analytical instance profiles).  The carried state holds per-cell
+    next-free times in unscaled episode seconds; ``measure`` converts to
+    the serve's scaled virtual-time frame and back.
     """
 
     name = "live"
 
     def __init__(self, engine, workloads: dict[str, Workload],
                  qos_latency: float, time_scale: float = 1.0,
-                 probe_queries: int = 40):
+                 probe_queries: int = 40, max_slots: int = 64):
         self.engine = engine
         self.workloads = dict(workloads)
         self.qos_latency = float(qos_latency)
         self.time_scale = float(time_scale)
         self.probe_queries = int(probe_queries)
         self.n_evals = 0
+        self._n_slots = int(max_slots)
+        self._reset_clock(False)     # cold until an episode begins
 
     @property
     def base_rate(self) -> float:
@@ -176,15 +265,62 @@ class LivePlane:
 
     def measure(self, dist: str, workload: Workload, config):
         self.configure(config)
+        total = int(sum(int(c) for c in config))
+        initial = None
+        if self._carry and total > 0:
+            rel = (np.asarray(self._state.free[:total], dtype=np.float64)
+                   - self._state.clock)
+            initial = rel * self.time_scale
+            # Report the backlog in unscaled episode seconds (the
+            # simulator plane's frame), not the serve's stretched
+            # virtual-time frame.
+            a0 = (float(workload.arrivals[0]) if workload.n_queries
+                  else 0.0)
+            self.last_carried_wait = float(
+                np.maximum(rel - a0, 0.0).sum())
+        else:
+            self.last_carried_wait = 0.0
         self.engine.serve(workload, self.qos_latency,
-                          time_scale=self.time_scale)
+                          time_scale=self.time_scale, initial_busy=initial)
         lat, waits = self.engine.served_arrays()
+        self._pending = None
         if len(lat) < workload.n_queries:
             # an empty/fully-failed pool serves nothing: every query
-            # violates (the simulator plane's +inf convention)
+            # violates (the simulator plane's +inf convention); the carry
+            # passes through unchanged
             n = workload.n_queries
             return np.full(n, np.inf), np.full(n, np.inf)
+        if self._carry:
+            # Snapshot the dispatch trace now — search probes between this
+            # measure and the engine's commit overwrite engine.records.
+            recs = self.engine.records
+            self._pending = (
+                np.asarray([r.slot for r in recs], dtype=np.int64),
+                np.asarray([r.arrival + r.latency for r in recs],
+                           dtype=np.float64),
+                np.asarray(initial if initial is not None
+                           else np.zeros(total), dtype=np.float64),
+                np.asarray(workload.arrivals, dtype=np.float64),
+                total,
+            )
         return lat, waits
+
+    def commit(self, n_served: int) -> None:
+        """Fold the first ``n_served`` served queries of the last measured
+        segment into the carried per-cell state."""
+        if not self._carry or self._pending is None:
+            return
+        slots, fins, initial, arr, total = self._pending
+        self._pending = None
+        n = int(n_served)
+        busy = initial.copy()
+        # Per-cell virtual finishes are nondecreasing: max == last.
+        np.maximum.at(busy, slots[:n], fins[:n])
+        free = self._state.free.copy()
+        free[:total] = self._state.clock + busy / self.time_scale
+        self._state = PoolState(free=free, clock=self._state.clock)
+        if n > 0:
+            self._local_now = float(arr[n - 1])
 
     def grid_evaluator(self, dist: str):
         return None                      # no batched path on the live plane

@@ -5,6 +5,14 @@ phase) and ``window`` (queries per monitoring window) so the same episode
 runs as a CI smoke (small ``n``) or a full study.  Phases are prefixes of
 one base stream per batch distribution, so every episode is deterministic
 from its seed.
+
+Episodes run under the engine's continuous-time clock: queue backlog
+survives every control-plane cut these timelines inject, so the
+capacity-loss episodes (``failure-storm``, ``spot-churn``) and the
+traffic-surprise ones (``flash-crowd``) report the violation mass a
+degraded pool actually accumulates while replacements provision — not the
+optimistic idle-restart view (``bench_scenarios`` still replays that as a
+per-episode baseline).
 """
 
 from __future__ import annotations

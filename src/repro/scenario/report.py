@@ -22,6 +22,10 @@ class WindowStat:
     price: float               # $/h of the pool during this window
     cost: float                # price x window arrival span, in $
     violation: bool
+    # Queue backlog (in-flight busy seconds) carried across the segment's
+    # opening control-plane cut, attributed to the segment's first window
+    # (0 elsewhere, and everywhere under idle-restart accounting).
+    carried_wait: float = 0.0
 
 
 @dataclass
@@ -105,6 +109,13 @@ class EpisodeReport:
         return sum(1 for w in self.windows if w.violation)
 
     @property
+    def carried_wait_total(self) -> float:
+        """Total queue backlog (busy seconds) carried across control-plane
+        cuts over the episode — exactly the mass idle-restart segment
+        accounting used to drop."""
+        return float(sum(w.carried_wait for w in self.windows))
+
+    @property
     def recovered_all_events(self) -> bool:
         """True when every injected event's QoS recovered to target."""
         return all(e.recovery_queries is not None for e in self.events)
@@ -124,6 +135,7 @@ class EpisodeReport:
                 else [float(r) for r in self.final_qos_by_phase]),
             "n_windows": self.n_windows,
             "violation_windows": self.violation_windows,
+            "carried_wait_total": float(self.carried_wait_total),
             "n_events": len(self.events),
             "recovered_all_events": bool(self.recovered_all_events),
             "phases": [{
@@ -159,5 +171,6 @@ class EpisodeReport:
                 "config": [int(c) for c in w.config],
                 "price": float(w.price), "cost": float(w.cost),
                 "violation": bool(w.violation),
+                "carried_wait": float(w.carried_wait),
             } for w in self.windows],
         }

@@ -8,7 +8,7 @@ from .instance import (AWS_INSTANCES, MODEL_PROFILES, PAPER_POOLS, TPU_CELLS,
 from .pool import (DEFAULT_BOUNDS, DEFAULT_RATES, PoolEvaluator,
                    best_homogeneous, cost_effectiveness, make_paper_setup,
                    paper_workload)
-from .simulator import PoolSimulator
+from .simulator import PoolSimulator, PoolState, SegmentResult
 from .workload import (Workload, gaussian_batches, generate_workload,
                        lognormal_batches)
 
@@ -17,7 +17,7 @@ __all__ = [
     "InstanceType", "ModelProfile", "service_time_table",
     "PoolEvaluator", "best_homogeneous", "cost_effectiveness",
     "make_paper_setup", "paper_workload", "DEFAULT_RATES", "DEFAULT_BOUNDS",
-    "PoolSimulator",
+    "PoolSimulator", "PoolState", "SegmentResult",
     "LoadMonitor", "ScaleEvent", "rescale",
     "fail_instances", "recover_from_failure", "reprice",
     "Workload", "generate_workload", "lognormal_batches", "gaussian_batches",

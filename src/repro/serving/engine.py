@@ -72,6 +72,11 @@ class QueryRecord:
     cell: str
     wait: float = 0.0         # queue time before service started
     hedged: bool = False
+    # Index (in the live-cell order) of the cell whose availability this
+    # query advanced — the hedge winner when a hedge overtook the primary.
+    # Lets continuous-clock callers rebuild per-cell busy times for any
+    # served prefix (LivePlane segment commits).
+    slot: int = -1
 
 
 class ClusterEngine:
@@ -144,19 +149,32 @@ class ClusterEngine:
 
     # ------------------------------------------------------------- serving
     def serve(self, workload: Workload, qos_latency: float,
-              time_scale: float = 1.0) -> float:
+              time_scale: float = 1.0, initial_busy=None) -> float:
         """Serve the stream; returns the QoS satisfaction rate.
 
         Arrivals advance a virtual clock; service times are *measured* on the
         real device (scaled by cell speed).  `time_scale` stretches arrival
         gaps so CPU-speed executions map onto the workload's regime.
+        `initial_busy` warm-starts the pool: one busy-until time per live
+        cell in the (scaled) arrival frame — the continuous-clock carry a
+        `LivePlane` threads across scenario segments.  Omitted, every cell
+        starts idle (the whole-stream accounting every cold path uses).
         """
         self.records = []
         live = [c for c in self.cells if not c.failed]
         if not live:
             return 0.0
-        for c in live:
-            c.busy_until = 0.0
+        if initial_busy is None:
+            for c in live:
+                c.busy_until = 0.0
+        else:
+            if len(initial_busy) != len(live):
+                raise ValueError(
+                    f"initial_busy has {len(initial_busy)} entries for "
+                    f"{len(live)} live cells")
+            for c, b in zip(live, initial_busy):
+                c.busy_until = float(b)
+        pos = {id(c): k for k, c in enumerate(live)}
         ok = 0
         for arrival, bsz in zip(workload.arrivals * time_scale,
                                 workload.batches):
@@ -187,13 +205,17 @@ class ClusterEngine:
                         alt.busy_until = alt_finish
                         wait = alt_start - arrival
                         hedged = True
+            winner = cell
             if not hedged:
                 cell.busy_until = finish
+            else:
+                winner = alt
             latency = finish - arrival
             self.records.append(QueryRecord(float(arrival), int(bsz),
                                             float(latency),
                                             cell.cell_type.name,
-                                            wait=float(wait), hedged=hedged))
+                                            wait=float(wait), hedged=hedged,
+                                            slot=pos[id(winner)]))
             if latency <= qos_latency:
                 ok += 1
         return ok / len(workload.arrivals)

@@ -40,10 +40,26 @@ special case and agree bit-for-bit with row ``i`` of the batched result, and
 cell ``[w, b]`` of the grid agrees bit-for-bit with the single path bound to
 ``workload.scaled(load_factors[w])`` (tests/test_batch_eval.py,
 tests/test_grid_eval.py).
+
+Continuous-time warm starts (the scenario engine's episode clock): a
+:class:`PoolState` carries per-slot next-free times (episode time) plus a
+``clock`` offset mapping the bound stream's local ``t=0`` into episode time.
+``latencies_from`` / ``latencies_waits_from`` / ``qos_rate_from`` start the
+scan from that carry and return the final carry, so a stream served in
+consecutive segments (each segment's final state feeding the next) produces
+the *same bits* as one whole-stream call — ``initial_state()`` (idle pool at
+clock 0) is the identity element: ``latencies_from(initial_state(), c)``
+equals ``latencies(c)`` bit for bit.  ``PoolState.remap`` threads the carry
+through a pool reconfiguration (surviving instances keep their in-flight
+work, removed slots drop it, added slots start idle), and ``segment_from``
+exposes the per-prefix carry the scenario engine needs when it rolls a
+segment back to an adaptation cut (tests/test_simulator.py,
+tests/test_scenario.py).
 """
 
 from __future__ import annotations
 
+from dataclasses import dataclass
 from functools import partial
 
 import jax
@@ -61,42 +77,162 @@ _INF = 1e30
 # times lose ms resolution two orders of magnitude earlier, so the envelope
 # is bounded by the simulator's own precision, not this constant.
 _BIG = 1e6
+# Guarded horizon of one scan: beyond this, float32 timestamps are so coarse
+# (ulp(1e5) ≈ 0.008s) that dispatch ordering and QoS comparisons degrade
+# toward the _BIG priority envelope.  Continuous-clock callers must rebase
+# (PoolState keeps segment-local times small); exceeding it raises instead
+# of silently dispatching to the wrong slot.
+_MAX_HORIZON = _BIG / 8.0
+
+
+def _check_horizon(t_max: float, context: str) -> None:
+    if t_max > _MAX_HORIZON:
+        raise ValueError(
+            f"{context}: simulation horizon {t_max:.4g}s exceeds the safe "
+            f"dispatch-priority envelope ({_MAX_HORIZON:.4g}s = _BIG/8); "
+            "float32 timestamps this large corrupt the fused idle-vs-busy "
+            "dispatch key.  Rebase the episode clock so segment-local times "
+            "stay small (PoolState.rebased), or split the stream.")
+
+
+@dataclass(frozen=True)
+class PoolState:
+    """Continuous-time carry of an FCFS pool between simulation segments.
+
+    ``free`` holds one next-free time per instance slot in **episode time**
+    (float64, monotone across the whole episode); ``clock`` is the episode
+    time of the currently bound stream's local ``t=0``, so a scan over
+    local arrivals starts from ``free - clock``.  Slots beyond the active
+    pool carry placeholder times that no entry point reads.
+    """
+
+    free: np.ndarray            # (max_instances,) float64 episode next-free
+    clock: float = 0.0          # episode time of the local stream origin
+
+    @classmethod
+    def idle(cls, max_instances: int, clock: float = 0.0) -> "PoolState":
+        """Fully drained pool: every slot free at ``clock``."""
+        return cls(free=np.full(max_instances, float(clock),
+                                dtype=np.float64),
+                   clock=float(clock))
+
+    def rebased(self, delta: float) -> "PoolState":
+        """Shift the local-time origin ``delta`` episode seconds forward.
+
+        Two callers: a phase boundary (``delta`` = the previous stream's
+        span, so the next stream's ``t=0`` lands at the previous end) and a
+        mid-phase stream rebuild such as a load spike (``delta`` = old minus
+        new anchor arrival, keeping the anchor query's episode time
+        continuous across the recompression).  Episode-time facts
+        (``free``) are untouched — only the mapping moves.
+        """
+        return PoolState(free=self.free, clock=self.clock + float(delta))
+
+    def remap(self, old_config, new_config, now: float) -> "PoolState":
+        """Thread slot state through a pool reconfiguration at episode time
+        ``now``: per type, the first ``min(old, new)`` slots survive with
+        their in-flight work, removed slots drop theirs, and added slots
+        start idle at ``now`` (any provisioning delay is the control
+        plane's to model *before* the switch takes effect)."""
+        old = np.asarray(old_config, dtype=np.int64)
+        new = np.asarray(new_config, dtype=np.int64)
+        if old.shape != new.shape or old.ndim != 1:
+            raise ValueError("old/new configs must be 1-D with equal length")
+        if old.sum() > len(self.free) or new.sum() > len(self.free):
+            raise ValueError("config exceeds the state's slot padding")
+        free = np.full_like(self.free, float(now))
+        oc = np.concatenate([[0], np.cumsum(old)])
+        nc = np.concatenate([[0], np.cumsum(new)])
+        for t in range(len(old)):
+            k = int(min(old[t], new[t]))
+            free[nc[t]:nc[t] + k] = self.free[oc[t]:oc[t] + k]
+        return PoolState(free=free, clock=self.clock)
+
+
+@dataclass
+class SegmentResult:
+    """One warm-start segment: per-query outputs + the carry at any prefix.
+
+    ``lat``/``waits`` cover the whole bound stream.  ``state_at(k)`` is the
+    pool state after serving only the first ``k`` queries — the scenario
+    engine serves segments speculatively and commits just the prefix it
+    consumed before an adaptation cut.  ``state`` (= ``state_at(n)``) is the
+    scan's own final carry, bit-exact; interior prefixes are reconstructed
+    from the recorded per-query (slot, finish) trace with the same float32
+    arithmetic the device performed.
+    """
+
+    lat: np.ndarray
+    waits: np.ndarray
+    _state0: "PoolState"
+    _active: np.ndarray | None          # (S,) bool; None for empty segments
+    _rel0: np.ndarray | None            # (S,) float64 of the f32 carry in
+    _fin: np.ndarray | None             # (nq,) float64-exact f32 finishes
+    _slots: np.ndarray | None           # (nq,) int dispatch trace
+    _final_rel: np.ndarray | None       # (S,) float64 of the f32 carry out
+
+    @property
+    def n_queries(self) -> int:
+        return len(self.lat)
+
+    @property
+    def state(self) -> "PoolState":
+        """Carry after the whole segment."""
+        return self.state_at(self.n_queries)
+
+    def state_at(self, upto: int) -> "PoolState":
+        """Carry after the first ``upto`` served queries."""
+        if not 0 <= upto <= self.n_queries:
+            raise ValueError(f"upto={upto} outside [0, {self.n_queries}]")
+        if self._active is None:        # empty pool or empty stream
+            return self._state0
+        if upto == self.n_queries:
+            rel = self._final_rel
+        else:
+            # Per-slot finishes are nondecreasing, so max == the last
+            # assignment — exactly the scan's carry at step ``upto``.
+            rel = self._rel0.copy()
+            np.maximum.at(rel, self._slots[:upto], self._fin[:upto])
+        free = np.where(self._active, rel + self._state0.clock,
+                        self._state0.free)
+        return PoolState(free=free, clock=self._state0.clock)
 
 
 @partial(jax.jit, static_argnames=())
-def _simulate_scan(arrivals, service, type_of_slot, priority, active):
-    """FCFS simulation scan.
+def _simulate_scan(arrivals, service, type_of_slot, priority, free0):
+    """FCFS simulation scan from an arbitrary initial carry.
 
     arrivals:     (nq,)              arrival times (sorted)
     service:      (n_types, nq)      service time of query j on type i
     type_of_slot: (max_inst,) int32  type index of each instance slot
     priority:     (max_inst,)        dispatch order (lower = picked first)
-    active:       (max_inst,) bool   slot exists in this configuration
-    Returns (latencies, start_times, slot_idx) per query.
+    free0:        (max_inst,)        initial next-free time per slot in the
+                                     arrival frame (_INF = slot absent)
+    Returns (final next-free carry, (latencies, start_times, slot_idx)).
     """
-    free0 = jnp.where(active, 0.0, _INF)
 
     def step(free, inputs):
         arrival, svc_by_type = inputs
         # Single fused dispatch key: idle slots rank by type-order priority
-        # shifted below every possible next-free time, busy active slots by
-        # next-free time, inactive slots at +inf.  One argmin replaces the
-        # idle-argmin / busy-argmin / any() triple and picks the identical
-        # slot: first idle in type order if any, else earliest-freeing.
-        idle = (free <= arrival) & active
-        key = jnp.where(idle, priority - _BIG, jnp.where(active, free, _INF))
+        # shifted below any possible next-free time, busy slots by next-free
+        # time.  Absent slots carry free == _INF forever, so ``free <=
+        # arrival`` is already False and they rank last without an explicit
+        # active mask; one argmin picks the identical slot the three-way
+        # idle/busy/absent select would: first idle in type order if any,
+        # else earliest-freeing.
+        key = jnp.where(free <= arrival, priority - _BIG, free)
         slot = jnp.argmin(key)
         start = jnp.maximum(arrival, free[slot])
         finish = start + svc_by_type[type_of_slot[slot]]
         free = free.at[slot].set(finish)
         return free, (finish - arrival, start, slot)
 
-    _, (lat, start, slot) = jax.lax.scan(step, free0, (arrivals, service.T))
-    return lat, start, slot
+    return jax.lax.scan(step, free0, (arrivals, service.T))
 
 
 # Batch axis over slot layouts only; the query stream and service table are
-# shared.  One executable per (B, nq, max_instances) shape.
+# shared.  One executable per (B, nq, max_instances) shape.  The per-slot
+# initial carry (free0) maps with the slot layout.
 _simulate_scan_batch = jax.jit(
     jax.vmap(_simulate_scan, in_axes=(None, None, 0, None, 0)))
 
@@ -134,21 +270,19 @@ def _qos_threshold_f32(qos_latency: float) -> float:
     return float(t)
 
 
-def _grid_lane_qos_counts(arrivals, service_T, type_of_slot, priority, active,
+def _grid_lane_qos_counts(arrivals, service_T, type_of_slot, priority, free0,
                           iota, qos_t):
     """QoS-pass count of one (workload, config) lane — the lean FCFS scan.
 
-    Same dispatch recurrence as ``_simulate_scan`` with three fused-engine
-    reductions, none of which change a single emitted float:
-      * the idle test needs no ``active`` mask — inactive slots carry
-        ``free == _INF`` forever, so ``free <= arrival`` is already False and
-        busy/inactive keys coincide with the three-way select;
+    Same dispatch recurrence as ``_simulate_scan`` (both take the per-slot
+    next-free carry ``free0`` and return the final carry) with two
+    fused-engine reductions, neither of which changes a single emitted
+    float:
       * the slot update is a one-hot ``where`` instead of a scatter (XLA CPU
         scatters dominate the step cost at these shapes);
       * the QoS comparison accumulates an int32 count in the carry instead of
         materializing (n_queries,) latencies for a host-side mean.
     """
-    free0 = jnp.where(active, 0.0, _INF)
 
     def step(carry, inputs):
         free, count = carry
@@ -161,14 +295,16 @@ def _grid_lane_qos_counts(arrivals, service_T, type_of_slot, priority, active,
         count = count + ((finish - arrival) <= qos_t).astype(jnp.int32)
         return (free, count), None
 
-    (_, count), _ = jax.lax.scan(step, (free0, jnp.int32(0)),
-                                 (arrivals, service_T), unroll=_GRID_UNROLL)
-    return count
+    (free, count), _ = jax.lax.scan(step, (free0, jnp.int32(0)),
+                                    (arrivals, service_T),
+                                    unroll=_GRID_UNROLL)
+    return count, free
 
 
 # Nested (workload, config) axes: the outer vmap maps arrival streams, the
-# inner maps slot layouts, so a dispatch uploads only (W, nq) arrivals plus
-# one (B, S) layout — never a flattened W·B replica of either.
+# inner maps slot layouts (and their initial carries), so a dispatch uploads
+# only (W, nq) arrivals plus one (B, S) layout — never a flattened W·B
+# replica of either.
 _grid_counts_wb = jax.vmap(
     jax.vmap(_grid_lane_qos_counts,
              in_axes=(None, None, 0, None, 0, None, None)),
@@ -190,6 +326,13 @@ _grid_counts_pmap = jax.pmap(_grid_counts_wb,
                              in_axes=(0, 0, 0, 0, 0, 0, 0))
 
 
+def _cold_free0(active: np.ndarray) -> np.ndarray:
+    """(..., S) float32 idle initial carry: 0 for active slots, _INF for
+    absent ones — bitwise the carry the scan built internally before warm
+    starts existed, which is what keeps the cold paths bit-identical."""
+    return np.where(active, np.float32(0.0), np.float32(_INF))
+
+
 class PoolSimulator:
     """Simulator bound to (model profile, instance type order, workload)."""
 
@@ -199,14 +342,19 @@ class PoolSimulator:
         self.types = list(types)
         self.workload = workload
         self.max_instances = max_instances
+        if workload.n_queries:
+            _check_horizon(float(workload.arrivals[-1]),
+                           "PoolSimulator workload")
         self._service = jnp.asarray(
             service_time_table(model, self.types, workload.batches),
             dtype=jnp.float32)
+        self._service_host: np.ndarray | None = None   # lazy host mirror
         self._arrivals = jnp.asarray(workload.arrivals, dtype=jnp.float32)
         self._priority = jnp.arange(max_instances, dtype=jnp.float32)
         # Grid-engine device caches: replicated constants per (n_dev, width)
         # and arrival grids per load-factor tuple (rescale loops re-sweep the
-        # same monitored levels every round).  Both are small and bounded.
+        # same monitored levels every round).  Both are small and bounded;
+        # _grid_arrs is LRU (hits refresh recency, see _grid_arr_shards).
         self._grid_consts: dict[tuple, tuple] = {}
         self._grid_arrs: dict[tuple, jnp.ndarray] = {}
 
@@ -243,10 +391,10 @@ class PoolSimulator:
         if sum(int(c) for c in config) == 0:
             return np.full(self.workload.n_queries, np.inf)
         type_of_slot, active = self._slots(config)
-        lat, _, _ = _simulate_scan(self._arrivals, self._service,
-                                   jnp.asarray(type_of_slot),
-                                   self._priority,
-                                   jnp.asarray(active))
+        _, (lat, _, _) = _simulate_scan(self._arrivals, self._service,
+                                        jnp.asarray(type_of_slot),
+                                        self._priority,
+                                        jnp.asarray(_cold_free0(active)))
         return np.asarray(jax.device_get(lat), dtype=np.float64)
 
     def latencies_waits(self, config) -> tuple[np.ndarray, np.ndarray]:
@@ -262,10 +410,10 @@ class PoolSimulator:
         if sum(int(c) for c in config) == 0:
             return np.full(n, np.inf), np.full(n, np.inf)
         type_of_slot, active = self._slots(config)
-        lat, start, _ = _simulate_scan(self._arrivals, self._service,
-                                       jnp.asarray(type_of_slot),
-                                       self._priority,
-                                       jnp.asarray(active))
+        _, (lat, start, _) = _simulate_scan(self._arrivals, self._service,
+                                            jnp.asarray(type_of_slot),
+                                            self._priority,
+                                            jnp.asarray(_cold_free0(active)))
         lat = np.asarray(jax.device_get(lat), dtype=np.float64)
         start = np.asarray(jax.device_get(start), dtype=np.float64)
         arr = np.asarray(jax.device_get(self._arrivals), dtype=np.float64)
@@ -280,6 +428,105 @@ class PoolSimulator:
     def tail_latency(self, config, pct: float = 99.0) -> float:
         return float(np.percentile(self.latencies(config), pct))
 
+    # --------------------------------------------------- continuous clock
+    def initial_state(self) -> PoolState:
+        """Idle pool at episode clock 0 — the warm-start identity element:
+        every ``*_from`` entry point started here reproduces its cold
+        counterpart bit for bit."""
+        return PoolState.idle(self.max_instances)
+
+    def _warm_free0(self, state: PoolState,
+                    active: np.ndarray) -> np.ndarray:
+        """(S,) float32 initial carry in the bound stream's local frame,
+        with the horizon guard applied to arrivals and carried busy time."""
+        if len(state.free) != self.max_instances:
+            raise ValueError(
+                f"state has {len(state.free)} slots, simulator pads to "
+                f"{self.max_instances}")
+        rel = np.asarray(state.free, dtype=np.float64) - float(state.clock)
+        horizon = float(self.workload.arrivals[-1])
+        if active.any():
+            horizon = max(horizon, float(rel[active].max()))
+        _check_horizon(horizon, "warm-start segment")
+        return np.where(active, rel.astype(np.float32),
+                        np.float32(_INF))
+
+    def segment_from(self, state: PoolState, config) -> "SegmentResult":
+        """Serve the bound stream as one continuous-time segment.
+
+        Returns a :class:`SegmentResult` whose ``lat``/``waits`` equal the
+        cold ``latencies_waits`` bit for bit when ``state`` is the idle
+        carry at clock 0, and whose ``state_at(k)`` gives the pool state
+        after the first ``k`` queries — ``state_at(n_queries)`` is the
+        scan's own final carry, so chaining segments reproduces the
+        whole-stream bits exactly.
+        """
+        n = self.workload.n_queries
+        total = sum(int(c) for c in config)
+        if n == 0 or total == 0:
+            # An empty pool serves nothing (+inf convention) and an empty
+            # stream serves nothing: the carry passes through unchanged.
+            return SegmentResult(
+                lat=np.full(n, np.inf), waits=np.full(n, np.inf),
+                _state0=state, _active=None, _rel0=None, _fin=None,
+                _slots=None, _final_rel=None)
+        type_of_slot, active = self._slots(config)
+        free0 = self._warm_free0(state, active)
+        free_f, (lat, start, slot) = _simulate_scan(
+            self._arrivals, self._service, jnp.asarray(type_of_slot),
+            self._priority, jnp.asarray(free0))
+        lat64 = np.asarray(jax.device_get(lat), dtype=np.float64)
+        start32 = np.asarray(jax.device_get(start), dtype=np.float32)
+        slots = np.asarray(jax.device_get(slot))
+        # Same float32-cast arrival baseline as latencies_waits, so the
+        # idle-carry waits match the cold path bit for bit.
+        arr = np.asarray(jax.device_get(self._arrivals), dtype=np.float64)
+        waits = np.maximum(np.asarray(start32, dtype=np.float64) - arr, 0.0)
+        if self._service_host is None:
+            self._service_host = np.asarray(jax.device_get(self._service))
+        # Per-query finish times recomputed with the same float32 add the
+        # scan performed (start + service, IEEE round-to-nearest on both
+        # sides), so a prefix carry matches the device's own step carry.
+        svc32 = self._service_host[type_of_slot[slots], np.arange(n)]
+        fin = np.asarray(start32 + svc32, dtype=np.float64)
+        final_rel = np.asarray(jax.device_get(free_f), dtype=np.float64)
+        return SegmentResult(lat=lat64, waits=waits, _state0=state,
+                             _active=active, _rel0=free0.astype(np.float64),
+                             _fin=fin, _slots=slots, _final_rel=final_rel)
+
+    def latencies_from(self, state: PoolState,
+                       config) -> tuple[np.ndarray, PoolState]:
+        """Warm-start ``latencies``: per-query latency of the bound stream
+        served from ``state``, plus the final carry."""
+        seg = self.segment_from(state, config)
+        return seg.lat, seg.state
+
+    def latencies_waits_from(
+            self, state: PoolState,
+            config) -> tuple[np.ndarray, np.ndarray, PoolState]:
+        """Warm-start ``latencies_waits``: (latency, queue wait) arrays of
+        the bound stream served from ``state``, plus the final carry."""
+        seg = self.segment_from(state, config)
+        return seg.lat, seg.waits, seg.state
+
+    def qos_rate_from(self, state: PoolState,
+                      config) -> tuple[float, PoolState]:
+        """Warm-start ``qos_rate``: the same host-side float64 threshold
+        comparison, so the idle carry reproduces ``qos_rate`` exactly."""
+        seg = self.segment_from(state, config)
+        rate = float(np.mean(seg.lat <= self.model.qos_latency))
+        return rate, seg.state
+
+    def carried_wait(self, state: PoolState, config, at: float) -> float:
+        """In-flight busy seconds carried into local time ``at``: the sum
+        over the config's slots of (next-free − at), clamped at zero — the
+        backlog a control-plane cut at ``at`` would have dropped under
+        idle-restart segment accounting."""
+        total = int(sum(int(c) for c in config))
+        rel = (np.asarray(state.free[:total], dtype=np.float64)
+               - float(state.clock))
+        return float(np.maximum(rel - float(at), 0.0).sum())
+
     # ------------------------------------------------------------- batched
     def latencies_batch(self, configs) -> np.ndarray:
         """Per-query latencies for a batch of pool configs in one dispatch.
@@ -292,10 +539,9 @@ class PoolSimulator:
         if configs.size == 0:
             return np.zeros((0, self.workload.n_queries), dtype=np.float64)
         type_of_slot, active = self._slots_batch(configs)
-        lat, _, _ = _simulate_scan_batch(self._arrivals, self._service,
-                                         jnp.asarray(type_of_slot),
-                                         self._priority,
-                                         jnp.asarray(active))
+        _, (lat, _, _) = _simulate_scan_batch(
+            self._arrivals, self._service, jnp.asarray(type_of_slot),
+            self._priority, jnp.asarray(_cold_free0(active)))
         out = np.asarray(jax.device_get(lat), dtype=np.float64)
         out[configs.sum(axis=1) == 0, :] = np.inf
         return out
@@ -323,7 +569,10 @@ class PoolSimulator:
         if (factors <= 0).any() or not np.isfinite(factors).all():
             raise ValueError("load factors must be finite and > 0")
         base = np.asarray(self.workload.arrivals, dtype=np.float64)
-        return base[None, :] / factors[:, None]
+        out = base[None, :] / factors[:, None]
+        if out.size:
+            _check_horizon(float(out[:, -1].max()), "load-factor grid")
+        return out
 
     def _stacked_service(self, service_tables, n_w: int):
         """Validate + device-cast an optional (W, n_types, n_queries) stack
@@ -360,16 +609,15 @@ class PoolSimulator:
             return np.zeros((len(arrivals), 0, self.workload.n_queries),
                             dtype=np.float64)
         type_of_slot, active = self._slots_batch(configs)
+        free0 = jnp.asarray(_cold_free0(active))
         if tables is None:
-            lat, _, _ = _simulate_scan_grid(
+            _, (lat, _, _) = _simulate_scan_grid(
                 jnp.asarray(arrivals, jnp.float32), self._service,
-                jnp.asarray(type_of_slot), self._priority,
-                jnp.asarray(active))
+                jnp.asarray(type_of_slot), self._priority, free0)
         else:
-            lat, _, _ = _simulate_scan_grid_tables(
+            _, (lat, _, _) = _simulate_scan_grid_tables(
                 jnp.asarray(arrivals, jnp.float32), tables,
-                jnp.asarray(type_of_slot), self._priority,
-                jnp.asarray(active))
+                jnp.asarray(type_of_slot), self._priority, free0)
         out = np.asarray(jax.device_get(lat), dtype=np.float64)
         out[:, configs.sum(axis=1) == 0, :] = np.inf
         return out
@@ -411,25 +659,28 @@ class PoolSimulator:
 
         arr = np.asarray(arrivals, np.float32)                # (W, nq)
         tos = np.ascontiguousarray(type_of_slot[:, :width])   # (B, S)
-        act = np.ascontiguousarray(active[:, :width])
+        free0 = np.ascontiguousarray(_cold_free0(active[:, :width]))
 
         qos_t = jnp.float32(_qos_threshold_f32(self.model.qos_latency))
         n_dev = jax.local_device_count()
         if tables is not None:
-            counts = np.asarray(jax.device_get(_grid_counts_tables_jit(
+            counts, _ = _grid_counts_tables_jit(
                 jnp.asarray(arr), jnp.transpose(tables, (0, 2, 1)),
-                jnp.asarray(tos), self._priority[:width], jnp.asarray(act),
-                jnp.arange(width, dtype=jnp.int32), qos_t)))
+                jnp.asarray(tos), self._priority[:width],
+                jnp.asarray(free0), jnp.arange(width, dtype=jnp.int32),
+                qos_t)
+            counts = np.asarray(jax.device_get(counts))
         elif n_dev > 1:
             factors = tuple(float(f) for f in np.asarray(load_factors,
                                                          dtype=np.float64))
-            counts = self._dispatch_grid_sharded(arr, tos, act, width,
+            counts = self._dispatch_grid_sharded(arr, tos, free0, width,
                                                  n_dev, factors)
         else:
-            counts = np.asarray(jax.device_get(_grid_counts_jit(
+            counts, _ = _grid_counts_jit(
                 jnp.asarray(arr), self._service.T, jnp.asarray(tos),
-                self._priority[:width], jnp.asarray(act),
-                jnp.arange(width, dtype=jnp.int32), qos_t)))
+                self._priority[:width], jnp.asarray(free0),
+                jnp.arange(width, dtype=jnp.int32), qos_t)
+            counts = np.asarray(jax.device_get(counts))
         return counts.astype(np.float64) / self.workload.n_queries
 
     def _grid_replicated_consts(self, width: int, n_dev: int) -> tuple:
@@ -451,11 +702,14 @@ class PoolSimulator:
 
     def _grid_arr_shards(self, arr: np.ndarray, mode: str, n_dev: int,
                          factors: tuple) -> jnp.ndarray:
-        """Device layout of the (W, nq) arrival grid, cached per load-factor
-        tuple: workload-axis shards ("w", padded with duplicate levels) or
-        per-device replicas ("b")."""
+        """Device layout of the (W, nq) arrival grid, LRU-cached per
+        load-factor tuple: workload-axis shards ("w", padded with duplicate
+        levels) or per-device replicas ("b").  Hits refresh recency, so a
+        rescale loop cycling through more monitored-level sets than the
+        cache holds evicts the stalest set instead of thrashing re-uploads
+        of the ones it keeps re-sweeping."""
         key = (mode, n_dev, factors)
-        out = self._grid_arrs.get(key)
+        out = self._grid_arrs.pop(key, None)
         if out is None:
             n_w = len(arr)
             if mode == "w":
@@ -470,20 +724,21 @@ class PoolSimulator:
             else:
                 out = jnp.asarray(np.ascontiguousarray(
                     np.broadcast_to(arr, (n_dev,) + arr.shape)))
-            if len(self._grid_arrs) >= 8:
+            while len(self._grid_arrs) >= 8:
                 self._grid_arrs.pop(next(iter(self._grid_arrs)))
-            self._grid_arrs[key] = out
+        # (Re-)inserting moves the key to the recent end of the dict.
+        self._grid_arrs[key] = out
         return out
 
-    def _dispatch_grid_sharded(self, arr, tos, act, width, n_dev,
+    def _dispatch_grid_sharded(self, arr, tos, free0, width, n_dev,
                                factors) -> np.ndarray:
         """One pmapped sweep across the host devices.
 
         Splits the workload axis (padding with duplicate levels when it does
         not divide) unless the config axis divides more cleanly — e.g. a
         single-level sweep over many configs.  All broadcast operands arrive
-        pre-replicated; only the per-call slot layouts cross the host
-        boundary.
+        pre-replicated; only the per-call slot layouts (and their idle
+        carries) cross the host boundary.
         """
         n_w, n_b = len(arr), len(tos)
         service_r, prio_r, iota_r, qos_r = self._grid_replicated_consts(
@@ -503,17 +758,17 @@ class PoolSimulator:
         if lanes_b_split < lanes_w_split:
             if pad_b:
                 idx = np.arange(n_b + pad_b) % n_b
-                tos, act = tos[idx], act[idx]
-            counts = _grid_counts_pmap(
+                tos, free0 = tos[idx], free0[idx]
+            counts, _ = _grid_counts_pmap(
                 self._grid_arr_shards(arr, "b", n_dev, factors), service_r,
                 jnp.asarray(tos.reshape(n_dev, -1, width)), prio_r,
-                jnp.asarray(act.reshape(n_dev, -1, width)),
+                jnp.asarray(free0.reshape(n_dev, -1, width)),
                 iota_r, qos_r)
             counts = np.asarray(jax.device_get(counts))
             counts = counts.transpose(1, 0, 2).reshape(n_w, n_b + pad_b)
             return counts[:, :n_b]
-        counts = _grid_counts_pmap(
+        counts, _ = _grid_counts_pmap(
             self._grid_arr_shards(arr, "w", n_dev, factors), service_r,
-            replicate(tos), prio_r, replicate(act), iota_r, qos_r)
+            replicate(tos), prio_r, replicate(free0), iota_r, qos_r)
         counts = np.asarray(jax.device_get(counts))
         return counts.reshape(-1, n_b)[:n_w]

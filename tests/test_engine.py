@@ -97,3 +97,22 @@ def test_type_order_priority_live(engine):
     engine.serve(wl, qos_latency=1e6)
     # with fully spaced arrivals every query lands on the first type
     assert all(r.cell == "cell1" for r in engine.records)
+
+
+def test_serve_warm_start_initial_busy(engine):
+    """`initial_busy` warm-starts the virtual clock: a carried backlog
+    delays every start, the per-query slot trace names the advanced cell,
+    and a mismatched vector is rejected."""
+    engine.configure((2, 1))
+    wl = generate_workload(6, 15, rate_qps=100.0, median_batch=4,
+                           max_batch=8)
+    engine.serve(wl, qos_latency=1e6)
+    assert all(0 <= r.slot < 3 for r in engine.records)
+    # every cell starts 5 virtual seconds busy: all queries arrive earlier
+    # (span ~0.15s at 100 qps) and must queue behind the carried work
+    engine.serve(wl, qos_latency=1e6, initial_busy=[5.0, 5.0, 5.0])
+    _, waits = engine.served_arrays()
+    assert (waits >= 4.0).all()
+    assert all(c.busy_until >= 5.0 for c in engine.cells)
+    with pytest.raises(ValueError):
+        engine.serve(wl, qos_latency=1e6, initial_busy=[5.0])

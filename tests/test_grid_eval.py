@@ -424,3 +424,45 @@ def test_rescale_grid_requires_grid_evaluator():
         opt.tell(cfg, _oracle(cfg))
     with pytest.raises(TypeError):
         rescale(opt, _oracle, budget=5, load_factors=(1.0, 1.5))
+
+
+# ------------------------------------------------------- edge cases + caches
+def test_grid_edges_zero_pool_rows_and_single_query_no_nan():
+    """Zero-pool config rows and single-query streams flow through the grid
+    and waits paths without NaN."""
+    wl = _workload(n=1, rate=50.0)
+    sim = PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=MAX_INST)
+    cfgs = [(0, 0), (1, 0), (0, 2)]
+    rates = sim.qos_rate_grid(cfgs, (1.0, 2.0))
+    assert rates.shape == (2, 3)
+    assert not np.isnan(rates).any()
+    assert (rates[:, 0] == 0.0).all()          # empty pool: all violations
+    lat = sim.latencies_grid(cfgs, (1.0, 2.0))
+    assert np.isinf(lat[:, 0]).all()
+    assert np.isfinite(lat[:, 1:]).all()
+    lat1, waits1 = sim.latencies_waits((1, 0))
+    assert lat1.shape == waits1.shape == (1,)
+    assert np.isfinite(lat1).all() and waits1[0] == 0.0
+    # warm start over a single-query segment
+    lat_w, waits_w, state = sim.latencies_waits_from(sim.initial_state(),
+                                                     (1, 0))
+    np.testing.assert_array_equal(lat_w, lat1)
+    assert np.isfinite(state.free[:1]).all()
+
+
+def test_grid_arr_shard_cache_is_lru_with_hit_refresh():
+    """The per-load-factor-tuple device cache of arrival grids evicts the
+    least *recently used* entry: re-sweeping one level set keeps it resident
+    while fresh sets cycle through."""
+    sim = _sim()
+    arr = np.asarray(sim.workload.arrivals, np.float32)[None, :]
+    hot = ("b", 2, (1.0,))
+    sim._grid_arr_shards(arr, "b", 2, (1.0,))
+    for k in range(7):                          # fill the 8-entry cache
+        sim._grid_arr_shards(arr, "b", 2, (1.0 + 0.1 * (k + 1),))
+    assert hot in sim._grid_arrs and len(sim._grid_arrs) == 8
+    sim._grid_arr_shards(arr, "b", 2, (1.0,))   # hit: refresh recency
+    sim._grid_arr_shards(arr, "b", 2, (9.9,))   # miss: evicts the LRU entry
+    assert hot in sim._grid_arrs                # survived thanks to the hit
+    assert ("b", 2, (1.1,)) not in sim._grid_arrs   # the stalest went
+    assert len(sim._grid_arrs) == 8

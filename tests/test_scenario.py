@@ -215,6 +215,76 @@ def test_restock_supersedes_inflight_provisioning():
         assert all(w.config == tuple(restock.new_config) for w in phase2)
 
 
+# ------------------------------------------------- continuous episode clock
+def test_constant_episode_warm_equals_idle_restart_accounting():
+    """With no cuts there is no backlog to carry: the carried-state clock
+    and the legacy idle-restart accounting produce identical reports."""
+    spec = ScenarioSpec(name="const2", qos_target=0.7, window=100,
+                        init_budget=25,
+                        phases=(PhaseSpec("only", 300, load_factor=1.3),))
+    docs = []
+    for carry in (True, False):
+        rep = ScenarioEngine(spec, _plane(n=300), _space(),
+                             allow_downscale=False,
+                             carry_queue_state=carry).run()
+        docs.append(rep.to_dict())
+    assert docs[0] == docs[1]
+    assert docs[0]["carried_wait_total"] == 0.0
+
+
+def test_backlog_carries_across_capacity_cut():
+    """A mid-phase capacity loss cuts the stream while queries are in
+    flight: the warmed run must report the carried backlog and at least as
+    much violation mass as the idle-restart replay."""
+    spec = ScenarioSpec(
+        name="carry", qos_target=0.9, window=100, init_budget=25,
+        recover_budget=15, provision_queries=100,
+        phases=(PhaseSpec("a", 400, 1.2), PhaseSpec("b", 400, 1.2)),
+        events=(EventSpec("cell_failure", phase=1, at_frac=0.4,
+                          type_index=0, count=2),))
+    warm = ScenarioEngine(spec, _plane(n=400), _space(),
+                          allow_downscale=False,
+                          carry_queue_state=True).run()
+    cold = ScenarioEngine(spec, _plane(n=400), _space(),
+                          allow_downscale=False,
+                          carry_queue_state=False).run()
+    assert warm.carried_wait_total > 0.0
+    carried = [w for w in warm.windows if w.carried_wait > 0.0]
+    assert carried and all(w.carried_wait >= 0.0 for w in warm.windows)
+    assert warm.violation_windows >= cold.violation_windows
+    assert cold.carried_wait_total == 0.0
+    # accounting still covers every query exactly once
+    assert sum(w.end - w.start for w in warm.windows) == 800
+
+
+def test_single_query_segments_finite_accounting():
+    """Cuts that isolate single-query segments flow through the engine
+    without NaN (tiny phases, window 1, event right after the first
+    query)."""
+    spec = ScenarioSpec(
+        name="tiny", qos_target=0.5, window=1, init_budget=10,
+        recover_budget=5,
+        phases=(PhaseSpec("a", 3, 1.0), PhaseSpec("b", 3, 1.0)),
+        events=(EventSpec("cell_failure", phase=1, at_frac=0.4,
+                          type_index=1, count=1),))
+    rep = ScenarioEngine(spec, _plane(n=3), _space(),
+                         allow_downscale=False).run()
+    doc = rep.to_dict()
+    assert doc["total_queries"] == 6
+    assert sum(w.end - w.start for w in rep.windows) == 6
+
+    def walk(x):
+        if isinstance(x, float):
+            assert np.isfinite(x), doc
+        elif isinstance(x, dict):
+            for v in x.values():
+                walk(v)
+        elif isinstance(x, list):
+            for v in x:
+                walk(v)
+    walk(doc)
+
+
 # ---------------------------------------------------------- dist drift
 def test_dist_drift_phases_use_per_dist_tables():
     plane = _plane(n=300, dists=("lognormal", "gaussian"))

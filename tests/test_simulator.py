@@ -1,10 +1,12 @@
-"""FCFS pool simulator: invariants + equivalence with a pure-python oracle."""
+"""FCFS pool simulator: invariants + equivalence with a pure-python oracle,
+plus the continuous-time warm-start contracts (PoolState carry)."""
 
 import numpy as np
 import pytest
 
 from repro.serving.instance import InstanceType, ModelProfile
-from repro.serving.simulator import PoolSimulator
+from repro.serving.simulator import (PoolSimulator, PoolState,
+                                     _MAX_HORIZON)
 from repro.serving.workload import Workload, generate_workload
 
 FAST = InstanceType("fast", price=1.0, flops=1e9, mem_bw=1e9, overhead=1e-3)
@@ -96,3 +98,100 @@ def test_workload_scaling():
     assert hot.rate_qps == pytest.approx(200.0)
     np.testing.assert_allclose(hot.arrivals, wl.arrivals / 2.0)
     np.testing.assert_array_equal(hot.batches, wl.batches)
+
+
+# --------------------------------------------- continuous-time warm starts
+def _slice(wl, lo, hi):
+    return Workload(arrivals=wl.arrivals[lo:hi], batches=wl.batches[lo:hi],
+                    rate_qps=wl.rate_qps)
+
+
+def test_idle_carry_reproduces_cold_paths_bit_for_bit():
+    """initial_state() is the identity element of every *_from entry."""
+    wl = _wl(n=300, rate=200.0)
+    sim = PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=8)
+    for cfg in ((1, 0), (2, 1), (3, 3)):
+        lat, _ = sim.latencies_from(sim.initial_state(), cfg)
+        np.testing.assert_array_equal(lat, sim.latencies(cfg))
+        lat2, waits, _ = sim.latencies_waits_from(sim.initial_state(), cfg)
+        cl, cw = sim.latencies_waits(cfg)
+        np.testing.assert_array_equal(lat2, cl)
+        np.testing.assert_array_equal(waits, cw)
+        rate, _ = sim.qos_rate_from(sim.initial_state(), cfg)
+        assert rate == sim.qos_rate(cfg)
+
+
+def test_warm_chained_segments_bit_identical_to_whole_stream():
+    """Serving a stream in consecutive warm segments reproduces the one-shot
+    scan exactly — the continuity contract the scenario engine rides on."""
+    wl = _wl(n=400, rate=250.0)
+    whole = PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=8)
+    cfg = (2, 1)
+    want = whole.latencies(cfg)
+    got, state = [], None
+    for lo, hi in ((0, 90), (90, 91), (91, 250), (250, 400)):
+        sim = PoolSimulator(PROF, [FAST, SLOW], _slice(wl, lo, hi),
+                            max_instances=8)
+        state = state or sim.initial_state()
+        lat, state = sim.latencies_from(state, cfg)
+        got.append(lat)
+    np.testing.assert_array_equal(want, np.concatenate(got))
+
+
+def test_segment_prefix_carry_matches_device_carry():
+    """state_at(k) (the engine's rollback commit) equals the carry of an
+    actual scan over the first k queries, bit for bit."""
+    wl = _wl(n=300, rate=250.0)
+    sim = PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=8)
+    cfg = (2, 2)
+    seg = sim.segment_from(sim.initial_state(), cfg)
+    for k in (0, 1, 137, 300):
+        head = PoolSimulator(PROF, [FAST, SLOW], _slice(wl, 0, k),
+                             max_instances=8)
+        _, carry = head.latencies_from(head.initial_state(), cfg)
+        np.testing.assert_array_equal(seg.state_at(k).free[:4],
+                                      carry.free[:4])
+
+
+def test_remap_threads_survivors_drops_removed_adds_idle():
+    free = np.array([5.0, 6.0, 7.0, 8.0, 9.0, 0.0], dtype=np.float64)
+    state = PoolState(free=free, clock=2.0)
+    # type 0: 2 -> 1 (slot 1 dropped); type 1: 3 -> 4 (one slot added)
+    out = state.remap((2, 3), (1, 4), now=10.0)
+    assert out.clock == 2.0
+    # survivor of type 0 keeps its in-flight work
+    assert out.free[0] == 5.0
+    # type 1 survivors shift into slots 1..3, added slot idles at `now`
+    np.testing.assert_array_equal(out.free[1:4], [7.0, 8.0, 9.0])
+    assert out.free[4] == 10.0
+    with pytest.raises(ValueError):
+        state.remap((2, 3), (1,), now=0.0)
+    with pytest.raises(ValueError):
+        state.remap((2, 3), (4, 4), now=0.0)
+
+
+def test_carried_wait_counts_only_future_busy_time():
+    state = PoolState(free=np.array([4.0, 1.0, 9.0, 0.0]), clock=1.0)
+    sim = PoolSimulator(PROF, [FAST, SLOW], _wl(n=20), max_instances=4)
+    # local frame: rel free = [3.0, 0.0, 8.0]; at t=2 the backlog is
+    # (3-2) + 0 + (8-2) = 7 over the three active slots
+    assert sim.carried_wait(state, (2, 1), at=2.0) == pytest.approx(7.0)
+    assert sim.carried_wait(state, (0, 0), at=2.0) == 0.0
+
+
+def test_horizon_guard_rejects_big_timestamps():
+    """Timestamps near the _BIG dispatch-priority envelope raise instead of
+    silently corrupting slot choice."""
+    arr = np.array([1.0, 2.0, 2.0 * _MAX_HORIZON])
+    wl = Workload(arrivals=arr, batches=np.array([4, 4, 4]), rate_qps=1.0)
+    with pytest.raises(ValueError, match="envelope"):
+        PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=4)
+    # a warm carry whose backlog exceeds the envelope is rejected too
+    sim = PoolSimulator(PROF, [FAST, SLOW], _wl(n=20), max_instances=4)
+    bad = PoolState(free=np.full(4, 2.0 * _MAX_HORIZON), clock=0.0)
+    with pytest.raises(ValueError, match="envelope"):
+        sim.latencies_from(bad, (1, 1))
+    # rebasing the clock back under the envelope makes the same state fine
+    ok = bad.rebased(2.0 * _MAX_HORIZON)
+    lat, _ = sim.latencies_from(ok, (1, 1))
+    assert np.isfinite(lat).all()
