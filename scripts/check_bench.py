@@ -10,22 +10,31 @@ Three responsibilities:
   ``json`` and would otherwise slip past threshold comparisons.
 * **Perf/behavior thresholds** per bench kind:
   - ``bench == "batch_eval"``: batched B=32 must stay >= 5x the sequential
-    single-config path, and the joint (workload x config) grid dispatch at
+    single-config path; the joint (workload x config) grid dispatch at
     W=4 x B=32 must stay >= 3x the per-workload sequential sweep and remain
-    bit-identical to it.  Smoke artifacts (``--smoke``/``--quick`` runs on a
-    shrunken workload, ``n_queries < 1500``) gate B=32 at a reduced floor —
-    fixed per-dispatch overhead is a larger fraction of the shorter sweeps
-    and CI runners are noisy, but a real regression (the pre-batched
-    sequential path measures ~1x) still lands far below it.  The grid
-    measurement is always taken at full workload size, so its threshold is
-    uniform.
+    bit-identical to it; and the warm candidate lanes (B=32 what-if pools
+    scored from a live backlog in one dispatch) must stay >= 3x the
+    sequential per-candidate warm path, bit-identical to it, with a nonzero
+    mean warm-vs-idle scoring delta (the carried backlog must actually move
+    the scores).  Smoke artifacts (``--smoke``/``--quick`` runs on a
+    shrunken workload, ``n_queries < 1500``) gate B=32 and the warm lane at
+    reduced floors — fixed per-dispatch overhead is a larger fraction of
+    the shorter sweeps and CI runners are noisy, but a real regression (the
+    pre-batched sequential path measures ~1x) still lands far below them.
+    The grid measurement is always taken at full workload size, so its
+    threshold is uniform.
   - ``bench == "scenarios"``: every episode must report
     ``recovered_all_events`` — each injected event's QoS returned to target
-    within the episode (finite adaptation latency) — and episodes with an
+    within the episode (finite adaptation latency); episodes with an
     ``idle_baselines`` entry must report at least as many violation windows
     as the idle-restart baseline (the continuous episode clock carries
     queue backlog across control-plane cuts; losing that mass again would
-    be a regression to the optimistic accounting).
+    be a regression to the optimistic accounting) — compared against the
+    ``matched_scoring`` replay when the artifact records one, because only
+    matched (idle) candidate scoring pins both runs to the same control
+    trajectory; and the flash-crowd / failure-storm episodes must report a
+    nonzero ``warm_idle_delta_total`` (their warm-scored adaptations run
+    from real backlog, so idle scoring was measurably optimistic).
 * **Perf-trend history** (``--history``): upsert every validated artifact's
   trend metrics into ``bench_out/history.jsonl`` keyed by
   (commit, bench, source) — re-running on the same commit replaces the row,
@@ -41,7 +50,10 @@ Usage::
     python scripts/check_bench.py --history       # also append + trend-check
 
 ``--schema-only`` lets CI validate artifacts produced on arbitrary hardware
-without asserting hardware-dependent speedups.
+without asserting hardware-dependent speedups.  It short-circuits
+``--history`` as well: schema-only validation performs no history I/O and
+prints no trend warnings (a schema sweep must not mutate the trend log or
+spam WARN lines about thresholds it was told to skip).
 """
 
 from __future__ import annotations
@@ -62,6 +74,15 @@ MIN_GRID_SPEEDUP = 3.0
 # workload size (see benchmarks/bench_batch_eval.GRID_N_QUERIES), so its
 # threshold does not scale down.
 SMOKE_MIN_SPEEDUP_AT_32 = 4.0
+# Warm candidate lanes (one dispatch scoring B what-if pools from a live
+# backlog) vs B sequential qos_rate_from calls.  The sequential baseline
+# pays per-candidate host-side prefix bookkeeping, so the floor is below
+# the cold B=32 gate; smoke runs gate lower still.
+MIN_WARM_SPEEDUP = 3.0
+SMOKE_MIN_WARM_SPEEDUP = 2.5
+# Episodes whose warm run must show a nonzero warm-vs-idle scoring delta
+# (mirrors benchmarks/bench_scenarios.WARM_DELTA_EPISODES).
+WARM_DELTA_EPISODES = ("flash-crowd", "failure-storm")
 
 RESULT_KEYS = (
     "batch_size",
@@ -76,6 +97,14 @@ GRID_KEYS = (
     "wall_time_grid_s",
     "speedup",
     "bit_identical",
+)
+WARM_KEYS = (
+    "batch_size",
+    "wall_time_sequential_s",
+    "wall_time_batched_s",
+    "speedup",
+    "bit_identical",
+    "warm_idle_delta_mean",
 )
 
 
@@ -155,6 +184,31 @@ def check_batch_eval(doc, label: str) -> list[str]:
             f"{label}: grid W={grid['n_workloads']} B={grid['batch_size']}"
             f" speedup {speedup:.2f}x < required {min_grid:.1f}x",
         )
+    min_warm = SMOKE_MIN_WARM_SPEEDUP if smoke else MIN_WARM_SPEEDUP
+    warm = doc.get("warm")
+    if not isinstance(warm, dict):
+        errors.append(f"{label}: batch_eval artifact has no 'warm' section")
+        return errors
+    missing = [k for k in WARM_KEYS if k not in warm]
+    if missing:
+        errors.append(f"{label}: warm section missing keys {missing}")
+        return errors
+    if not warm["bit_identical"]:
+        errors.append(
+            f"{label}: warm batch results diverge from the sequential "
+            "qos_rate_from path",
+        )
+    if not float(warm["warm_idle_delta_mean"]) > 0.0:
+        errors.append(
+            f"{label}: warm-vs-idle scoring delta is zero — the carried "
+            "backlog no longer moves candidate scores",
+        )
+    speedup = float(warm["speedup"])
+    if speedup < min_warm:
+        errors.append(
+            f"{label}: warm B={warm['batch_size']} speedup {speedup:.2f}x"
+            f" < required {min_warm:.1f}x",
+        )
     return errors
 
 
@@ -164,12 +218,18 @@ def check_scenarios(doc, label: str) -> list[str]:
     a recorded idle-restart baseline must report at least as much
     violation-window mass as that baseline — the continuous-time episode
     clock carries queue backlog across control-plane cuts, which idle
-    restarts used to hide.  Both replays are deterministic per seed, so
-    this is a fidelity tripwire rather than a theorem: the two runs follow
-    their own control trajectories, and a control-policy change that
-    legitimately drops the carried run below the idle baseline (e.g. the
-    carried backlog triggering an *earlier*, better adaptation) should be
-    inspected and re-baselined in bench_scenarios, not silenced."""
+    restarts used to hide.  The comparison runs against the artifact's
+    ``matched_scoring`` replay when present (carried clock + idle candidate
+    scoring): matched scoring pins both runs to the same control
+    trajectory, where the invariant genuinely holds — the headline warm
+    runs score candidates from the backlog and may legitimately adapt
+    *better* than the idle baseline.  Those warm runs are instead gated on
+    a nonzero warm-vs-idle scoring delta for the episodes that inject real
+    backlog at adaptation cuts (``WARM_DELTA_EPISODES``).  All replays are
+    deterministic per seed, so these are fidelity tripwires rather than
+    theorems: a control-policy change that legitimately moves a gated
+    number should be inspected and re-baselined in bench_scenarios, not
+    silenced."""
     errors = []
     episodes = doc.get("episodes")
     if not isinstance(episodes, dict) or not episodes:
@@ -185,10 +245,12 @@ def check_scenarios(doc, label: str) -> list[str]:
                 f"{label}: episode {name!r} did not recover QoS to target "
                 f"after event(s) {bad}",
             )
+    matched = doc.get("matched_scoring")
+    matched = matched if isinstance(matched, dict) else {}
     baselines = doc.get("idle_baselines")
     if isinstance(baselines, dict):
         for name, base in baselines.items():
-            ep = episodes.get(name)
+            ep = matched.get(name) or episodes.get(name)
             if not isinstance(ep, dict) or not isinstance(base, dict):
                 continue
             warm = ep.get("violation_windows")
@@ -201,6 +263,22 @@ def check_scenarios(doc, label: str) -> list[str]:
                         f"its idle-restart baseline ({cold}) — backlog "
                         f"accounting went missing",
                     )
+    for name in WARM_DELTA_EPISODES:
+        ep = episodes.get(name)
+        if not isinstance(ep, dict):
+            continue
+        delta = ep.get("warm_idle_delta_total")
+        if delta is None:
+            errors.append(
+                f"{label}: episode {name!r} has no warm_idle_delta_total — "
+                "warm candidate scoring went missing from the bench",
+            )
+        elif not float(delta) > 0.0:
+            errors.append(
+                f"{label}: episode {name!r} reports a zero warm-vs-idle "
+                "candidate-scoring delta — adaptations are being scored "
+                "from an idle queue again",
+            )
     return errors
 
 
@@ -221,6 +299,9 @@ def trend_metrics(doc) -> dict[str, tuple[float, str]]:
         grid = doc.get("grid")
         if isinstance(grid, dict) and "speedup" in grid:
             out["grid_speedup"] = (float(grid["speedup"]), "higher")
+        warm = doc.get("warm")
+        if isinstance(warm, dict) and "speedup" in warm:
+            out["warm_speedup"] = (float(warm["speedup"]), "higher")
     elif bench == "scenarios":
         for name, ep in (doc.get("episodes") or {}).items():
             if isinstance(ep, dict) and "qos_rate" in ep:
@@ -350,8 +431,12 @@ def main(argv=None) -> int:
         )
         return 1
 
+    # --schema-only short-circuits history entirely: an artifact-only
+    # validation pass must neither mutate the trend log nor print trend
+    # warnings derived from thresholds it was told to skip.
+    history_enabled = args.history and not args.schema_only
     history_path = args.history_file or (args.bench_dir / "history.jsonl")
-    commit = git_commit() if args.history else None
+    commit = git_commit() if history_enabled else None
 
     errors, warnings = [], []
     for path in paths:
@@ -373,7 +458,7 @@ def main(argv=None) -> int:
                 errors.extend(check_batch_eval(doc, label))
             elif doc.get("bench") == "scenarios":
                 errors.extend(check_scenarios(doc, label))
-        if args.history:
+        if history_enabled:
             warnings.extend(update_history(doc, label, history_path, commit))
 
     for warn in warnings:
@@ -383,7 +468,7 @@ def main(argv=None) -> int:
             print(f"check_bench: FAIL — {err}")
         return 1
     mode = "schemas" if args.schema_only else "schemas + perf gates"
-    if args.history:
+    if history_enabled:
         mode += f" + history ({history_path})"
     print(f"check_bench: OK — {len(paths)} artifact(s), {mode}")
     return 0

@@ -28,7 +28,15 @@ either way.
 Segments are measured speculatively: when an adaptation fires mid-segment,
 the engine rewinds to the cut and asks the plane to ``commit`` only the
 queries actually consumed, so the carried state never includes rolled-back
-serving.
+serving.  The commit happens *before* the adaptation search runs, because
+the search itself is warm: every candidate pool is scored from the pool
+state at the cut (``plane.candidate_state()`` → the batched
+``PoolEvaluator.grid_from`` lanes on the simulator plane, measured
+``initial_busy`` probe serves on the live plane) — what-if adaptation
+under the current queue, not from an idle restart.  Each resulting control
+action records ``warm_idle_delta``, the QoS optimism idle scoring would
+have baked into that decision, and the bounds over-provision fallback now
+fires only when even warm-scored candidates come back infeasible.
 
 Control policy per event kind:
 
@@ -79,7 +87,8 @@ class ScenarioEngine:
                  allow_downscale: bool = True, forced_slack: float = 0.03,
                  forced_patience: int = 2, down_patience: int = 2,
                  max_adapts_per_phase: int = 4,
-                 carry_queue_state: bool = True):
+                 carry_queue_state: bool = True,
+                 warm_candidate_scoring: bool | None = None):
         self.spec = spec.validate()
         self.plane = plane
         self.space = space
@@ -89,6 +98,16 @@ class ScenarioEngine:
         # False = legacy idle-restart segment accounting (the bench's
         # baseline mode): every segment served from a drained pool.
         self.carry_queue_state = bool(carry_queue_state)
+        # Whether adaptation searches score candidates from the carried
+        # backlog (warm lanes) or from idle.  Default: follow the
+        # accounting mode.  Forcing False on a carried run isolates the
+        # accounting change — the PR 4 comparison, where both control
+        # trajectories score identically and the carried clock can only
+        # surface violations (the invariant the fuzz harness checks on
+        # matched-scoring runs).
+        self.warm_scoring = (self.carry_queue_state
+                             if warm_candidate_scoring is None
+                             else bool(warm_candidate_scoring))
         self.forced_slack = float(forced_slack)
         self.forced_patience = int(forced_patience)
         # One slack window is Poisson noise; sustained slack is a trough.
@@ -101,27 +120,68 @@ class ScenarioEngine:
         self._pending_switch: tuple[int, tuple] | None = None
 
     # ------------------------------------------------------------- searches
+    def _candidate_state(self):
+        """The plane's what-if (state, deployed) pair when warm candidate
+        scoring is on and the plane carries one, else ``None`` (cold)."""
+        if not self.warm_scoring:
+            return None
+        return self.plane.candidate_state()
+
+    def _search_oracle(self, dist: str, factor: float):
+        """Sequential QoS oracle for the recovery/reprice searches: scores
+        hypothetical deployments from the live backlog when warm scoring
+        is on (``warm_oracle`` itself falls back to cold when the plane
+        has nothing to carry), else cold from idle."""
+        if self.warm_scoring:
+            return self.plane.warm_oracle(dist, factor)
+        return self.plane.oracle(dist, factor)
+
     def _drive(self, opt: RibbonOptimizer, dist: str, factor: float,
                budget: int) -> int:
         """Ask/tell `opt` against the plane at one load level; returns the
         number of evaluations spent.  Uses the grid evaluator's batched
-        dispatch when the plane has one."""
+        dispatch when the plane has one — the warm candidate lanes when a
+        backlog is carried, so every probe is scored under the current
+        queue instead of from idle."""
         ev = self.plane.grid_evaluator(dist)
         if ev is None:
-            return continue_search(opt, self.plane.oracle(dist, factor),
+            return continue_search(opt, self._search_oracle(dist, factor),
                                    budget)
+        cs = self._candidate_state()
+
+        def sweep(cfgs):
+            if cs is None:
+                return ev.grid(cfgs, [factor])
+            return ev.grid_from(cs[0], cfgs, [factor], deployed=cs[1])
+
         n0 = opt.trace.n_samples
         while opt.trace.n_samples - n0 < budget and not opt.done:
             room = budget - (opt.trace.n_samples - n0)
             cfgs = opt.ask_batch(min(self.spec.batch_q, room))
             if not cfgs:
                 break
-            rates = ev.grid(cfgs, [factor])
+            rates = sweep(cfgs)
             for j, cfg in enumerate(cfgs):
                 opt.tell(cfg, float(rates[0, j]))
                 if opt.trace.n_samples - n0 >= budget or opt.done:
                     break
         return opt.trace.n_samples - n0
+
+    def _score_delta(self, dist: str, factor: float, cfg):
+        """Idle-minus-warm QoS of an action's *incumbent* pool at the
+        searched load level — the optimism idle-restart candidate scoring
+        held about the pool being replaced at this cut (a big replacement
+        pool often drains the backlog invisibly, but the incumbent is the
+        one drowning in it).  ``None`` when the plane scores cold or has no
+        grid lanes (the live plane's measured probes)."""
+        cs = self._candidate_state()
+        ev = self.plane.grid_evaluator(dist)
+        if cs is None or ev is None or cfg is None:
+            return None
+        warm = float(ev.grid_from(cs[0], [cfg], [factor],
+                                  deployed=cs[1])[0, 0])
+        idle = float(ev.grid([cfg], [factor])[0, 0])
+        return idle - warm
 
     def _initial_search(self, bounds, prices, dist: str,
                         factor: float) -> tuple[RibbonOptimizer, int]:
@@ -175,12 +235,18 @@ class ScenarioEngine:
         if ev is not None:
             factors = [f for f in self._factors[-3:]
                        if abs(f - factor_est) > 1e-9] + [factor_est]
+            cs = self._candidate_state()
             event = rescale(opt, ev, budget=self.spec.rescale_budget,
                             kind=kind, load_factors=factors,
-                            batch_q=self.spec.batch_q)
+                            batch_q=self.spec.batch_q,
+                            warm_state=cs[0] if cs else None,
+                            deployed=cs[1] if cs else None)
         else:
-            event = rescale(opt, self.plane.oracle(dist, factor_est),
+            event = rescale(opt, self._search_oracle(dist, factor_est),
                             budget=self.spec.rescale_budget, kind=kind)
+            # The sequential path cannot see inside its oracle; label the
+            # scoring mode the engine actually wired up.
+            event.warm_scored = self._candidate_state() is not None
         self._factors.append(factor_est)
         return opt, event.new_best, event.samples_used
 
@@ -309,6 +375,12 @@ class ScenarioEngine:
                         est = self._estimate_factor(seg.arrivals, w, w_hi,
                                                     fallback=factor)
                         est = float(np.clip(est * spec.headroom, 0.05, 20.0))
+                        # Commit the consumed prefix *before* searching so
+                        # what-if candidate scoring (and the redeploy remap)
+                        # sees the pool exactly as it stands at the cut;
+                        # the post-loop commit then no-ops.
+                        consumed = w_hi
+                        plane.commit(consumed)
                         opt, new_best, used = self._adapt_load(
                             opt, phase.batch_dist, est, kind)
                         if kind == "rescale_down":
@@ -343,7 +415,9 @@ class ScenarioEngine:
                             old_price=price,
                             new_price=float(np.dot(prices, new_best))
                             if new_best else price,
-                            bo_evals=used)
+                            bo_evals=used,
+                            warm_idle_delta=self._score_delta(
+                                phase.batch_dist, est, config))
                         report.actions.append(action)
                         pending.append(action)
                         report.bo_evals += used
@@ -357,12 +431,12 @@ class ScenarioEngine:
                         adapts += 1
                         bad_streak = 0
                         down_streak = 0
-                        consumed = w_hi
                         break
                     w = w_hi
                 # Commit only the consumed prefix into the carried pool
                 # state, *then* redeploy: the remap must see the pool as it
                 # stood at the adaptation cut, not past rolled-back serving.
+                # (A no-op when an adaptation already committed at its cut.)
                 plane.commit(consumed)
                 if redeploy:
                     plane.deploy(config)
@@ -392,7 +466,7 @@ class ScenarioEngine:
         outcome = EventOutcome(kind=ev.kind, phase=p, at_query=at_q)
         report.events.append(outcome)
         pending.append(outcome)
-        oracle = self.plane.oracle(phase.batch_dist, factor)
+        oracle = self._search_oracle(phase.batch_dist, factor)
 
         if ev.kind == "load_spike":
             factor = factor * ev.factor
@@ -418,7 +492,9 @@ class ScenarioEngine:
                 old_config=config, new_config=new_cfg,
                 old_price=old_price,
                 new_price=float(np.dot(prices, new_cfg)),
-                bo_evals=sev.samples_used))
+                bo_evals=sev.samples_used,
+                warm_idle_delta=self._score_delta(phase.batch_dist, factor,
+                                                  config)))
             report.bo_evals += sev.samples_used
             return tuple(int(c) for c in new_cfg), opt, factor
 
@@ -446,7 +522,9 @@ class ScenarioEngine:
             old_config=config, new_config=new_cfg,
             old_price=float(np.dot(prices, config)),
             new_price=float(np.dot(prices, new_cfg)),
-            bo_evals=sev.samples_used))
+            bo_evals=sev.samples_used,
+            warm_idle_delta=self._score_delta(phase.batch_dist, factor,
+                                              config)))
         report.bo_evals += sev.samples_used
         if self.spec.provision_queries > 0 and new_cfg != degraded:
             # replacement capacity boots asynchronously: the degraded pool
@@ -464,7 +542,8 @@ class ScenarioEngine:
         # degraded (pre-restock) space
         self._pending_switch = None
         for t, cnt in sorted(restock_next.items()):
-            oracle = self.plane.oracle(phase.batch_dist, phase.load_factor)
+            oracle = self._search_oracle(phase.batch_dist,
+                                         phase.load_factor)
             opt, sev = recover_from_failure(opt, oracle, failed_type=t,
                                             lost=-cnt,
                                             budget=self.spec.recover_budget,
@@ -476,7 +555,10 @@ class ScenarioEngine:
                 old_config=config, new_config=new_cfg,
                 old_price=float(np.dot(prices, config)),
                 new_price=float(np.dot(prices, new_cfg)),
-                bo_evals=sev.samples_used)
+                bo_evals=sev.samples_used,
+                warm_idle_delta=self._score_delta(phase.batch_dist,
+                                                  phase.load_factor,
+                                                  config))
             report.actions.append(action)
             pending.append(action)
             report.bo_evals += sev.samples_used

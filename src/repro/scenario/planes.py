@@ -25,8 +25,16 @@ Both planes speak one small protocol:
     load spike: the anchor-arrival delta that keeps episode time
     continuous);
   * ``oracle(dist, factor)`` — a sequential ``config -> QoS rate`` callable
-    for the search loops (always cold whole-stream evaluations — search
-    probes are hypothetical deployments, not episode serving);
+    for the search loops (cold whole-stream evaluations — hypothetical
+    deployments scored from an idle queue);
+  * ``warm_oracle(dist, factor)`` — the same callable scored from the
+    carried pool state: each probe is a what-if redeploy of the live
+    backlog onto that candidate (falls back to ``oracle`` when there is
+    nothing to carry).  Probes never touch the carried episode state;
+  * ``candidate_state()`` — the (state, deployed config) pair behind that
+    what-if view, rebased to now, for callers driving the batched warm
+    lanes directly (``PoolEvaluator.grid_from``, ``rescale(warm_state=)``);
+    ``None`` when the plane scores cold;
   * ``grid_evaluator(dist)`` — a ``PoolEvaluator`` when the plane supports
     the joint (load x config) grid fast path, else ``None`` (the engine
     then drives the legacy sequential rescale path);
@@ -110,6 +118,17 @@ class _EpisodeClock:
             return
         self._state = self._state.rebased(float(delta))
         self._local_now = max(self._local_now - float(delta), 0.0)
+
+    def candidate_state(self):
+        """(state, deployed_config) for what-if candidate scoring, or
+        ``None`` when the plane scores cold (idle-restart accounting, or no
+        pool deployed yet).  The state is rebased to *now* — its clock is
+        the current episode time, so the remaining backlog reads against a
+        candidate stream's local ``t=0`` and ``PoolState.remap`` at the
+        default ``now`` models redeploying at this instant."""
+        if not self._carry or self._state is None or self._deployed is None:
+            return None
+        return self._state.rebased(self._local_now), self._deployed
 
 
 class SimulatorPlane(_EpisodeClock):
@@ -200,6 +219,19 @@ class SimulatorPlane(_EpisodeClock):
     def oracle(self, dist: str, factor: float):
         ev = self.evaluators[dist]
         return lambda cfg: float(ev.grid([cfg], [factor])[0, 0])
+
+    def warm_oracle(self, dist: str, factor: float):
+        """Sequential ``config -> QoS rate`` scored from the live backlog:
+        each probe is a what-if redeploy of the carried pool state as that
+        candidate (``PoolEvaluator.grid_from``).  Falls back to the cold
+        ``oracle`` when the plane has nothing to carry."""
+        cs = self.candidate_state()
+        if cs is None:
+            return self.oracle(dist, factor)
+        state, dep = cs
+        ev = self.evaluators[dist]
+        return lambda cfg: float(ev.grid_from(state, [cfg], [factor],
+                                              deployed=dep)[0, 0])
 
     def phase_sweep(self, config, phases: list[PhaseSpec]) -> list[float]:
         """Full-stream QoS of one config under every phase's conditions —
@@ -334,6 +366,33 @@ class LivePlane(_EpisodeClock):
             self.n_evals += 1
             return float(self.engine.serve(probe, self.qos_latency,
                                            time_scale=self.time_scale))
+        return evaluate
+
+    def warm_oracle(self, dist: str, factor: float):
+        """Measured what-if scoring from the carried per-cell state: each
+        candidate probe serves with ``initial_busy`` set to the remap of the
+        live pool's backlog onto that candidate (survivors keep in-flight
+        work, added cells start idle) — the live analogue of the
+        simulator's warm candidate lanes.  Probes still never touch the
+        carried episode state."""
+        cs = self.candidate_state()
+        if cs is None:
+            return self.oracle(dist, factor)
+        state, dep = cs
+        probe = _prefix(self.workloads[dist].scaled(factor),
+                        self.probe_queries)
+
+        def evaluate(cfg) -> float:
+            cfgt = tuple(int(c) for c in cfg)
+            self.configure(cfgt)
+            self.n_evals += 1
+            total = sum(cfgt)
+            rel = (np.asarray(state.remap(dep, cfgt,
+                                          state.clock).free[:total],
+                              dtype=np.float64) - state.clock)
+            return float(self.engine.serve(
+                probe, self.qos_latency, time_scale=self.time_scale,
+                initial_busy=rel * self.time_scale))
         return evaluate
 
     def phase_sweep(self, config, phases) -> None:

@@ -4,7 +4,10 @@ Each builder returns a :class:`ScenarioSpec` scaled by ``n`` (queries per
 phase) and ``window`` (queries per monitoring window) so the same episode
 runs as a CI smoke (small ``n``) or a full study.  Phases are prefixes of
 one base stream per batch distribution, so every episode is deterministic
-from its seed.
+from its seed — including :func:`composite`, which *samples* its event
+timeline from the seed (fuzz-style robustness sweeps over the other
+builders' building blocks; see tests/test_composite_fuzz.py for the
+seeded property harness).
 
 Episodes run under the engine's continuous-time clock: queue backlog
 survives every control-plane cut these timelines inject, so the
@@ -16,6 +19,8 @@ per-episode baseline).
 """
 
 from __future__ import annotations
+
+import numpy as np
 
 from .spec import EventSpec, PhaseSpec, ScenarioSpec
 
@@ -108,12 +113,72 @@ def dist_drift(n: int = 500, window: int = 100, seed: int = 0,
         ))
 
 
+def composite(n: int = 500, window: int = 100, seed: int = 0,
+              qos_target: float = 0.99, n_events: int = 4) -> ScenarioSpec:
+    """Randomized fuzz episode: a seeded timeline sampled from the
+    registry's building blocks (cell failure, spot preemption — restocked
+    at the next phase boundary by the engine — price change, load spike)
+    over phases with randomized load factors.
+
+    Sampling is fully determined by ``seed`` (one ``default_rng`` stream),
+    so every composite replays bit-for-bit — the fuzz harness in
+    tests/test_composite_fuzz.py sweeps seeds and asserts the continuous-
+    clock invariants (every event recovers, finite carried backlog, warm
+    violation mass >= the idle-restart baseline) on each one.  Sampling is
+    constrained to keep episodes recoverable by construction: events land
+    in the first 55% of a non-final phase, at most one spike per phase, at
+    most two capacity losses per instance type (count 1 each), and spike /
+    price factors stay in moderate ranges.
+    """
+    if n_events < 1:
+        raise ValueError("n_events must be >= 1")
+    rng = np.random.default_rng(seed)
+    n_phases = int(min(n_events, 3)) + 1
+    phases = tuple(
+        PhaseSpec(f"phase{p}", n,
+                  load_factor=round(float(rng.uniform(0.8, 1.1)), 3))
+        for p in range(n_phases))
+    kinds = ("cell_failure", "spot_preemption", "price_change", "load_spike")
+    losses = {0: 0, 1: 0}
+    spiked: set[int] = set()
+    events = []
+    for _ in range(int(n_events)):
+        kind = str(rng.choice(kinds))
+        phase = int(rng.integers(0, n_phases - 1))
+        at = round(float(rng.uniform(0.15, 0.55)), 3)
+        if kind == "load_spike" and phase not in spiked:
+            spiked.add(phase)
+            events.append(EventSpec("load_spike", phase=phase, at_frac=at,
+                                    factor=round(float(rng.uniform(1.2,
+                                                                   1.5)),
+                                                 3)))
+            continue
+        if kind in ("cell_failure", "spot_preemption"):
+            t = int(rng.integers(0, 2))
+            if losses[t] < 2:
+                losses[t] += 1
+                events.append(EventSpec(kind, phase=phase, at_frac=at,
+                                        type_index=t, count=1))
+                continue
+        # Saturated samples (second spike in a phase, third loss of a type)
+        # degrade to a price change — always safe, always recoverable.
+        events.append(EventSpec("price_change", phase=phase, at_frac=at,
+                                type_index=int(rng.integers(0, 2)),
+                                factor=round(float(rng.uniform(0.7, 1.5)),
+                                             3)))
+    return ScenarioSpec(name="composite", seed=seed,
+                        qos_target=qos_target, window=window,
+                        provision_queries=window, phases=phases,
+                        events=tuple(events))
+
+
 EPISODES = {
     "diurnal": diurnal,
     "flash-crowd": flash_crowd,
     "spot-churn": spot_churn,
     "failure-storm": failure_storm,
     "dist-drift": dist_drift,
+    "composite": composite,
 }
 
 

@@ -58,6 +58,12 @@ class ControlAction:
     new_price: float
     bo_evals: int
     recovery_queries: int | None = None
+    # Idle-minus-warm QoS of the *incumbent* pool at the searched load
+    # level: the optimism idle-restart candidate scoring held about the
+    # pool this action replaced at its cut.  None when the action was
+    # scored cold (idle-restart accounting, or a plane without the grid
+    # lanes).
+    warm_idle_delta: float | None = None
 
 
 @dataclass
@@ -116,6 +122,15 @@ class EpisodeReport:
         return float(sum(w.carried_wait for w in self.windows))
 
     @property
+    def warm_idle_delta_total(self) -> float:
+        """Summed |idle − warm| candidate-scoring gap over the control
+        actions: how far idle-restart scoring would have mis-estimated the
+        QoS of the pools this episode actually chose.  0.0 when every
+        action was scored cold (or no action fired)."""
+        return float(sum(abs(a.warm_idle_delta) for a in self.actions
+                         if a.warm_idle_delta is not None))
+
+    @property
     def recovered_all_events(self) -> bool:
         """True when every injected event's QoS recovered to target."""
         return all(e.recovery_queries is not None for e in self.events)
@@ -136,6 +151,7 @@ class EpisodeReport:
             "n_windows": self.n_windows,
             "violation_windows": self.violation_windows,
             "carried_wait_total": float(self.carried_wait_total),
+            "warm_idle_delta_total": float(self.warm_idle_delta_total),
             "n_events": len(self.events),
             "recovered_all_events": bool(self.recovered_all_events),
             "phases": [{
@@ -164,6 +180,8 @@ class EpisodeReport:
                 "bo_evals": int(a.bo_evals),
                 "recovery_queries": (None if a.recovery_queries is None
                                      else int(a.recovery_queries)),
+                "warm_idle_delta": (None if a.warm_idle_delta is None
+                                    else float(a.warm_idle_delta)),
             } for a in self.actions],
             "windows": [{
                 "phase": int(w.phase), "start": int(w.start),

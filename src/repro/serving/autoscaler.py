@@ -84,11 +84,15 @@ class ScaleEvent:
     # Grid path only: measured QoS rate of the new optimum at every
     # monitored load level {factor: rate} — the autoscaler's robustness view.
     qos_by_load: dict | None = None
+    # True when candidates (and qos_by_load) were scored warm — from the
+    # live pool's carried backlog — rather than from an idle queue.
+    warm_scored: bool = False
 
 
 def rescale(optimizer: RibbonOptimizer, evaluate_qos, budget: int = 40,
             kind: str = "load_change", load_factors=None,
-            target_index: int = -1, batch_q: int = 8) -> ScaleEvent:
+            target_index: int = -1, batch_q: int = 8, warm_state=None,
+            deployed=None, now=None) -> ScaleEvent:
     """Respond to a detected change: measure the incumbent on the new load,
     warm-restart the BO with the paper's estimation/pruning transfer, and
     search to the new optimum.
@@ -111,16 +115,32 @@ def rescale(optimizer: RibbonOptimizer, evaluate_qos, budget: int = 40,
       calls of ``evaluate_qos(config)`` — kept for plain-callable oracles
       (fault recovery, tests).
 
-    ``budget`` counts post-restart evaluations at the target level.
+    ``warm_state`` (grid path only, with ``deployed``/``now``) switches
+    candidate scoring to the warm lanes: every candidate is evaluated from
+    the live pool's carried backlog via ``evaluate_qos.grid_from`` (each
+    candidate's initial carry is the remap of the ``deployed`` pool's state
+    at episode time ``now``) instead of from an idle queue — the what-if
+    adaptation view.  ``budget`` counts post-restart evaluations at the
+    target level either way.
     """
     old_best = optimizer.best_config
     old_cost = optimizer.best_cost
     if load_factors is not None:
-        if not hasattr(evaluate_qos, "grid"):
+        warm = warm_state is not None
+        needed = "grid_from" if warm else "grid"
+        if not hasattr(evaluate_qos, needed):
             raise TypeError("rescale with load_factors needs an evaluator "
-                            "with a .grid(configs, load_factors) method")
+                            f"with a .{needed}(configs, load_factors) "
+                            "method")
         factors = [float(f) for f in load_factors]
-        incumbent = evaluate_qos.grid([old_best], factors)
+
+        def sweep(configs):
+            if warm:
+                return evaluate_qos.grid_from(warm_state, configs, factors,
+                                              deployed=deployed, now=now)
+            return evaluate_qos.grid(configs, factors)
+
+        incumbent = sweep([old_best])
         optimizer.warm_restart(float(incumbent[target_index, 0]))
         n0 = optimizer.trace.n_samples
         while optimizer.trace.n_samples - n0 < budget and not optimizer.done:
@@ -128,7 +148,7 @@ def rescale(optimizer: RibbonOptimizer, evaluate_qos, budget: int = 40,
             configs = optimizer.ask_batch(min(batch_q, room))
             if not configs:
                 break
-            rates = evaluate_qos.grid(configs, factors)
+            rates = sweep(configs)
             for j, cfg in enumerate(configs):
                 optimizer.tell(cfg, float(rates[target_index, j]))
                 if (optimizer.trace.n_samples - n0 >= budget
@@ -138,13 +158,13 @@ def rescale(optimizer: RibbonOptimizer, evaluate_qos, budget: int = 40,
         qos_by_load = None
         if best is not None:
             # Cache hits: the winner was already swept across every level.
-            column = evaluate_qos.grid([best.config], factors)[:, 0]
+            column = sweep([best.config])[:, 0]
             qos_by_load = {f: float(r) for f, r in zip(factors, column)}
         return ScaleEvent(kind=kind, old_best=old_best, old_cost=old_cost,
                           new_best=best.config if best else None,
                           new_cost=best.cost if best else None,
                           samples_used=optimizer.trace.n_samples - n0 + 1,
-                          qos_by_load=qos_by_load)
+                          qos_by_load=qos_by_load, warm_scored=warm)
 
     new_rate = float(evaluate_qos(old_best))
     optimizer.warm_restart(new_rate)

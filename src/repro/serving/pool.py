@@ -40,6 +40,11 @@ class PoolEvaluator:
     # and small batches waste < 2x padding instead of simulating a full
     # fixed-size chunk.
     _chunk: ClassVar[int] = 64
+    # Warm-keyed memo bound: per-cell caches are kept for this many distinct
+    # (state, deployed, now) warm keys, LRU — an adaptation re-sweeping its
+    # monitored levels from one cut hits the memo, while long-gone cuts
+    # (every adaptation carries a fresh backlog) age out.
+    _warm_states: ClassVar[int] = 4
 
     def __post_init__(self):
         self.sim = PoolSimulator(self.model, self.types, self.workload,
@@ -48,6 +53,8 @@ class PoolEvaluator:
         # (load_factor, config) -> rate for factors != 1.0; the unit factor
         # shares self._cache so grid sweeps and plain calls see one memo.
         self._grid_cache: dict[tuple[float, tuple[int, ...]], float] = {}
+        # warm key -> {(load_factor, config) -> rate}; see grid_from.
+        self._warm_cache: dict[tuple, dict] = {}
 
     def __call__(self, config) -> float:
         key = tuple(int(c) for c in config)
@@ -116,12 +123,23 @@ class PoolEvaluator:
         rescale loop's incumbent + candidates × monitored levels costs one
         device round-trip.  ``n_evals`` counts newly simulated cells only.
         """
+        return self._sweep_grid(configs, load_factors, self._cell_get,
+                                self._cell_put, self.sim.qos_rate_grid)
+
+    def _sweep_grid(self, configs, load_factors, cell_get, cell_put,
+                    dispatch) -> np.ndarray:
+        """Shared memoized (load level × config) sweep behind ``grid`` and
+        ``grid_from``: misses are evaluated as a cross product — every load
+        level with any miss × every config missing somewhere — in
+        ``_chunk``-bounded ``dispatch(chunk, rows)`` calls, so one rescale
+        round costs one device round-trip whichever memo backs it.
+        ``n_evals`` counts newly simulated cells only."""
         keys = [tuple(int(c) for c in cfg) for cfg in configs]
         factors = [float(f) for f in load_factors]
         uniq_keys = list(dict.fromkeys(keys))
         uniq_factors = list(dict.fromkeys(factors))
         missing = {(f, k) for f in uniq_factors for k in uniq_keys
-                   if self._cell_get(f, k) is None}
+                   if cell_get(f, k) is None}
         if missing:
             cols = [k for k in uniq_keys if any((f, k) in missing
                                                 for f in uniq_factors)]
@@ -129,13 +147,48 @@ class PoolEvaluator:
                                                    for k in cols)]
             for chunk, i, n in self._pow2_chunks(
                     np.asarray(cols, dtype=np.int64)):
-                rates = self.sim.qos_rate_grid(chunk, rows)[:, :n]
+                rates = dispatch(chunk, rows)[:, :n]
                 for w, f in enumerate(rows):
                     for b, k in enumerate(cols[i:i + self._chunk]):
-                        self._cell_put(f, k, float(rates[w, b]))
+                        cell_put(f, k, float(rates[w, b]))
             self.n_evals += len(missing)
-        return np.asarray([[self._cell_get(f, k) for k in keys]
+        return np.asarray([[cell_get(f, k) for k in keys]
                            for f in factors], dtype=np.float64)
+
+    def grid_from(self, state, configs, load_factors, deployed=None,
+                  now=None) -> np.ndarray:
+        """Warm-start ``grid``: QoS rates of candidate pools scored from a
+        live carry (each candidate's initial state is the ``PoolState.remap``
+        of the currently ``deployed`` pool — what-if adaptation under the
+        current queue).  Cell ``[w, b]`` equals ``qos_rate_from`` on the
+        scaled workload bound to that candidate's remapped state, exactly.
+
+        Memoized per (warm state, load factor, config) cell: a rescale round
+        re-sweeping its monitored levels from one adaptation cut costs one
+        device dispatch, and the per-state caches are LRU-bounded
+        (``_warm_states``) because every cut carries a fresh backlog — warm
+        cells, unlike the cold memo, go stale with their cut.  ``n_evals``
+        counts newly simulated cells only.
+        """
+        warm_key = (
+            None if deployed is None else tuple(int(c) for c in deployed),
+            None if now is None else float(now),
+            float(state.clock),
+            tuple(np.asarray(state.free, dtype=np.float64).tolist()),
+        )
+        cache = self._warm_cache.pop(warm_key, None)
+        if cache is None:
+            cache = {}
+            while len(self._warm_cache) >= self._warm_states:
+                self._warm_cache.pop(next(iter(self._warm_cache)))
+        # (Re-)inserting moves the key to the recent end of the dict.
+        self._warm_cache[warm_key] = cache
+        return self._sweep_grid(
+            configs, load_factors,
+            lambda f, k: cache.get((f, k)),
+            lambda f, k, rate: cache.__setitem__((f, k), rate),
+            lambda chunk, rows: self.sim.qos_rate_grid_from(
+                state, chunk, rows, deployed=deployed, now=now))
 
     def exhaustive(self, space: SearchSpace, qos_target: float,
                    load_factor: float = 1.0):

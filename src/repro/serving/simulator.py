@@ -55,6 +55,16 @@ work, removed slots drop it, added slots start idle), and ``segment_from``
 exposes the per-prefix carry the scenario engine needs when it rolls a
 segment back to an adaptation cut (tests/test_simulator.py,
 tests/test_scenario.py).
+
+Warm starts ride the batched and grid lanes too: ``latencies_batch_from`` /
+``qos_rate_batch_from`` and ``latencies_grid_from`` / ``qos_rate_grid_from``
+evaluate B *candidate* pools from one live carry in a single dispatch —
+each candidate's initial carry is a vectorized ``PoolState.remap_batch`` of
+the deployed pool's state (what-if adaptation under the current queue, not
+from idle).  Every cell stays bit-identical to the sequential ``*_from``
+path on that candidate's remapped state, and the idle carry at clock 0
+reproduces the cold batched/grid paths bit for bit
+(tests/test_warm_lanes.py).
 """
 
 from __future__ import annotations
@@ -147,6 +157,40 @@ class PoolState:
             k = int(min(old[t], new[t]))
             free[nc[t]:nc[t] + k] = self.free[oc[t]:oc[t] + k]
         return PoolState(free=free, clock=self.clock)
+
+    def remap_batch(self, old_config, new_configs, now: float) -> np.ndarray:
+        """Vectorized what-if remap: the initial carry of every candidate in
+        a batch, produced from one live pool's state in one shot.
+
+        Row ``b`` of the returned ``(B, n_slots)`` float64 matrix equals
+        ``remap(old_config, new_configs[b], now).free`` exactly — per type,
+        the first ``min(old, new_b)`` slots survive with their in-flight
+        work, removed slots drop it, and added slots start idle at ``now``.
+        This is the batched/grid warm lanes' entry ramp: B candidate pools
+        scored from the current backlog share one remap and one dispatch.
+        """
+        old = np.asarray(old_config, dtype=np.int64)
+        new = np.asarray(new_configs, dtype=np.int64)
+        if old.ndim != 1 or new.ndim != 2 or new.shape[1] != len(old):
+            raise ValueError("new_configs must be (B, n_types) with n_types "
+                             "matching old_config")
+        n_slots = len(self.free)
+        if old.sum() > n_slots or (new.sum(axis=1) > n_slots).any():
+            raise ValueError("config exceeds the state's slot padding")
+        n_b = len(new)
+        slots = np.arange(n_slots)
+        cum = np.cumsum(new, axis=1)                         # (B, T)
+        active = slots[None, :] < cum[:, -1:]                # (B, S)
+        # Type of each new slot (clamped for inactive slots), its index
+        # within the type, and the matching old slot — all closed-form.
+        t_of = np.minimum((slots[None, None, :] >= cum[:, :, None]).sum(
+            axis=1), len(old) - 1)                           # (B, S)
+        rows = np.arange(n_b)[:, None]
+        j = slots[None, :] - (cum - new)[rows, t_of]         # idx within type
+        survive = active & (j < np.minimum(old, new)[rows, t_of])
+        oc = np.concatenate([[0], np.cumsum(old)])
+        src = np.clip(oc[:-1][t_of] + j, 0, n_slots - 1)
+        return np.where(survive, self.free[src], float(now))
 
 
 @dataclass
@@ -527,6 +571,144 @@ class PoolSimulator:
                - float(state.clock))
         return float(np.maximum(rel - float(at), 0.0).sum())
 
+    # ------------------------------------------------ warm batched / grid
+    def _warm_free_matrix(self, state: PoolState, configs: np.ndarray,
+                          deployed, now) -> np.ndarray:
+        """(B, max_instances) float64 episode next-free matrix: candidate
+        ``b``'s initial carry.  With ``deployed`` given, each row is the
+        vectorized ``PoolState.remap`` of switching the live pool (currently
+        ``deployed``) to ``configs[b]`` at episode time ``now`` (default:
+        the local stream origin ``state.clock``); with ``deployed=None``
+        every candidate inherits the carry slot-for-slot."""
+        if len(state.free) != self.max_instances:
+            raise ValueError(
+                f"state has {len(state.free)} slots, simulator pads to "
+                f"{self.max_instances}")
+        if deployed is None:
+            return np.broadcast_to(
+                np.asarray(state.free, dtype=np.float64),
+                (len(configs), self.max_instances))
+        t_now = float(state.clock) if now is None else float(now)
+        return state.remap_batch(deployed, configs, t_now)
+
+    def _warm_free0_rows(self, state: PoolState, free_matrix: np.ndarray,
+                         active: np.ndarray, horizon: float,
+                         context: str) -> np.ndarray:
+        """(B, S) float32 initial carries in the bound stream's local frame
+        — the batched mirror of ``_warm_free0`` (same float64 subtraction,
+        same float32 cast, same horizon guard), so each row is bit-identical
+        to what the sequential warm path would build for that candidate."""
+        rel = np.asarray(free_matrix, dtype=np.float64) - float(state.clock)
+        if active.any():
+            horizon = max(horizon, float(rel[active].max()))
+        _check_horizon(horizon, context)
+        return np.where(active, rel.astype(np.float32), np.float32(_INF))
+
+    def latencies_batch_from(self, state: PoolState, configs, deployed=None,
+                             now=None) -> tuple[np.ndarray, list[PoolState]]:
+        """Warm-start ``latencies_batch``: B candidate pools served from the
+        live backlog in one dispatch, plus each candidate's final carry.
+
+        Row ``i`` is bit-identical to ``latencies_from(state_i, configs[i])``
+        where ``state_i`` is ``state`` itself (``deployed=None``) or
+        ``state.remap(deployed, configs[i], now)`` — the what-if carry of
+        redeploying the live pool as candidate ``i`` at episode time ``now``
+        (default ``state.clock``, i.e. the bound stream's local origin).
+        The idle carry at clock 0 therefore reproduces the cold
+        ``latencies_batch`` bit for bit.
+        """
+        configs = np.asarray(configs, dtype=np.int64)
+        n = self.workload.n_queries
+        if configs.size == 0:
+            return np.zeros((0, n), dtype=np.float64), []
+        free_mat = self._warm_free_matrix(state, configs, deployed, now)
+        type_of_slot, active = self._slots_batch(configs)
+        if n == 0:
+            # Empty stream: every candidate's carry passes through unchanged.
+            states = [PoolState(free=free_mat[b].copy(), clock=state.clock)
+                      for b in range(len(configs))]
+            return np.zeros((len(configs), 0), dtype=np.float64), states
+        free0 = self._warm_free0_rows(
+            state, free_mat, active, float(self.workload.arrivals[-1]),
+            "warm-start batch")
+        free_f, (lat, _, _) = _simulate_scan_batch(
+            self._arrivals, self._service, jnp.asarray(type_of_slot),
+            self._priority, jnp.asarray(free0))
+        out = np.asarray(jax.device_get(lat), dtype=np.float64)
+        out[configs.sum(axis=1) == 0, :] = np.inf
+        final_rel = np.asarray(jax.device_get(free_f), dtype=np.float64)
+        free_out = np.where(active, final_rel + float(state.clock), free_mat)
+        states = [PoolState(free=free_out[b], clock=state.clock)
+                  for b in range(len(configs))]
+        return out, states
+
+    def qos_rate_batch_from(self, state: PoolState, configs, deployed=None,
+                            now=None) -> tuple[np.ndarray, list[PoolState]]:
+        """Warm-start ``qos_rate_batch``: element ``i`` equals
+        ``qos_rate_from(state_i, configs[i])`` exactly (same device
+        latencies, same host-side float64 threshold comparison)."""
+        lat, states = self.latencies_batch_from(state, configs, deployed,
+                                                now)
+        return np.mean(lat <= self.model.qos_latency, axis=1), states
+
+    def latencies_grid_from(self, state: PoolState, configs, load_factors,
+                            service_tables=None, deployed=None,
+                            now=None) -> np.ndarray:
+        """Warm-start ``latencies_grid``: (W, B, n_queries) float64 where
+        cell ``[w, b]`` equals ``PoolSimulator(..., workload.scaled(
+        load_factors[w])).latencies_from(state_b, configs[b])[0]`` bit for
+        bit, with ``state_b`` the per-candidate remap described in
+        ``latencies_batch_from``.  Backlog is wall-clock: scaling compresses
+        the arrival stream but the carried busy seconds stay put, so one
+        (B, S) carry serves every workload row."""
+        configs = np.asarray(configs, dtype=np.int64)
+        arrivals = self._stacked_arrivals(load_factors)
+        tables = self._stacked_service(service_tables, len(arrivals))
+        if configs.size == 0:
+            return np.zeros((len(arrivals), 0, self.workload.n_queries),
+                            dtype=np.float64)
+        free_mat = self._warm_free_matrix(state, configs, deployed, now)
+        type_of_slot, active = self._slots_batch(configs)
+        free0 = jnp.asarray(self._warm_free0_rows(
+            state, free_mat, active, float(arrivals[:, -1].max()),
+            "warm-start grid"))
+        if tables is None:
+            _, (lat, _, _) = _simulate_scan_grid(
+                jnp.asarray(arrivals, jnp.float32), self._service,
+                jnp.asarray(type_of_slot), self._priority, free0)
+        else:
+            _, (lat, _, _) = _simulate_scan_grid_tables(
+                jnp.asarray(arrivals, jnp.float32), tables,
+                jnp.asarray(type_of_slot), self._priority, free0)
+        out = np.asarray(jax.device_get(lat), dtype=np.float64)
+        out[:, configs.sum(axis=1) == 0, :] = np.inf
+        return out
+
+    def qos_rate_grid_from(self, state: PoolState, configs, load_factors,
+                           service_tables=None, deployed=None,
+                           now=None) -> np.ndarray:
+        """Warm-start ``qos_rate_grid``: the fused count scan from the
+        candidates' carries.  Cell ``[w, b]`` equals ``PoolSimulator(...,
+        workload.scaled(load_factors[w])).qos_rate_from(state_b,
+        configs[b])[0]`` exactly — the rounded-down float32 threshold (see
+        ``_qos_threshold_f32``) keeps the device-side counts bit-compatible
+        with the host comparison, warm carries included — and the idle carry
+        at clock 0 reproduces the cold ``qos_rate_grid`` bit for bit."""
+        configs = np.asarray(configs, dtype=np.int64)
+        arrivals = self._stacked_arrivals(load_factors)
+        n_w = len(arrivals)
+        tables = self._stacked_service(service_tables, n_w)
+        if configs.size == 0:
+            return np.zeros((n_w, 0), dtype=np.float64)
+        free_mat = self._warm_free_matrix(state, configs, deployed, now)
+        type_of_slot, active = self._slots_batch(configs)
+        free0 = self._warm_free0_rows(
+            state, free_mat, active, float(arrivals[:, -1].max()),
+            "warm-start grid")
+        counts = self._qos_counts_grid(arrivals, tables, type_of_slot,
+                                       free0, configs, load_factors)
+        return counts.astype(np.float64) / self.workload.n_queries
+
     # ------------------------------------------------------------- batched
     def latencies_batch(self, configs) -> np.ndarray:
         """Per-query latencies for a batch of pool configs in one dispatch.
@@ -655,11 +837,21 @@ class PoolSimulator:
         if configs.size == 0:
             return np.zeros((n_w, 0), dtype=np.float64)
         type_of_slot, active = self._slots_batch(configs)
-        width = self._grid_slot_pad(configs.sum(axis=1))
+        counts = self._qos_counts_grid(arrivals, tables, type_of_slot,
+                                       _cold_free0(active), configs,
+                                       load_factors)
+        return counts.astype(np.float64) / self.workload.n_queries
 
+    def _qos_counts_grid(self, arrivals, tables, type_of_slot, free0_rows,
+                         configs, load_factors) -> np.ndarray:
+        """One fused (W, B) QoS-count sweep from per-config initial carries
+        (``free0_rows``: (B, max_instances) float32) — the shared dispatch
+        behind ``qos_rate_grid`` (idle carries) and ``qos_rate_grid_from``
+        (warm carries), so both ride the identical executables."""
+        width = self._grid_slot_pad(configs.sum(axis=1))
         arr = np.asarray(arrivals, np.float32)                # (W, nq)
         tos = np.ascontiguousarray(type_of_slot[:, :width])   # (B, S)
-        free0 = np.ascontiguousarray(_cold_free0(active[:, :width]))
+        free0 = np.ascontiguousarray(free0_rows[:, :width])
 
         qos_t = jnp.float32(_qos_threshold_f32(self.model.qos_latency))
         n_dev = jax.local_device_count()
@@ -669,19 +861,17 @@ class PoolSimulator:
                 jnp.asarray(tos), self._priority[:width],
                 jnp.asarray(free0), jnp.arange(width, dtype=jnp.int32),
                 qos_t)
-            counts = np.asarray(jax.device_get(counts))
-        elif n_dev > 1:
+            return np.asarray(jax.device_get(counts))
+        if n_dev > 1:
             factors = tuple(float(f) for f in np.asarray(load_factors,
                                                          dtype=np.float64))
-            counts = self._dispatch_grid_sharded(arr, tos, free0, width,
-                                                 n_dev, factors)
-        else:
-            counts, _ = _grid_counts_jit(
-                jnp.asarray(arr), self._service.T, jnp.asarray(tos),
-                self._priority[:width], jnp.asarray(free0),
-                jnp.arange(width, dtype=jnp.int32), qos_t)
-            counts = np.asarray(jax.device_get(counts))
-        return counts.astype(np.float64) / self.workload.n_queries
+            return self._dispatch_grid_sharded(arr, tos, free0, width,
+                                               n_dev, factors)
+        counts, _ = _grid_counts_jit(
+            jnp.asarray(arr), self._service.T, jnp.asarray(tos),
+            self._priority[:width], jnp.asarray(free0),
+            jnp.arange(width, dtype=jnp.int32), qos_t)
+        return np.asarray(jax.device_get(counts))
 
     def _grid_replicated_consts(self, width: int, n_dev: int) -> tuple:
         """Per-device replicas of the sweep constants (service table,

@@ -1,0 +1,107 @@
+"""scripts/check_bench.py CLI behavior on a temp bench dir.
+
+Regression under test: ``--schema-only`` must short-circuit ``--history``
+*before* any history I/O — a schema-only sweep used to append trend rows
+and print regression WARNs for thresholds it was told to skip.
+"""
+
+import importlib.util
+import json
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _load_check_bench():
+    spec = importlib.util.spec_from_file_location(
+        "check_bench", REPO_ROOT / "scripts" / "check_bench.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+CB = _load_check_bench()
+
+
+def _artifact(tmp_path, qos=0.5):
+    doc = {
+        "schema_version": CB.SCHEMA_VERSION,
+        "bench": "scenarios",
+        "episodes": {
+            "ep": {"qos_rate": qos, "total_cost": 1.0,
+                   "recovered_all_events": True, "violation_windows": 3},
+        },
+    }
+    path = tmp_path / "BENCH_scenarios.json"
+    path.write_text(json.dumps(doc))
+    return path
+
+
+def _prior_history(tmp_path):
+    """A prior entry from a different commit whose qos_rate is far better —
+    any history trend pass over the artifact below must WARN."""
+    hist = tmp_path / "history.jsonl"
+    hist.write_text(json.dumps({
+        "commit": "0000000", "bench": "scenarios",
+        "source": str(tmp_path / "BENCH_scenarios.json"),
+        "metrics": {"ep.qos_rate": [1.0, "higher"]},
+    }) + "\n")
+    return hist
+
+
+def _run(tmp_path, *flags, capsys=None):
+    args = [str(_artifact(tmp_path)), "--bench-dir", str(tmp_path),
+            "--history-file", str(tmp_path / "history.jsonl"), *flags]
+    rc = CB.main(args)
+    out = capsys.readouterr().out if capsys else ""
+    return rc, out
+
+
+def test_schema_only_history_does_no_history_io(tmp_path, capsys):
+    rc, out = _run(tmp_path, "--schema-only", "--history", capsys=capsys)
+    assert rc == 0
+    assert not (tmp_path / "history.jsonl").exists()
+    assert "WARN" not in out
+    assert "history" not in out          # mode line must not advertise it
+
+
+def test_schema_only_history_leaves_existing_log_untouched_and_silent(
+        tmp_path, capsys):
+    hist = _prior_history(tmp_path)
+    before = hist.read_text()
+    rc, out = _run(tmp_path, "--schema-only", "--history", capsys=capsys)
+    assert rc == 0
+    assert hist.read_text() == before    # no upsert, no rewrite
+    assert "WARN" not in out             # no trend warnings in schema mode
+
+
+def test_history_without_schema_only_still_warns_and_appends(tmp_path,
+                                                             capsys):
+    hist = _prior_history(tmp_path)
+    rc, out = _run(tmp_path, "--history", capsys=capsys)
+    assert rc == 0
+    assert "WARN" in out and "ep.qos_rate" in out
+    lines = [json.loads(ln) for ln in hist.read_text().splitlines()]
+    assert len(lines) == 2               # prior row + this run's upsert
+    assert "history" in out
+
+
+def test_schema_only_skips_kind_gates_but_validates_schema(tmp_path,
+                                                           capsys):
+    # warm_idle_delta gates etc. are kind checks: skipped in schema mode
+    path = tmp_path / "BENCH_scenarios.json"
+    path.write_text(json.dumps({
+        "schema_version": CB.SCHEMA_VERSION, "bench": "scenarios",
+        "episodes": {"flash-crowd": {"recovered_all_events": False}},
+    }))
+    assert CB.main([str(path), "--schema-only"]) == 0
+    capsys.readouterr()
+    assert CB.main([str(path)]) == 1     # gates fire without --schema-only
+    out = capsys.readouterr().out
+    assert "did not recover" in out
+    assert "warm_idle_delta_total" in out
+    # a schema violation still fails schema-only mode
+    bad = tmp_path / "BENCH_bad.json"
+    bad.write_text(json.dumps({"schema_version": CB.SCHEMA_VERSION,
+                               "bench": "x", "v": float("inf")}))
+    assert CB.main([str(bad), "--schema-only"]) == 1

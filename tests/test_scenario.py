@@ -285,6 +285,39 @@ def test_single_query_segments_finite_accounting():
     walk(doc)
 
 
+def test_warm_candidate_scoring_records_delta_and_knob_decouples():
+    """Warm runs score adaptation candidates from the carried backlog and
+    record the idle-vs-warm gap per action; idle-restart runs and
+    matched-scoring runs (carry accounting, idle scoring — the PR 4
+    configuration) record none."""
+    spec = ScenarioSpec(
+        name="spike-delta", qos_target=0.9, window=100, init_budget=25,
+        rescale_budget=15,
+        phases=(PhaseSpec("a", 400, 1.0), PhaseSpec("b", 400, 1.0)),
+        events=(EventSpec("load_spike", phase=1, at_frac=0.25, factor=1.8),))
+    warm = ScenarioEngine(spec, _plane(n=400), _space()).run()
+    ups = [a for a in warm.actions if a.kind == "rescale_up"]
+    assert ups and all(a.warm_idle_delta is not None for a in ups)
+    # a detected spike means a real queue at the cut: idle scoring was
+    # genuinely optimistic about the chosen pool
+    assert warm.warm_idle_delta_total > 0.0
+    assert warm.recovered_all_events
+
+    matched = ScenarioEngine(spec, _plane(n=400), _space(),
+                             warm_candidate_scoring=False).run()
+    assert all(a.warm_idle_delta is None for a in matched.actions)
+    assert matched.warm_idle_delta_total == 0.0
+
+    cold = ScenarioEngine(spec, _plane(n=400), _space(),
+                          carry_queue_state=False).run()
+    assert all(a.warm_idle_delta is None for a in cold.actions)
+    # the delta lands in the serialized report for the bench gate
+    doc = warm.to_dict()
+    assert doc["warm_idle_delta_total"] == pytest.approx(
+        warm.warm_idle_delta_total)
+    assert any(a["warm_idle_delta"] is not None for a in doc["actions"])
+
+
 # ---------------------------------------------------------- dist drift
 def test_dist_drift_phases_use_per_dist_tables():
     plane = _plane(n=300, dists=("lognormal", "gaussian"))

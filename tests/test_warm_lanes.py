@@ -1,0 +1,388 @@
+"""Warm-start batched/grid evaluation lanes: what-if candidate scoring from
+a live backlog.
+
+Contracts under test (the regression anchors of the warm lanes):
+
+* **idle anchors** — started from ``initial_state()`` every warm lane
+  reproduces its cold counterpart bit for bit (``qos_rate_batch_from`` ==
+  ``qos_rate_batch``, warm grid == cold grid, stacked tables included);
+* **per-row bit-identity** — row ``i`` of a warm batch (cell ``[w, b]`` of
+  a warm grid) equals the sequential ``*_from`` path on that candidate's
+  remapped state, exactly — fuzzed over random pools/streams/states via
+  the hypothesis shim;
+* **remap round-trips** — ``remap`` to self is the identity on the active
+  prefix, remap-then-remap-back preserves surviving slots' carries, and
+  the vectorized ``remap_batch`` matches per-row sequential ``remap``;
+* **warm-keyed memoization** — ``PoolEvaluator.grid_from`` caches per
+  (state, deployed, now) key, LRU-bounds the per-state caches, and the
+  idle key reproduces the cold ``grid`` bits;
+* **rescale integration** — ``rescale(warm_state=...)`` scores candidates
+  (and ``qos_by_load``) through the warm lanes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import RibbonOptimizer
+from repro.core.search_space import SearchSpace
+from repro.serving.autoscaler import rescale
+from repro.serving.instance import (InstanceType, ModelProfile,
+                                    service_time_table)
+from repro.serving.pool import PoolEvaluator
+from repro.serving.simulator import PoolSimulator, PoolState
+from repro.serving.workload import generate_workload
+
+FAST = InstanceType("fast", price=1.0, flops=1e9, mem_bw=1e9, overhead=1e-3)
+SLOW = InstanceType("slow", price=0.3, flops=2e8, mem_bw=5e8, overhead=2e-3)
+PROF = ModelProfile("toy", flops_per_sample=1e6, act_bytes_per_sample=1e4,
+                    weight_bytes=1e5, qos_latency=0.05)
+MAX_INST = 8
+FACTORS = (1.0, 1.3, 1.7)
+
+_SIM = None
+
+
+def _workload(seed=0, n=150, rate=150.0):
+    return generate_workload(seed, n, rate, median_batch=8.0, max_batch=32)
+
+
+def _sim(wl=None):
+    return PoolSimulator(PROF, [FAST, SLOW], wl or _workload(),
+                         max_instances=MAX_INST)
+
+
+def _shared_sim():
+    """One module-wide simulator for the property sweeps: a fixed stream
+    shape keeps every example on the already-compiled executables."""
+    global _SIM
+    if _SIM is None:
+        _SIM = _sim()
+    return _SIM
+
+
+def _configs(n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    cfgs = rng.integers(0, 5, size=(n, 2))
+    cfgs[0] = (0, 0)                              # empty pool
+    cfgs[1] = (MAX_INST // 2, MAX_INST // 2)      # max-capacity padding
+    return cfgs
+
+
+def _backlog_state(sim, deployed=(1, 1), upto=90):
+    """A genuinely backlogged carry: the stream's first ``upto`` queries
+    served on a lean pool, rebased so the carry's clock sits at the cut."""
+    seg = sim.segment_from(sim.initial_state(), deployed)
+    return seg.state_at(upto).rebased(float(sim.workload.arrivals[upto - 1]))
+
+
+# ------------------------------------------------------------ idle anchors
+def test_idle_batch_from_reproduces_cold_batch_bit_for_bit():
+    sim = _shared_sim()
+    cfgs = _configs()
+    lat, _ = sim.latencies_batch_from(sim.initial_state(), cfgs)
+    np.testing.assert_array_equal(lat, sim.latencies_batch(cfgs))
+    rates, _ = sim.qos_rate_batch_from(sim.initial_state(), cfgs)
+    np.testing.assert_array_equal(rates, sim.qos_rate_batch(cfgs))
+    # remapping *from* an idle pool at clock 0 is still the idle carry
+    rates2, _ = sim.qos_rate_batch_from(sim.initial_state(), cfgs,
+                                        deployed=(1, 1))
+    np.testing.assert_array_equal(rates2, rates)
+
+
+def test_idle_grid_from_reproduces_cold_grid_bit_for_bit():
+    sim = _shared_sim()
+    cfgs = _configs(seed=1)
+    np.testing.assert_array_equal(
+        sim.qos_rate_grid_from(sim.initial_state(), cfgs, FACTORS),
+        sim.qos_rate_grid(cfgs, FACTORS))
+    np.testing.assert_array_equal(
+        sim.latencies_grid_from(sim.initial_state(), cfgs, FACTORS),
+        sim.latencies_grid(cfgs, FACTORS))
+
+
+def test_idle_grid_from_with_stacked_tables_matches_cold():
+    wl_ln = _workload(seed=2)
+    wl_ga = generate_workload(2, 150, 150.0, batch_dist="gaussian",
+                              mean_batch=10.0, std_batch=4.0, max_batch=32)
+    sim = _sim(wl_ln)
+    cfgs = _configs(seed=2)
+    tables = np.stack([
+        service_time_table(PROF, [FAST, SLOW], wl_ln.batches),
+        service_time_table(PROF, [FAST, SLOW], wl_ga.batches)])
+    factors = (1.0, 1.5)
+    np.testing.assert_array_equal(
+        sim.qos_rate_grid_from(sim.initial_state(), cfgs, factors,
+                               service_tables=tables),
+        sim.qos_rate_grid(cfgs, factors, service_tables=tables))
+
+
+# ------------------------------------------------------ warm bit-identity
+def test_warm_batch_rows_bit_equal_sequential_from():
+    sim = _shared_sim()
+    deployed = (1, 1)
+    state = _backlog_state(sim, deployed)
+    cfgs = _configs(seed=3)
+    lat, states = sim.latencies_batch_from(state, cfgs, deployed=deployed)
+    rates, _ = sim.qos_rate_batch_from(state, cfgs, deployed=deployed)
+    for b, c in enumerate(cfgs):
+        cfg = tuple(int(x) for x in c)
+        s_b = state.remap(deployed, cfg, float(state.clock))
+        lat_ref, state_ref = sim.latencies_from(s_b, cfg)
+        np.testing.assert_array_equal(lat[b], lat_ref)
+        np.testing.assert_array_equal(states[b].free, state_ref.free)
+        assert states[b].clock == state_ref.clock
+        rate_ref, _ = sim.qos_rate_from(s_b, cfg)
+        assert rates[b] == rate_ref
+
+
+def test_warm_grid_cells_bit_equal_sequential_on_scaled_sims():
+    wl = _workload(seed=4)
+    sim = _sim(wl)
+    deployed = (2, 0)
+    state = _backlog_state(sim, deployed)
+    cfgs = _configs(seed=4)
+    rates = sim.qos_rate_grid_from(state, cfgs, FACTORS, deployed=deployed)
+    lat = sim.latencies_grid_from(state, cfgs, FACTORS, deployed=deployed)
+    for w, f in enumerate(FACTORS):
+        scaled = PoolSimulator(PROF, [FAST, SLOW], wl.scaled(f),
+                               max_instances=MAX_INST)
+        for b, c in enumerate(cfgs):
+            cfg = tuple(int(x) for x in c)
+            s_b = state.remap(deployed, cfg, float(state.clock))
+            rate_ref, _ = scaled.qos_rate_from(s_b, cfg)
+            assert rates[w, b] == rate_ref
+            lat_ref, _ = scaled.latencies_from(s_b, cfg)
+            np.testing.assert_array_equal(lat[w, b], lat_ref)
+
+
+def test_warm_scoring_differs_from_idle_under_real_backlog():
+    """The point of the lanes: a carried backlog must actually move the
+    scores (otherwise what-if adaptation would still be idle-optimistic)."""
+    sim = _shared_sim()
+    state = _backlog_state(sim, (1, 1))
+    cfgs = _configs(seed=5)
+    warm, _ = sim.qos_rate_batch_from(state, cfgs, deployed=(1, 1))
+    idle = sim.qos_rate_batch(cfgs)
+    assert np.abs(warm - idle).max() > 0.0
+
+
+def test_warm_batch_empty_inputs_and_empty_stream():
+    sim = _shared_sim()
+    lat, states = sim.latencies_batch_from(
+        sim.initial_state(), np.zeros((0, 2), dtype=np.int64))
+    assert lat.shape == (0, sim.workload.n_queries) and states == []
+    # an empty stream passes every candidate's carry through unchanged
+    empty = PoolSimulator(PROF, [FAST, SLOW], _workload(n=1),
+                          max_instances=MAX_INST)
+    state = PoolState(free=np.full(MAX_INST, 2.0), clock=1.0)
+    sliced = empty.workload
+    assert sliced.n_queries == 1            # single-query stream still runs
+    lat1, states1 = empty.latencies_batch_from(state, [(1, 0), (0, 0)])
+    assert lat1.shape == (2, 1)
+    assert np.isinf(lat1[1]).all()          # empty pool: every query violates
+    np.testing.assert_array_equal(states1[1].free, state.free)
+
+
+def test_warm_lanes_reject_mismatched_state_padding():
+    sim = _shared_sim()
+    bad = PoolState.idle(MAX_INST + 1)
+    with pytest.raises(ValueError, match="slots"):
+        sim.qos_rate_batch_from(bad, [(1, 1)])
+    with pytest.raises(ValueError, match="slots"):
+        sim.qos_rate_grid_from(bad, [(1, 1)], (1.0,))
+
+
+# ------------------------------------------------------- property sweeps
+@settings(max_examples=8)
+@given(st.tuples(st.integers(min_value=0, max_value=4),
+                 st.integers(min_value=0, max_value=4)),
+       st.floats(min_value=0.0, max_value=0.4),
+       st.integers(min_value=0, max_value=10_000))
+def test_prop_warm_batch_bit_equals_sequential(deployed, backlog, seed):
+    """Random pools/streams/states: qos_rate_batch_from[i] bit-equals
+    qos_rate_from(state_i, config_i) on the remapped per-candidate state."""
+    sim = _shared_sim()
+    rng = np.random.default_rng(seed)
+    cfgs = rng.integers(0, 5, size=(4, 2))
+    free = 3.0 + rng.uniform(0.0, max(backlog, 0.0), size=MAX_INST)
+    state = PoolState(free=free, clock=3.0)
+    rates, states = sim.qos_rate_batch_from(state, cfgs, deployed=deployed)
+    for b, c in enumerate(cfgs):
+        cfg = tuple(int(x) for x in c)
+        s_b = state.remap(deployed, cfg, float(state.clock))
+        rate_ref, state_ref = sim.qos_rate_from(s_b, cfg)
+        assert rates[b] == rate_ref
+        np.testing.assert_array_equal(states[b].free, state_ref.free)
+
+
+@settings(max_examples=6)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.floats(min_value=1.0, max_value=2.0))
+def test_prop_idle_grid_from_bit_equals_cold_grid(seed, factor):
+    """Idle-state warm grid == cold grid for random configs and levels."""
+    sim = _shared_sim()
+    rng = np.random.default_rng(seed)
+    cfgs = rng.integers(0, 5, size=(5, 2))
+    factors = (1.0, float(factor))
+    np.testing.assert_array_equal(
+        sim.qos_rate_grid_from(sim.initial_state(), cfgs, factors),
+        sim.qos_rate_grid(cfgs, factors))
+
+
+@settings(max_examples=10)
+@given(st.tuples(st.integers(min_value=0, max_value=4),
+                 st.integers(min_value=0, max_value=4)),
+       st.tuples(st.integers(min_value=0, max_value=4),
+                 st.integers(min_value=0, max_value=4)),
+       st.integers(min_value=0, max_value=10_000))
+def test_prop_remap_round_trips(cfg_a, cfg_b, seed):
+    """remap to self is the identity on the active prefix; remap there and
+    back preserves the carries of slots that survive both hops."""
+    rng = np.random.default_rng(seed)
+    state = PoolState(free=rng.uniform(0.0, 5.0, size=MAX_INST), clock=1.0)
+    now = 9.0
+    self_mapped = state.remap(cfg_a, cfg_a, now)
+    n_a = sum(cfg_a)
+    np.testing.assert_array_equal(self_mapped.free[:n_a], state.free[:n_a])
+    assert self_mapped.clock == state.clock
+    fwd = state.remap(cfg_a, cfg_b, now)
+    back = fwd.remap(cfg_b, cfg_a, now)
+    ac = np.concatenate([[0], np.cumsum(cfg_a)])
+    for t in range(len(cfg_a)):
+        k = min(cfg_a[t], cfg_b[t])     # survivors of both hops, per type
+        np.testing.assert_array_equal(back.free[ac[t]:ac[t] + k],
+                                      state.free[ac[t]:ac[t] + k])
+
+
+@settings(max_examples=8)
+@given(st.tuples(st.integers(min_value=0, max_value=4),
+                 st.integers(min_value=0, max_value=4)),
+       st.integers(min_value=0, max_value=10_000))
+def test_prop_remap_batch_matches_sequential_remap(deployed, seed):
+    rng = np.random.default_rng(seed)
+    state = PoolState(free=rng.uniform(0.0, 4.0, size=MAX_INST), clock=0.5)
+    cfgs = rng.integers(0, 5, size=(6, 2))
+    mat = state.remap_batch(deployed, cfgs, 2.5)
+    assert mat.shape == (len(cfgs), MAX_INST)
+    for b, c in enumerate(cfgs):
+        np.testing.assert_array_equal(
+            mat[b], state.remap(deployed, tuple(int(x) for x in c),
+                                2.5).free)
+
+
+def test_remap_batch_validates_shapes_and_padding():
+    state = PoolState.idle(4)
+    with pytest.raises(ValueError):
+        state.remap_batch((1, 1), np.zeros((2, 3), dtype=np.int64), 0.0)
+    with pytest.raises(ValueError):
+        state.remap_batch((1, 1), np.array([[4, 4]]), 0.0)
+    with pytest.raises(ValueError):
+        state.remap_batch((4, 4), np.array([[1, 1]]), 0.0)
+
+
+# ------------------------------------------------- evaluator memoization
+def test_evaluator_grid_from_idle_key_matches_cold_grid():
+    ev = PoolEvaluator(PROF, [FAST, SLOW], _workload(seed=6),
+                       max_instances=MAX_INST)
+    cfgs = [(1, 0), (2, 1), (0, 3)]
+    np.testing.assert_array_equal(
+        ev.grid_from(ev.sim.initial_state(), cfgs, FACTORS),
+        ev.grid(cfgs, FACTORS))
+
+
+def test_evaluator_grid_from_memoizes_per_warm_state():
+    ev = PoolEvaluator(PROF, [FAST, SLOW], _workload(seed=7),
+                       max_instances=MAX_INST)
+    deployed = (1, 1)
+    state = _backlog_state(ev.sim, deployed)
+    cfgs = [(1, 0), (2, 1), (0, 3), (1, 0)]       # includes a duplicate
+    rates = ev.grid_from(state, cfgs, FACTORS, deployed=deployed)
+    assert rates.shape == (len(FACTORS), len(cfgs))
+    np.testing.assert_array_equal(rates[:, 0], rates[:, 3])
+    n0 = ev.n_evals
+    assert n0 == 3 * len(FACTORS)                 # distinct cells only
+    # repeat: fully cached, and a sub-sweep hits the same memo
+    np.testing.assert_array_equal(
+        ev.grid_from(state, cfgs, FACTORS, deployed=deployed), rates)
+    sub = ev.grid_from(state, cfgs[:2], FACTORS[1:], deployed=deployed)
+    np.testing.assert_array_equal(sub, rates[1:, :2])
+    assert ev.n_evals == n0
+    # a different warm state is a different memo key
+    other = _backlog_state(ev.sim, deployed, upto=40)
+    ev.grid_from(other, cfgs, FACTORS, deployed=deployed)
+    assert ev.n_evals == 2 * n0
+    # warm cells bit-match the simulator's own warm lane
+    direct = ev.sim.qos_rate_grid_from(state, cfgs, FACTORS,
+                                       deployed=deployed)
+    np.testing.assert_array_equal(rates, direct)
+
+
+def test_evaluator_grid_from_warm_cache_is_lru_bounded():
+    ev = PoolEvaluator(PROF, [FAST, SLOW], _workload(seed=8),
+                       max_instances=MAX_INST)
+    states = [PoolState(free=np.full(MAX_INST, 0.01 * (k + 1)), clock=0.0)
+              for k in range(ev._warm_states + 1)]
+    for s in states:
+        ev.grid_from(s, [(1, 1)], (1.0,))
+    assert len(ev._warm_cache) == ev._warm_states
+    n0 = ev.n_evals
+    ev.grid_from(states[-1], [(1, 1)], (1.0,))    # most recent: cached
+    assert ev.n_evals == n0
+    ev.grid_from(states[0], [(1, 1)], (1.0,))     # evicted: re-simulated
+    assert ev.n_evals == n0 + 1
+
+
+# --------------------------------------------------- rescale integration
+def test_rescale_warm_state_scores_candidates_from_backlog():
+    wl = _workload(seed=0, n=200, rate=120.0)
+    ev = PoolEvaluator(PROF, [FAST, SLOW], wl, max_instances=MAX_INST)
+    space = SearchSpace(bounds=(4, 4), prices=(1.0, 0.3))
+    opt = RibbonOptimizer(space, qos_target=0.9)
+    for _ in range(25):
+        cfg = opt.ask()
+        if cfg is None or opt.done:
+            break
+        opt.tell(cfg, ev(cfg))
+    assert opt.best_config is not None
+    deployed = opt.best_config
+    state = _backlog_state(ev.sim, (2, 1), upto=80)
+
+    event = rescale(opt, ev, budget=20, load_factors=(1.0, 1.5),
+                    warm_state=state, deployed=deployed)
+    assert event.warm_scored
+    assert event.new_best is not None
+    assert event.qos_by_load is not None
+    # qos_by_load is the warm score of the winner, straight from the lanes
+    for f, rate in event.qos_by_load.items():
+        direct = ev.sim.qos_rate_grid_from(state, [event.new_best], [f],
+                                           deployed=deployed)[0, 0]
+        assert rate == direct
+
+
+def test_rescale_without_warm_state_stays_cold():
+    ev = PoolEvaluator(PROF, [FAST, SLOW], _workload(seed=9),
+                       max_instances=MAX_INST)
+    opt = RibbonOptimizer(SearchSpace(bounds=(4, 4), prices=(1.0, 0.3)),
+                          qos_target=0.9)
+    for _ in range(10):
+        cfg = opt.ask()
+        if cfg is None or opt.done:
+            break
+        opt.tell(cfg, ev(cfg))
+    event = rescale(opt, ev, budget=10, load_factors=(1.0, 1.2))
+    assert not event.warm_scored
+
+
+def test_rescale_warm_state_requires_grid_from_evaluator():
+    opt = RibbonOptimizer(SearchSpace(bounds=(3, 3), prices=(1.0, 0.3)),
+                          qos_target=0.9)
+
+    class GridOnly:
+        def grid(self, configs, factors):
+            return np.ones((len(factors), len(configs)))
+
+    with pytest.raises(TypeError, match="grid_from"):
+        rescale(opt, GridOnly(), budget=5, load_factors=(1.0,),
+                warm_state=PoolState.idle(MAX_INST), deployed=(1, 1))
