@@ -39,6 +39,25 @@ the matched run must report at least as many violation windows as its idle
 baseline, and the flash-crowd / failure-storm warm runs must report a
 nonzero warm-vs-idle candidate-scoring delta.
 
+A second, tier-scoped section (``payload["tiers"]``) runs the spot-market
+episodes (``spot-storm``, ``tier-outage``) on the **hybrid capacity-tier
+plane** (``tiered_simulator_plane``: the same hardware procured on-demand,
+spot and serverless, with per-tier cold starts charged through the carry
+and per-type risk premiums fed to the BO).  Each episode runs as:
+
+  * **hybrid** — the full pool, warm scoring (the headline);
+  * **matched** / **idle-restart** — the same pair as above, for the
+    carried-violation-mass invariant under storms;
+  * **single-tier baselines** — the same episode with the search space
+    restricted to one tier's types (bounds elsewhere zeroed).
+
+``scripts/check_bench.py`` gates the economics: the hybrid portfolio must
+be strictly cheaper than every single-tier baseline that matches its QoS
+(within ``TIER_QOS_TOL``), every tier episode must recover, the matched
+run must carry at least the idle run's violation mass, and the seeded
+*tiered* composite fuzz (storms, outages and price spikes drawn from the
+full event registry) must recover on every seed.
+
 ``--smoke`` (the CI alias for ``--quick``) runs the ``diurnal``,
 ``spot-churn`` and ``flash-crowd`` episodes on shortened phases; the full
 run covers every registered episode.
@@ -47,9 +66,13 @@ run covers every registered episode.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
-from repro.scenario import EPISODES, ScenarioEngine, build_episode, \
-    paper_simulator_plane
+from repro.core.search_space import SearchSpace
+from repro.scenario import (EPISODES, ScenarioEngine, build_episode,
+                            paper_simulator_plane, tiered_simulator_plane)
+from repro.scenario.registry import composite
+from repro.serving.tiers import tiered_pool
 
 from .common import print_table, write_bench_json
 
@@ -60,6 +83,24 @@ SMOKE_EPISODES = ("diurnal", "spot-churn", "flash-crowd")
 WARM_DELTA_EPISODES = ("flash-crowd", "failure-storm")
 WINDOW = 100
 
+# -------------------------------------------------------------- tier section
+TIER_EPISODES = ("spot-storm", "tier-outage")
+# Single-tier baselines per episode.  A spot-only portfolio is excluded
+# from the outage episode: the outage evaporates its entire pool, leaving
+# nothing to serve with — not a serving design anyone would field.
+SINGLE_TIERS = {"spot-storm": ("on_demand", "spot", "serverless"),
+                "tier-outage": ("on_demand", "serverless")}
+# A single-tier baseline "matches" hybrid QoS when its satisfaction rate is
+# within this tolerance of the hybrid run's (mirrored by check_bench).
+TIER_QOS_TOL = 0.01
+TIER_FUZZ_SEEDS_FULL = 20
+TIER_FUZZ_SEEDS_SMOKE = 6
+# Tiered composite fuzz runs many engine episodes; shortened phases and
+# trimmed search budgets keep the sweep tractable without changing what it
+# proves (every sampled timeline recovers).
+TIER_FUZZ_N = 120
+TIER_FUZZ_WINDOW = 40
+
 
 def run_episode(name: str, n: int, window: int = WINDOW,
                 model: str = MODEL, carry: bool = True,
@@ -69,6 +110,116 @@ def run_episode(name: str, n: int, window: int = WINDOW,
     report = ScenarioEngine(spec, plane, space, carry_queue_state=carry,
                             warm_candidate_scoring=warm_scoring).run()
     return report.to_dict()
+
+
+def run_tier_episode(name: str, n: int, window: int = WINDOW,
+                     model: str = MODEL, carry: bool = True,
+                     warm_scoring: bool | None = None,
+                     only_tier: str | None = None) -> dict:
+    """One episode on the hybrid capacity-tier plane; ``only_tier``
+    restricts the portfolio search to a single tier's types by zeroing
+    every other type's bounds (the single-tier baselines)."""
+    spec = build_episode(name, n=n, window=window)
+    plane, space = tiered_simulator_plane(model, spec)
+    if only_tier is not None:
+        bounds = tuple(b if t == only_tier else 0
+                       for b, t in zip(space.bounds, plane.type_tiers))
+        space = SearchSpace(bounds=bounds, prices=space.prices)
+    report = ScenarioEngine(spec, plane, space, carry_queue_state=carry,
+                            warm_candidate_scoring=warm_scoring).run()
+    return report.to_dict()
+
+
+def _slim(doc: dict) -> dict:
+    return {"qos_rate": doc["qos_rate"], "total_cost": doc["total_cost"],
+            "violation_windows": doc["violation_windows"],
+            "n_windows": doc["n_windows"],
+            "recovered_all_events": doc["recovered_all_events"]}
+
+
+def run_tiers(n: int, quick: bool) -> dict:
+    """The ``payload["tiers"]`` section: spot-market episodes on the hybrid
+    pool vs single-tier baselines, plus the tiered composite fuzz."""
+    types, _ = tiered_pool(MODEL)
+    episodes, matched_docs, idle_docs = {}, {}, {}
+    single, checks, rows = {}, {}, []
+    for name in TIER_EPISODES:
+        doc = run_tier_episode(name, n=n)
+        matched = run_tier_episode(name, n=n, warm_scoring=False)
+        idle = run_tier_episode(name, n=n, carry=False)
+        episodes[name] = doc
+        matched_docs[name] = _slim(matched)
+        idle_docs[name] = _slim(idle)
+        per_tier = {}
+        for tier in SINGLE_TIERS[name]:
+            per_tier[tier] = _slim(run_tier_episode(name, n=n,
+                                                    only_tier=tier))
+        single[name] = per_tier
+        qualifying = [t for t, d in per_tier.items()
+                      if d["qos_rate"] >= doc["qos_rate"] - TIER_QOS_TOL]
+        checks[name] = {
+            "recovered_all_events": doc["recovered_all_events"],
+            "hybrid_cheapest_at_qos": all(
+                doc["total_cost"] < per_tier[t]["total_cost"]
+                for t in qualifying),
+            "qualifying_tiers": qualifying,
+            "carried_viol_ge_idle": (matched["violation_windows"]
+                                     >= idle["violation_windows"]),
+        }
+        rows.append([
+            name, "hybrid", f"{doc['qos_rate']:.4f}",
+            f"{doc['total_cost']:.4f}",
+            f"{doc['violation_windows']}/{doc['n_windows']}",
+            doc["recovered_all_events"],
+        ])
+        for tier, d in per_tier.items():
+            rows.append([
+                name, tier, f"{d['qos_rate']:.4f}", f"{d['total_cost']:.4f}",
+                f"{d['violation_windows']}/{d['n_windows']}",
+                d["recovered_all_events"],
+            ])
+    print_table(
+        f"Hybrid capacity tiers — {MODEL}, {n} queries/phase "
+        "(tiered simulator plane: on-demand / spot / serverless)",
+        ["episode", "portfolio", "QoS rate", "cost $", "viol. windows",
+         "recovered"],
+        rows)
+
+    n_seeds = TIER_FUZZ_SEEDS_SMOKE if quick else TIER_FUZZ_SEEDS_FULL
+    per_seed = []
+    for seed in range(n_seeds):
+        spec = composite(n=TIER_FUZZ_N, window=TIER_FUZZ_WINDOW, seed=seed,
+                         qos_target=0.9, n_events=3, tiered=True)
+        spec = dataclasses.replace(spec, init_budget=20, rescale_budget=10,
+                                   recover_budget=10)
+        plane, space = tiered_simulator_plane(MODEL, spec)
+        rep = ScenarioEngine(spec, plane, space,
+                             carry_queue_state=True).run()
+        per_seed.append({
+            "seed": seed,
+            "events": [(e.kind, e.phase) for e in rep.events],
+            "recovered_all_events": rep.recovered_all_events,
+            "carried_wait_total": rep.carried_wait_total,
+        })
+    fuzz = {
+        "n_seeds": n_seeds,
+        "all_recovered": all(s["recovered_all_events"] for s in per_seed),
+        "per_seed": per_seed,
+    }
+    print("tier fuzz:", {"n_seeds": n_seeds,
+                         "all_recovered": fuzz["all_recovered"]})
+    print("tier checks:", checks)
+    return {
+        "model": MODEL,
+        "types": [t.name for t in types],
+        "qos_tol": TIER_QOS_TOL,
+        "episodes": episodes,
+        "matched_scoring": matched_docs,
+        "idle_baselines": idle_docs,
+        "single_tier": single,
+        "fuzz": fuzz,
+        "checks": checks,
+    }
 
 
 def run(quick: bool = False):
@@ -105,8 +256,8 @@ def run(quick: bool = False):
                                      >= base["violation_windows"]),
         }
         if name in WARM_DELTA_EPISODES:
-            checks[name]["warm_delta_nonzero"] = \
-                doc["warm_idle_delta_total"] > 0.0
+            checks[name]["warm_delta_nonzero"] = (
+                doc["warm_idle_delta_total"] > 0.0)
         rows.append([
             name, len(doc["phases"]), doc["n_events"], len(doc["actions"]),
             f"{doc['qos_rate']:.4f}",
@@ -135,6 +286,7 @@ def run(quick: bool = False):
         "matched_scoring": matched_docs,
         "idle_baselines": baselines,
         "checks": checks,
+        "tiers": run_tiers(n=n, quick=quick),
     }
     write_bench_json("scenarios", payload)
     return payload

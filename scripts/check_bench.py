@@ -34,7 +34,12 @@ Three responsibilities:
     matched (idle) candidate scoring pins both runs to the same control
     trajectory; and the flash-crowd / failure-storm episodes must report a
     nonzero ``warm_idle_delta_total`` (their warm-scored adaptations run
-    from real backlog, so idle scoring was measurably optimistic).
+    from real backlog, so idle scoring was measurably optimistic).  When the
+    artifact carries a ``tiers`` section (the hybrid capacity-tier runs),
+    the tier gates in ``check_tiers`` apply on top: hybrid strictly cheaper
+    than every QoS-matching single-tier baseline, storms/outages recovered,
+    carried violation mass >= the idle baseline's, and the tiered composite
+    fuzz recovered on every seed.
 * **Perf-trend history** (``--history``): upsert every validated artifact's
   trend metrics into ``bench_out/history.jsonl`` keyed by
   (commit, bench, source) — re-running on the same commit replaces the row,
@@ -279,6 +284,89 @@ def check_scenarios(doc, label: str) -> list[str]:
                 "candidate-scoring delta — adaptations are being scored "
                 "from an idle queue again",
             )
+    errors.extend(check_tiers(doc, label))
+    return errors
+
+
+def check_tiers(doc, label: str) -> list[str]:
+    """Economics + robustness gates on the hybrid capacity-tier section
+    (``payload["tiers"]`` of a scenarios artifact, absent on legacy
+    artifacts): every spot-market episode must recover on the hybrid pool;
+    the hybrid portfolio must be *strictly cheaper* than every single-tier
+    baseline that matches its QoS within the artifact's recorded tolerance
+    (vacuously true if no baseline qualifies — then the hybrid pool is the
+    only portfolio meeting QoS at all); the matched-scoring carried run
+    must report at least the idle-restart run's violation mass under the
+    storm; and the seeded tiered composite fuzz must have recovered on
+    every sampled timeline (>= 20 seeds on a full run)."""
+    tiers = doc.get("tiers")
+    if not isinstance(tiers, dict):
+        return []
+    errors = []
+    qos_tol = float(tiers.get("qos_tol", 0.01))
+    episodes = tiers.get("episodes")
+    if not isinstance(episodes, dict) or not episodes:
+        return [f"{label}: tiers section has no 'episodes'"]
+    single = tiers.get("single_tier")
+    single = single if isinstance(single, dict) else {}
+    matched = tiers.get("matched_scoring")
+    matched = matched if isinstance(matched, dict) else {}
+    idle = tiers.get("idle_baselines")
+    idle = idle if isinstance(idle, dict) else {}
+    for name, ep in episodes.items():
+        if not isinstance(ep, dict):
+            errors.append(f"{label}: tier episode {name!r} is not an object")
+            continue
+        if not ep.get("recovered_all_events", False):
+            errors.append(
+                f"{label}: tier episode {name!r} did not recover QoS to "
+                "target on the hybrid pool",
+            )
+        hybrid_qos = float(ep.get("qos_rate", 0.0))
+        hybrid_cost = float(ep.get("total_cost", 0.0))
+        for tier, base in (single.get(name) or {}).items():
+            if not isinstance(base, dict):
+                continue
+            if float(base.get("qos_rate", 0.0)) < hybrid_qos - qos_tol:
+                continue       # baseline misses QoS — no economics claim
+            if not hybrid_cost < float(base.get("total_cost", 0.0)):
+                errors.append(
+                    f"{label}: tier episode {name!r}: hybrid portfolio "
+                    f"costs {hybrid_cost:.4f}, not cheaper than the "
+                    f"QoS-matching {tier}-only baseline "
+                    f"({float(base.get('total_cost', 0.0)):.4f})",
+                )
+        m, i = matched.get(name), idle.get(name)
+        if isinstance(m, dict) and isinstance(i, dict):
+            mv = m.get("violation_windows")
+            iv = i.get("violation_windows")
+            if (isinstance(mv, (int, float)) and isinstance(iv, (int, float))
+                    and mv < iv):
+                errors.append(
+                    f"{label}: tier episode {name!r} reports {mv} violation "
+                    f"windows under the carried-state clock, fewer than its "
+                    f"idle-restart baseline ({iv}) — storm backlog "
+                    f"accounting went missing",
+                )
+    fuzz = tiers.get("fuzz")
+    if not isinstance(fuzz, dict):
+        errors.append(f"{label}: tiers section has no 'fuzz' sweep")
+        return errors
+    full = float(doc.get("n_per_phase") or 0) >= 800
+    min_seeds = 20 if full else 1
+    if float(fuzz.get("n_seeds") or 0) < min_seeds:
+        errors.append(
+            f"{label}: tiered composite fuzz ran {fuzz.get('n_seeds')} "
+            f"seeds, fewer than the required {min_seeds}",
+        )
+    if not fuzz.get("all_recovered", False):
+        bad = [s.get("seed") for s in fuzz.get("per_seed", [])
+               if isinstance(s, dict)
+               and not s.get("recovered_all_events", False)]
+        errors.append(
+            f"{label}: tiered composite fuzz failed to recover on "
+            f"seed(s) {bad}",
+        )
     return errors
 
 
@@ -308,6 +396,15 @@ def trend_metrics(doc) -> dict[str, tuple[float, str]]:
                 out[f"{name}.qos_rate"] = (float(ep["qos_rate"]), "higher")
             if isinstance(ep, dict) and "total_cost" in ep:
                 out[f"{name}.total_cost"] = (float(ep["total_cost"]), "lower")
+        tiers = doc.get("tiers")
+        tiers = tiers if isinstance(tiers, dict) else {}
+        for name, ep in (tiers.get("episodes") or {}).items():
+            if isinstance(ep, dict) and "qos_rate" in ep:
+                out[f"tiers.{name}.qos_rate"] = (float(ep["qos_rate"]),
+                                                 "higher")
+            if isinstance(ep, dict) and "total_cost" in ep:
+                out[f"tiers.{name}.total_cost"] = (float(ep["total_cost"]),
+                                                   "lower")
     return out
 
 

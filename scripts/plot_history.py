@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""Render perf-trend charts from ``bench_out/history.jsonl``.
+
+``scripts/check_bench.py --history`` upserts one row per validated artifact
+keyed by (commit, bench, source); this script turns that log into a small
+grid of per-metric trend lines (one subplot per (bench, source) pair,
+commits on the x-axis in log order) and writes a single PNG artifact for
+CI upload.
+
+matplotlib is an optional dependency: when it is not installed the script
+prints a note and exits 0, so the CI step degrades gracefully on minimal
+runners instead of failing the build over a plotting library.
+
+Usage::
+
+    python scripts/plot_history.py                      # default paths
+    python scripts/plot_history.py --history-file PATH --out PATH
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def load_history(path: Path) -> list[dict]:
+    entries = []
+    for line in path.read_text().splitlines():
+        try:
+            entry = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if isinstance(entry, dict) and isinstance(entry.get("metrics"), dict):
+            entries.append(entry)
+    return entries
+
+
+def group_series(entries: list[dict]) -> dict:
+    """(bench, source) -> {metric -> [(commit, value, direction), ...]} in
+    log order (the log is append-ordered; check_bench upserts per commit)."""
+    groups: dict[tuple[str, str], dict[str, list]] = {}
+    for entry in entries:
+        key = (str(entry.get("bench")), str(entry.get("source")))
+        series = groups.setdefault(key, {})
+        for name, value in entry["metrics"].items():
+            if isinstance(value, list) and len(value) == 2:
+                val, direction = value
+            else:
+                val, direction = value, "higher"
+            if not isinstance(val, (int, float)):
+                continue
+            series.setdefault(name, []).append(
+                (str(entry.get("commit", "?")), float(val), str(direction)))
+    return groups
+
+
+def render(groups: dict, out: Path) -> Path:
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    n = max(1, len(groups))
+    fig, axes = plt.subplots(n, 1, figsize=(10, 3.2 * n), squeeze=False)
+    for ax, ((bench, source), series) in zip(axes.ravel(), sorted(groups.items())):
+        for name, points in sorted(series.items()):
+            commits = [c for c, _, _ in points]
+            values = [v for _, v, _ in points]
+            direction = points[-1][2]
+            marker = "^" if direction == "higher" else "v"
+            ax.plot(range(len(values)), values, marker=marker,
+                    label=f"{name} ({direction} is better)")
+            ax.set_xticks(range(len(commits)))
+            ax.set_xticklabels(commits, rotation=45, ha="right", fontsize=7)
+        ax.set_title(f"{bench} — {source}", fontsize=9)
+        ax.legend(fontsize=7)
+        ax.grid(True, alpha=0.3)
+    fig.tight_layout()
+    out.parent.mkdir(exist_ok=True)
+    fig.savefig(out, dpi=120)
+    plt.close(fig)
+    return out
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--history-file",
+        type=Path,
+        default=REPO_ROOT / "bench_out" / "history.jsonl",
+        help="history log written by check_bench.py --history",
+    )
+    parser.add_argument(
+        "--out",
+        type=Path,
+        default=REPO_ROOT / "bench_out" / "history_trends.png",
+        help="output PNG path",
+    )
+    args = parser.parse_args(argv)
+
+    if not args.history_file.exists():
+        print(f"plot_history: no history at {args.history_file} — "
+              "run scripts/check_bench.py --history first; nothing to plot")
+        return 0
+    entries = load_history(args.history_file)
+    if not entries:
+        print(f"plot_history: {args.history_file} holds no metric rows; "
+              "nothing to plot")
+        return 0
+    try:
+        import matplotlib  # noqa: F401
+    except ImportError:
+        print("plot_history: matplotlib not installed — skipping chart "
+              "(history log is unaffected)")
+        return 0
+    out = render(group_series(entries), args.out)
+    print(f"plot_history: wrote {out} "
+          f"({len(entries)} history rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -59,10 +59,15 @@ def apply_prune_rules(blocked, lattice, costs, idx, config, cost_cut,
 
 
 class PruneSet:
-    def __init__(self, space: SearchSpace):
+    def __init__(self, space: SearchSpace, costs=None):
+        """``costs`` overrides the lattice cost vector the cost rule cuts on
+        (e.g. risk-adjusted tier costs) — it must stay bit-identical to the
+        ``costs`` the device-side ``apply_prune_rules`` consumes, or the two
+        mirrors diverge."""
         self.space = space
         self.lattice = space.enumerate()                     # (size, n)
-        self.costs = space.costs(self.lattice)               # (size,)
+        self.costs = (space.costs(self.lattice) if costs is None
+                      else np.asarray(costs, dtype=np.float64))  # (size,)
         self.mask = np.zeros(space.size, dtype=bool)         # True = pruned
 
     def __len__(self) -> int:

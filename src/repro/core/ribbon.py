@@ -53,13 +53,20 @@ class RibbonOptimizer:
     def __init__(self, space: SearchSpace, qos_target: float = 0.99,
                  theta: float = 0.01, start=None, max_obs: int = 192,
                  ei_tol: float = 1e-6, patience: int = 3,
-                 cost_aware: bool = False):
+                 cost_aware: bool = False, cost_penalties=None):
         self.space = space
         self.qos_target = float(qos_target)
         self.theta = float(theta)
         self.lattice = space.enumerate()
-        self.lattice_costs = space.costs(self.lattice)
-        self.prune = PruneSet(space)
+        # Optional per-type additive cost penalties (capacity-tier risk
+        # premiums — serving/tiers.TierCatalog.cost_penalties): the objective,
+        # pruning and incumbent bookkeeping all see the risk-adjusted
+        # landscape, while ``space.prices`` keeps the market prices callers
+        # use for billing.
+        self.cost_penalties = (None if cost_penalties is None
+                               else tuple(float(p) for p in cost_penalties))
+        self._apply_cost_penalties()
+        self.prune = PruneSet(space, costs=self.lattice_costs)
         self.gp = GaussianProcess(space.n_types, space.bounds, max_obs=max_obs)
         self.sampled = np.zeros(space.size, dtype=bool)
         self.trace = SearchTrace()
@@ -89,6 +96,27 @@ class RibbonOptimizer:
         self._best_obs_objective = 0.0
         # config -> masked EI score at selection time; consumed by tell.
         self._pending_ei: dict[tuple[int, ...], float] = {}
+
+    def _apply_cost_penalties(self) -> None:
+        """(Re)build the lattice cost vector and the Eq. 2 normalizer from
+        ``self.cost_penalties``.  With no penalties this is exactly the
+        legacy ``space.costs`` / ``space.max_cost`` pair, bit-identical."""
+        self.lattice_costs = self.space.costs(self.lattice)
+        if self.cost_penalties is None:
+            self._max_cost = self.space.max_cost
+            return
+        if len(self.cost_penalties) != self.space.n_types:
+            raise ValueError(
+                f"cost_penalties has {len(self.cost_penalties)} entries for "
+                f"{self.space.n_types} instance types")
+        if any(p < 0 for p in self.cost_penalties):
+            raise ValueError("cost_penalties must be non-negative")
+        self.lattice_costs = (self.lattice_costs
+                              + self.lattice @ np.asarray(self.cost_penalties))
+        # Penalties inflate the most expensive lattice point past
+        # space.max_cost; renormalize so feasible objectives stay in
+        # [1/2, 1] (objective.py's two-regime split).
+        self._max_cost = float(self.lattice_costs.max())
 
     def _blocked(self) -> jnp.ndarray:
         """The device-resident sampled|pruned mask (maintained per tell)."""
@@ -168,7 +196,7 @@ class RibbonOptimizer:
         idx = self.space.index_of(config)
         cost = float(self.lattice_costs[idx])
         feasible = qos_rate >= self.qos_target
-        obj = ribbon_objective(qos_rate, cost, self.qos_target, self.space.max_cost)
+        obj = ribbon_objective(qos_rate, cost, self.qos_target, self._max_cost)
 
         self.sampled[idx] = True
         self.gp.add(np.asarray(config, dtype=np.float32), obj)
@@ -245,7 +273,7 @@ class RibbonOptimizer:
         ]
 
         # Reset search state (the objective function changed with the load).
-        self.prune = PruneSet(self.space)
+        self.prune = PruneSet(self.space, costs=self.lattice_costs)
         self.gp = GaussianProcess(self.space.n_types, self.space.bounds,
                                   max_obs=self.gp.max_obs)
         self.sampled = np.zeros(self.space.size, dtype=bool)
@@ -264,7 +292,8 @@ class RibbonOptimizer:
             est_rate = float(np.clip(e.qos_rate * scale, 0.0, 1.0))
             self.tell(e.config, est_rate, estimated=True)
 
-    def replay_from(self, other: "RibbonOptimizer") -> int:
+    def replay_from(self, other: "RibbonOptimizer",
+                    pessimistic: bool = False) -> int:
         """Transfer still-valid history from another optimizer over the same
         workload: every *real* (non-estimated) evaluation whose config fits
         this space's bounds is replayed as a real observation.
@@ -276,16 +305,27 @@ class RibbonOptimizer:
         changes invalidate the measurements themselves and go through
         ``warm_restart`` estimation instead.  Returns the number of
         evaluations replayed.
+
+        ``pessimistic=True`` replays only the *infeasible* history, flagged
+        as estimates: when the new search scores under strictly harsher
+        conditions than the history was measured in (a live queue backlog,
+        cold starts charged to replacement capacity), evidence that a pool
+        failed still holds — its dominance pruning and GP mass transfer —
+        but evidence that a pool passed does not, and must not shadow the
+        honestly re-scored probes in ``best_feasible`` or cost-prune the
+        headroom configurations the harsher conditions demand.
         """
         replayed = 0
         for e in other.trace.evaluations:
             if e.estimated:
                 continue
+            if pessimistic and e.qos_rate >= other.qos_target:
+                continue
             if not all(0 <= c <= b for c, b in zip(e.config,
                                                    self.space.bounds)):
                 continue
             if not self.sampled[self.space.index_of(e.config)]:
-                self.tell(e.config, e.qos_rate)
+                self.tell(e.config, e.qos_rate, estimated=pessimistic)
                 replayed += 1
         return replayed
 
@@ -300,6 +340,8 @@ class RibbonOptimizer:
             "best_objective": self.best_objective,
             "qos_target": self.qos_target,
             "theta": self.theta,
+            "cost_penalties": (None if self.cost_penalties is None
+                               else list(self.cost_penalties)),
             "init_queue": [list(c) for c in self._init_queue],
             "trace": [
                 [list(e.config), e.qos_rate, e.cost, e.feasible, e.estimated]
@@ -317,6 +359,14 @@ class RibbonOptimizer:
         self.best_objective = float(state["best_objective"])
         self.qos_target = float(state["qos_target"])
         self.theta = float(state["theta"])
+        cp = state.get("cost_penalties")   # absent in pre-tier checkpoints
+        self.cost_penalties = None if cp is None else tuple(float(p) for p in cp)
+        self._apply_cost_penalties()
+        self.prune.costs = self.lattice_costs
+        self._costs_dev = jnp.asarray(self.lattice_costs, dtype=jnp.float32)
+        if self.cost_aware:
+            self._weights_dev = jnp.asarray(
+                1.0 / np.maximum(self.lattice_costs, 1e-9), dtype=jnp.float32)
         self._init_queue = [tuple(int(v) for v in c) for c in state["init_queue"]]
         self.trace = SearchTrace()
         self._rebuild_blocked_dev()
@@ -327,7 +377,7 @@ class RibbonOptimizer:
             self._best_obs_objective = max(
                 self._best_obs_objective,
                 ribbon_objective(rate, cost, self.qos_target,
-                                 self.space.max_cost))
+                                 self._max_cost))
 
 
 def run_ribbon(space: SearchSpace, evaluate_qos, qos_target: float = 0.99,

@@ -52,11 +52,31 @@ Control policy per event kind:
   * **capacity events** (``cell_failure``, ``spot_preemption``) reach the
     control plane directly (cloud providers signal both); recovery replays
     the still-valid history into a reduced space
-    (``recover_from_failure``).  Preempted capacity is restocked at the
-    next phase boundary through the same plumbing with negative loss.
-  * **price changes** rebuild the optimizer over the same bounds with new
+    (``recover_from_capacity_change``).  Preempted capacity is restocked
+    at the next phase boundary through the same plumbing with negative
+    loss.
+  * **tier-scoped capacity events** (``preemption_storm``,
+    ``tier_outage``) kill capacity on *every* type procured on one
+    capacity tier at once (the correlated-failure surface
+    serving/tiers.py models) — one multi-type recovery over the jointly
+    reduced space.  When even warm-scored candidates come back infeasible
+    (the spot tier just evaporated mid-search), the engine degrades
+    gracefully to the surviving tiers' full bounds — on-demand
+    over-provisioning — instead of wedging in violation; the market
+    restocks the tier at the next phase boundary, which *re-enters* the
+    tier's absolute-clock hazard process rather than resetting it.
+  * **price changes** (per-type ``price_change``, tier-wide
+    ``price_spike``) rebuild the optimizer over the same bounds with new
     prices (``reprice``): QoS history replays wholesale, so the search is
     usually memo-saturated and costs no new measurements.
+
+Every event kind in ``spec.EVENT_KIND_SPECS`` must have a handler in
+``ScenarioEngine._EVENT_HANDLERS`` — checked at import time, so a kind
+added to the registry without engine wiring fails loudly instead of being
+silently skipped.  On a tiered plane the engine also prices risk into the
+search (the plane's ``cost_penalties`` premium per type) and charges added
+slots their tier's cold start (``cold_starts``) in every warm what-if
+sweep.
 
 Re-optimization is instantaneous in episode time — its price is reported as
 BO evaluations (the paper's exploration cost), while *adaptation latency*
@@ -71,12 +91,13 @@ import numpy as np
 from ..core.ribbon import RibbonOptimizer
 from ..core.search_space import SearchSpace
 from ..serving.autoscaler import LoadMonitor, rescale
-from ..serving.fault import (continue_search, fail_instances,
+from ..serving.fault import (continue_search,
+                             recover_from_capacity_change,
                              recover_from_failure, reprice)
 from .planes import slice_stream
 from .report import (ControlAction, EpisodeReport, EventOutcome, PhaseReport,
                      WindowStat)
-from .spec import EventSpec, ScenarioSpec, Timeline
+from .spec import EVENT_KINDS, EventSpec, ScenarioSpec, Timeline
 
 
 class ScenarioEngine:
@@ -118,6 +139,50 @@ class ScenarioEngine:
         # capacity-event recovery booked, taking effect provision_queries
         # after the event (spec.provision_queries > 0).
         self._pending_switch: tuple[int, tuple] | None = None
+        # Second stage of a restock trim (tiered planes): the cheap steady
+        # pool to drop back to once the union stage's added slots are warm.
+        self._pending_trim: tuple | None = None
+        # Tiered-plane surface (None/absent on legacy planes): per-type risk
+        # premium folded into every BO cost objective, and per-type cold
+        # start charged to slots added in warm what-if sweeps.
+        self._cost_penalties = getattr(plane, "cost_penalties", None)
+        self._cold_starts = getattr(plane, "cold_starts", None)
+        # Warm-up grace (global query index, tiered planes only): monitor
+        # triggers hold off until freshly added capacity has lived through
+        # its cold start plus one full judging window — otherwise every
+        # wake shows up as a violation and the monitor buys yet more cold
+        # slots on top of the ones already warming.
+        self._grace_until = 0
+        # The steady pool that was serving when transient capacity loss
+        # first struck (tiered planes): re-seeded into the restock search
+        # as an honestly re-scored candidate, so the portfolio can return
+        # to its cheap pre-storm mix instead of staying on the panic pool.
+        self._pre_loss_config = None
+
+    def _cold_horizon(self, old_config, new_config,
+                      factor: float) -> int | None:
+        """Queries until the slots this deploy *adds* have lived through
+        their cold starts; ``None`` when nothing was added (removals serve
+        warm immediately) or the plane has no tiers."""
+        if self._cold_starts is None or old_config is None:
+            return None
+        added = [t for t, (o, c) in enumerate(zip(old_config, new_config))
+                 if int(c) > int(o)]
+        if not added:
+            return None
+        cold = max(float(self._cold_starts[t]) for t in added)
+        qps = float(self.plane.base_rate) * max(float(factor), 0.05)
+        return int(np.ceil(cold * qps))
+
+    def _note_deploy(self, old_config, new_config, at_query: int,
+                     factor: float) -> None:
+        """Start the warm-up grace clock after a deploy that *adds* slots
+        on a tiered plane: cold start plus one full judging window."""
+        horizon = self._cold_horizon(old_config, new_config, factor)
+        if horizon is None:
+            return
+        self._grace_until = max(self._grace_until,
+                                int(at_query) + horizon + self.spec.window)
 
     # ------------------------------------------------------------- searches
     def _candidate_state(self):
@@ -126,6 +191,26 @@ class ScenarioEngine:
         if not self.warm_scoring:
             return None
         return self.plane.candidate_state()
+
+    def _land_pending(self, config, at_query: int, factor: float):
+        """Deploy the booked in-flight switch.  When it was the union stage
+        of a restock trim (old slots + the cheap steady pool's slots side
+        by side, so the additions wake cold while the old pool still
+        serves), book the removal stage for as soon as the additions are
+        warm — dropping slots never dips, so it needs no judging window."""
+        prev_cfg = config
+        config = self._pending_switch[1]
+        self._pending_switch = None
+        self.plane.deploy(config)
+        self._note_deploy(prev_cfg, config, at_query, factor)
+        if self._pending_trim is not None:
+            trim = tuple(int(c) for c in self._pending_trim)
+            self._pending_trim = None
+            if trim != tuple(config):
+                horizon = self._cold_horizon(prev_cfg, config, factor) or 0
+                self._pending_switch = (at_query + horizon + 1, trim)
+        self.monitor.reset()
+        return config
 
     def _search_oracle(self, dist: str, factor: float):
         """Sequential QoS oracle for the recovery/reprice searches: scores
@@ -152,7 +237,8 @@ class ScenarioEngine:
         def sweep(cfgs):
             if cs is None:
                 return ev.grid(cfgs, [factor])
-            return ev.grid_from(cs[0], cfgs, [factor], deployed=cs[1])
+            return ev.grid_from(cs[0], cfgs, [factor], deployed=cs[1],
+                                warmup=self._cold_starts)
 
         n0 = opt.trace.n_samples
         while opt.trace.n_samples - n0 < budget and not opt.done:
@@ -178,16 +264,33 @@ class ScenarioEngine:
         ev = self.plane.grid_evaluator(dist)
         if cs is None or ev is None or cfg is None:
             return None
-        warm = float(ev.grid_from(cs[0], [cfg], [factor],
-                                  deployed=cs[1])[0, 0])
+        warm = float(ev.grid_from(cs[0], [cfg], [factor], deployed=cs[1],
+                                  warmup=self._cold_starts)[0, 0])
         idle = float(ev.grid([cfg], [factor])[0, 0])
         return idle - warm
+
+    def _fallback_helps(self, dist: str, factor: float, incumbent,
+                        candidate) -> bool:
+        """Whether the over-provision fallback actually out-serves the
+        incumbent pool *under the live backlog and tier cold starts* (both
+        scored through the warm lanes).  ``True`` when the plane cannot
+        score warm — without evidence the legacy over-provision convention
+        stands."""
+        cs = self._candidate_state()
+        ev = self.plane.grid_evaluator(dist)
+        if cs is None or ev is None:
+            return True
+        rates = ev.grid_from(cs[0], [tuple(incumbent), tuple(candidate)],
+                             [factor], deployed=cs[1],
+                             warmup=self._cold_starts)
+        return float(rates[0, 1]) > float(rates[0, 0])
 
     def _initial_search(self, bounds, prices, dist: str,
                         factor: float) -> tuple[RibbonOptimizer, int]:
         space = SearchSpace(bounds=tuple(bounds), prices=tuple(prices))
         opt = RibbonOptimizer(space, qos_target=self.spec.qos_target,
-                              start=self.start)
+                              start=self.start,
+                              cost_penalties=self._cost_penalties)
         used = self._drive(opt, dist, factor, self.spec.init_budget)
         return opt, used
 
@@ -226,7 +329,8 @@ class ScenarioEngine:
             start = opt.best_config or tuple(opt.space.bounds)
             fresh = RibbonOptimizer(opt.space,
                                     qos_target=self.spec.qos_target,
-                                    start=start)
+                                    start=start,
+                                    cost_penalties=opt.cost_penalties)
             used = self._drive(fresh, dist, factor_est,
                                self.spec.rescale_budget)
             best = fresh.trace.best_feasible()
@@ -240,7 +344,8 @@ class ScenarioEngine:
                             kind=kind, load_factors=factors,
                             batch_q=self.spec.batch_q,
                             warm_state=cs[0] if cs else None,
-                            deployed=cs[1] if cs else None)
+                            deployed=cs[1] if cs else None,
+                            warmup=self._cold_starts)
         else:
             event = rescale(opt, self._search_oracle(dist, factor_est),
                             budget=self.spec.rescale_budget, kind=kind)
@@ -264,6 +369,7 @@ class ScenarioEngine:
         dist0 = spec.phases[0].batch_dist
         f0 = spec.phases[0].load_factor
         self._factors = [f0]
+        self._total_queries = sum(ph.n_queries for ph in spec.phases)
         plane.begin_episode(carry=self.carry_queue_state)
         opt, used = self._initial_search(bounds, prices, dist0, f0)
         report.bo_evals += used
@@ -275,10 +381,7 @@ class ScenarioEngine:
 
         for p, phase in enumerate(spec.phases):
             if self._pending_switch and self._pending_switch[0] <= gq:
-                config = self._pending_switch[1]
-                self._pending_switch = None
-                plane.deploy(config)
-                self.monitor.reset()
+                config = self._land_pending(config, gq, phase.load_factor)
             if restock_next:
                 config, opt = self._restock(restock_next, p, gq, phase,
                                             bounds, prices, config, opt,
@@ -300,9 +403,11 @@ class ScenarioEngine:
             while i < phase.n_queries:
                 while events and events[0][0] <= i:
                     pos, ev_spec = events.pop(0)
+                    prev_cfg = config
                     config, opt, factor = self._apply_event(
                         ev_spec, p, gq + pos, phase, factor, bounds, prices,
                         config, opt, restock_next, report, pending)
+                    self._note_deploy(prev_cfg, config, gq + pos, factor)
                     if ev_spec.kind == "load_spike":
                         new_stream = plane.phase_stream(phase.batch_dist,
                                                         phase.n_queries,
@@ -320,10 +425,7 @@ class ScenarioEngine:
                     down_blocked = False    # the regime changed
                 if (self._pending_switch
                         and self._pending_switch[0] - gq <= i):
-                    config = self._pending_switch[1]
-                    self._pending_switch = None
-                    plane.deploy(config)
-                    self.monitor.reset()
+                    config = self._land_pending(config, gq + i, factor)
                 cut = events[0][0] if events else phase.n_queries
                 if self._pending_switch:
                     cut = min(cut, self._pending_switch[0] - gq)
@@ -368,7 +470,24 @@ class ScenarioEngine:
                                    else 0)
                     down = (down_streak >= self.down_patience
                             and not down_blocked)
-                    if (((up and viol) or forced or down)
+                    # On tiered planes, two hold-offs suppress monitor
+                    # triggers (forced ones included).  An in-flight
+                    # provisioning booking: the control plane already
+                    # acted and the replacement capacity is already
+                    # arriving, so a second search at the same cut would
+                    # only discard the booked pool to re-buy capacity
+                    # that wakes cold anyway.  And the warm-up grace
+                    # window after a deploy that added slots: a freshly
+                    # woken pool *always* shows violations until its cold
+                    # start elapses, and judging it early makes the
+                    # monitor pile ever more cold capacity on top.  Both
+                    # deferrals are bounded (provisioning lead time /
+                    # cold start + one window); if the pool is genuinely
+                    # inadequate the monitor fires right after.
+                    held_off = (self._cold_starts is not None
+                                and (self._pending_switch is not None
+                                     or g_end < self._grace_until))
+                    if (((up and viol) or forced or down) and not held_off
                             and adapts < self.max_adapts_per_phase):
                         kind = "rescale_down" if (down and not viol) \
                             else "rescale_up"
@@ -408,6 +527,22 @@ class ScenarioEngine:
                                 fallback = tuple(int(b) for b in bounds)
                                 if fallback != tuple(config):
                                     new_best = fallback
+                                if (new_best is not None
+                                        and self._cold_starts is not None
+                                        and not self._fallback_helps(
+                                            phase.batch_dist, est,
+                                            config, new_best)):
+                                    # Tier cold starts change the calculus:
+                                    # the blown-up pool's added slots wake
+                                    # cold, so "max capacity" is no longer
+                                    # "max QoS" over the next windows.  When
+                                    # the warm lanes say the bounds pool
+                                    # serves this backlog no better than the
+                                    # incumbent, keep the (far cheaper)
+                                    # incumbent and let the booked
+                                    # provisioning / phase-boundary restock
+                                    # land instead.
+                                    new_best = None
                         action = ControlAction(
                             kind=kind, trigger="monitor", phase=p,
                             at_query=g_end, old_config=config,
@@ -422,10 +557,13 @@ class ScenarioEngine:
                         pending.append(action)
                         report.bo_evals += used
                         if new_best is not None:
+                            prev_cfg = config
                             config = tuple(int(c) for c in new_best)
                             # a real redeployment supersedes in-flight
                             # provisioning; a no-op keeps the booking
                             self._pending_switch = None
+                            self._pending_trim = None
+                            self._note_deploy(prev_cfg, config, g_end, est)
                         redeploy = True
                         self.monitor.reset()
                         adapts += 1
@@ -458,65 +596,175 @@ class ScenarioEngine:
         return report
 
     # ----------------------------------------------------------- event ops
+    # kind -> handler method.  Import-time-checked to cover every kind in
+    # spec.EVENT_KIND_SPECS (see the module-level assertion below the
+    # class): a kind added to the registry without a handler here fails
+    # loudly instead of being silently dropped from episodes.
+    _EVENT_HANDLERS = {
+        "load_spike": "_ev_load_spike",
+        "price_change": "_ev_price_change",
+        "cell_failure": "_ev_capacity_loss",
+        "spot_preemption": "_ev_capacity_loss",
+        "preemption_storm": "_ev_preemption_storm",
+        "tier_outage": "_ev_tier_outage",
+        "price_spike": "_ev_price_spike",
+    }
+
     def _apply_event(self, ev: EventSpec, p: int, at_q: int, phase, factor,
                      bounds, prices, config, opt, restock_next, report,
                      pending):
-        """Mutates bounds/prices/restock_next in place; returns the new
+        """Dispatch one injected event to its handler.  Mutates
+        bounds/prices/restock_next in place; returns the new
         (config, optimizer, effective load factor)."""
         outcome = EventOutcome(kind=ev.kind, phase=p, at_query=at_q)
         report.events.append(outcome)
         pending.append(outcome)
-        oracle = self._search_oracle(phase.batch_dist, factor)
+        clears = ev.kind != "load_spike"
+        if (clears and self._cold_starts is not None
+                and ev.kind in ("price_change", "price_spike")):
+            # On tiered planes price moves leave the bounds (and hence the
+            # booking's deployability) intact; ``_apply_reprice`` decides
+            # whether the in-flight transition still pays under the new
+            # prices instead of discarding it wholesale.
+            clears = False
+        if clears:
+            # Capacity and price events change the space/objective under
+            # any in-flight provisioning: the booking was computed for the
+            # old regime (it could even exceed the post-event bounds), and
+            # each handler books or deploys its own replacement.
+            self._pending_switch = None
+            self._pending_trim = None
+        handler = getattr(self, self._EVENT_HANDLERS[ev.kind])
+        return handler(ev, outcome, p, at_q, phase, factor, bounds, prices,
+                       config, opt, restock_next, report)
 
-        if ev.kind == "load_spike":
-            factor = factor * ev.factor
-            outcome.detail = f"x{ev.factor:g} traffic"
-            return config, opt, factor
+    def _tier_indices(self, tier: str, n_types: int) -> list[int]:
+        """Indices of the pool types procured on ``tier``.  Planes without
+        a ``type_tiers`` surface are all on-demand, so tier events against
+        any other tier are no-ops there (and recover trivially)."""
+        tiers = getattr(self.plane, "type_tiers", None)
+        if tiers is None:
+            tiers = ("on_demand",) * n_types
+        return [i for i, name in enumerate(tiers) if name == tier]
 
-        t = ev.type_index
-        # Capacity and price events change the space/objective under any
-        # in-flight provisioning: the booking was computed for the old
-        # regime (it could even exceed the post-event bounds), and each
-        # handler below deploys or books its own replacement.
-        self._pending_switch = None
-        if ev.kind == "price_change":
-            old_price = float(np.dot(prices, config))
-            prices[t] = prices[t] * ev.factor
+    def _ev_load_spike(self, ev, outcome, p, at_q, phase, factor, bounds,
+                       prices, config, opt, restock_next, report):
+        outcome.detail = f"x{ev.factor:g} traffic"
+        return config, opt, factor * ev.factor
+
+    def _apply_reprice(self, targets, outcome, p, at_q, phase, factor,
+                       prices, config, opt, report):
+        """Shared repricing path: multiply each target type's unit price,
+        tell the plane, rebuild the optimizer over the new cost landscape
+        (full history replays — QoS is price-independent)."""
+        old_price = float(np.dot(prices, config))
+        for t, mult in sorted(targets.items()):
+            prices[t] = prices[t] * mult
             self.plane.apply_price(t, prices[t])
-            opt, sev = reprice(opt, prices, oracle,
-                               budget=self.spec.recover_budget)
-            outcome.detail = f"type {t} price x{ev.factor:g}"
-            new_cfg = sev.new_best or config
-            report.actions.append(ControlAction(
-                kind="reprice", trigger="event", phase=p, at_query=at_q,
-                old_config=config, new_config=new_cfg,
-                old_price=old_price,
-                new_price=float(np.dot(prices, new_cfg)),
-                bo_evals=sev.samples_used,
-                warm_idle_delta=self._score_delta(phase.batch_dist, factor,
-                                                  config)))
-            report.bo_evals += sev.samples_used
-            return tuple(int(c) for c in new_cfg), opt, factor
+        oracle = self._search_oracle(phase.batch_dist, factor)
+        opt, sev = reprice(opt, prices, oracle,
+                           budget=self.spec.recover_budget)
+        new_cfg = sev.new_best or config
+        if self._pending_switch is not None:
+            target = self._pending_trim or self._pending_switch[1]
+            if (all(int(a) <= int(c) for a, c in zip(target, config))
+                    and float(np.dot(prices, target))
+                    <= float(np.dot(prices, new_cfg))):
+                # The in-flight transition ends in a pure removal that is
+                # still at least as cheap under the new prices as the
+                # repriced search's own pick: let it land as planned
+                # (re-buying its slots later would wake them cold again).
+                new_cfg = config
+            else:
+                self._pending_switch = None
+                self._pending_trim = None
+        report.actions.append(ControlAction(
+            kind="reprice", trigger="event", phase=p, at_query=at_q,
+            old_config=config, new_config=new_cfg,
+            old_price=old_price,
+            new_price=float(np.dot(prices, new_cfg)),
+            bo_evals=sev.samples_used,
+            warm_idle_delta=self._score_delta(phase.batch_dist, factor,
+                                              config)))
+        report.bo_evals += sev.samples_used
+        return tuple(int(c) for c in new_cfg), opt
 
-        # cell_failure / spot_preemption: capacity loss
-        lost = min(int(ev.count), int(bounds[t]))
-        outcome.detail = f"type {t} -{lost}"
-        if lost == 0:
+    def _ev_price_change(self, ev, outcome, p, at_q, phase, factor, bounds,
+                         prices, config, opt, restock_next, report):
+        t = ev.type_index
+        if not 0 <= t < len(bounds):
+            raise ValueError(f"event {ev.kind}: type_index {t} out of range "
+                             f"for a pool with {len(bounds)} instance types")
+        outcome.detail = f"type {t} price x{ev.factor:g}"
+        config, opt = self._apply_reprice({t: ev.factor}, outcome, p, at_q,
+                                          phase, factor, prices, config,
+                                          opt, report)
+        return config, opt, factor
+
+    def _ev_price_spike(self, ev, outcome, p, at_q, phase, factor, bounds,
+                        prices, config, opt, restock_next, report):
+        idx = self._tier_indices(ev.tier, len(bounds))
+        outcome.detail = f"{ev.tier} price x{ev.factor:g}"
+        if not idx:
             return config, opt, factor
-        self.plane.apply_capacity_loss(t, lost)
-        degraded = fail_instances(config, t, lost)
-        degraded = tuple(min(int(c), int(b) - (lost if j == t else 0))
-                         for j, (c, b) in enumerate(zip(degraded, bounds)))
-        bounds[t] -= lost
-        kind = ("recover_preemption" if ev.kind == "spot_preemption"
-                else "recover_failure")
-        opt, sev = recover_from_failure(opt, oracle, failed_type=t,
-                                        lost=lost,
-                                        budget=self.spec.recover_budget,
-                                        kind=kind)
-        if ev.kind == "spot_preemption":
-            restock_next[t] = restock_next.get(t, 0) + lost
-        new_cfg = tuple(int(c) for c in (sev.new_best or degraded))
+        config, opt = self._apply_reprice({t: ev.factor for t in idx},
+                                          outcome, p, at_q, phase, factor,
+                                          prices, config, opt, report)
+        return config, opt, factor
+
+    def _recover_capacity(self, losses, kind, p, at_q, phase, factor,
+                          bounds, prices, config, opt, restock_next, report,
+                          transient: bool, fallback_bounds: bool = False):
+        """Shared capacity-loss path: shrink the space by ``losses``
+        (type -> count), run one joint multi-type recovery over the reduced
+        bounds, book the replacement pool behind the provisioning delay.
+
+        ``transient`` queues the losses for the next phase boundary's
+        restock (spot capacity the market returns).  ``fallback_bounds``
+        is the tier events' graceful degradation: when even the warm-scored
+        recovery search finds nothing feasible, fall back to the surviving
+        bounds (over-provision on what's left — typically the on-demand
+        tier) instead of serving on the storm-degraded pool.
+        """
+        degraded = list(int(c) for c in config)
+        for t, lost in sorted(losses.items()):
+            self.plane.apply_capacity_loss(t, lost)
+            degraded[t] = max(0, degraded[t] - lost)
+            bounds[t] -= lost
+        degraded = tuple(min(c, int(b)) for c, b in zip(degraded, bounds))
+        search_factor = factor
+        if self._cold_starts is not None and self.spec.provision_queries > 0:
+            # The booked pool lands provision_queries later, after the
+            # degraded pool has let that much demand pile up; by demand
+            # conservation the replacement must absorb the lead-time mass
+            # on top of the steady rate.  Size it to drain within a couple
+            # of monitoring windows: an exactly-sized pool never catches up
+            # (drain time = backlog / headroom), while amortizing over the
+            # whole remaining episode leaves per-window QoS violated until
+            # the tail.  The monitor downscales the headroom once drained.
+            n_rem = max(self._total_queries - at_q
+                        - self.spec.provision_queries, self.spec.window)
+            drain = min(n_rem, 2 * self.spec.window)
+            search_factor = factor * (1.0
+                                      + self.spec.provision_queries / drain)
+        oracle = self._search_oracle(phase.batch_dist, search_factor)
+        opt, sev = recover_from_capacity_change(
+            opt, oracle, losses, budget=self.spec.recover_budget, kind=kind,
+            # Tiered planes score from the live backlog with cold starts
+            # charged to freshly-bought slots; pre-event history was taken
+            # warm and backlog-free, so replaying it lets a stale-scored
+            # incumbent shadow every honestly-scored probe.
+            replay=self._cold_starts is None)
+        if transient:
+            for t, lost in losses.items():
+                restock_next[t] = restock_next.get(t, 0) + lost
+            if self._pre_loss_config is None:
+                self._pre_loss_config = tuple(int(c) for c in config)
+        new_cfg = sev.new_best
+        if new_cfg is None and fallback_bounds:
+            fallback = tuple(int(b) for b in bounds)
+            new_cfg = fallback if fallback != degraded else None
+        new_cfg = tuple(int(c) for c in (new_cfg or degraded))
         report.actions.append(ControlAction(
             kind=kind, trigger="event", phase=p, at_query=at_q,
             old_config=config, new_config=new_cfg,
@@ -531,8 +779,68 @@ class ScenarioEngine:
             # serves until the booked switch point
             self._pending_switch = (at_q + self.spec.provision_queries,
                                     new_cfg)
-            return degraded, opt, factor
-        return new_cfg, opt, factor
+            return degraded, opt
+        return new_cfg, opt
+
+    def _ev_capacity_loss(self, ev, outcome, p, at_q, phase, factor, bounds,
+                          prices, config, opt, restock_next, report):
+        t = ev.type_index
+        if not 0 <= t < len(bounds):
+            raise ValueError(f"event {ev.kind}: type_index {t} out of range "
+                             f"for a pool with {len(bounds)} instance types")
+        lost = min(int(ev.count), int(bounds[t]))
+        outcome.detail = f"type {t} -{lost}"
+        if lost == 0:
+            return config, opt, factor
+        kind = ("recover_preemption" if ev.kind == "spot_preemption"
+                else "recover_failure")
+        config, opt = self._recover_capacity(
+            {t: lost}, kind, p, at_q, phase, factor, bounds, prices, config,
+            opt, restock_next, report,
+            transient=(ev.kind == "spot_preemption"))
+        return config, opt, factor
+
+    def _ev_preemption_storm(self, ev, outcome, p, at_q, phase, factor,
+                             bounds, prices, config, opt, restock_next,
+                             report):
+        """Correlated same-tier kill: fraction ``ev.factor`` of each tier
+        type's *deployed* capacity is preempted at once; the market
+        restocks the losses at the next phase boundary (re-entering —
+        never resetting — the tier's absolute-clock hazard process)."""
+        losses = {}
+        for t in self._tier_indices(ev.tier, len(bounds)):
+            lost = min(int(np.ceil(ev.factor * config[t])), int(bounds[t]))
+            if lost > 0:
+                losses[t] = lost
+        hit = ", ".join(f"type {t} -{c}" for t, c in sorted(losses.items()))
+        outcome.detail = (f"{ev.tier} storm kill {ev.factor:g}: "
+                          f"{hit or 'no capacity deployed'}")
+        if not losses:
+            return config, opt, factor
+        config, opt = self._recover_capacity(
+            losses, "recover_storm", p, at_q, phase, factor, bounds, prices,
+            config, opt, restock_next, report, transient=True,
+            fallback_bounds=True)
+        return config, opt, factor
+
+    def _ev_tier_outage(self, ev, outcome, p, at_q, phase, factor, bounds,
+                        prices, config, opt, restock_next, report):
+        """The whole tier's capacity (its full search bounds) evaporates
+        until the next phase boundary's restock; the survivors' bounds are
+        the degradation floor when no feasible pool remains."""
+        losses = {t: int(bounds[t])
+                  for t in self._tier_indices(ev.tier, len(bounds))
+                  if bounds[t] > 0}
+        hit = ", ".join(f"type {t} -{c}" for t, c in sorted(losses.items()))
+        outcome.detail = (f"{ev.tier} outage: "
+                          f"{hit or 'no capacity procured'}")
+        if not losses:
+            return config, opt, factor
+        config, opt = self._recover_capacity(
+            losses, "recover_outage", p, at_q, phase, factor, bounds,
+            prices, config, opt, restock_next, report, transient=True,
+            fallback_bounds=True)
+        return config, opt, factor
 
     def _restock(self, restock_next, p, gq, phase, bounds, prices, config,
                  opt, report, pending):
@@ -541,13 +849,16 @@ class ScenarioEngine:
         # the restock search supersedes any switch still booked for the
         # degraded (pre-restock) space
         self._pending_switch = None
+        self._pending_trim = None
+        seed, self._pre_loss_config = self._pre_loss_config, None
         for t, cnt in sorted(restock_next.items()):
             oracle = self._search_oracle(phase.batch_dist,
                                          phase.load_factor)
             opt, sev = recover_from_failure(opt, oracle, failed_type=t,
                                             lost=-cnt,
                                             budget=self.spec.recover_budget,
-                                            kind="restock")
+                                            kind="restock",
+                                            replay=self._cold_starts is None)
             bounds[t] += cnt
             new_cfg = sev.new_best or config
             action = ControlAction(
@@ -562,7 +873,54 @@ class ScenarioEngine:
             report.actions.append(action)
             pending.append(action)
             report.bo_evals += sev.samples_used
+            prev_cfg = config
             config = tuple(int(c) for c in new_cfg)
+            self._note_deploy(prev_cfg, config, gq, phase.load_factor)
+        if (seed is not None and self._cold_starts is not None
+                and self.spec.provision_queries > 0):
+            # With the market restocked, try to walk the portfolio back to
+            # the pool that served before the storm.  The candidate is
+            # judged for the *steady state* (idle grid score at the phase
+            # load): its cold starts are a one-off transition cost that the
+            # serving plane charges honestly at the landing, not a property
+            # of the pool, and scoring them into the search record would
+            # brand the cheap mix infeasible forever.  Booked behind the
+            # provisioning lead like any other deploy; the monitor cannot
+            # trigger this return on its own because a drained steady
+            # state shows no queue slack to release.
+            trim = tuple(int(c) for c in seed)
+            ev = self.plane.grid_evaluator(phase.batch_dist)
+            if (ev is not None and trim != tuple(config)
+                    and all(0 <= c <= int(b) for c, b in zip(trim, bounds))
+                    and float(np.dot(prices, trim))
+                    < float(np.dot(prices, config))):
+                rate = float(ev.grid([trim], [phase.load_factor])[0, 0])
+                if rate >= self.spec.qos_target:
+                    # Two-stage transition: first the union pool (the trim
+                    # slots wake cold beside the still-warm incumbents),
+                    # then — via ``_land_pending`` — the pure-removal drop
+                    # to the trim once the grace clock says they are warm.
+                    union = tuple(max(int(c), int(s))
+                                  for c, s in zip(config, trim))
+                    self._pending_switch = (
+                        gq + self.spec.provision_queries, union)
+                    self._pending_trim = trim
+                    report.actions.append(ControlAction(
+                        kind="restock_trim", trigger="phase_start", phase=p,
+                        at_query=gq, old_config=config, new_config=trim,
+                        old_price=float(np.dot(prices, config)),
+                        new_price=float(np.dot(prices, trim)),
+                        bo_evals=1, warm_idle_delta=None))
         self.plane.deploy(config)
         self.monitor.reset()
         return config, opt
+
+
+# Import-time guard: the registry and the dispatch table must agree, so a
+# new event kind cannot be silently ignored by every episode that uses it.
+_UNHANDLED = [k for k in EVENT_KINDS
+              if k not in ScenarioEngine._EVENT_HANDLERS]
+if _UNHANDLED:    # pragma: no cover - tripped only by a wiring bug
+    raise RuntimeError(
+        "event kinds registered in spec.EVENT_KIND_SPECS but missing from "
+        f"ScenarioEngine._EVENT_HANDLERS: {_UNHANDLED}")

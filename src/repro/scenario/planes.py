@@ -18,8 +18,10 @@ Both planes speak one small protocol:
   * ``deploy(config)`` — put a pool configuration in force, remapping the
     carried slot state through the reconfiguration (surviving instances
     keep their in-flight work, removed slots drop it, added slots start
-    idle — any provisioning delay was already modeled by the engine's
-    deferred switch);
+    idle — or, on a tiered plane, busy for their capacity tier's cold
+    start: a pool scaled to zero pays its wake-up backlog through the
+    carry, bit-exactly.  Any *control-plane* provisioning delay was
+    already modeled by the engine's deferred switch);
   * ``advance_clock(delta)`` — shift the local-time origin (phase
     boundary: the previous stream's span; mid-phase stream rebuild, e.g. a
     load spike: the anchor-arrival delta that keeps episode time
@@ -81,9 +83,18 @@ def slice_stream(workload: Workload, lo: int, hi: int) -> Workload:
 class _EpisodeClock:
     """Continuous-time threading shared by both planes: the carried
     :class:`PoolState`, the deployed config, and local-time bookkeeping.
-    Subclasses set ``_n_slots`` and implement ``measure``/``commit``."""
+    Subclasses set ``_n_slots`` and implement ``measure``/``commit``;
+    tiered planes set ``_cold_starts`` (per-type cold-start seconds) so
+    every redeploy's added slots start busy for their tier's wake-up."""
 
     _n_slots: int
+    _cold_starts = None      # per-type cold-start seconds, or None (legacy)
+
+    @property
+    def cold_starts(self):
+        """Per-type cold-start seconds the warm lanes charge slots added by
+        a redeploy, or ``None`` on a plane without capacity tiers."""
+        return self._cold_starts
 
     def _reset_clock(self, carry: bool) -> None:
         self._carry = bool(carry)
@@ -102,12 +113,14 @@ class _EpisodeClock:
 
     def deploy(self, config) -> None:
         """Put a pool configuration in force, threading the carried slot
-        state through the reconfiguration (``PoolState.remap``)."""
+        state through the reconfiguration (``PoolState.remap``); slots the
+        switch adds pay their tier's cold start (``warmup``)."""
         cfg = tuple(int(c) for c in config)
         if (self._carry and self._state is not None
                 and self._deployed is not None and cfg != self._deployed):
             now = self._state.clock + self._local_now
-            self._state = self._state.remap(self._deployed, cfg, now)
+            self._state = self._state.remap(self._deployed, cfg, now,
+                                            warmup=self._cold_starts)
         self._deployed = cfg
         self.configure(cfg)
 
@@ -143,7 +156,8 @@ class SimulatorPlane(_EpisodeClock):
     name = "simulator"
 
     def __init__(self, profile: ModelProfile, types: list[InstanceType],
-                 workloads: dict[str, Workload], max_instances: int = 40):
+                 workloads: dict[str, Workload], max_instances: int = 40,
+                 catalog=None):
         if not workloads:
             raise ValueError("at least one base workload is required")
         arrs = [wl.arrivals for wl in workloads.values()]
@@ -159,7 +173,22 @@ class SimulatorPlane(_EpisodeClock):
         self.evaluators = {d: PoolEvaluator(profile, self.types, wl,
                                             max_instances=max_instances)
                            for d, wl in self.workloads.items()}
+        # ``catalog`` (serving/tiers.TierCatalog) turns this into a tiered
+        # plane: redeploys charge per-tier cold starts through the carry,
+        # and the engine's BO sees per-type interruption risk premiums.
+        # Without one the plane is bit-identical to the legacy behavior.
+        self.catalog = catalog
+        self.cost_penalties = None
+        if catalog is not None:
+            self._cold_starts = catalog.cold_starts(profile)
+            self.cost_penalties = catalog.cost_penalties()
         self._reset_clock(False)     # cold until an episode begins
+
+    @property
+    def type_tiers(self) -> tuple[str, ...]:
+        """Capacity tier of each instance type (tier-scoped events resolve
+        their targets against this)."""
+        return tuple(getattr(t, "tier", "on_demand") for t in self.types)
 
     @property
     def qos_latency(self) -> float:
@@ -230,8 +259,9 @@ class SimulatorPlane(_EpisodeClock):
             return self.oracle(dist, factor)
         state, dep = cs
         ev = self.evaluators[dist]
-        return lambda cfg: float(ev.grid_from(state, [cfg], [factor],
-                                              deployed=dep)[0, 0])
+        return lambda cfg: float(ev.grid_from(
+            state, [cfg], [factor], deployed=dep,
+            warmup=self._cold_starts)[0, 0])
 
     def phase_sweep(self, config, phases: list[PhaseSpec]) -> list[float]:
         """Full-stream QoS of one config under every phase's conditions —
@@ -280,6 +310,11 @@ class LivePlane(_EpisodeClock):
     @property
     def base_rate(self) -> float:
         return next(iter(self.workloads.values())).rate_qps
+
+    @property
+    def type_tiers(self) -> tuple[str, ...]:
+        return tuple(getattr(ct, "tier", "on_demand")
+                     for ct in self.engine.cell_types)
 
     def configure(self, config) -> None:
         self.engine.configure(tuple(int(c) for c in config))
@@ -387,8 +422,9 @@ class LivePlane(_EpisodeClock):
             self.configure(cfgt)
             self.n_evals += 1
             total = sum(cfgt)
-            rel = (np.asarray(state.remap(dep, cfgt,
-                                          state.clock).free[:total],
+            rel = (np.asarray(state.remap(dep, cfgt, state.clock,
+                                          warmup=self._cold_starts
+                                          ).free[:total],
                               dtype=np.float64) - state.clock)
             return float(self.engine.serve(
                 probe, self.qos_latency, time_scale=self.time_scale,
@@ -416,4 +452,30 @@ def paper_simulator_plane(model_name: str, spec: ScenarioSpec,
     from ..core.search_space import SearchSpace
     prices = tuple(t.price for t in types)
     space = SearchSpace(bounds=DEFAULT_BOUNDS[model_name], prices=prices)
+    return plane, space
+
+
+def tiered_simulator_plane(model_name: str, spec: ScenarioSpec,
+                           max_instances: int = 40):
+    """(plane, space) for a named model on its hybrid capacity-tier pool
+    (serving/tiers.TIERED_POOLS): the same per-model streams as
+    ``paper_simulator_plane``, but the pool mixes on-demand, spot and
+    serverless procurements of the paper hardware.  The plane charges
+    per-tier cold starts through the carry and exposes per-type risk
+    premiums (``cost_penalties``) to the engine's BO; the search space
+    keeps *market* prices for billing."""
+    from ..serving.tiers import TierCatalog, tiered_pool
+
+    profile = MODEL_PROFILES[model_name]
+    types, bounds = tiered_pool(model_name)
+    catalog = TierCatalog(types)
+    workloads = {d: paper_workload(model_name, seed=spec.seed,
+                                   n_queries=spec.n_base_queries,
+                                   batch_dist=d)
+                 for d in spec.batch_dists}
+    plane = SimulatorPlane(profile, types, workloads,
+                           max_instances=max_instances, catalog=catalog)
+    from ..core.search_space import SearchSpace
+    prices = tuple(t.price for t in types)
+    space = SearchSpace(bounds=bounds, prices=prices)
     return plane, space

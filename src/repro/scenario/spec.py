@@ -5,19 +5,70 @@ a long-running *episode*: an ordered sequence of traffic phases (length in
 queries, load factor relative to the bound base workload, batch
 distribution) plus a timeline of injected infrastructure events — the
 interleaved regime heterogeneous-serving systems (KAIROS, INFaaS) are
-evaluated under.  Specs are pure data: nothing here touches jax, the
-simulator, or the live engine.  The scenario engine (engine.py) compiles a
-spec into the detection → adaptation event loop over an evaluation plane
-(planes.py), and the registry (registry.py) names the canonical episodes.
+evaluated under.  Events come in two scopes: *type-scoped* kinds hit one
+instance type by index, *tier-scoped* kinds (``preemption_storm``,
+``tier_outage``, ``price_spike``) hit every type procured on one capacity
+tier at once — the correlated-failure surface serving/tiers.py models.
+
+Every kind lives in :data:`EVENT_KIND_SPECS`, the **single event registry**:
+``validate`` checks membership against it, the engine's dispatch table is
+import-time-verified to cover it, and the fuzz builder draws its kinds from
+it (``fuzz_kinds``) — adding a kind without wiring all three fails loudly
+instead of silently never being exercised.
+
+Specs are pure data: nothing here touches jax, the simulator, or the live
+engine.  The scenario engine (engine.py) compiles a spec into the detection
+→ adaptation event loop over an evaluation plane (planes.py), and the
+registry (registry.py) names the canonical episodes.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-EVENT_KINDS = ("cell_failure", "spot_preemption", "price_change",
-               "load_spike")
+
+@dataclass(frozen=True)
+class EventKind:
+    """Registry entry for one event kind.
+
+    ``capacity``     — the event destroys pool capacity (the engine books a
+                       bounds shrink and, for transient kinds, a restock);
+    ``tier_scoped``  — the event targets a capacity tier (``EventSpec.tier``)
+                       instead of a single ``type_index``;
+    ``fuzz``         — eligible for ``registry.composite`` sampling.
+    """
+
+    name: str
+    capacity: bool = False
+    tier_scoped: bool = False
+    fuzz: bool = True
+
+
+# Single source of truth for event kinds.  Order matters: ``fuzz_kinds``
+# preserves it, and the non-tiered composite fuzz draw sequence is pinned
+# seed-for-seed to the first four entries (tests/test_composite_fuzz.py).
+EVENT_KIND_SPECS: dict[str, EventKind] = {
+    "cell_failure": EventKind("cell_failure", capacity=True),
+    "spot_preemption": EventKind("spot_preemption", capacity=True),
+    "price_change": EventKind("price_change"),
+    "load_spike": EventKind("load_spike"),
+    "preemption_storm": EventKind("preemption_storm", capacity=True,
+                                  tier_scoped=True),
+    "tier_outage": EventKind("tier_outage", capacity=True, tier_scoped=True),
+    "price_spike": EventKind("price_spike", tier_scoped=True),
+}
+
+EVENT_KINDS = tuple(EVENT_KIND_SPECS)
 BATCH_DISTS = ("lognormal", "gaussian")
+
+
+def fuzz_kinds(tiered: bool = False) -> tuple[str, ...]:
+    """Event kinds the composite fuzz builder samples from, in registry
+    order.  ``tiered=False`` excludes tier-scoped kinds (they are no-ops on
+    planes without tiered types, and the legacy draw sequence stays
+    bit-identical per seed)."""
+    return tuple(name for name, kind in EVENT_KIND_SPECS.items()
+                 if kind.fuzz and (tiered or not kind.tier_scoped))
 
 
 @dataclass(frozen=True)
@@ -39,7 +90,7 @@ class PhaseSpec:
 class EventSpec:
     """One injected infrastructure event.
 
-    kind:
+    Type-scoped kinds (target ``type_index``):
       * ``cell_failure``     — ``count`` instances of ``type_index`` die;
         capacity is gone for the rest of the episode.
       * ``spot_preemption``  — like a failure, but the market returns the
@@ -51,6 +102,18 @@ class EventSpec:
         ``factor``.  Unlike the capacity events (which the control plane is
         told about), a spike must be *detected* by the load monitor.
 
+    Tier-scoped kinds (target every type procured on capacity tier
+    ``tier`` — serving/tiers.py):
+      * ``preemption_storm`` — a correlated kill: fraction ``factor`` of
+        each tier type's *deployed* capacity is preempted at once; the
+        market restocks the losses at the next phase boundary (which
+        re-enters, not resets, the tier's hazard timeline).
+      * ``tier_outage``      — the whole tier's capacity (its full search
+        bounds) evaporates until the next phase boundary's restock.
+      * ``price_spike``      — the tier's unit prices are multiplied by
+        ``factor`` (spot-market drift/spike; see
+        serving/tiers.SpotPriceProcess).
+
     ``at_frac`` positions the event within its phase's query stream.
     """
 
@@ -60,6 +123,7 @@ class EventSpec:
     type_index: int = 0
     count: int = 1
     factor: float = 1.0
+    tier: str = ""
 
 
 @dataclass(frozen=True)
@@ -93,7 +157,8 @@ class ScenarioSpec:
                 raise ValueError(f"phase {p} ({ph.name}): unknown "
                                  f"batch_dist {ph.batch_dist!r}")
         for e in self.events:
-            if e.kind not in EVENT_KINDS:
+            kind = EVENT_KIND_SPECS.get(e.kind)
+            if kind is None:
                 raise ValueError(f"unknown event kind {e.kind!r}")
             if not 0 <= e.phase < len(self.phases):
                 raise ValueError(f"event {e.kind}: phase {e.phase} out of "
@@ -101,9 +166,28 @@ class ScenarioSpec:
             if not 0.0 <= e.at_frac < 1.0:
                 raise ValueError(f"event {e.kind}: at_frac must be in "
                                  f"[0, 1), got {e.at_frac}")
+            if e.type_index < 0:
+                raise ValueError(f"event {e.kind}: type_index must be >= 0, "
+                                 f"got {e.type_index}")
+            if kind.tier_scoped:
+                # Imported here so plain specs keep this module pure data.
+                from ..serving.tiers import TIER_NAMES
+                if e.tier not in TIER_NAMES:
+                    raise ValueError(
+                        f"event {e.kind}: tier must be one of {TIER_NAMES}, "
+                        f"got {e.tier!r}")
+            elif e.tier:
+                raise ValueError(f"event {e.kind}: tier is only valid for "
+                                 "tier-scoped kinds")
             if e.kind in ("cell_failure", "spot_preemption") and e.count < 1:
                 raise ValueError(f"event {e.kind}: count must be >= 1")
             if e.kind in ("price_change", "load_spike") and not e.factor > 0:
+                raise ValueError(f"event {e.kind}: factor must be > 0")
+            if e.kind == "preemption_storm" and not 0.0 < e.factor <= 1.0:
+                raise ValueError(f"event {e.kind}: factor is the kill "
+                                 f"fraction, must be in (0, 1], got "
+                                 f"{e.factor}")
+            if e.kind == "price_spike" and not e.factor > 0:
                 raise ValueError(f"event {e.kind}: factor must be > 0")
         if self.window < 1:
             raise ValueError("window must be >= 1")

@@ -1,14 +1,19 @@
-"""Serving substrate: workloads, instance catalog, FCFS queueing simulator,
-pool evaluation, live engine, autoscaling, fault handling, checkpointing."""
+"""Serving substrate: workloads, instance catalog, capacity tiers, FCFS
+queueing simulator, pool evaluation, live engine, autoscaling, fault
+handling, checkpointing."""
 
 from .autoscaler import LoadMonitor, ScaleEvent, rescale
-from .fault import fail_instances, recover_from_failure, reprice
+from .fault import (fail_instances, recover_from_capacity_change,
+                    recover_from_failure, reprice)
 from .instance import (AWS_INSTANCES, MODEL_PROFILES, PAPER_POOLS, TPU_CELLS,
                        InstanceType, ModelProfile, service_time_table)
 from .pool import (DEFAULT_BOUNDS, DEFAULT_RATES, PoolEvaluator,
                    best_homogeneous, cost_effectiveness, make_paper_setup,
                    paper_workload)
 from .simulator import PoolSimulator, PoolState, SegmentResult
+from .tiers import (TIER_NAMES, TIERED_POOLS, TIERS, CapacityTier,
+                    SpotPriceProcess, TierCatalog, TierHazard, tiered_pool,
+                    tiered_variant)
 from .workload import (Workload, gaussian_batches, generate_workload,
                        lognormal_batches)
 
@@ -19,6 +24,9 @@ __all__ = [
     "make_paper_setup", "paper_workload", "DEFAULT_RATES", "DEFAULT_BOUNDS",
     "PoolSimulator", "PoolState", "SegmentResult",
     "LoadMonitor", "ScaleEvent", "rescale",
-    "fail_instances", "recover_from_failure", "reprice",
+    "fail_instances", "recover_from_capacity_change",
+    "recover_from_failure", "reprice",
+    "CapacityTier", "TIERS", "TIER_NAMES", "TierHazard", "SpotPriceProcess",
+    "TierCatalog", "TIERED_POOLS", "tiered_variant", "tiered_pool",
     "Workload", "generate_workload", "lognormal_batches", "gaussian_batches",
 ]

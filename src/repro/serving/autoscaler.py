@@ -92,7 +92,7 @@ class ScaleEvent:
 def rescale(optimizer: RibbonOptimizer, evaluate_qos, budget: int = 40,
             kind: str = "load_change", load_factors=None,
             target_index: int = -1, batch_q: int = 8, warm_state=None,
-            deployed=None, now=None) -> ScaleEvent:
+            deployed=None, now=None, warmup=None) -> ScaleEvent:
     """Respond to a detected change: measure the incumbent on the new load,
     warm-restart the BO with the paper's estimation/pruning transfer, and
     search to the new optimum.
@@ -119,7 +119,8 @@ def rescale(optimizer: RibbonOptimizer, evaluate_qos, budget: int = 40,
     candidate scoring to the warm lanes: every candidate is evaluated from
     the live pool's carried backlog via ``evaluate_qos.grid_from`` (each
     candidate's initial carry is the remap of the ``deployed`` pool's state
-    at episode time ``now``) instead of from an idle queue — the what-if
+    at episode time ``now``, added slots paying their capacity tier's
+    ``warmup`` cold start) instead of from an idle queue — the what-if
     adaptation view.  ``budget`` counts post-restart evaluations at the
     target level either way.
     """
@@ -137,7 +138,8 @@ def rescale(optimizer: RibbonOptimizer, evaluate_qos, budget: int = 40,
         def sweep(configs):
             if warm:
                 return evaluate_qos.grid_from(warm_state, configs, factors,
-                                              deployed=deployed, now=now)
+                                              deployed=deployed, now=now,
+                                              warmup=warmup)
             return evaluate_qos.grid(configs, factors)
 
         incumbent = sweep([old_best])

@@ -32,8 +32,18 @@ from .workload import Workload
 
 
 def fail_instances(config, type_index: int, count: int = 1) -> tuple:
-    """Pool config after losing `count` instances of one type."""
+    """Pool config after losing `count` instances of one type.
+
+    Losing more than is deployed clamps at zero (a storm can only take what
+    is there); a type index outside the pool or a negative count is a caller
+    bug and raises instead of silently wrapping / growing the pool.
+    """
     cfg = list(int(c) for c in config)
+    if not 0 <= type_index < len(cfg):
+        raise ValueError(f"type_index {type_index} out of range for a pool "
+                         f"with {len(cfg)} instance types")
+    if count < 0:
+        raise ValueError(f"count must be >= 0, got {count}")
     cfg[type_index] = max(0, cfg[type_index] - count)
     return tuple(cfg)
 
@@ -50,25 +60,41 @@ def continue_search(opt: RibbonOptimizer, evaluate_qos, budget: int) -> int:
     return opt.trace.n_samples - n0
 
 
-def recover_from_failure(optimizer: RibbonOptimizer, evaluate_qos,
-                         failed_type: int, lost: int = 1,
-                         budget: int = 40,
-                         kind: str = "cell_failure") -> tuple[RibbonOptimizer,
-                                                              ScaleEvent]:
+def recover_from_capacity_change(optimizer: RibbonOptimizer, evaluate_qos,
+                                 losses: dict, budget: int = 40,
+                                 kind: str = "cell_failure",
+                                 replay: bool = True,
+                                 ) -> tuple[RibbonOptimizer, ScaleEvent]:
     """Capacity-change recovery (beyond-paper extension of RIBBON).
 
-    A lost node caps the available count of its cell type.  Unlike a load
-    change, the *load is unchanged*, so every measurement of a configuration
-    that still fits the reduced capacity remains VALID: recovery builds a new
+    ``losses`` maps type index -> instances lost; a correlated event (a
+    same-tier preemption storm, a tier outage) shrinks several types in one
+    recovery instead of chaining per-type searches.  Unlike a load change,
+    the *load is unchanged*, so every measurement of a configuration that
+    still fits the reduced capacity remains VALID: recovery builds a new
     optimizer over the reduced search space, replays the still-valid history
     as real observations (``RibbonOptimizer.replay_from`` — no estimation
     needed), then continues the search.  Returns (new_optimizer, event).
 
-    ``lost`` may be negative to model *restored* capacity (a preempted spot
-    type coming back): the bounds grow, the whole history replays, and the
+    ``replay=False`` switches to *pessimistic* replay instead: when the
+    oracle scores candidates from a live queue backlog on a capacity-tier
+    plane, the old measurements were taken under strictly milder conditions
+    (no backlog, and history scored its pools fully warm while a
+    replacement bought now pays tier cold starts), so replaying feasible
+    samples as ground truth lets a stale incumbent shadow every
+    honestly-scored probe.  Only the infeasible history transfers (as
+    flagged estimates — still infeasible under harsher conditions, so its
+    dominance pruning and GP mass remain sound), and the actual incumbent
+    must re-earn feasibility through the caller's oracle.
+
+    Entries may be negative to model *restored* capacity (a preempted spot
+    type restocking): the bounds grow, the whole history replays, and the
     continued search reclaims any cheaper configuration that needed the
-    restored instances.  ``kind`` labels the emitted ScaleEvent
-    ("cell_failure", "spot_preemption", "restock", ...).
+    restored instances.  Restock grows *bounds* only — the tier's hazard
+    process runs on the absolute episode clock (serving/tiers.TierHazard),
+    so restocked capacity re-enters it; nothing here resets it.  ``kind``
+    labels the emitted ScaleEvent ("cell_failure", "spot_preemption",
+    "recover_storm", "restock", ...).
     """
     from ..core.search_space import SearchSpace
 
@@ -76,15 +102,20 @@ def recover_from_failure(optimizer: RibbonOptimizer, evaluate_qos,
     old_cost = optimizer.best_cost
     space = optimizer.space
     new_bounds = list(space.bounds)
-    new_bounds[failed_type] = max(0, new_bounds[failed_type] - lost)
+    for t, lost in losses.items():
+        if not 0 <= t < len(new_bounds):
+            raise ValueError(f"type_index {t} out of range for a pool with "
+                             f"{len(new_bounds)} instance types")
+        new_bounds[t] = max(0, new_bounds[t] - int(lost))
     new_space = SearchSpace(bounds=tuple(new_bounds), prices=space.prices)
 
     new_opt = RibbonOptimizer(new_space, qos_target=optimizer.qos_target,
                               theta=optimizer.theta,
                               start=tuple(min(b, c) for b, c in
                                           zip(new_bounds, old_best))
-                              if old_best else None)
-    new_opt.replay_from(optimizer)
+                              if old_best else None,
+                              cost_penalties=optimizer.cost_penalties)
+    new_opt.replay_from(optimizer, pessimistic=not replay)
     used = continue_search(new_opt, evaluate_qos, budget)
     best = new_opt.trace.best_feasible()
     event = ScaleEvent(kind=kind, old_best=old_best,
@@ -93,6 +124,19 @@ def recover_from_failure(optimizer: RibbonOptimizer, evaluate_qos,
                        new_cost=best.cost if best else None,
                        samples_used=used)
     return new_opt, event
+
+
+def recover_from_failure(optimizer: RibbonOptimizer, evaluate_qos,
+                         failed_type: int, lost: int = 1,
+                         budget: int = 40,
+                         kind: str = "cell_failure",
+                         replay: bool = True) -> tuple[RibbonOptimizer,
+                                                       ScaleEvent]:
+    """Single-type convenience wrapper over
+    :func:`recover_from_capacity_change`."""
+    return recover_from_capacity_change(optimizer, evaluate_qos,
+                                        {failed_type: lost}, budget=budget,
+                                        kind=kind, replay=replay)
 
 
 def reprice(optimizer: RibbonOptimizer, new_prices, evaluate_qos,
@@ -112,7 +156,8 @@ def reprice(optimizer: RibbonOptimizer, new_prices, evaluate_qos,
     new_space = SearchSpace(bounds=optimizer.space.bounds,
                             prices=tuple(float(p) for p in new_prices))
     new_opt = RibbonOptimizer(new_space, qos_target=optimizer.qos_target,
-                              theta=optimizer.theta, start=old_best)
+                              theta=optimizer.theta, start=old_best,
+                              cost_penalties=optimizer.cost_penalties)
     new_opt.replay_from(optimizer)
     used = continue_search(new_opt, evaluate_qos, budget)
     best = new_opt.trace.best_feasible()

@@ -57,7 +57,10 @@ class ModelProfile:
     efficiency: dict = field(default_factory=dict)   # per-instance F multiplier
 
     def eff(self, instance_name: str) -> float:
-        return self.efficiency.get(instance_name, 1.0)
+        if instance_name in self.efficiency:
+            return self.efficiency[instance_name]
+        # Tier variants ("g4dn:spot") inherit their base hardware's entry.
+        return self.efficiency.get(instance_name.partition(":")[0], 1.0)
 
 
 @dataclass(frozen=True)
@@ -68,6 +71,7 @@ class InstanceType:
     mem_bw: float         # effective bytes/s
     overhead: float       # fixed per-query dispatch seconds
     chips: int = 0        # >0 for TPU cell types
+    tier: str = "on_demand"   # capacity tier (serving/tiers.py)
 
     def latency(self, profile: ModelProfile, batch) -> np.ndarray:
         b = np.asarray(batch, dtype=np.float64)

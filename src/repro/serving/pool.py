@@ -156,12 +156,14 @@ class PoolEvaluator:
                            for f in factors], dtype=np.float64)
 
     def grid_from(self, state, configs, load_factors, deployed=None,
-                  now=None) -> np.ndarray:
+                  now=None, warmup=None) -> np.ndarray:
         """Warm-start ``grid``: QoS rates of candidate pools scored from a
         live carry (each candidate's initial state is the ``PoolState.remap``
         of the currently ``deployed`` pool — what-if adaptation under the
-        current queue).  Cell ``[w, b]`` equals ``qos_rate_from`` on the
-        scaled workload bound to that candidate's remapped state, exactly.
+        current queue, slots added by the switch paying their tier's
+        ``warmup`` cold start).  Cell ``[w, b]`` equals ``qos_rate_from`` on
+        the scaled workload bound to that candidate's remapped state,
+        exactly.
 
         Memoized per (warm state, load factor, config) cell: a rescale round
         re-sweeping its monitored levels from one adaptation cut costs one
@@ -173,6 +175,7 @@ class PoolEvaluator:
         warm_key = (
             None if deployed is None else tuple(int(c) for c in deployed),
             None if now is None else float(now),
+            None if warmup is None else tuple(float(w) for w in warmup),
             float(state.clock),
             tuple(np.asarray(state.free, dtype=np.float64).tolist()),
         )
@@ -188,7 +191,8 @@ class PoolEvaluator:
             lambda f, k: cache.get((f, k)),
             lambda f, k, rate: cache.__setitem__((f, k), rate),
             lambda chunk, rows: self.sim.qos_rate_grid_from(
-                state, chunk, rows, deployed=deployed, now=now))
+                state, chunk, rows, deployed=deployed, now=now,
+                warmup=warmup))
 
     def exhaustive(self, space: SearchSpace, qos_target: float,
                    load_factor: float = 1.0):

@@ -138,12 +138,20 @@ class PoolState:
         """
         return PoolState(free=self.free, clock=self.clock + float(delta))
 
-    def remap(self, old_config, new_config, now: float) -> "PoolState":
+    def remap(self, old_config, new_config, now: float,
+              warmup=None) -> "PoolState":
         """Thread slot state through a pool reconfiguration at episode time
         ``now``: per type, the first ``min(old, new)`` slots survive with
         their in-flight work, removed slots drop theirs, and added slots
         start idle at ``now`` (any provisioning delay is the control
-        plane's to model *before* the switch takes effect)."""
+        plane's to model *before* the switch takes effect).
+
+        ``warmup`` (per-type seconds, e.g. ``TierCatalog.cold_starts``)
+        models capacity-tier cold starts: an *added* slot of type ``t``
+        starts busy until ``now + warmup[t]`` instead of idle at ``now`` —
+        a pool scaled to zero and re-woken pays its cold-start backlog
+        through the same carry as any other queue debt.  Surviving slots
+        are already warm and keep their in-flight work untouched."""
         old = np.asarray(old_config, dtype=np.int64)
         new = np.asarray(new_config, dtype=np.int64)
         if old.shape != new.shape or old.ndim != 1:
@@ -153,21 +161,31 @@ class PoolState:
         free = np.full_like(self.free, float(now))
         oc = np.concatenate([[0], np.cumsum(old)])
         nc = np.concatenate([[0], np.cumsum(new)])
+        if warmup is not None:
+            w = np.asarray(warmup, dtype=np.float64)
+            if w.shape != new.shape:
+                raise ValueError("warmup must give one per-type cold-start "
+                                 "time matching the config length")
+            for t in range(len(new)):
+                free[nc[t]:nc[t + 1]] = float(now) + w[t]
         for t in range(len(old)):
             k = int(min(old[t], new[t]))
             free[nc[t]:nc[t] + k] = self.free[oc[t]:oc[t] + k]
         return PoolState(free=free, clock=self.clock)
 
-    def remap_batch(self, old_config, new_configs, now: float) -> np.ndarray:
+    def remap_batch(self, old_config, new_configs, now: float,
+                    warmup=None) -> np.ndarray:
         """Vectorized what-if remap: the initial carry of every candidate in
         a batch, produced from one live pool's state in one shot.
 
         Row ``b`` of the returned ``(B, n_slots)`` float64 matrix equals
-        ``remap(old_config, new_configs[b], now).free`` exactly — per type,
-        the first ``min(old, new_b)`` slots survive with their in-flight
-        work, removed slots drop it, and added slots start idle at ``now``.
-        This is the batched/grid warm lanes' entry ramp: B candidate pools
-        scored from the current backlog share one remap and one dispatch.
+        ``remap(old_config, new_configs[b], now, warmup).free`` exactly —
+        per type, the first ``min(old, new_b)`` slots survive with their
+        in-flight work, removed slots drop it, and added slots start idle at
+        ``now`` (or busy until ``now + warmup[type]`` under tier cold
+        starts).  This is the batched/grid warm lanes' entry ramp: B
+        candidate pools scored from the current backlog share one remap and
+        one dispatch.
         """
         old = np.asarray(old_config, dtype=np.int64)
         new = np.asarray(new_configs, dtype=np.int64)
@@ -190,7 +208,16 @@ class PoolState:
         survive = active & (j < np.minimum(old, new)[rows, t_of])
         oc = np.concatenate([[0], np.cumsum(old)])
         src = np.clip(oc[:-1][t_of] + j, 0, n_slots - 1)
-        return np.where(survive, self.free[src], float(now))
+        base = np.full((n_b, n_slots), float(now))
+        if warmup is not None:
+            w = np.asarray(warmup, dtype=np.float64)
+            if w.shape != old.shape:
+                raise ValueError("warmup must give one per-type cold-start "
+                                 "time matching the config length")
+            # Same float64 sum as the per-row remap: now + warmup[type] for
+            # active (added) slots, plain now for the inactive padding.
+            base = np.where(active, float(now) + w[t_of], float(now))
+        return np.where(survive, self.free[src], base)
 
 
 @dataclass
@@ -573,13 +600,15 @@ class PoolSimulator:
 
     # ------------------------------------------------ warm batched / grid
     def _warm_free_matrix(self, state: PoolState, configs: np.ndarray,
-                          deployed, now) -> np.ndarray:
+                          deployed, now, warmup=None) -> np.ndarray:
         """(B, max_instances) float64 episode next-free matrix: candidate
         ``b``'s initial carry.  With ``deployed`` given, each row is the
         vectorized ``PoolState.remap`` of switching the live pool (currently
         ``deployed``) to ``configs[b]`` at episode time ``now`` (default:
-        the local stream origin ``state.clock``); with ``deployed=None``
-        every candidate inherits the carry slot-for-slot."""
+        the local stream origin ``state.clock``), slots added by the switch
+        paying their per-type ``warmup`` cold start; with ``deployed=None``
+        every candidate inherits the carry slot-for-slot (no switch, no
+        cold start)."""
         if len(state.free) != self.max_instances:
             raise ValueError(
                 f"state has {len(state.free)} slots, simulator pads to "
@@ -589,7 +618,7 @@ class PoolSimulator:
                 np.asarray(state.free, dtype=np.float64),
                 (len(configs), self.max_instances))
         t_now = float(state.clock) if now is None else float(now)
-        return state.remap_batch(deployed, configs, t_now)
+        return state.remap_batch(deployed, configs, t_now, warmup=warmup)
 
     def _warm_free0_rows(self, state: PoolState, free_matrix: np.ndarray,
                          active: np.ndarray, horizon: float,
@@ -605,15 +634,18 @@ class PoolSimulator:
         return np.where(active, rel.astype(np.float32), np.float32(_INF))
 
     def latencies_batch_from(self, state: PoolState, configs, deployed=None,
-                             now=None) -> tuple[np.ndarray, list[PoolState]]:
+                             now=None,
+                             warmup=None) -> tuple[np.ndarray,
+                                                   list[PoolState]]:
         """Warm-start ``latencies_batch``: B candidate pools served from the
         live backlog in one dispatch, plus each candidate's final carry.
 
         Row ``i`` is bit-identical to ``latencies_from(state_i, configs[i])``
         where ``state_i`` is ``state`` itself (``deployed=None``) or
-        ``state.remap(deployed, configs[i], now)`` — the what-if carry of
-        redeploying the live pool as candidate ``i`` at episode time ``now``
-        (default ``state.clock``, i.e. the bound stream's local origin).
+        ``state.remap(deployed, configs[i], now, warmup)`` — the what-if
+        carry of redeploying the live pool as candidate ``i`` at episode
+        time ``now`` (default ``state.clock``, i.e. the bound stream's local
+        origin), added slots paying their tier's ``warmup`` cold start.
         The idle carry at clock 0 therefore reproduces the cold
         ``latencies_batch`` bit for bit.
         """
@@ -621,7 +653,8 @@ class PoolSimulator:
         n = self.workload.n_queries
         if configs.size == 0:
             return np.zeros((0, n), dtype=np.float64), []
-        free_mat = self._warm_free_matrix(state, configs, deployed, now)
+        free_mat = self._warm_free_matrix(state, configs, deployed, now,
+                                          warmup)
         type_of_slot, active = self._slots_batch(configs)
         if n == 0:
             # Empty stream: every candidate's carry passes through unchanged.
@@ -643,17 +676,19 @@ class PoolSimulator:
         return out, states
 
     def qos_rate_batch_from(self, state: PoolState, configs, deployed=None,
-                            now=None) -> tuple[np.ndarray, list[PoolState]]:
+                            now=None,
+                            warmup=None) -> tuple[np.ndarray,
+                                                  list[PoolState]]:
         """Warm-start ``qos_rate_batch``: element ``i`` equals
         ``qos_rate_from(state_i, configs[i])`` exactly (same device
         latencies, same host-side float64 threshold comparison)."""
         lat, states = self.latencies_batch_from(state, configs, deployed,
-                                                now)
+                                                now, warmup)
         return np.mean(lat <= self.model.qos_latency, axis=1), states
 
     def latencies_grid_from(self, state: PoolState, configs, load_factors,
                             service_tables=None, deployed=None,
-                            now=None) -> np.ndarray:
+                            now=None, warmup=None) -> np.ndarray:
         """Warm-start ``latencies_grid``: (W, B, n_queries) float64 where
         cell ``[w, b]`` equals ``PoolSimulator(..., workload.scaled(
         load_factors[w])).latencies_from(state_b, configs[b])[0]`` bit for
@@ -667,7 +702,8 @@ class PoolSimulator:
         if configs.size == 0:
             return np.zeros((len(arrivals), 0, self.workload.n_queries),
                             dtype=np.float64)
-        free_mat = self._warm_free_matrix(state, configs, deployed, now)
+        free_mat = self._warm_free_matrix(state, configs, deployed, now,
+                                          warmup)
         type_of_slot, active = self._slots_batch(configs)
         free0 = jnp.asarray(self._warm_free0_rows(
             state, free_mat, active, float(arrivals[:, -1].max()),
@@ -686,7 +722,7 @@ class PoolSimulator:
 
     def qos_rate_grid_from(self, state: PoolState, configs, load_factors,
                            service_tables=None, deployed=None,
-                           now=None) -> np.ndarray:
+                           now=None, warmup=None) -> np.ndarray:
         """Warm-start ``qos_rate_grid``: the fused count scan from the
         candidates' carries.  Cell ``[w, b]`` equals ``PoolSimulator(...,
         workload.scaled(load_factors[w])).qos_rate_from(state_b,
@@ -700,7 +736,8 @@ class PoolSimulator:
         tables = self._stacked_service(service_tables, n_w)
         if configs.size == 0:
             return np.zeros((n_w, 0), dtype=np.float64)
-        free_mat = self._warm_free_matrix(state, configs, deployed, now)
+        free_mat = self._warm_free_matrix(state, configs, deployed, now,
+                                          warmup)
         type_of_slot, active = self._slots_batch(configs)
         free0 = self._warm_free0_rows(
             state, free_mat, active, float(arrivals[:, -1].max()),

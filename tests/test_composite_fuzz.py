@@ -85,8 +85,8 @@ def test_composite_sampling_respects_recoverability_constraints():
                 assert e.count == 1
                 losses[e.type_index] += 1
             if e.kind == "load_spike":
-                spikes_per_phase[e.phase] = \
-                    spikes_per_phase.get(e.phase, 0) + 1
+                spikes_per_phase[e.phase] = (
+                    spikes_per_phase.get(e.phase, 0) + 1)
                 assert 1.2 <= e.factor <= 1.5
         assert all(v <= 2 for v in losses.values())
         assert all(v <= 1 for v in spikes_per_phase.values())

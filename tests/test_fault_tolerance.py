@@ -11,10 +11,11 @@ from repro.core.search_space import SearchSpace
 from repro.serving import checkpoint
 from repro.serving.autoscaler import LoadMonitor, rescale
 from repro.serving.fault import (StragglerModel, fail_instances,
+                                 recover_from_capacity_change,
                                  recover_from_failure, reprice,
                                  simulate_fcfs_hedged)
 from repro.serving.instance import InstanceType, ModelProfile
-from repro.serving.workload import generate_workload
+from repro.serving.workload import Workload, generate_workload
 
 # ----------------------------------------------------------- checkpointing
 
@@ -58,6 +59,18 @@ def test_checkpoint_empty_dir(tmp_path):
     assert state is None and step is None
 
 
+def test_checkpoint_restore_explicit_step(tmp_path):
+    for s in (1, 3, 9):
+        checkpoint.save(tmp_path, {"x": jnp.full(2, s)}, step=s, keep=5)
+    assert checkpoint.latest_step(tmp_path) == 9
+    state, step = checkpoint.restore(tmp_path,
+                                     {"x": jnp.zeros(2, jnp.int32)}, step=3)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(state["x"]), [3, 3])
+    # the manifest rides along atomically with its payload
+    assert (tmp_path / "step_0000000003.json").exists()
+
+
 def test_ribbon_optimizer_checkpoint_roundtrip(tmp_path):
     space = SearchSpace(bounds=(4, 4), prices=(1.0, 0.4))
     opt = RibbonOptimizer(space)
@@ -89,6 +102,39 @@ def monotone_oracle(caps, demand):
 def test_fail_instances():
     assert fail_instances((3, 2, 1), 0) == (2, 2, 1)
     assert fail_instances((0, 2, 1), 0) == (0, 2, 1)
+
+
+def test_fail_instances_validates_arguments():
+    """Losing more than is deployed clamps at zero, but an index outside
+    the pool or a negative count is a caller bug and must raise."""
+    with pytest.raises(ValueError, match="type_index"):
+        fail_instances((3, 2), 2)
+    with pytest.raises(ValueError, match="type_index"):
+        fail_instances((3, 2), -1)
+    with pytest.raises(ValueError, match="count"):
+        fail_instances((3, 2), 0, count=-1)
+    assert fail_instances((3, 2), 0, count=5) == (0, 2)
+
+
+def test_recover_from_capacity_change_multi_type():
+    """A correlated event (tier storm/outage) shrinks several types in one
+    recovery; bad indices raise instead of silently resizing nothing."""
+    space = SearchSpace(bounds=(5, 8), prices=(1.0, 0.3))
+    oracle = monotone_oracle((10.0, 3.0), demand=31.0)
+    opt = RibbonOptimizer(space, qos_target=0.99)
+    for _ in range(30):
+        cfg = opt.ask()
+        if cfg is None or opt.done:
+            break
+        opt.tell(cfg, oracle(cfg))
+    new_opt, event = recover_from_capacity_change(
+        opt, oracle, {0: 2, 1: 3}, budget=30, kind="recover_storm")
+    assert new_opt.space.bounds == (3, 5)
+    assert event.kind == "recover_storm"
+    best = new_opt.trace.best_feasible()
+    assert best is not None and oracle(best.config) >= 0.99
+    with pytest.raises(ValueError, match="type_index"):
+        recover_from_capacity_change(opt, oracle, {5: 1})
 
 
 def test_recover_from_failure_replays_history():
@@ -134,6 +180,33 @@ def test_replay_from_transfers_only_fitting_real_history():
     assert new_opt.trace.n_samples == n
     # replaying again is a no-op (already sampled)
     assert new_opt.replay_from(opt) == 0
+
+
+def test_pessimistic_replay_transfers_only_infeasible_history():
+    """Pessimistic replay: evidence a pool *failed* survives harsher
+    scoring conditions (transferred as estimates — GP mass + dominance
+    pruning), evidence it passed does not — best_feasible stays empty
+    until a fresh probe re-earns feasibility honestly."""
+    space = SearchSpace(bounds=(5, 8), prices=(1.0, 0.3))
+    oracle = monotone_oracle((10.0, 3.0), demand=31.0)
+    opt = RibbonOptimizer(space, qos_target=0.99)
+    for _ in range(20):
+        cfg = opt.ask()
+        if cfg is None or opt.done:
+            break
+        opt.tell(cfg, oracle(cfg))
+    assert opt.trace.best_feasible() is not None
+
+    new_opt = RibbonOptimizer(space, qos_target=0.99)
+    n = new_opt.replay_from(opt, pessimistic=True)
+    infeasible = {e.config for e in opt.trace.real if e.qos_rate < 0.99}
+    assert n == len(infeasible)
+    assert all(e.estimated for e in new_opt.trace.evaluations)
+    assert new_opt.trace.best_feasible() is None
+    # an honest re-score of the old incumbent wins it back
+    best_cfg = opt.trace.best_feasible().config
+    new_opt.tell(best_cfg, oracle(best_cfg))
+    assert new_opt.trace.best_feasible().config == best_cfg
 
 
 def test_recover_with_negative_lost_restocks_capacity():
@@ -216,6 +289,72 @@ def test_hedging_mitigates_straggler_tail():
     # (a winning duplicate occupies the alternate instance)
     assert (np.mean(hedged <= PROF.qos_latency)
             >= np.mean(base <= PROF.qos_latency) - 0.02)
+
+
+def _svc(batch):
+    return float(FAST.latency(PROF, batch))
+
+
+def _hedge_stream(arrivals, batches):
+    return Workload(arrivals=np.asarray(arrivals, dtype=np.float64),
+                    batches=np.asarray(batches, dtype=np.int64),
+                    rate_qps=1.0)
+
+
+def test_hedge_fires_and_wins_deterministically():
+    """A hand-built 2-slot race: A occupies the straggling slot, B the
+    healthy one; C queues on the straggler (it frees first), the hedge
+    fires, and the healthy copy wins — C's latency is exactly the
+    alternate path's."""
+    s1, s32 = _svc(1), _svc(32)
+    f = 10.0
+    wl = _hedge_stream([0.0, 0.0, 0.0], [1, 32, 1])
+    strag = StragglerModel(slow_factor=f, afflicted=(0,))
+    base = simulate_fcfs_hedged(wl, [FAST], (2,), PROF, straggler=strag,
+                                hedge_threshold=None)
+    finish = 2 * f * s1                  # C queued behind A on the straggler
+    alt_finish = s32 + s1                # C behind B on the healthy slot
+    assert base[2] == pytest.approx(finish)
+    h = 0.5 * min(f * s1, finish - alt_finish)
+    hedged = simulate_fcfs_hedged(wl, [FAST], (2,), PROF, straggler=strag,
+                                  hedge_threshold=h)
+    assert hedged[2] == pytest.approx(alt_finish)
+    np.testing.assert_allclose(hedged[:2], base[:2])   # A, B untouched
+
+
+def test_hedge_cancellation_is_free():
+    """After a winning hedge the original slot is released at its
+    pre-dispatch free time: the next query starts on it immediately
+    instead of queueing behind a cancelled copy."""
+    s1, s32 = _svc(1), _svc(32)
+    f = 10.0
+    d_arr = f * s1 * 1.05                # just after the released slot idles
+    wl = _hedge_stream([0.0, 0.0, 0.0, d_arr], [1, 32, 1, 1])
+    strag = StragglerModel(slow_factor=f, afflicted=(0,))
+    h = 0.5 * min(f * s1, 2 * f * s1 - (s32 + s1))
+    hedged = simulate_fcfs_hedged(wl, [FAST], (2,), PROF, straggler=strag,
+                                  hedge_threshold=h)
+    # D serves with zero queue wait — pure (straggler-slowed) service time.
+    # Were the cancellation not free, the slot would stay busy until
+    # 2*f*s1 and D would queue.
+    assert hedged[3] == pytest.approx(f * s1)
+
+
+def test_hedge_skips_marginal_redispatch():
+    """The hedge fires but the alternate copy would not beat the original
+    by more than the threshold: the re-dispatch is skipped and the
+    original (queued) copy serves."""
+    s1, s32 = _svc(1), _svc(32)
+    f = 10.0
+    finish = 2 * f * s1
+    alt_finish = s32 + s1
+    h = (finish - alt_finish) + 1e-4     # alt wins, but not by > h
+    assert f * s1 > h                    # the hedge itself still fires
+    wl = _hedge_stream([0.0, 0.0, 0.0], [1, 32, 1])
+    strag = StragglerModel(slow_factor=f, afflicted=(0,))
+    hedged = simulate_fcfs_hedged(wl, [FAST], (2,), PROF, straggler=strag,
+                                  hedge_threshold=h)
+    assert hedged[2] == pytest.approx(finish)
 
 
 # ------------------------------------------------------------ autoscaler

@@ -1,0 +1,221 @@
+"""Tier-scoped scenario episodes: preemption storms, tier outages, and
+spot price spikes through the full continuous-clock adapt loop on a
+tiered simulator plane.
+
+The toy plane procures the same hardware on two tiers (on-demand and
+spot) plus a slow on-demand type, so every tier event has real capacity
+to hit and the engine's graceful-degradation fallback (over-provision the
+surviving tiers when the spot pool evaporates mid-search) is reachable.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.search_space import SearchSpace
+from repro.scenario import ScenarioEngine, SimulatorPlane, build_episode
+from repro.scenario.registry import EPISODES, composite
+from repro.scenario.spec import EventSpec, PhaseSpec, ScenarioSpec
+from repro.serving.instance import InstanceType, ModelProfile
+from repro.serving.tiers import TierCatalog, tiered_variant
+from repro.serving.workload import generate_workload
+
+FAST = InstanceType("fast", price=1.0, flops=1e9, mem_bw=1e9, overhead=1e-3)
+SLOW = InstanceType("slow", price=0.3, flops=2e8, mem_bw=5e8, overhead=2e-3)
+PROF = ModelProfile("toy", flops_per_sample=1e6, act_bytes_per_sample=1e4,
+                    weight_bytes=1e5, qos_latency=0.05)
+TYPES = [FAST, tiered_variant(FAST, "spot"), SLOW]
+BOUNDS = (3, 3, 2)
+PRICES = tuple(t.price for t in TYPES)
+
+N_EPISODES = 20
+N_PER_PHASE = 90
+WINDOW = 30
+
+
+def _plane(spec):
+    wls = {d: generate_workload(spec.seed, spec.n_base_queries, 100.0,
+                                batch_dist=d, median_batch=8.0,
+                                mean_batch=10.0, std_batch=4.0, max_batch=32)
+           for d in spec.batch_dists}
+    return SimulatorPlane(PROF, TYPES, wls, max_instances=8,
+                          catalog=TierCatalog(TYPES))
+
+
+def _run(spec, carry=True, warm_scoring=None):
+    return ScenarioEngine(spec, _plane(spec),
+                          SearchSpace(bounds=BOUNDS, prices=PRICES),
+                          carry_queue_state=carry,
+                          warm_candidate_scoring=warm_scoring).run()
+
+
+def _trim(spec):
+    return dataclasses.replace(spec, init_budget=20, rescale_budget=10,
+                               recover_budget=10)
+
+
+def test_tiered_plane_exposes_tier_surface():
+    spec = ScenarioSpec(name="t", phases=(PhaseSpec("a", 60),), window=30)
+    plane = _plane(spec)
+    assert plane.type_tiers == ("on_demand", "spot", "on_demand")
+    assert plane.cold_starts is not None
+    assert plane.cost_penalties is not None
+    # the spot copy of the same hardware carries the larger risk premium
+    assert plane.cost_penalties[1] > plane.cost_penalties[0]
+
+
+def test_tier_episodes_registered():
+    for name in ("spot-storm", "tier-outage"):
+        assert name in EPISODES
+        spec = build_episode(name, n=120, window=40, seed=5)
+        assert spec.validate() is spec
+        assert spec == build_episode(name, n=120, window=40, seed=5)
+        assert any(e.tier == "spot" for e in spec.events)
+    storm = build_episode("spot-storm", n=120, window=40, seed=5)
+    assert any(e.kind == "preemption_storm" for e in storm.events)
+    # hazard timelines vary with the seed
+    assert (build_episode("spot-storm", n=120, window=40, seed=6).events
+            != storm.events)
+
+
+def test_tier_outage_zeroes_spot_until_restock():
+    """From the outage cut to the next phase boundary no window may run
+    spot capacity; the boundary restock brings the tier's bounds back."""
+    spec = _trim(ScenarioSpec(
+        name="outage", qos_target=0.9, window=WINDOW,
+        provision_queries=WINDOW,
+        phases=(PhaseSpec("steady", N_PER_PHASE),
+                PhaseSpec("outage", N_PER_PHASE),
+                PhaseSpec("restored", N_PER_PHASE)),
+        events=(EventSpec("tier_outage", phase=1, at_frac=0.34,
+                          tier="spot"),)))
+    rep = _run(spec)
+    outage = [e for e in rep.events if e.kind == "tier_outage"]
+    assert len(outage) == 1 and "type 1" in outage[0].detail
+    at = outage[0].at_query
+    for w in rep.windows:
+        if at <= w.start < 2 * N_PER_PHASE:
+            assert w.config[1] == 0, (w.start, w.config)
+    kinds = [a.kind for a in rep.actions]
+    assert "recover_outage" in kinds
+    assert "restock" in kinds                   # the market returns the tier
+    assert rep.recovered_all_events
+
+
+def test_land_pending_stages_union_then_pure_removal():
+    """A booked restock trim lands in two stages: the union pool first
+    (additions wake cold beside the warm incumbents), then a pure-removal
+    switch to the trim target booked for when the additions are warm."""
+    spec = ScenarioSpec(name="t", phases=(PhaseSpec("a", 60),), window=30)
+    eng = ScenarioEngine(spec, _plane(spec),
+                         SearchSpace(bounds=BOUNDS, prices=PRICES))
+    eng._pending_switch = (10, (2, 1, 0))
+    eng._pending_trim = (0, 1, 0)
+    config = eng._land_pending((1, 0, 0), 10, 1.0)
+    assert config == (2, 1, 0)                   # union stage deployed
+    at, target = eng._pending_switch
+    assert target == (0, 1, 0)                   # removal stage booked
+    assert at > 10                               # ... for after the warm-up
+    assert eng._pending_trim is None
+    # landing the removal stage books nothing further
+    config = eng._land_pending(config, at, 1.0)
+    assert config == (0, 1, 0)
+    assert eng._pending_switch is None
+
+
+def test_restock_trim_returns_to_pre_storm_pool():
+    """Any restock trim must walk the portfolio back to a strictly cheaper
+    pool that actually served before the capacity loss."""
+    spec = _trim(ScenarioSpec(
+        name="outage-trim", qos_target=0.9, window=WINDOW,
+        provision_queries=WINDOW,
+        phases=(PhaseSpec("steady", N_PER_PHASE),
+                PhaseSpec("outage", N_PER_PHASE),
+                PhaseSpec("restored", 2 * N_PER_PHASE)),
+        events=(EventSpec("tier_outage", phase=1, at_frac=0.34,
+                          tier="spot"),)))
+    rep = _run(spec)
+    assert rep.recovered_all_events
+    served = {tuple(w.config) for w in rep.windows}
+    for a in rep.actions:
+        if a.kind != "restock_trim":
+            continue
+        assert a.new_price < a.old_price
+        assert tuple(a.new_config) in served
+
+
+def test_preemption_storm_kills_deployed_fraction_and_restocks():
+    spec = _trim(ScenarioSpec(
+        name="storm", qos_target=0.9, window=WINDOW,
+        provision_queries=WINDOW,
+        phases=(PhaseSpec("calm", N_PER_PHASE),
+                PhaseSpec("storm", N_PER_PHASE),
+                PhaseSpec("after", N_PER_PHASE)),
+        events=(EventSpec("preemption_storm", phase=1, at_frac=0.3,
+                          tier="spot", factor=1.0),)))
+    rep = _run(spec)
+    storm = [e for e in rep.events if e.kind == "preemption_storm"]
+    assert len(storm) == 1
+    assert storm[0].detail.startswith("spot storm kill 1:")
+    if "no capacity deployed" not in storm[0].detail:
+        assert [a.kind for a in rep.actions].count("recover_storm") == 1
+        assert any(a.kind == "restock" for a in rep.actions)
+    assert rep.recovered_all_events
+    assert np.isfinite(rep.carried_wait_total)
+
+
+def test_price_spike_reprices_every_spot_type():
+    spec = _trim(ScenarioSpec(
+        name="spike", qos_target=0.9, window=WINDOW,
+        phases=(PhaseSpec("a", N_PER_PHASE), PhaseSpec("b", N_PER_PHASE)),
+        events=(EventSpec("price_spike", phase=0, at_frac=0.4, tier="spot",
+                          factor=1.5),)))
+    rep = _run(spec)
+    spikes = [a for a in rep.actions if a.kind == "reprice"]
+    assert len(spikes) == 1
+    # windows after the spike bill the spot type 1.5x
+    post = [w for w in rep.windows
+            if w.start >= spikes[0].at_query and w.config[1] > 0]
+    for w in post:
+        expect = (w.config[0] * PRICES[0] + w.config[1] * PRICES[1] * 1.5
+                  + w.config[2] * PRICES[2])
+        assert w.price == pytest.approx(expect)
+    assert rep.recovered_all_events
+
+
+def test_tier_events_are_noops_on_untiered_planes():
+    """A spot storm against a plane with no spot types must not touch the
+    pool — and must still count as recovered."""
+    spec = _trim(ScenarioSpec(
+        name="noop", qos_target=0.9, window=WINDOW,
+        phases=(PhaseSpec("a", N_PER_PHASE), PhaseSpec("b", N_PER_PHASE)),
+        events=(EventSpec("preemption_storm", phase=0, at_frac=0.3,
+                          tier="serverless", factor=0.9),
+                EventSpec("price_spike", phase=0, at_frac=0.5,
+                          tier="serverless", factor=2.0),)))
+    rep = _run(spec)
+    assert rep.recovered_all_events
+    assert not any(a.kind in ("recover_storm", "reprice")
+                   for a in rep.actions)
+    assert all("no capacity" in e.detail or "price" in e.detail
+               for e in rep.events)
+
+
+def test_tiered_composite_fuzz_recovers_every_seed():
+    """The seeded tiered fuzz sweep: N_EPISODES timelines drawn from the
+    full registry (storms, outages, spikes included), each run with the
+    carried clock + warm scoring — every event must recover, the backlog
+    accounting stays finite, and windows cover every query exactly once."""
+    for seed in range(N_EPISODES):
+        spec = _trim(composite(n=N_PER_PHASE, window=WINDOW, seed=seed,
+                               qos_target=0.9, n_events=3, tiered=True))
+        rep = _run(spec)
+        ctx = (seed, [(e.kind, e.phase) for e in rep.events])
+        assert rep.recovered_all_events, ctx
+        assert np.isfinite(rep.carried_wait_total), ctx
+        assert rep.carried_wait_total >= 0.0, ctx
+        n_total = sum(ph.n_queries for ph in spec.phases)
+        assert sum(w.end - w.start for w in rep.windows) == n_total, ctx
+        deltas = [a.warm_idle_delta for a in rep.actions]
+        assert all(d is None or np.isfinite(d) for d in deltas), ctx

@@ -1,0 +1,299 @@
+"""Hybrid capacity tiers: hazard/price processes, the tier catalog, cold
+starts priced through the warm lanes, and risk-adjusted BO costs.
+
+Regression anchors:
+
+* **hazard/price determinism** — `TierHazard.storms` and
+  `SpotPriceProcess.events` are pure functions of (tier, seed): the
+  absolute-axis timeline never moves, which is what makes restock
+  *re-enter* (not reset) the hazard process.
+* **cold-start bit-identity** — warm batched/grid lanes with ``warmup``
+  match the sequential ``remap(..., warmup=...)`` + ``*_from`` path
+  exactly, the same contract the un-warmed lanes already pin.
+* **risk-adjusted costs** — `RibbonOptimizer(cost_penalties=...)` keeps
+  the host prune mirror bit-identical to the device costs, renormalizes
+  Eq. 2, and round-trips through `state_dict`.
+* **registry coverage** — every event kind in the spec registry has an
+  engine handler and a validation path; tier-scoped kinds reject bad
+  tiers and fractions.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import RibbonOptimizer
+from repro.core.search_space import SearchSpace
+from repro.scenario.engine import ScenarioEngine
+from repro.scenario.spec import (EVENT_KIND_SPECS, EVENT_KINDS, EventSpec,
+                                 PhaseSpec, ScenarioSpec, fuzz_kinds)
+from repro.serving.instance import MODEL_PROFILES, InstanceType, ModelProfile
+from repro.serving.simulator import PoolSimulator
+from repro.serving.tiers import (TIER_NAMES, TIERS, SpotPriceProcess,
+                                 TierCatalog, TierHazard, tiered_pool,
+                                 tiered_variant)
+from repro.serving.workload import generate_workload
+
+FAST = InstanceType("fast", price=1.0, flops=1e9, mem_bw=1e9, overhead=1e-3)
+SLOW = InstanceType("slow", price=0.3, flops=2e8, mem_bw=5e8, overhead=2e-3)
+PROF = ModelProfile("toy", flops_per_sample=1e6, act_bytes_per_sample=1e4,
+                    weight_bytes=1e5, qos_latency=0.05)
+MAX_INST = 8
+
+
+def _sim(types=None, wl=None):
+    wl = wl or generate_workload(0, 150, 150.0, median_batch=8.0,
+                                 max_batch=32)
+    return PoolSimulator(PROF, types or [FAST, SLOW], wl,
+                         max_instances=MAX_INST)
+
+
+def _backlog_state(sim, deployed=(1, 1), upto=90):
+    seg = sim.segment_from(sim.initial_state(), deployed)
+    return seg.state_at(upto).rebased(float(sim.workload.arrivals[upto - 1]))
+
+
+# ------------------------------------------------------- hazard processes
+def test_tier_hazard_deterministic_and_bounded():
+    h = TierHazard("spot", seed=3, n_phases=4)
+    storms = h.storms()
+    assert storms == TierHazard("spot", seed=3, n_phases=4).storms()
+    assert len(storms) >= 1                    # storm guarantee
+    phases = [p for p, _, _ in storms]
+    assert phases == sorted(phases)
+    assert len(set(phases)) == len(phases)     # at most one storm per phase
+    for phase, at_frac, kill in storms:
+        assert 0 <= phase < 3                  # final phase is storm-free
+        assert 0.15 <= at_frac < 0.55
+        assert 0.05 <= kill <= 0.95
+    assert any(TierHazard("spot", seed=s, n_phases=4).storms() != storms
+               for s in range(4, 10))          # seeds actually vary the draw
+
+
+def test_tier_hazard_absolute_axis_never_resets():
+    """The storm timeline is a pure function of (tier, seed): querying it
+    again after a simulated restock returns the identical absolute-axis
+    schedule — restocked capacity re-enters the same process."""
+    h = TierHazard("spot", seed=11, n_phases=5)
+    before = h.storms()
+    for _ in range(3):                         # "restocks" between queries
+        assert h.storms() == before
+    # zero-rate tiers and degenerate horizons never storm
+    assert TierHazard("on_demand", seed=11, n_phases=5).storms() == []
+    assert TierHazard("spot", seed=11, n_phases=1).storms() == []
+
+
+def test_spot_price_process_band_and_determinism():
+    proc = SpotPriceProcess(seed=5)
+    events = proc.events(6)
+    assert events == SpotPriceProcess(seed=5).events(6)
+    level = 1.0
+    for phase, at_frac, factor in events:
+        assert 0 <= phase < 5
+        assert 0.3 <= at_frac <= 0.6
+        assert factor > 0 and abs(factor - 1.0) >= 0.02
+        level *= factor
+        assert proc.band[0] - 1e-9 <= level <= proc.band[1] + 1e-9
+    assert SpotPriceProcess(seed=6).events(6) != events
+
+
+# ----------------------------------------------------------- tier catalog
+def test_tier_catalog_indices_cold_starts_and_penalties():
+    types = [FAST, tiered_variant(FAST, "spot"),
+             tiered_variant(SLOW, "serverless")]
+    cat = TierCatalog(types)
+    assert cat.tiers == ("on_demand", "spot", "serverless")
+    assert cat.tier_indices("spot") == (1,)
+    assert cat.tier_indices("on_demand") == (0,)
+    cold = cat.cold_starts(PROF)
+    expect = [TIERS[t].cold_start_qos * PROF.qos_latency for t in cat.tiers]
+    np.testing.assert_allclose(cold, expect)
+    pen = cat.cost_penalties()
+    assert all(p >= 0 for p in pen)
+    # the spot type's interruption risk dominates every other premium
+    assert pen[1] > pen[0] and pen[1] > pen[2]
+
+
+def test_tier_catalog_rejects_unknown_tier():
+    bad = dataclasses.replace(FAST, tier="preemptible")
+    with pytest.raises(ValueError, match="preemptible"):
+        TierCatalog([FAST, bad])
+
+
+def test_tiered_variant_and_pool():
+    spot = tiered_variant(FAST, "spot")
+    assert spot.name == "fast:spot" and spot.tier == "spot"
+    assert spot.price == pytest.approx(FAST.price
+                                       * TIERS["spot"].price_factor)
+    # profile efficiency keys on the base name, so tier variants inherit it
+    prof = MODEL_PROFILES["mtwnd"]
+    assert prof.eff("g4dn:spot") == prof.eff("g4dn")
+    types, bounds = tiered_pool("mtwnd")
+    assert len(types) == len(bounds) > 0
+    assert len({t.name for t in types}) == len(types)
+    TierCatalog(types)                         # every tier is registered
+
+
+# ------------------------------------------------- cold starts in the sim
+def test_remap_warmup_charges_added_slots_only():
+    sim = _sim()
+    state = _backlog_state(sim)
+    now = float(state.clock) + 0.25
+    w = np.array([0.3, 0.8])
+    warm = state.remap((1, 1), (2, 2), now, warmup=w)
+    plain = state.remap((1, 1), (2, 2), now)
+    # survivors (slot 0 of each type) keep their carry, bit for bit
+    assert warm.free[0] == plain.free[0]
+    assert warm.free[2] == plain.free[2]
+    # added slots boot cold: idle at now + their type's cold start
+    assert warm.free[1] == now + 0.3
+    assert warm.free[3] == now + 0.8
+    # padding stays at now (inactive slots never serve)
+    np.testing.assert_array_equal(warm.free[4:], np.full(MAX_INST - 4, now))
+    with pytest.raises(ValueError, match="warmup"):
+        state.remap((1, 1), (2, 2), now, warmup=np.array([0.3]))
+
+
+def test_remap_batch_warmup_matches_sequential_remap():
+    sim = _sim()
+    state = _backlog_state(sim, deployed=(2, 1))
+    now = float(state.clock)
+    w = np.array([0.45, 0.1])
+    cfgs = np.array([(0, 0), (4, 4), (1, 3), (2, 1), (3, 0)])
+    batch = state.remap_batch((2, 1), cfgs, now, warmup=w)
+    for i, cfg in enumerate(cfgs):
+        seq = state.remap((2, 1), tuple(cfg), now, warmup=w)
+        np.testing.assert_array_equal(batch[i], seq.free)
+    with pytest.raises(ValueError, match="warmup"):
+        state.remap_batch((2, 1), cfgs, now, warmup=np.zeros(3))
+
+
+def test_warm_lanes_with_warmup_match_sequential_from():
+    """Grid/batch lanes with a cold-start vector reproduce the sequential
+    remap + ``qos_rate_from`` path bit for bit — the same identity the
+    un-warmed lanes pin, now with added slots paying their tier's boot."""
+    sim = _sim()
+    state = _backlog_state(sim, deployed=(1, 2))
+    w = np.array([0.3, 0.04])
+    cfgs = np.array([(2, 2), (1, 2), (4, 0), (0, 3)])
+    rates, _ = sim.qos_rate_batch_from(state, cfgs, deployed=(1, 2),
+                                       warmup=w)
+    grid = sim.qos_rate_grid_from(state, cfgs, [1.0, 1.4], deployed=(1, 2),
+                                  warmup=w)
+    for i, cfg in enumerate(cfgs):
+        seq_state = state.remap((1, 2), tuple(cfg), float(state.clock),
+                                warmup=w)
+        seq_rate, _ = sim.qos_rate_from(seq_state, tuple(cfg))
+        assert rates[i] == seq_rate
+        assert grid[0, i] == seq_rate
+    # zero warmup is the legacy remap, bit for bit
+    np.testing.assert_array_equal(
+        sim.qos_rate_batch_from(state, cfgs, deployed=(1, 2),
+                                warmup=np.zeros(2))[0],
+        sim.qos_rate_batch_from(state, cfgs, deployed=(1, 2))[0])
+
+
+def test_cold_start_costs_qos_on_scale_up():
+    """Scaling up out of a backlog with a large cold start cannot beat the
+    same scale-up with instant boots: the added slots serve later."""
+    sim = _sim()
+    state = _backlog_state(sim, deployed=(1, 0), upto=60)
+    cfgs = np.array([(4, 4)])
+    instant, _ = sim.qos_rate_batch_from(state, cfgs, deployed=(1, 0))
+    slow, _ = sim.qos_rate_batch_from(state, cfgs, deployed=(1, 0),
+                                      warmup=np.array([2.0, 2.0]))
+    assert slow[0] <= instant[0]
+
+
+# ------------------------------------------------- risk-adjusted BO costs
+def _space():
+    return SearchSpace(bounds=(3, 3), prices=(1.0, 0.3))
+
+
+def test_cost_penalties_shift_costs_and_keep_prune_mirror():
+    space = _space()
+    base = RibbonOptimizer(space, qos_target=0.9)
+    opt = RibbonOptimizer(space, qos_target=0.9,
+                          cost_penalties=(0.5, 0.05))
+    expect = (space.costs(opt.lattice)
+              + opt.lattice @ np.array([0.5, 0.05]))
+    np.testing.assert_allclose(opt.lattice_costs, expect)
+    # Eq. 2 renormalizes to the risk-adjusted max; the host prune mirror
+    # sees the same costs the device mask uses
+    assert opt._max_cost == pytest.approx(float(expect.max()))
+    np.testing.assert_array_equal(opt.prune.costs, opt.lattice_costs)
+    # no penalties → bit-identical legacy costs and normalizer
+    np.testing.assert_array_equal(base.lattice_costs,
+                                  space.costs(base.lattice))
+    assert base._max_cost == space.max_cost
+
+
+def test_cost_penalties_validated():
+    with pytest.raises(ValueError):
+        RibbonOptimizer(_space(), cost_penalties=(0.1,))
+    with pytest.raises(ValueError):
+        RibbonOptimizer(_space(), cost_penalties=(0.1, -0.2))
+
+
+def test_cost_penalties_state_roundtrip():
+    opt = RibbonOptimizer(_space(), qos_target=0.9,
+                          cost_penalties=(0.25, 0.1))
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        cfg = opt.ask()
+        if cfg is None:
+            break
+        opt.tell(cfg, float(rng.uniform(0.7, 1.0)))
+    clone = RibbonOptimizer(_space(), qos_target=0.9)
+    clone.load_state_dict(opt.state_dict())
+    assert clone.cost_penalties == opt.cost_penalties
+    np.testing.assert_array_equal(clone.lattice_costs, opt.lattice_costs)
+    assert clone._max_cost == opt._max_cost
+    np.testing.assert_array_equal(clone.prune.costs, clone.lattice_costs)
+    assert clone.best_config == opt.best_config
+
+
+# --------------------------------------------- registry / spec validation
+def test_every_registered_kind_has_an_engine_handler():
+    """The loud-failure satellite: the engine dispatch table covers the
+    registry (a mismatch raises at import, this pins the invariant)."""
+    for kind in EVENT_KINDS:
+        assert kind in ScenarioEngine._EVENT_HANDLERS
+        assert hasattr(ScenarioEngine, ScenarioEngine._EVENT_HANDLERS[kind])
+    assert set(fuzz_kinds(tiered=True)) == {
+        k for k, spec in EVENT_KIND_SPECS.items() if spec.fuzz}
+    assert fuzz_kinds() == ("cell_failure", "spot_preemption",
+                            "price_change", "load_spike")
+
+
+def _spec(events):
+    return ScenarioSpec(name="t", phases=(PhaseSpec("a", 100),
+                                          PhaseSpec("b", 100)),
+                        events=tuple(events))
+
+
+def test_event_spec_tier_validation():
+    ok = _spec([EventSpec("preemption_storm", phase=0, at_frac=0.3,
+                          tier="spot", factor=0.5),
+                EventSpec("tier_outage", phase=0, tier="serverless"),
+                EventSpec("price_spike", phase=0, tier="spot", factor=1.4)])
+    assert ok.validate() is ok
+    with pytest.raises(ValueError, match="tier"):
+        _spec([EventSpec("preemption_storm", phase=0, factor=0.5)]).validate()
+    with pytest.raises(ValueError, match="tier"):
+        _spec([EventSpec("tier_outage", phase=0,
+                         tier="preemptible")]).validate()
+    with pytest.raises(ValueError, match="tier"):
+        _spec([EventSpec("cell_failure", phase=0,
+                         tier="spot")]).validate()
+    with pytest.raises(ValueError, match="kill"):
+        _spec([EventSpec("preemption_storm", phase=0, tier="spot",
+                         factor=1.5)]).validate()
+    with pytest.raises(ValueError, match="factor"):
+        _spec([EventSpec("price_spike", phase=0, tier="spot",
+                         factor=0.0)]).validate()
+    with pytest.raises(ValueError, match="type_index"):
+        _spec([EventSpec("cell_failure", phase=0,
+                         type_index=-1)]).validate()
+    assert set(TIER_NAMES) == set(TIERS)
