@@ -1,7 +1,8 @@
 """Benchmark package bootstrap: host-device sharding for the grid engine.
 
-The joint (workload x config) sweep engine (PoolSimulator.qos_rate_grid)
-shards its flattened lane axis across XLA host-platform devices.  A CPU
+The joint (workload x config) sweep engine (PoolSimulator.qos with a
+``workloads=`` axis) shards its flattened lane axis across XLA
+host-platform devices.  A CPU
 process defaults to a single device, so opt in to one device per core before
 jax initializes.  No-op when jax is already imported (the flag would be
 ignored) or when the operator set the flag themselves.

@@ -3,7 +3,7 @@ instead of heavy-tail log-normal.
 
 Driven by the stacked per-workload service-table grid axis: the two
 distributions share one arrival stream (only the batch PRNG key differs in
-``paper_workload``), so both are swept in ONE ``qos_rate_grid`` dispatch
+``paper_workload``), so both are swept in ONE grid ``qos`` dispatch
 per config chunk — service row 0 carries the log-normal batch stream's
 table, row 1 the Gaussian's.  No second evaluator/simulator is built; the
 log-normal row doubles as a consistency check against the shared context's
@@ -37,8 +37,8 @@ def _stacked_dist_sweep(ctx, qos_target: float = 0.99):
     homog[:, 0] = np.arange(1, HOMOG_CAP + 1)
     cfgs = np.concatenate([lattice, homog])
     rates = np.concatenate(
-        [ev.sim.qos_rate_grid(cfgs[i:i + CHUNK], [1.0, 1.0],
-                              service_tables=tables)
+        [ev.sim.qos(cfgs[i:i + CHUNK], workloads=[1.0, 1.0],
+                    service_tables=tables).rates
          for i in range(0, len(cfgs), CHUNK)], axis=1)   # (2, B)
 
     costs = space.costs(lattice)

@@ -10,7 +10,7 @@ Driven end-to-end by the joint (workload x config) grid engine:
   the load levels share the base evaluator's memo and service table);
 * the warm restart goes through ``rescale(..., load_factors=(1.0, 1.5))``:
   every BO round evaluates the candidate batch across both monitored load
-  levels in one ``qos_rate_grid`` dispatch, incumbent re-measurement
+  levels in one grid ``qos`` dispatch, incumbent re-measurement
   included (the autoscaler-in-the-loop search);
 * the cold-restart ablation searches the hot level through the same grid
   path (W=1 rows of the shared memo).

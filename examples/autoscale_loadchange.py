@@ -34,9 +34,9 @@ def main():
     # ---- load jumps 1.5x -------------------------------------------------
     hot = PoolEvaluator(profile, ev.types, ev.workload.scaled(1.5))
     monitor = LoadMonitor(qos_target=0.99)
-    lat0 = ev.sim.latencies(base.config)
+    lat0 = ev.sim.simulate(base.config).lat
     monitor.observe(lat0, np.zeros_like(lat0), profile.qos_latency)
-    lat1 = hot.sim.latencies(base.config)
+    lat1 = hot.sim.simulate(base.config).lat
     detected = monitor.observe(lat1, np.maximum(lat1 - lat0, 0),
                                profile.qos_latency)
     print(f"\nload x1.5 applied; monitor detected change: {detected}")

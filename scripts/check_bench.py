@@ -12,17 +12,24 @@ Three responsibilities:
   - ``bench == "batch_eval"``: batched B=32 must stay >= 5x the sequential
     single-config path; the joint (workload x config) grid dispatch at
     W=4 x B=32 must stay >= 3x the per-workload sequential sweep and remain
-    bit-identical to it; and the warm candidate lanes (B=32 what-if pools
+    bit-identical to it; the warm candidate lanes (B=32 what-if pools
     scored from a live backlog in one dispatch) must stay >= 3x the
     sequential per-candidate warm path, bit-identical to it, with a nonzero
     mean warm-vs-idle scoring delta (the carried backlog must actually move
-    the scores).  Smoke artifacts (``--smoke``/``--quick`` runs on a
-    shrunken workload, ``n_queries < 1500``) gate B=32 and the warm lane at
+    the scores); and the routing section must show the joint
+    (policy x config) stacked dispatch >= 3x its sequential single-config
+    baseline, bit-identical per policy row, with the flash-crowd economics
+    holding — the cheapest routed-feasible pool at the surge load strictly
+    cheaper than the cheapest FCFS-feasible pool at the same QoS target.
+    Smoke artifacts (``--smoke``/``--quick`` runs on a shrunken workload,
+    ``n_queries < 1500``) gate B=32, the warm lane and the routing lane at
     reduced floors — fixed per-dispatch overhead is a larger fraction of
     the shorter sweeps and CI runners are noisy, but a real regression (the
     pre-batched sequential path measures ~1x) still lands far below them.
     The grid measurement is always taken at full workload size, so its
-    threshold is uniform.
+    threshold is uniform — except on single-device hosts (the artifact
+    records ``grid.n_devices``), where the XLA lane sharding the ratio
+    mostly comes from is unavailable and the floor drops to 1.3x.
   - ``bench == "scenarios"``: every episode must report
     ``recovered_all_events`` — each injected event's QoS returned to target
     within the episode (finite adaptation latency); episodes with an
@@ -79,12 +86,21 @@ MIN_GRID_SPEEDUP = 3.0
 # workload size (see benchmarks/bench_batch_eval.GRID_N_QUERIES), so its
 # threshold does not scale down.
 SMOKE_MIN_SPEEDUP_AT_32 = 4.0
+# The grid ratio mostly comes from sharding the flattened lane axis across
+# XLA host devices; a single-device host (grid.n_devices == 1) can only
+# amortize dispatch overhead, so it gates at a reduced floor (a regression
+# to the pre-grid sequential path still measures ~1x).
+SINGLE_DEVICE_MIN_GRID_SPEEDUP = 1.3
 # Warm candidate lanes (one dispatch scoring B what-if pools from a live
-# backlog) vs B sequential qos_rate_from calls.  The sequential baseline
-# pays per-candidate host-side prefix bookkeeping, so the floor is below
-# the cold B=32 gate; smoke runs gate lower still.
+# backlog) vs B sequential warm single-config calls.  The sequential
+# baseline pays per-candidate host-side prefix bookkeeping, so the floor is
+# below the cold B=32 gate; smoke runs gate lower still.
 MIN_WARM_SPEEDUP = 3.0
 SMOKE_MIN_WARM_SPEEDUP = 2.5
+# Routing: one stacked-policy dispatch scoring P policies x B pools vs the
+# P x B sequential single-config policy evaluations.
+MIN_ROUTING_SPEEDUP = 3.0
+SMOKE_MIN_ROUTING_SPEEDUP = 2.5
 # Episodes whose warm run must show a nonzero warm-vs-idle scoring delta
 # (mirrors benchmarks/bench_scenarios.WARM_DELTA_EPISODES).
 WARM_DELTA_EPISODES = ("flash-crowd", "failure-storm")
@@ -110,6 +126,18 @@ WARM_KEYS = (
     "speedup",
     "bit_identical",
     "warm_idle_delta_mean",
+)
+ROUTING_KEYS = (
+    "batch_size",
+    "n_policies",
+    "wall_time_sequential_s",
+    "wall_time_joint_s",
+    "speedup",
+    "bit_identical",
+    "surge_factor",
+    "qos_target",
+    "fcfs_min_cost",
+    "routed_min_cost",
 )
 
 
@@ -183,6 +211,10 @@ def check_batch_eval(doc, label: str) -> list[str]:
         return errors
     if not grid["bit_identical"]:
         errors.append(f"{label}: grid results diverge from sequential sweep")
+    # Artifacts predating the n_devices field were all measured on
+    # multi-device hosts; they keep the full threshold.
+    if int(grid.get("n_devices", 2)) <= 1:
+        min_grid = SINGLE_DEVICE_MIN_GRID_SPEEDUP
     speedup = float(grid["speedup"])
     if speedup < min_grid:
         errors.append(
@@ -201,7 +233,7 @@ def check_batch_eval(doc, label: str) -> list[str]:
     if not warm["bit_identical"]:
         errors.append(
             f"{label}: warm batch results diverge from the sequential "
-            "qos_rate_from path",
+            "warm single-config path",
         )
     if not float(warm["warm_idle_delta_mean"]) > 0.0:
         errors.append(
@@ -213,6 +245,37 @@ def check_batch_eval(doc, label: str) -> list[str]:
         errors.append(
             f"{label}: warm B={warm['batch_size']} speedup {speedup:.2f}x"
             f" < required {min_warm:.1f}x",
+        )
+    min_route = SMOKE_MIN_ROUTING_SPEEDUP if smoke else MIN_ROUTING_SPEEDUP
+    routing = doc.get("routing")
+    if not isinstance(routing, dict):
+        errors.append(f"{label}: batch_eval artifact has no 'routing' "
+                      "section")
+        return errors
+    missing = [k for k in ROUTING_KEYS if k not in routing]
+    if missing:
+        errors.append(f"{label}: routing section missing keys {missing}")
+        return errors
+    if not routing["bit_identical"]:
+        errors.append(
+            f"{label}: joint (policy x config) rates diverge from the "
+            "sequential per-policy dispatches",
+        )
+    speedup = float(routing["speedup"])
+    if speedup < min_route:
+        errors.append(
+            f"{label}: routing P={routing['n_policies']} "
+            f"B={routing['batch_size']} joint speedup {speedup:.2f}x"
+            f" < required {min_route:.1f}x",
+        )
+    fcfs_cost = float(routing["fcfs_min_cost"])
+    routed_cost = float(routing["routed_min_cost"])
+    if not routed_cost < fcfs_cost:
+        errors.append(
+            f"{label}: routed pool does not beat FCFS on cost at the "
+            f"flash-crowd surge (routed {routed_cost:.4g} vs FCFS "
+            f"{fcfs_cost:.4g} at QoS >= {routing['qos_target']}, "
+            f"load x{routing['surge_factor']})",
         )
     return errors
 
@@ -390,6 +453,14 @@ def trend_metrics(doc) -> dict[str, tuple[float, str]]:
         warm = doc.get("warm")
         if isinstance(warm, dict) and "speedup" in warm:
             out["warm_speedup"] = (float(warm["speedup"]), "higher")
+        routing = doc.get("routing")
+        if isinstance(routing, dict):
+            if "speedup" in routing:
+                out["routing_speedup"] = (float(routing["speedup"]),
+                                          "higher")
+            if "routed_min_cost" in routing:
+                out["routed_min_cost"] = (float(routing["routed_min_cost"]),
+                                          "lower")
     elif bench == "scenarios":
         for name, ep in (doc.get("episodes") or {}).items():
             if isinstance(ep, dict) and "qos_rate" in ep:

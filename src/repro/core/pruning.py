@@ -58,6 +58,25 @@ def apply_prune_rules(blocked, lattice, costs, idx, config, cost_cut,
     return blocked | down | over
 
 
+@jax.jit
+def apply_prune_rules_joint(blocked, lattice, costs, idx, config, cost_cut,
+                            apply_down, apply_cost):
+    """Joint pool x policy variant of :func:`apply_prune_rules` (PR 7).
+
+    The last lattice dimension is a categorical routing-policy index
+    (``JointSearchSpace``), so "componentwise <=" is only a capacity
+    dominance within one policy: the down-set is restricted to lattice
+    points with the *same* policy index.  The cost rule stays global —
+    the policy axis is priced at zero, so a pool at or above the
+    incumbent's price cannot win under any router.
+    """
+    blocked = blocked.at[idx].set(True)
+    down = (jnp.all(lattice <= config[None, :], axis=1)
+            & (lattice[:, -1] == config[-1]) & apply_down)
+    over = (costs >= cost_cut - 1e-12) & apply_cost
+    return blocked | down | over
+
+
 class PruneSet:
     def __init__(self, space: SearchSpace, costs=None):
         """``costs`` overrides the lattice cost vector the cost rule cuts on
@@ -69,6 +88,9 @@ class PruneSet:
         self.costs = (space.costs(self.lattice) if costs is None
                       else np.asarray(costs, dtype=np.float64))  # (size,)
         self.mask = np.zeros(space.size, dtype=bool)         # True = pruned
+        # Joint pool x policy lattice: dominance-down must not cross the
+        # categorical policy axis (see apply_prune_rules_joint).
+        self._joint = getattr(space, "n_policies", 1) > 1
 
     def __len__(self) -> int:
         return int(self.mask.sum())
@@ -78,6 +100,8 @@ class PruneSet:
         Returns how many new configs were pruned."""
         c = np.asarray(config, dtype=np.int32)
         dominated = np.all(self.lattice <= c[None, :], axis=1)
+        if self._joint:
+            dominated &= self.lattice[:, -1] == c[-1]
         new = int(np.sum(dominated & ~self.mask))
         self.mask |= dominated
         return new

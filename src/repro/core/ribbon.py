@@ -13,7 +13,7 @@ half; the simulator half lives in serving/simulator.py):
   * ``ask_batch(q)`` returns the top-q EI candidates in one fused device
     dispatch — GP refit, EI, masked argmax and the constant-liar update run
     inside a single jitted loop (acquisition.select_batch), so a batched
-    QoS oracle (``PoolSimulator.qos_rate_batch`` / ``qos_rate_grid``) can
+    QoS oracle (the batched/grid lanes of ``PoolSimulator.qos``) can
     evaluate all q configs in one vmapped simulation.  ``ask()`` is the q=1
     special case.
   * the blocked mask (sampled | pruned) is **device-resident state**: every
@@ -44,7 +44,7 @@ import numpy as np
 from .acquisition import _NEG, select_batch
 from .gp import GaussianProcess
 from .objective import ribbon_objective
-from .pruning import PruneSet, apply_prune_rules
+from .pruning import PruneSet, apply_prune_rules, apply_prune_rules_joint
 from .search_space import SearchSpace
 from .trace import SearchTrace
 
@@ -66,6 +66,11 @@ class RibbonOptimizer:
         self.cost_penalties = (None if cost_penalties is None
                                else tuple(float(p) for p in cost_penalties))
         self._apply_cost_penalties()
+        # Joint pool x policy lattice (core.search_space.JointSearchSpace):
+        # the fused tell rules must keep dominance-down within one policy
+        # index.  Mirrors PruneSet._joint so the host and device masks stay
+        # bit-identical.
+        self._joint_space = getattr(space, "n_policies", 1) > 1
         self.prune = PruneSet(space, costs=self.lattice_costs)
         self.gp = GaussianProcess(space.n_types, space.bounds, max_obs=max_obs)
         self.sampled = np.zeros(space.size, dtype=bool)
@@ -227,7 +232,9 @@ class RibbonOptimizer:
             apply_down = True
         # Same two rules fused on device: the acquisition's blocked mask is
         # resident state, updated in one dispatch instead of re-uploaded.
-        self._blocked_dev = apply_prune_rules(
+        rules = (apply_prune_rules_joint if self._joint_space
+                 else apply_prune_rules)
+        self._blocked_dev = rules(
             self._blocked_dev, self._lattice_dev, self._costs_dev,
             jnp.int32(idx), jnp.asarray(config, dtype=jnp.float32),
             jnp.float32(self.best_cost if feasible else np.inf),
@@ -292,7 +299,7 @@ class RibbonOptimizer:
             est_rate = float(np.clip(e.qos_rate * scale, 0.0, 1.0))
             self.tell(e.config, est_rate, estimated=True)
 
-    def replay_from(self, other: "RibbonOptimizer",
+    def replay_from(self, other: "RibbonOptimizer", *,
                     pessimistic: bool = False) -> int:
         """Transfer still-valid history from another optimizer over the same
         workload: every *real* (non-estimated) evaluation whose config fits

@@ -77,6 +77,70 @@ class SearchSpace:
         return idx
 
 
+@dataclass(frozen=True)
+class JointSearchSpace(SearchSpace):
+    """Pool × routing-policy lattice (joint search, PR 7).
+
+    The last dimension is a categorical *routing-policy index* in
+    ``{0, ..., n_policies - 1}``, priced at zero — choosing a smarter
+    router is free, only capacity costs money.  ``SearchSpace``'s
+    positive-price invariant is relaxed for that one axis (and only that
+    one); everything else (enumeration order, costs, normalize, index_of)
+    is inherited unchanged, so the BO engine sees one integer lattice with
+    one extra dimension.
+
+    The policy axis is categorical, not a capacity count: the
+    dominance-down prune rule must not read "policy k <= policy k'" as
+    "less capacity".  ``pruning.apply_prune_rules_joint`` and the
+    ``PruneSet`` host mirror therefore restrict the down-set to lattice
+    points with the *same* policy index whenever the space carries a
+    policy axis (``n_policies > 1``); the incumbent-cost rule stays global
+    (a pool priced at or above the incumbent cannot win under any router).
+    """
+
+    n_policies: int = 1
+
+    def __post_init__(self):
+        if len(self.bounds) != len(self.prices):
+            raise ValueError("bounds and prices must have the same length")
+        if len(self.bounds) < 2:
+            raise ValueError("a joint space needs at least one pool type "
+                             "plus the policy axis")
+        if self.n_policies < 1:
+            raise ValueError(f"n_policies must be >= 1, got "
+                             f"{self.n_policies}")
+        if any(m < 0 for m in self.bounds):
+            raise ValueError("bounds must be non-negative")
+        if self.bounds[-1] != self.n_policies - 1:
+            raise ValueError(
+                f"the last bound is the policy axis and must equal "
+                f"n_policies - 1 = {self.n_policies - 1}, got "
+                f"{self.bounds[-1]}")
+        if any(p <= 0 for p in self.prices[:-1]):
+            raise ValueError("prices must be positive")
+        if self.prices[-1] != 0.0:
+            raise ValueError("the policy axis is free: prices[-1] must "
+                             "be 0.0")
+
+    @classmethod
+    def joint(cls, space: SearchSpace,
+              n_policies: int) -> "JointSearchSpace":
+        """Extend a pool space with an ``n_policies``-way routing axis."""
+        return cls(bounds=tuple(space.bounds) + (int(n_policies) - 1,),
+                   prices=tuple(space.prices) + (0.0,),
+                   n_policies=int(n_policies))
+
+    @property
+    def pool_space(self) -> SearchSpace:
+        """The pool-only projection (drops the policy axis)."""
+        return SearchSpace(bounds=self.bounds[:-1], prices=self.prices[:-1])
+
+    def split(self, config) -> tuple[tuple[int, ...], int]:
+        """(pool_config, policy_index) of one joint lattice point."""
+        cfg = tuple(int(v) for v in config)
+        return cfg[:-1], cfg[-1]
+
+
 def estimate_upper_bounds(evaluate_qos, n_types: int, hard_cap: int = 24,
                           tol: float = 1e-4) -> tuple[int, ...]:
     """Estimate m_i per the paper: grow a homogeneous pool of type ``i`` until

@@ -17,7 +17,8 @@ that warmed pool.  Each window's share of backlog that crossed its
 segment's opening cut is reported as ``WindowStat.carried_wait``.
 
 A constant no-event episode is a single segment from the idle carry at
-clock 0, which reproduces ``PoolSimulator.qos_rate`` bit for bit — the same
+clock 0, which reproduces the single-config ``PoolSimulator.qos`` lane bit
+for bit — the same
 whole-stream accounting every QoS path in this repo uses.  Passing
 ``carry_queue_state=False`` restores the legacy idle-restart accounting
 (every segment from a drained pool); the scenario bench runs both and
@@ -158,6 +159,10 @@ class ScenarioEngine:
         # as an honestly re-scored candidate, so the portfolio can return
         # to its cheap pre-storm mix instead of staying on the panic pool.
         self._pre_loss_config = None
+        # The routing policy currently dispatching queries (None = FCFS).
+        # Set by a successful reroute (spec.route_policies): the engine
+        # then serves, scores and searches under that dispatch rule.
+        self._route_policy = None
 
     def _cold_horizon(self, old_config, new_config,
                       factor: float) -> int | None:
@@ -216,10 +221,12 @@ class ScenarioEngine:
         """Sequential QoS oracle for the recovery/reprice searches: scores
         hypothetical deployments from the live backlog when warm scoring
         is on (``warm_oracle`` itself falls back to cold when the plane
-        has nothing to carry), else cold from idle."""
+        has nothing to carry), else cold from idle.  Either way the probe
+        dispatches under the routing policy currently in force."""
         if self.warm_scoring:
-            return self.plane.warm_oracle(dist, factor)
-        return self.plane.oracle(dist, factor)
+            return self.plane.warm_oracle(dist, factor,
+                                          policy=self._route_policy)
+        return self.plane.oracle(dist, factor, policy=self._route_policy)
 
     def _drive(self, opt: RibbonOptimizer, dist: str, factor: float,
                budget: int) -> int:
@@ -236,9 +243,10 @@ class ScenarioEngine:
 
         def sweep(cfgs):
             if cs is None:
-                return ev.grid(cfgs, [factor])
+                return ev.grid(cfgs, [factor], policy=self._route_policy)
             return ev.grid_from(cs[0], cfgs, [factor], deployed=cs[1],
-                                warmup=self._cold_starts)
+                                warmup=self._cold_starts,
+                                policy=self._route_policy)
 
         n0 = opt.trace.n_samples
         while opt.trace.n_samples - n0 < budget and not opt.done:
@@ -265,8 +273,10 @@ class ScenarioEngine:
         if cs is None or ev is None or cfg is None:
             return None
         warm = float(ev.grid_from(cs[0], [cfg], [factor], deployed=cs[1],
-                                  warmup=self._cold_starts)[0, 0])
-        idle = float(ev.grid([cfg], [factor])[0, 0])
+                                  warmup=self._cold_starts,
+                                  policy=self._route_policy)[0, 0])
+        idle = float(ev.grid([cfg], [factor],
+                             policy=self._route_policy)[0, 0])
         return idle - warm
 
     def _fallback_helps(self, dist: str, factor: float, incumbent,
@@ -282,7 +292,8 @@ class ScenarioEngine:
             return True
         rates = ev.grid_from(cs[0], [tuple(incumbent), tuple(candidate)],
                              [factor], deployed=cs[1],
-                             warmup=self._cold_starts)
+                             warmup=self._cold_starts,
+                             policy=self._route_policy)
         return float(rates[0, 1]) > float(rates[0, 0])
 
     def _initial_search(self, bounds, prices, dist: str,
@@ -345,7 +356,8 @@ class ScenarioEngine:
                             batch_q=self.spec.batch_q,
                             warm_state=cs[0] if cs else None,
                             deployed=cs[1] if cs else None,
-                            warmup=self._cold_starts)
+                            warmup=self._cold_starts,
+                            policy=self._route_policy)
         else:
             event = rescale(opt, self._search_oracle(dist, factor_est),
                             budget=self.spec.rescale_budget, kind=kind)
@@ -354,6 +366,54 @@ class ScenarioEngine:
             event.warm_scored = self._candidate_state() is not None
         self._factors.append(factor_est)
         return opt, event.new_best, event.samples_used
+
+    def _try_reroute(self, dist: str, factor_est: float, config, prices,
+                     p: int, at_q: int, report, pending) -> bool:
+        """Absorb an upshift with the *router* before touching the pool:
+        warm-sweep the current config under every candidate policy
+        (``spec.route_policies``) in one stacked-policy dispatch and, if
+        some dispatch rule restores QoS at the estimated level, switch to
+        it — same capacity, zero BO evaluations, no provisioning delay.
+        Returns True when a reroute was adopted (the rescale is skipped).
+        """
+        if not self.spec.route_policies:
+            return False
+        ev = self.plane.grid_evaluator(dist)
+        if ev is None:
+            return False          # no routed kernels on the live plane
+        from ..serving.routing import RoutingPolicy, named_policy
+        cands = [(name, named_policy(name, prices))
+                 for name in self.spec.route_policies]
+        stacked = RoutingPolicy.stack([pol for _, pol in cands])
+        cfg = [tuple(int(c) for c in config)]
+        cs = self._candidate_state()
+        if cs is not None:
+            rates = ev.sim.qos(cfg, workloads=[factor_est], state=cs[0],
+                               deployed=cs[1], warmup=self._cold_starts,
+                               policy=stacked).rates       # (1, P, 1)
+        else:
+            rates = ev.sim.qos(cfg, workloads=[factor_est],
+                               policy=stacked).rates
+        rates = np.asarray(rates, dtype=np.float64).reshape(len(cands))
+        feasible = rates >= self.spec.qos_target
+        if not feasible.any():
+            return False
+        best = int(np.argmax(np.where(feasible, rates, -np.inf)))
+        name, pol = cands[best]
+        current = getattr(self._route_policy, "name", None)
+        if name == current:
+            return False          # already routing this way; really rescale
+        self._route_policy = pol
+        price = float(np.dot(prices, config))
+        action = ControlAction(
+            kind="reroute", trigger="monitor", phase=p, at_query=at_q,
+            old_config=tuple(int(c) for c in config),
+            new_config=tuple(int(c) for c in config),
+            old_price=price, new_price=price, bo_evals=0,
+            warm_idle_delta=None, policy=name)
+        report.actions.append(action)
+        pending.append(action)
+        return True
 
     # ------------------------------------------------------------------ run
     def run(self) -> EpisodeReport:
@@ -370,6 +430,7 @@ class ScenarioEngine:
         f0 = spec.phases[0].load_factor
         self._factors = [f0]
         self._total_queries = sum(ph.n_queries for ph in spec.phases)
+        self._route_policy = None
         plane.begin_episode(carry=self.carry_queue_state)
         opt, used = self._initial_search(bounds, prices, dist0, f0)
         report.bo_evals += used
@@ -430,7 +491,8 @@ class ScenarioEngine:
                 if self._pending_switch:
                     cut = min(cut, self._pending_switch[0] - gq)
                 seg = slice_stream(stream, i, cut)
-                lat, waits = plane.measure(phase.batch_dist, seg, config)
+                lat, waits = plane.measure(phase.batch_dist, seg, config,
+                                           policy=self._route_policy)
                 carried = plane.last_carried_wait
                 consumed = len(lat)
                 redeploy = False
@@ -500,6 +562,18 @@ class ScenarioEngine:
                         # the post-loop commit then no-ops.
                         consumed = w_hi
                         plane.commit(consumed)
+                        # Cheapest fix first: on an upshift violation, see
+                        # whether a different dispatch rule alone absorbs
+                        # the new load on the *current* pool (0 BO evals,
+                        # no capacity bought) before re-searching the pool.
+                        if kind == "rescale_up" and self._try_reroute(
+                                phase.batch_dist, est, config, prices,
+                                p, g_end, report, pending):
+                            self.monitor.reset()
+                            adapts += 1
+                            bad_streak = 0
+                            down_streak = 0
+                            break
                         opt, new_best, used = self._adapt_load(
                             opt, phase.batch_dist, est, kind)
                         if kind == "rescale_down":
@@ -552,7 +626,9 @@ class ScenarioEngine:
                             if new_best else price,
                             bo_evals=used,
                             warm_idle_delta=self._score_delta(
-                                phase.batch_dist, est, config))
+                                phase.batch_dist, est, config),
+                            policy=getattr(self._route_policy, "name",
+                                           None))
                         report.actions.append(action)
                         pending.append(action)
                         report.bo_evals += used
@@ -591,8 +667,8 @@ class ScenarioEngine:
         report.total_queries = gq
         report.total_cost = float(sum(w.cost for w in report.windows))
         report.final_config = config
-        report.final_qos_by_phase = plane.phase_sweep(config,
-                                                      list(spec.phases))
+        report.final_qos_by_phase = plane.phase_sweep(
+            config, list(spec.phases), policy=self._route_policy)
         return report
 
     # ----------------------------------------------------------- event ops
@@ -894,7 +970,8 @@ class ScenarioEngine:
                     and all(0 <= c <= int(b) for c, b in zip(trim, bounds))
                     and float(np.dot(prices, trim))
                     < float(np.dot(prices, config))):
-                rate = float(ev.grid([trim], [phase.load_factor])[0, 0])
+                rate = float(ev.grid([trim], [phase.load_factor],
+                                     policy=self._route_policy)[0, 0])
                 if rate >= self.spec.qos_target:
                     # Two-stage transition: first the union pool (the trim
                     # slots wake cold beside the still-warm incumbents),

@@ -216,14 +216,16 @@ class SimulatorPlane(_EpisodeClock):
     def phase_stream(self, dist: str, n: int, factor: float) -> Workload:
         return _prefix(self.workloads[dist].scaled(factor), n)
 
-    def measure(self, dist: str, workload: Workload, config):
+    def measure(self, dist: str, workload: Workload, config, *, policy=None):
         sim = PoolSimulator(self.profile, self.types, workload,
                             max_instances=self.max_instances)
         if not self._carry:
             self._pending = None
             self.last_carried_wait = 0.0
-            return sim.latencies_waits(config)
-        seg = sim.segment_from(self._state, config)
+            r = sim.simulate(np.asarray(config, dtype=np.int64),
+                             policy=policy)
+            return r.lat, r.waits
+        seg = sim.segment_from(self._state, config, policy=policy)
         at = float(workload.arrivals[0]) if workload.n_queries else 0.0
         self.last_carried_wait = sim.carried_wait(self._state, config, at)
         self._pending = (seg, np.asarray(workload.arrivals,
@@ -245,25 +247,27 @@ class SimulatorPlane(_EpisodeClock):
     def grid_evaluator(self, dist: str) -> PoolEvaluator:
         return self.evaluators[dist]
 
-    def oracle(self, dist: str, factor: float):
+    def oracle(self, dist: str, factor: float, *, policy=None):
         ev = self.evaluators[dist]
-        return lambda cfg: float(ev.grid([cfg], [factor])[0, 0])
+        return lambda cfg: float(
+            ev.grid([cfg], [factor], policy=policy)[0, 0])
 
-    def warm_oracle(self, dist: str, factor: float):
+    def warm_oracle(self, dist: str, factor: float, *, policy=None):
         """Sequential ``config -> QoS rate`` scored from the live backlog:
         each probe is a what-if redeploy of the carried pool state as that
         candidate (``PoolEvaluator.grid_from``).  Falls back to the cold
         ``oracle`` when the plane has nothing to carry."""
         cs = self.candidate_state()
         if cs is None:
-            return self.oracle(dist, factor)
+            return self.oracle(dist, factor, policy=policy)
         state, dep = cs
         ev = self.evaluators[dist]
         return lambda cfg: float(ev.grid_from(
             state, [cfg], [factor], deployed=dep,
-            warmup=self._cold_starts)[0, 0])
+            warmup=self._cold_starts, policy=policy)[0, 0])
 
-    def phase_sweep(self, config, phases: list[PhaseSpec]) -> list[float]:
+    def phase_sweep(self, config, phases: list[PhaseSpec], *,
+                    policy=None) -> list[float]:
         """Full-stream QoS of one config under every phase's conditions —
         one stacked service-table grid dispatch (W = n_phases lanes over
         the shared arrival grid, each with its phase's batch stream)."""
@@ -273,8 +277,9 @@ class SimulatorPlane(_EpisodeClock):
                                self.workloads[ph.batch_dist].batches)
             for ph in phases])
         factors = [ph.load_factor for ph in phases]
-        rates = sim.qos_rate_grid([tuple(int(c) for c in config)], factors,
-                                  service_tables=tables)
+        rates = sim.qos([tuple(int(c) for c in config)],
+                        workloads=factors, service_tables=tables,
+                        policy=policy).rates
         return [float(r) for r in rates[:, 0]]
 
 
@@ -330,7 +335,14 @@ class LivePlane(_EpisodeClock):
     def phase_stream(self, dist: str, n: int, factor: float) -> Workload:
         return _prefix(self.workloads[dist].scaled(factor), n)
 
-    def measure(self, dist: str, workload: Workload, config):
+    @staticmethod
+    def _no_routing(policy) -> None:
+        if policy is not None:
+            raise ValueError("the live plane dispatches FCFS in hardware; "
+                             "routing policies are simulator-plane only")
+
+    def measure(self, dist: str, workload: Workload, config, *, policy=None):
+        self._no_routing(policy)
         self.configure(config)
         total = int(sum(int(c) for c in config))
         initial = None
@@ -392,7 +404,8 @@ class LivePlane(_EpisodeClock):
     def grid_evaluator(self, dist: str):
         return None                      # no batched path on the live plane
 
-    def oracle(self, dist: str, factor: float):
+    def oracle(self, dist: str, factor: float, *, policy=None):
+        self._no_routing(policy)
         probe = _prefix(self.workloads[dist].scaled(factor),
                         self.probe_queries)
 
@@ -403,13 +416,14 @@ class LivePlane(_EpisodeClock):
                                            time_scale=self.time_scale))
         return evaluate
 
-    def warm_oracle(self, dist: str, factor: float):
+    def warm_oracle(self, dist: str, factor: float, *, policy=None):
         """Measured what-if scoring from the carried per-cell state: each
         candidate probe serves with ``initial_busy`` set to the remap of the
         live pool's backlog onto that candidate (survivors keep in-flight
         work, added cells start idle) — the live analogue of the
         simulator's warm candidate lanes.  Probes still never touch the
         carried episode state."""
+        self._no_routing(policy)
         cs = self.candidate_state()
         if cs is None:
             return self.oracle(dist, factor)
@@ -431,7 +445,7 @@ class LivePlane(_EpisodeClock):
                 initial_busy=rel * self.time_scale))
         return evaluate
 
-    def phase_sweep(self, config, phases) -> None:
+    def phase_sweep(self, config, phases, *, policy=None) -> None:
         return None                      # re-serving every phase is not free
 
 

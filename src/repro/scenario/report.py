@@ -64,6 +64,10 @@ class ControlAction:
     # scored cold (idle-restart accounting, or a plane without the grid
     # lanes).
     warm_idle_delta: float | None = None
+    # Routing-policy name in force after this action (PR 7): set by
+    # "reroute" actions (the router absorbed the shift — same pool, 0 BO
+    # evaluations) and carried on later actions scored under that router.
+    policy: str | None = None
 
 
 @dataclass
@@ -182,6 +186,7 @@ class EpisodeReport:
                                      else int(a.recovery_queries)),
                 "warm_idle_delta": (None if a.warm_idle_delta is None
                                     else float(a.warm_idle_delta)),
+                "policy": a.policy,
             } for a in self.actions],
             "windows": [{
                 "phase": int(w.phase), "start": int(w.start),

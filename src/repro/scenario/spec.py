@@ -144,6 +144,12 @@ class ScenarioSpec:
     # Queries served on the degraded pool before a capacity-event recovery
     # takes effect (cloud instances take time to boot).  0 = instantaneous.
     provision_queries: int = 0
+    # Candidate routing policies (serving/routing.NAMED_POLICIES names) the
+    # engine may switch the dispatch rule to *before* rescaling: on an
+    # upshift violation it warm-sweeps the current pool under every
+    # candidate in one dispatch and, if some router restores QoS, reroutes
+    # (0 BO evaluations) instead of re-searching the pool.  () disables.
+    route_policies: tuple[str, ...] = ()
 
     def validate(self) -> "ScenarioSpec":
         if not self.phases:
@@ -189,6 +195,15 @@ class ScenarioSpec:
                                  f"{e.factor}")
             if e.kind == "price_spike" and not e.factor > 0:
                 raise ValueError(f"event {e.kind}: factor must be > 0")
+        if self.route_policies:
+            # Imported here so plain specs keep this module pure data
+            # (same pattern as the TIER_NAMES check above).
+            from ..serving.routing import NAMED_POLICIES
+            for name in self.route_policies:
+                if name not in NAMED_POLICIES:
+                    raise ValueError(
+                        f"unknown routing policy {name!r} in route_policies;"
+                        f" known: {NAMED_POLICIES}")
         if self.window < 1:
             raise ValueError("window must be >= 1")
         if self.provision_queries < 0:

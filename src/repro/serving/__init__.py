@@ -10,7 +10,9 @@ from .instance import (AWS_INSTANCES, MODEL_PROFILES, PAPER_POOLS, TPU_CELLS,
 from .pool import (DEFAULT_BOUNDS, DEFAULT_RATES, PoolEvaluator,
                    best_homogeneous, cost_effectiveness, make_paper_setup,
                    paper_workload)
-from .simulator import PoolSimulator, PoolState, SegmentResult
+from .routing import NAMED_POLICIES, RoutingPolicy, named_policy
+from .simulator import (PoolSimulator, PoolState, QosResult, SegmentResult,
+                        SimResult)
 from .tiers import (TIER_NAMES, TIERED_POOLS, TIERS, CapacityTier,
                     SpotPriceProcess, TierCatalog, TierHazard, tiered_pool,
                     tiered_variant)
@@ -22,7 +24,8 @@ __all__ = [
     "InstanceType", "ModelProfile", "service_time_table",
     "PoolEvaluator", "best_homogeneous", "cost_effectiveness",
     "make_paper_setup", "paper_workload", "DEFAULT_RATES", "DEFAULT_BOUNDS",
-    "PoolSimulator", "PoolState", "SegmentResult",
+    "PoolSimulator", "PoolState", "SegmentResult", "SimResult", "QosResult",
+    "RoutingPolicy", "NAMED_POLICIES", "named_policy",
     "LoadMonitor", "ScaleEvent", "rescale",
     "fail_instances", "recover_from_capacity_change",
     "recover_from_failure", "reprice",

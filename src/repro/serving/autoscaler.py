@@ -87,12 +87,16 @@ class ScaleEvent:
     # True when candidates (and qos_by_load) were scored warm — from the
     # live pool's carried backlog — rather than from an idle queue.
     warm_scored: bool = False
+    # Name of the routing policy the candidates were scored under
+    # (None = legacy FCFS dispatch).
+    policy: str | None = None
 
 
-def rescale(optimizer: RibbonOptimizer, evaluate_qos, budget: int = 40,
+def rescale(optimizer: RibbonOptimizer, evaluate_qos, *, budget: int = 40,
             kind: str = "load_change", load_factors=None,
             target_index: int = -1, batch_q: int = 8, warm_state=None,
-            deployed=None, now=None, warmup=None) -> ScaleEvent:
+            deployed=None, now=None, warmup=None,
+            policy=None) -> ScaleEvent:
     """Respond to a detected change: measure the incumbent on the new load,
     warm-restart the BO with the paper's estimation/pruning transfer, and
     search to the new optimum.
@@ -104,7 +108,7 @@ def rescale(optimizer: RibbonOptimizer, evaluate_qos, budget: int = 40,
       in-the-loop search.  Every round asks a constant-liar batch of up to
       ``batch_q`` candidates and evaluates **all of them across all monitored
       load levels in one device dispatch** (``PoolEvaluator.grid`` →
-      ``PoolSimulator.qos_rate_grid``); the BO optimizes for
+      the grid lane of ``PoolSimulator.qos``); the BO optimizes for
       ``load_factors[target_index]`` (default: the last, i.e. the new load)
       while the other monitored levels ride along in the same dispatch —
       deliberate extra lanes that buy the autoscaler its cross-level view
@@ -123,6 +127,13 @@ def rescale(optimizer: RibbonOptimizer, evaluate_qos, budget: int = 40,
     ``warmup`` cold start) instead of from an idle queue — the what-if
     adaptation view.  ``budget`` counts post-restart evaluations at the
     target level either way.
+
+    ``policy=`` (a :class:`~repro.serving.routing.RoutingPolicy`) scores
+    every candidate — incumbent, batch and the winner's cross-level column —
+    under that dispatch rule instead of legacy FCFS, and is recorded on the
+    returned event.  Everything after ``evaluate_qos`` is keyword-only: the
+    control-plane sweeps share one ``(warm_state=, deployed=, now=,
+    policy=)`` vocabulary (PR 7).
     """
     old_best = optimizer.best_config
     old_cost = optimizer.best_cost
@@ -139,8 +150,8 @@ def rescale(optimizer: RibbonOptimizer, evaluate_qos, budget: int = 40,
             if warm:
                 return evaluate_qos.grid_from(warm_state, configs, factors,
                                               deployed=deployed, now=now,
-                                              warmup=warmup)
-            return evaluate_qos.grid(configs, factors)
+                                              warmup=warmup, policy=policy)
+            return evaluate_qos.grid(configs, factors, policy=policy)
 
         incumbent = sweep([old_best])
         optimizer.warm_restart(float(incumbent[target_index, 0]))
@@ -166,7 +177,16 @@ def rescale(optimizer: RibbonOptimizer, evaluate_qos, budget: int = 40,
                           new_best=best.config if best else None,
                           new_cost=best.cost if best else None,
                           samples_used=optimizer.trace.n_samples - n0 + 1,
-                          qos_by_load=qos_by_load, warm_scored=warm)
+                          qos_by_load=qos_by_load, warm_scored=warm,
+                          policy=None if policy is None else policy.name)
+
+    if policy is not None:
+        # Sequential oracles that route (PoolEvaluator.__call__) take the
+        # policy per call; plain callables keep their legacy signature.
+        base = evaluate_qos
+
+        def evaluate_qos(cfg):
+            return base(cfg, policy=policy)
 
     new_rate = float(evaluate_qos(old_best))
     optimizer.warm_restart(new_rate)
@@ -180,4 +200,5 @@ def rescale(optimizer: RibbonOptimizer, evaluate_qos, budget: int = 40,
     return ScaleEvent(kind=kind, old_best=old_best, old_cost=old_cost,
                       new_best=best.config if best else None,
                       new_cost=best.cost if best else None,
-                      samples_used=optimizer.trace.n_samples - n0 + 1)
+                      samples_used=optimizer.trace.n_samples - n0 + 1,
+                      policy=None if policy is None else policy.name)

@@ -223,7 +223,7 @@ class ClusterEngine:
     def served_arrays(self) -> tuple[np.ndarray, np.ndarray]:
         """(latencies, waits) of the last `serve` call, in arrival order —
         the measured-plane feed for `LoadMonitor.observe` (the simulator's
-        analogue is `PoolSimulator.latencies_waits`)."""
+        analogue is `PoolSimulator.simulate`'s `lat`/`waits`)."""
         lat = np.asarray([r.latency for r in self.records], dtype=np.float64)
         waits = np.asarray([r.wait for r in self.records], dtype=np.float64)
         return lat, waits

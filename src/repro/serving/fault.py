@@ -61,9 +61,9 @@ def continue_search(opt: RibbonOptimizer, evaluate_qos, budget: int) -> int:
 
 
 def recover_from_capacity_change(optimizer: RibbonOptimizer, evaluate_qos,
-                                 losses: dict, budget: int = 40,
+                                 losses: dict, *, budget: int = 40,
                                  kind: str = "cell_failure",
-                                 replay: bool = True,
+                                 replay: bool = True, policy=None,
                                  ) -> tuple[RibbonOptimizer, ScaleEvent]:
     """Capacity-change recovery (beyond-paper extension of RIBBON).
 
@@ -95,19 +95,33 @@ def recover_from_capacity_change(optimizer: RibbonOptimizer, evaluate_qos,
     so restocked capacity re-enters it; nothing here resets it.  ``kind``
     labels the emitted ScaleEvent ("cell_failure", "spot_preemption",
     "recover_storm", "restock", ...).
+
+    Everything after ``losses`` is keyword-only (the PR 7 control-plane
+    vocabulary).  ``policy=`` routes the continued search's oracle calls
+    (``evaluate_qos(cfg, policy=...)``) and is recorded on the event; a
+    joint pool × policy optimizer (``JointSearchSpace``) keeps its policy
+    axis through recovery — ``losses`` only ever names pool types.
     """
-    from ..core.search_space import SearchSpace
+    from ..core.search_space import JointSearchSpace, SearchSpace
 
     old_best = optimizer.best_config
     old_cost = optimizer.best_cost
     space = optimizer.space
     new_bounds = list(space.bounds)
+    joint_n = getattr(space, "n_policies", 1)
+    pool_dims = len(new_bounds) - (1 if joint_n > 1 else 0)
     for t, lost in losses.items():
-        if not 0 <= t < len(new_bounds):
+        if not 0 <= t < pool_dims:
             raise ValueError(f"type_index {t} out of range for a pool with "
-                             f"{len(new_bounds)} instance types")
+                             f"{pool_dims} instance types")
         new_bounds[t] = max(0, new_bounds[t] - int(lost))
-    new_space = SearchSpace(bounds=tuple(new_bounds), prices=space.prices)
+    if joint_n > 1:
+        new_space = JointSearchSpace(bounds=tuple(new_bounds),
+                                     prices=space.prices,
+                                     n_policies=joint_n)
+    else:
+        new_space = SearchSpace(bounds=tuple(new_bounds),
+                                prices=space.prices)
 
     new_opt = RibbonOptimizer(new_space, qos_target=optimizer.qos_target,
                               theta=optimizer.theta,
@@ -116,31 +130,41 @@ def recover_from_capacity_change(optimizer: RibbonOptimizer, evaluate_qos,
                               if old_best else None,
                               cost_penalties=optimizer.cost_penalties)
     new_opt.replay_from(optimizer, pessimistic=not replay)
+    if policy is not None:
+        base = evaluate_qos
+
+        def evaluate_qos(cfg):
+            return base(cfg, policy=policy)
+
     used = continue_search(new_opt, evaluate_qos, budget)
     best = new_opt.trace.best_feasible()
     event = ScaleEvent(kind=kind, old_best=old_best,
                        old_cost=old_cost,
                        new_best=best.config if best else None,
                        new_cost=best.cost if best else None,
-                       samples_used=used)
+                       samples_used=used,
+                       policy=None if policy is None else policy.name)
     return new_opt, event
 
 
-def recover_from_failure(optimizer: RibbonOptimizer, evaluate_qos,
+def recover_from_failure(optimizer: RibbonOptimizer, evaluate_qos, *,
                          failed_type: int, lost: int = 1,
                          budget: int = 40,
                          kind: str = "cell_failure",
-                         replay: bool = True) -> tuple[RibbonOptimizer,
-                                                       ScaleEvent]:
+                         replay: bool = True,
+                         policy=None) -> tuple[RibbonOptimizer,
+                                               ScaleEvent]:
     """Single-type convenience wrapper over
-    :func:`recover_from_capacity_change`."""
+    :func:`recover_from_capacity_change` (keyword-only, PR 7)."""
     return recover_from_capacity_change(optimizer, evaluate_qos,
                                         {failed_type: lost}, budget=budget,
-                                        kind=kind, replay=replay)
+                                        kind=kind, replay=replay,
+                                        policy=policy)
 
 
-def reprice(optimizer: RibbonOptimizer, new_prices, evaluate_qos,
-            budget: int = 20) -> tuple[RibbonOptimizer, ScaleEvent]:
+def reprice(optimizer: RibbonOptimizer, new_prices, evaluate_qos, *,
+            budget: int = 20,
+            policy=None) -> tuple[RibbonOptimizer, ScaleEvent]:
     """Price-change response (spot market repricing, scenario engine event).
 
     QoS measurements are price-independent, so the *entire* real exploration
@@ -150,15 +174,31 @@ def reprice(optimizer: RibbonOptimizer, new_prices, evaluate_qos,
     re-converge to the new cost optimum.  Returns (new_optimizer, event)
     with costs quoted at the new prices.
     """
-    from ..core.search_space import SearchSpace
+    from ..core.search_space import JointSearchSpace, SearchSpace
 
     old_best = optimizer.best_config
-    new_space = SearchSpace(bounds=optimizer.space.bounds,
-                            prices=tuple(float(p) for p in new_prices))
+    space = optimizer.space
+    prices = tuple(float(p) for p in new_prices)
+    joint_n = getattr(space, "n_policies", 1)
+    if joint_n > 1:
+        # A joint optimizer reprices its pool types; the policy axis stays
+        # free whether or not the caller included its zero entry.
+        if len(prices) == len(space.bounds) - 1:
+            prices = prices + (0.0,)
+        new_space = JointSearchSpace(bounds=space.bounds, prices=prices,
+                                     n_policies=joint_n)
+    else:
+        new_space = SearchSpace(bounds=space.bounds, prices=prices)
     new_opt = RibbonOptimizer(new_space, qos_target=optimizer.qos_target,
                               theta=optimizer.theta, start=old_best,
                               cost_penalties=optimizer.cost_penalties)
     new_opt.replay_from(optimizer)
+    if policy is not None:
+        base = evaluate_qos
+
+        def evaluate_qos(cfg):
+            return base(cfg, policy=policy)
+
     used = continue_search(new_opt, evaluate_qos, budget)
     best = new_opt.trace.best_feasible()
     old_cost = (float(new_space.costs(np.asarray([old_best]))[0])
@@ -167,7 +207,8 @@ def reprice(optimizer: RibbonOptimizer, new_prices, evaluate_qos,
                        old_cost=old_cost,
                        new_best=best.config if best else None,
                        new_cost=best.cost if best else None,
-                       samples_used=used)
+                       samples_used=used,
+                       policy=None if policy is None else policy.name)
     return new_opt, event
 
 

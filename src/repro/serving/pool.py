@@ -16,6 +16,7 @@ import numpy as np
 from ..core.search_space import SearchSpace
 from .instance import (AWS_INSTANCES, MODEL_PROFILES, PAPER_POOLS,
                        InstanceType, ModelProfile)
+from .routing import RoutingPolicy
 from .simulator import PoolSimulator
 from .workload import Workload, generate_workload
 
@@ -55,13 +56,33 @@ class PoolEvaluator:
         self._grid_cache: dict[tuple[float, tuple[int, ...]], float] = {}
         # warm key -> {(load_factor, config) -> rate}; see grid_from.
         self._warm_cache: dict[tuple, dict] = {}
+        # RoutingPolicy.key() -> (cold cache, grid cache): each policy gets
+        # its own memo pair — the legacy pair above stays the policy=None
+        # view, so FCFS callers keep bit-identical memo behavior.
+        self._policy_caches: dict[tuple, tuple[dict, dict]] = {}
 
-    def __call__(self, config) -> float:
+    @staticmethod
+    def _policy_key(policy: RoutingPolicy | None):
+        if policy is None:
+            return None
+        if policy.stacked:
+            raise ValueError(
+                "PoolEvaluator memoizes per single policy; score stacked "
+                "policies through PoolSimulator.qos or pass policy.row(p)")
+        return policy.key()
+
+    def _caches_for(self, pk) -> tuple[dict, dict]:
+        if pk is None:
+            return self._cache, self._grid_cache
+        return self._policy_caches.setdefault(pk, ({}, {}))
+
+    def __call__(self, config, *, policy=None) -> float:
         key = tuple(int(c) for c in config)
-        if key not in self._cache:
-            self._cache[key] = self.sim.qos_rate(key)
+        cache, _ = self._caches_for(self._policy_key(policy))
+        if key not in cache:
+            cache[key] = float(self.sim.qos(key, policy=policy).rates)
             self.n_evals += 1
-        return self._cache[key]
+        return cache[key]
 
     def _cell_get(self, factor: float, key: tuple[int, ...]):
         if factor == 1.0:
@@ -88,27 +109,29 @@ class PoolEvaluator:
                     [chunk, np.repeat(chunk[:1], width - n, axis=0)])
             yield chunk, i, n
 
-    def batch(self, configs) -> np.ndarray:
+    def batch(self, configs, *, policy=None) -> np.ndarray:
         """QoS rates for many configs via the batched simulator.
 
-        Deduplicates against the memo cache, evaluates only the misses
-        (padded to ``_chunk``-sized dispatches so the executable is compiled
-        once), and returns rates aligned with ``configs``.
+        Deduplicates against the memo cache (``policy=`` selects that
+        policy's own memo pair), evaluates only the misses (padded to
+        ``_chunk``-sized dispatches so the executable is compiled once), and
+        returns rates aligned with ``configs``.
         """
         keys = [tuple(int(c) for c in cfg) for cfg in configs]
-        missing = [k for k in dict.fromkeys(keys) if k not in self._cache]
+        cache, _ = self._caches_for(self._policy_key(policy))
+        missing = [k for k in dict.fromkeys(keys) if k not in cache]
         if missing:
             rates = []
             for chunk, _, n in self._pow2_chunks(
                     np.asarray(missing, dtype=np.int64)):
-                rates.append(self.sim.qos_rate_batch(chunk)[:n])
+                rates.append(self.sim.qos(chunk, policy=policy).rates[:n])
             rates = np.concatenate(rates)
             for k, r in zip(missing, rates):
-                self._cache[k] = float(r)
+                cache[k] = float(r)
             self.n_evals += len(missing)
-        return np.asarray([self._cache[k] for k in keys], dtype=np.float64)
+        return np.asarray([cache[k] for k in keys], dtype=np.float64)
 
-    def grid(self, configs, load_factors) -> np.ndarray:
+    def grid(self, configs, load_factors, *, policy=None) -> np.ndarray:
         """QoS rates on the (load level × config) grid, one sweep.
 
         ``load_factors`` scale the bound workload (``Workload.scaled``
@@ -119,12 +142,29 @@ class PoolEvaluator:
 
         Memoized per (load factor, config) cell.  Misses are evaluated as a
         cross product — every load level with any miss × every config missing
-        somewhere — in ``_chunk``-bounded ``qos_rate_grid`` dispatches, so a
-        rescale loop's incumbent + candidates × monitored levels costs one
-        device round-trip.  ``n_evals`` counts newly simulated cells only.
+        somewhere — in ``_chunk``-bounded grid dispatches, so a rescale
+        loop's incumbent + candidates × monitored levels costs one device
+        round-trip.  ``policy=`` routes dispatch and selects that policy's
+        memo pair.  ``n_evals`` counts newly simulated cells only.
         """
-        return self._sweep_grid(configs, load_factors, self._cell_get,
-                                self._cell_put, self.sim.qos_rate_grid)
+        pk = self._policy_key(policy)
+        if pk is None:
+            cell_get, cell_put = self._cell_get, self._cell_put
+        else:
+            cache, grid_cache = self._caches_for(pk)
+
+            def cell_get(f, k):
+                return cache.get(k) if f == 1.0 else grid_cache.get((f, k))
+
+            def cell_put(f, k, rate):
+                if f == 1.0:
+                    cache[k] = rate
+                else:
+                    grid_cache[(f, k)] = rate
+        return self._sweep_grid(
+            configs, load_factors, cell_get, cell_put,
+            lambda chunk, rows: self.sim.qos(chunk, workloads=rows,
+                                             policy=policy).rates)
 
     def _sweep_grid(self, configs, load_factors, cell_get, cell_put,
                     dispatch) -> np.ndarray:
@@ -155,15 +195,15 @@ class PoolEvaluator:
         return np.asarray([[cell_get(f, k) for k in keys]
                            for f in factors], dtype=np.float64)
 
-    def grid_from(self, state, configs, load_factors, deployed=None,
-                  now=None, warmup=None) -> np.ndarray:
+    def grid_from(self, state, configs, load_factors, *, deployed=None,
+                  now=None, warmup=None, policy=None) -> np.ndarray:
         """Warm-start ``grid``: QoS rates of candidate pools scored from a
         live carry (each candidate's initial state is the ``PoolState.remap``
         of the currently ``deployed`` pool — what-if adaptation under the
         current queue, slots added by the switch paying their tier's
-        ``warmup`` cold start).  Cell ``[w, b]`` equals ``qos_rate_from`` on
-        the scaled workload bound to that candidate's remapped state,
-        exactly.
+        ``warmup`` cold start).  Cell ``[w, b]`` equals the warm
+        single-config ``qos`` lane on the scaled workload bound to that
+        candidate's remapped state, exactly.
 
         Memoized per (warm state, load factor, config) cell: a rescale round
         re-sweeping its monitored levels from one adaptation cut costs one
@@ -178,6 +218,7 @@ class PoolEvaluator:
             None if warmup is None else tuple(float(w) for w in warmup),
             float(state.clock),
             tuple(np.asarray(state.free, dtype=np.float64).tolist()),
+            self._policy_key(policy),
         )
         cache = self._warm_cache.pop(warm_key, None)
         if cache is None:
@@ -190,12 +231,12 @@ class PoolEvaluator:
             configs, load_factors,
             lambda f, k: cache.get((f, k)),
             lambda f, k, rate: cache.__setitem__((f, k), rate),
-            lambda chunk, rows: self.sim.qos_rate_grid_from(
-                state, chunk, rows, deployed=deployed, now=now,
-                warmup=warmup))
+            lambda chunk, rows: self.sim.qos(
+                chunk, workloads=rows, state=state, deployed=deployed,
+                now=now, warmup=warmup, policy=policy).rates)
 
     def exhaustive(self, space: SearchSpace, qos_target: float,
-                   load_factor: float = 1.0):
+                   load_factor: float = 1.0, *, policy=None):
         """Ground-truth optimum + total exhaustive cost (paper Fig. 13
         normalizer), swept through the batched simulator in one pass —
         or, for ``load_factor != 1``, through a one-row grid sweep of the
@@ -204,9 +245,9 @@ class PoolEvaluator:
         lattice = space.enumerate()
         costs = space.costs(lattice)
         if load_factor == 1.0:
-            rates = self.batch(lattice)
+            rates = self.batch(lattice, policy=policy)
         else:
-            rates = self.grid(lattice, [load_factor])[0]
+            rates = self.grid(lattice, [load_factor], policy=policy)[0]
         total = float(costs.sum())
         feasible = rates >= qos_target
         if not feasible.any():

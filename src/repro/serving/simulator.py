@@ -17,12 +17,13 @@ Architecture (the batched evaluation engine):
     executable serves every pool configuration;
   * the scan is **vmapped over a batch axis of slot layouts**: a single
     compiled executable evaluates ``B`` pool configurations in one device
-    dispatch (``latencies_batch`` / ``qos_rate_batch``).  The arrival stream
-    and the (n_types, n_queries) service table are shared across the batch —
+    dispatch (the batched lane of ``simulate``/``qos``, selected by a
+    ``(B, n_types)`` config array).  The arrival stream and the
+    (n_types, n_queries) service table are shared across the batch —
     only the (B, max_instances) slot layout varies;
   * a second **workload axis** joins the batch axis for load-level sweeps
-    (``latencies_grid`` / ``qos_rate_grid``): one dispatch simulates
-    ``W`` scaled arrival streams × ``B`` configs.  ``qos_rate_grid`` runs a
+    (the ``workloads=`` grid lane): one dispatch simulates ``W`` scaled
+    arrival streams × ``B`` configs.  The grid ``qos`` lane runs a
     leaner fused executable — QoS counting folded into the scan carry, slot
     padding trimmed to the batch's occupancy, and the flattened ``W·B`` lane
     axis sharded across XLA host devices when more than one is configured
@@ -35,8 +36,8 @@ Architecture (the batched evaluation engine):
 
 The BO loop evaluates hundreds of configurations — this batched path is the
 hot path of the *search*, exactly the paper's "costly evaluation" being
-amortized.  Single-config ``latencies``/``qos_rate`` are kept as the q=1
-special case and agree bit-for-bit with row ``i`` of the batched result, and
+amortized.  The single-config lane is kept as the q=1 special case and
+agrees bit-for-bit with row ``i`` of the batched result, and
 cell ``[w, b]`` of the grid agrees bit-for-bit with the single path bound to
 ``workload.scaled(load_factors[w])`` (tests/test_batch_eval.py,
 tests/test_grid_eval.py).
@@ -44,31 +45,47 @@ tests/test_grid_eval.py).
 Continuous-time warm starts (the scenario engine's episode clock): a
 :class:`PoolState` carries per-slot next-free times (episode time) plus a
 ``clock`` offset mapping the bound stream's local ``t=0`` into episode time.
-``latencies_from`` / ``latencies_waits_from`` / ``qos_rate_from`` start the
-scan from that carry and return the final carry, so a stream served in
-consecutive segments (each segment's final state feeding the next) produces
-the *same bits* as one whole-stream call — ``initial_state()`` (idle pool at
-clock 0) is the identity element: ``latencies_from(initial_state(), c)``
-equals ``latencies(c)`` bit for bit.  ``PoolState.remap`` threads the carry
+Passing ``state=`` to ``simulate``/``qos`` starts the scan from that carry
+and returns the final carry, so a stream served in consecutive segments
+(each segment's final state feeding the next) produces the *same bits* as
+one whole-stream call — ``initial_state()`` (idle pool at clock 0) is the
+identity element: ``simulate(c, state=initial_state())`` equals
+``simulate(c)`` bit for bit.  ``PoolState.remap`` threads the carry
 through a pool reconfiguration (surviving instances keep their in-flight
 work, removed slots drop it, added slots start idle), and ``segment_from``
 exposes the per-prefix carry the scenario engine needs when it rolls a
 segment back to an adaptation cut (tests/test_simulator.py,
 tests/test_scenario.py).
 
-Warm starts ride the batched and grid lanes too: ``latencies_batch_from`` /
-``qos_rate_batch_from`` and ``latencies_grid_from`` / ``qos_rate_grid_from``
-evaluate B *candidate* pools from one live carry in a single dispatch —
+Warm starts ride the batched and grid lanes too: ``state=`` composes with
+the batch and ``workloads=`` axes (plus ``deployed=``/``now=``/``warmup=``)
+to evaluate B *candidate* pools from one live carry in a single dispatch —
 each candidate's initial carry is a vectorized ``PoolState.remap_batch`` of
 the deployed pool's state (what-if adaptation under the current queue, not
-from idle).  Every cell stays bit-identical to the sequential ``*_from``
-path on that candidate's remapped state, and the idle carry at clock 0
-reproduces the cold batched/grid paths bit for bit
+from idle).  Every cell stays bit-identical to the sequential warm
+single-config path on that candidate's remapped state, and the idle carry
+at clock 0 reproduces the cold batched/grid paths bit for bit
 (tests/test_warm_lanes.py).
+
+Unified surface (PR 7): every lane above is reached through one pair of
+entry points — ``PoolSimulator.simulate(configs, *, state=, workloads=,
+service_tables=, policy=, deployed=, now=, warmup=)`` returning a
+:class:`SimResult` and the lean ``qos(...)`` returning a
+:class:`QosResult` — with the legacy ``latencies*``/``qos_rate*`` names
+kept as deprecation shims that delegate and warn once per name
+(docs/api_migration.md maps every old call).  The dispatch rule itself is
+*data*: ``policy=`` takes a :class:`~repro.serving.routing.RoutingPolicy`
+(cost-aware preference order, per-query type affinity, hedged re-dispatch)
+whose parameters feed ``_simulate_scan_policy``, and a *stacked* policy
+folds a whole policy batch into the lane axis so B_pool × B_policy
+candidates score in one dispatch, warm or cold.  ``policy=None`` runs the
+untouched legacy kernels — bit-identical to the pre-redesign paths on
+every lane (tests/test_routing.py).
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from functools import partial
 
@@ -77,6 +94,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .instance import InstanceType, ModelProfile, service_time_table
+from .routing import RoutingPolicy
 from .workload import Workload
 
 _INF = 1e30
@@ -93,6 +111,16 @@ _BIG = 1e6
 # (PoolState keeps segment-local times small); exceeding it raises instead
 # of silently dispatching to the wrong slot.
 _MAX_HORIZON = _BIG / 8.0
+# Rank-band separator of the policy dispatch key: an idle slot scores
+# ``(type_pref[type(s)] + affinity·svc[s]) · _TIE + priority[s]``, so any
+# rank gap >= 1/_TIE dominates the slot-priority tiebreak while exact rank
+# ties fall back to pool type order.  2^16 is a power of two, so for the
+# identity policy the key is *exactly* ``priority`` in float32
+# (0·65536 + p == p), which is what keeps ``policy=None`` and
+# ``RoutingPolicy.fcfs`` bit-identical; it also dwarfs ``max_instances``
+# (priorities < 64) by three orders of magnitude, so integer-valued
+# preference ranks can never be crossed by the tiebreak.
+_TIE = 65536.0
 
 
 def _check_horizon(t_max: float, context: str) -> None:
@@ -397,11 +425,185 @@ _grid_counts_pmap = jax.pmap(_grid_counts_wb,
                              in_axes=(0, 0, 0, 0, 0, 0, 0))
 
 
+@jax.jit
+def _simulate_scan_policy(arrivals, service, type_of_slot, priority, free0,
+                          pref_slot, affinity, hedge):
+    """Routed FCFS simulation scan: dispatch driven by policy parameters.
+
+    Same contract as ``_simulate_scan`` plus the per-lane policy operands
+    (see ``routing.RoutingPolicy``):
+
+    pref_slot: (max_inst,)  idle preference rank of each slot's *type*
+               (``type_pref[type_of_slot]``, folded host-side)
+    affinity:  ()           weight of the query's own per-type service time
+    hedge:     ()           busy-slot predicted-completion fraction in [0, 1]
+
+    Per query: among slots idle at the arrival instant, minimize
+    ``(pref_slot + affinity·svc) · _TIE + priority``; if none is idle,
+    minimize ``free + hedge·svc`` (hedge 0 = earliest-freeing FCFS, 1 =
+    predicted earliest completion).  Identity parameters (all zeros) pick
+    the same slot as the legacy fused key at every step for nonnegative
+    arrivals: the idle key collapses to exactly ``priority`` and the busy
+    key to exactly ``free`` (tests/test_routing.py asserts the bits).
+    Absent slots carry ``free == _INF`` so they are never idle and rank
+    last among busy slots, exactly as in the legacy scan.
+    """
+
+    def step(free, inputs):
+        arrival, svc_by_type = inputs
+        svc_slot = svc_by_type[type_of_slot]
+        idle = free <= arrival
+        idle_key = jnp.where(
+            idle, (pref_slot + affinity * svc_slot) * _TIE + priority, _INF)
+        busy_key = jnp.where(idle, _INF, free + hedge * svc_slot)
+        slot = jnp.where(idle.any(), jnp.argmin(idle_key),
+                         jnp.argmin(busy_key))
+        start = jnp.maximum(arrival, free[slot])
+        finish = start + svc_by_type[type_of_slot[slot]]
+        free = free.at[slot].set(finish)
+        return free, (finish - arrival, start, slot)
+
+    return jax.lax.scan(step, free0, (arrivals, service.T))
+
+
+# Policy lane axis: slot layout, initial carry, and the three policy
+# operands all map together — a *stacked* policy is folded into this axis
+# host-side (``_fold_policy``), so B_pool × B_policy candidates are just
+# P·B lanes of one dispatch.  The stream and service table stay shared.
+_scan_policy_batch = jax.jit(
+    jax.vmap(_simulate_scan_policy,
+             in_axes=(None, None, 0, None, 0, 0, 0, 0)))
+
+_scan_policy_grid = jax.jit(
+    jax.vmap(jax.vmap(_simulate_scan_policy,
+                      in_axes=(None, None, 0, None, 0, 0, 0, 0)),
+             in_axes=(0, None, None, None, None, None, None, None)))
+
+_scan_policy_grid_tables = jax.jit(
+    jax.vmap(jax.vmap(_simulate_scan_policy,
+                      in_axes=(None, None, 0, None, 0, 0, 0, 0)),
+             in_axes=(0, 0, None, None, None, None, None, None)))
+
+
+def _grid_lane_qos_counts_policy(arrivals, service_T, type_of_slot, priority,
+                                 free0, iota, qos_t, pref_slot, affinity,
+                                 hedge):
+    """Routed twin of ``_grid_lane_qos_counts``: the policy dispatch key of
+    ``_simulate_scan_policy`` with the lean grid engine's reductions (one-hot
+    slot update, QoS count folded into the carry).  Identity parameters
+    reproduce the legacy count scan bit for bit."""
+
+    def step(carry, inputs):
+        free, count = carry
+        arrival, svc_by_type = inputs
+        svc_slot = svc_by_type[type_of_slot]
+        idle = free <= arrival
+        idle_key = jnp.where(
+            idle, (pref_slot + affinity * svc_slot) * _TIE + priority, _INF)
+        busy_key = jnp.where(idle, _INF, free + hedge * svc_slot)
+        slot = jnp.where(idle.any(), jnp.argmin(idle_key),
+                         jnp.argmin(busy_key))
+        start = jnp.maximum(arrival, free[slot])
+        finish = start + svc_by_type[type_of_slot[slot]]
+        free = jnp.where(iota == slot, finish, free)
+        count = count + ((finish - arrival) <= qos_t).astype(jnp.int32)
+        return (free, count), None
+
+    (free, count), _ = jax.lax.scan(step, (free0, jnp.int32(0)),
+                                    (arrivals, service_T),
+                                    unroll=_GRID_UNROLL)
+    return count, free
+
+
+# Nested (workload, policy·config-lane) axes.  Policy sweeps run the
+# single-device executable only: routing is a control-plane / bench axis,
+# not the sharded rescale hot loop, so there is no pmap flavor.
+_grid_counts_policy_jit = jax.jit(jax.vmap(
+    jax.vmap(_grid_lane_qos_counts_policy,
+             in_axes=(None, None, 0, None, 0, None, None, 0, 0, 0)),
+    in_axes=(0, None, None, None, None, None, None, None, None, None)))
+_grid_counts_policy_tables_jit = jax.jit(jax.vmap(
+    jax.vmap(_grid_lane_qos_counts_policy,
+             in_axes=(None, None, 0, None, 0, None, None, 0, 0, 0)),
+    in_axes=(0, 0, None, None, None, None, None, None, None, None)))
+
+
+def _fold_policy(policy: RoutingPolicy, type_of_slot: np.ndarray,
+                 free0: np.ndarray) -> tuple:
+    """Fold a policy's (optional) stacked axis into the lane axis.
+
+    ``type_of_slot`` (B, S) int32 and ``free0`` (B, S) are the batch lane
+    operands; the per-type preference table is gathered to per-*slot* rows
+    here so the kernel never indexes by type at dispatch time.  Returns
+    ``(type_of_slot, free0, pref_slot, affinity, hedge, n_policies)`` with
+    a P·B lane axis for a stacked policy — policy-major, lane ``p·B + b``
+    is (policy ``p``, config ``b``) — and the original B lanes otherwise.
+    """
+    pref = np.asarray(policy.type_pref, dtype=np.float32)
+    n_b, n_s = type_of_slot.shape
+    if pref.ndim == 1:
+        return (type_of_slot, free0, pref[type_of_slot],
+                np.full(n_b, policy.affinity, dtype=np.float32),
+                np.full(n_b, policy.hedge, dtype=np.float32), 1)
+    n_p = len(pref)
+    return (np.tile(type_of_slot, (n_p, 1)), np.tile(free0, (n_p, 1)),
+            pref[:, type_of_slot].reshape(n_p * n_b, n_s),
+            np.repeat(np.asarray(policy.affinity, dtype=np.float32), n_b),
+            np.repeat(np.asarray(policy.hedge, dtype=np.float32), n_b), n_p)
+
+
 def _cold_free0(active: np.ndarray) -> np.ndarray:
     """(..., S) float32 idle initial carry: 0 for active slots, _INF for
     absent ones — bitwise the carry the scan built internally before warm
     starts existed, which is what keeps the cold paths bit-identical."""
     return np.where(active, np.float32(0.0), np.float32(_INF))
+
+
+@dataclass
+class SimResult:
+    """Per-query outcome of one ``PoolSimulator.simulate`` call.
+
+    ``lat`` carries end-to-end latencies shaped by the lane the call took:
+    (n_queries,) single, (B, n_queries) batch, (P, B, n_queries) stacked
+    policy × batch, (W, [P,] B, n_queries) workload grid.  ``waits`` (queue
+    time, ``start − arrival`` clamped at zero) is populated on the single
+    lane only — batch/grid lanes keep the lean device path.  ``state`` is
+    the final continuous-clock carry for warm-start calls: a
+    :class:`PoolState` (single), a list of them (batch), or a [P][B] nested
+    list (stacked policy × batch); ``None`` on cold and grid lanes.
+    """
+
+    lat: np.ndarray
+    waits: np.ndarray | None
+    state: object | None
+
+
+@dataclass
+class QosResult:
+    """QoS outcome of one ``PoolSimulator.qos`` call.
+
+    ``rates`` is the fraction of queries within the model's QoS latency —
+    a float (single lane), (B,) or (P, B) (batch lanes), or (W, [P,] B)
+    (workload grid).  ``state`` mirrors :class:`SimResult.state`.
+    """
+
+    rates: float | np.ndarray
+    state: object | None
+
+
+# Legacy names that already warned this process — shim warnings fire once
+# per name, not per call (tests clear this set to re-arm them).
+_WARNED: set[str] = set()
+
+
+def _warn_deprecated(name: str, alt: str) -> None:
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(
+        f"PoolSimulator.{name}() is deprecated; use PoolSimulator.{alt} "
+        f"(migration table: docs/api_migration.md)",
+        DeprecationWarning, stacklevel=3)
 
 
 class PoolSimulator:
@@ -456,48 +658,210 @@ class PoolSimulator:
             np.asarray(config, dtype=np.int64)[None, :])
         return type_of_slot[0], active[0]
 
-    # ------------------------------------------------------------- single
-    def latencies(self, config) -> np.ndarray:
+    # --------------------------------------------------- unified surface
+    def _check_policy(self, policy) -> RoutingPolicy | None:
+        if policy is None:
+            return None
+        if not isinstance(policy, RoutingPolicy):
+            raise TypeError("policy must be a RoutingPolicy or None, got "
+                            f"{type(policy).__name__}")
+        return policy.check_pool(len(self.types))
+
+    @staticmethod
+    def _check_warm_kwargs(state, deployed, now, warmup) -> None:
+        if state is None and not (deployed is None and now is None
+                                  and warmup is None):
+            raise ValueError("deployed=/now=/warmup= describe a warm-start "
+                             "redeploy and require state=")
+
+    def simulate(self, configs, *, state=None, workloads=None,
+                 service_tables=None, policy=None, deployed=None, now=None,
+                 warmup=None) -> "SimResult":
+        """Serve the bound stream — every lane, one entrypoint.
+
+        The lane is picked by the arguments, not the method name:
+
+        * ``configs`` (n_types,) — **single** pool.  ``lat``/``waits`` are
+          (n_queries,); with ``state=`` the segment starts from that
+          continuous-clock carry and ``result.state`` is the final carry.
+        * ``configs`` (B, n_types) — **batch**: B pools in one dispatch,
+          ``lat`` (B, n_queries) (``waits`` stays ``None``).  With
+          ``state=`` each candidate runs from the live carry —
+          ``deployed=``/``now=``/``warmup=`` remap it per candidate
+          exactly as ``PoolState.remap`` would — and ``result.state`` is
+          the per-candidate final carries.
+        * ``workloads=`` (W load factors) — **grid**: W scaled arrival
+          streams × the config batch, ``lat`` (W, B, n_queries);
+          ``service_tables=`` (W, n_types, n_queries) gives each workload
+          row its own table (the batch-distribution axis).
+        * ``policy=`` a :class:`~repro.serving.routing.RoutingPolicy`
+          routes dispatch on any lane; a *stacked* policy adds a leading
+          policy axis — ``lat`` (P, B, n_queries) / (W, P, B, n_queries) —
+          scored in the same single dispatch.  ``policy=None`` runs the
+          untouched legacy FCFS kernels, bit-identical to the pre-redesign
+          methods on every lane.
+
+        All-zero configs serve nothing (+inf latencies).  The legacy
+        ``latencies*``/``qos_rate*`` names delegate here and warn
+        (docs/api_migration.md maps every old call).
+        """
+        policy = self._check_policy(policy)
+        self._check_warm_kwargs(state, deployed, now, warmup)
+        cfg = np.asarray(configs, dtype=np.int64)
+        if workloads is not None:
+            if cfg.ndim != 2:
+                raise ValueError("the workload grid needs a (B, n_types) "
+                                 "config batch")
+            lat = self._sim_grid(cfg, workloads, service_tables, policy,
+                                 state, deployed, now, warmup)
+            return SimResult(lat=lat, waits=None, state=None)
+        if service_tables is not None:
+            raise ValueError("service_tables is a workload-grid axis; pass "
+                             "workloads= as well")
+        if cfg.ndim == 1:
+            if policy is not None and policy.stacked:
+                raise ValueError(
+                    "a stacked policy needs a config batch; pass "
+                    "configs=[config] to score one pool under P policies")
+            if state is not None:
+                seg = self.segment_from(state, cfg, policy=policy)
+                return SimResult(lat=seg.lat, waits=seg.waits,
+                                 state=seg.state)
+            lat, waits = self._lat_waits_single(cfg, policy)
+            return SimResult(lat=lat, waits=waits, state=None)
+        if cfg.ndim != 2:
+            raise ValueError("configs must be (n_types,) or (B, n_types), "
+                             f"got shape {cfg.shape}")
+        if state is not None:
+            lat, states = self._sim_batch_from(state, cfg, policy, deployed,
+                                               now, warmup)
+            return SimResult(lat=lat, waits=None, state=states)
+        return SimResult(lat=self._sim_batch(cfg, policy), waits=None,
+                         state=None)
+
+    def qos(self, configs, *, state=None, workloads=None, service_tables=None,
+            policy=None, deployed=None, now=None,
+            warmup=None) -> "QosResult":
+        """QoS satisfaction rates — ``simulate``'s lanes, lean reductions.
+
+        Same argument-driven lane selection as :meth:`simulate` (single /
+        batch / grid × cold / warm × ``policy=``), returning the fraction
+        of queries within ``model.qos_latency`` (paper Eq. 2 R_sat).  The
+        grid lane runs the fused count scan — only (W, [P·]B) int32 counts
+        cross back to the host — and the single cold lane skips the waits
+        materialization, so sequential baselines stay honest.  Rates agree
+        with ``simulate(...)`` + a host-side threshold mean bit for bit.
+        """
+        policy = self._check_policy(policy)
+        self._check_warm_kwargs(state, deployed, now, warmup)
+        cfg = np.asarray(configs, dtype=np.int64)
+        if workloads is not None:
+            if cfg.ndim != 2:
+                raise ValueError("the workload grid needs a (B, n_types) "
+                                 "config batch")
+            rates = self._qos_grid(cfg, workloads, service_tables, policy,
+                                   state, deployed, now, warmup)
+            return QosResult(rates=rates, state=None)
+        if service_tables is not None:
+            raise ValueError("service_tables is a workload-grid axis; pass "
+                             "workloads= as well")
+        if cfg.ndim == 1:
+            if policy is not None and policy.stacked:
+                raise ValueError(
+                    "a stacked policy needs a config batch; pass "
+                    "configs=[config] to score one pool under P policies")
+            if state is not None:
+                seg = self.segment_from(state, cfg, policy=policy)
+                rate = float(np.mean(seg.lat <= self.model.qos_latency))
+                return QosResult(rates=rate, state=seg.state)
+            lat = self._lat_single(cfg, policy)
+            return QosResult(
+                rates=float(np.mean(lat <= self.model.qos_latency)),
+                state=None)
+        if cfg.ndim != 2:
+            raise ValueError("configs must be (n_types,) or (B, n_types), "
+                             f"got shape {cfg.shape}")
+        if state is not None:
+            lat, states = self._sim_batch_from(state, cfg, policy, deployed,
+                                               now, warmup)
+            return QosResult(rates=np.mean(lat <= self.model.qos_latency,
+                                           axis=-1), state=states)
+        lat = self._sim_batch(cfg, policy)
+        return QosResult(rates=np.mean(lat <= self.model.qos_latency,
+                                       axis=-1), state=None)
+
+    def tail_latency(self, config, pct: float = 99.0) -> float:
+        return float(np.percentile(
+            self._lat_single(np.asarray(config, dtype=np.int64), None), pct))
+
+    # -------------------------------------------------- single-lane cores
+    def _policy_single_args(self, policy: RoutingPolicy,
+                            type_of_slot: np.ndarray) -> tuple:
+        pref = np.asarray(policy.type_pref, dtype=np.float32)
+        return (jnp.asarray(pref[type_of_slot]), jnp.float32(policy.affinity),
+                jnp.float32(policy.hedge))
+
+    def _lat_single(self, config, policy) -> np.ndarray:
         """Per-query end-to-end latency (wait + service) for a pool config."""
         if sum(int(c) for c in config) == 0:
             return np.full(self.workload.n_queries, np.inf)
         type_of_slot, active = self._slots(config)
-        _, (lat, _, _) = _simulate_scan(self._arrivals, self._service,
-                                        jnp.asarray(type_of_slot),
-                                        self._priority,
-                                        jnp.asarray(_cold_free0(active)))
+        free0 = jnp.asarray(_cold_free0(active))
+        if policy is None:
+            _, (lat, _, _) = _simulate_scan(self._arrivals, self._service,
+                                            jnp.asarray(type_of_slot),
+                                            self._priority, free0)
+        else:
+            pref, aff, hed = self._policy_single_args(policy, type_of_slot)
+            _, (lat, _, _) = _simulate_scan_policy(
+                self._arrivals, self._service, jnp.asarray(type_of_slot),
+                self._priority, free0, pref, aff, hed)
         return np.asarray(jax.device_get(lat), dtype=np.float64)
 
-    def latencies_waits(self, config) -> tuple[np.ndarray, np.ndarray]:
+    def _lat_waits_single(self, config,
+                          policy) -> tuple[np.ndarray, np.ndarray]:
         """Per-query (latency, queue wait) arrays for a pool config.
 
         The wait is ``start - arrival`` — exactly the queue time the paper's
         load monitor watches ("more queries get queued in the query queue").
-        ``latencies_waits(c)[0]`` equals ``latencies(c)`` bit for bit (same
-        scan, same outputs); waits come from the scan's start times clamped
-        at zero against the float32 arrival cast.
+        The latencies equal ``_lat_single`` bit for bit (same scan, same
+        outputs); waits come from the scan's start times clamped at zero
+        against the float32 arrival cast.
         """
         n = self.workload.n_queries
         if sum(int(c) for c in config) == 0:
             return np.full(n, np.inf), np.full(n, np.inf)
         type_of_slot, active = self._slots(config)
-        _, (lat, start, _) = _simulate_scan(self._arrivals, self._service,
-                                            jnp.asarray(type_of_slot),
-                                            self._priority,
-                                            jnp.asarray(_cold_free0(active)))
+        free0 = jnp.asarray(_cold_free0(active))
+        if policy is None:
+            _, (lat, start, _) = _simulate_scan(
+                self._arrivals, self._service, jnp.asarray(type_of_slot),
+                self._priority, free0)
+        else:
+            pref, aff, hed = self._policy_single_args(policy, type_of_slot)
+            _, (lat, start, _) = _simulate_scan_policy(
+                self._arrivals, self._service, jnp.asarray(type_of_slot),
+                self._priority, free0, pref, aff, hed)
         lat = np.asarray(jax.device_get(lat), dtype=np.float64)
         start = np.asarray(jax.device_get(start), dtype=np.float64)
         arr = np.asarray(jax.device_get(self._arrivals), dtype=np.float64)
         return lat, np.maximum(start - arr, 0.0)
 
-    def qos_rate(self, config) -> float:
-        """Fraction of queries whose latency is within the model's QoS tail
-        latency target (the R_sat(x) of paper Eq. 2)."""
-        lat = self.latencies(config)
-        return float(np.mean(lat <= self.model.qos_latency))
+    def latencies(self, config) -> np.ndarray:
+        """Deprecated: ``simulate(config).lat``."""
+        _warn_deprecated("latencies", "simulate(config).lat")
+        return self.simulate(config).lat
 
-    def tail_latency(self, config, pct: float = 99.0) -> float:
-        return float(np.percentile(self.latencies(config), pct))
+    def latencies_waits(self, config) -> tuple[np.ndarray, np.ndarray]:
+        """Deprecated: ``simulate(config)`` → ``(r.lat, r.waits)``."""
+        _warn_deprecated("latencies_waits", "simulate(config)")
+        r = self.simulate(config)
+        return r.lat, r.waits
+
+    def qos_rate(self, config) -> float:
+        """Deprecated: ``qos(config).rates``."""
+        _warn_deprecated("qos_rate", "qos(config).rates")
+        return self.qos(config).rates
 
     # --------------------------------------------------- continuous clock
     def initial_state(self) -> PoolState:
@@ -522,16 +886,23 @@ class PoolSimulator:
         return np.where(active, rel.astype(np.float32),
                         np.float32(_INF))
 
-    def segment_from(self, state: PoolState, config) -> "SegmentResult":
+    def segment_from(self, state: PoolState, config, *,
+                     policy=None) -> "SegmentResult":
         """Serve the bound stream as one continuous-time segment.
 
         Returns a :class:`SegmentResult` whose ``lat``/``waits`` equal the
-        cold ``latencies_waits`` bit for bit when ``state`` is the idle
-        carry at clock 0, and whose ``state_at(k)`` gives the pool state
-        after the first ``k`` queries — ``state_at(n_queries)`` is the
-        scan's own final carry, so chaining segments reproduces the
-        whole-stream bits exactly.
+        cold single lane bit for bit when ``state`` is the idle carry at
+        clock 0, and whose ``state_at(k)`` gives the pool state after the
+        first ``k`` queries — ``state_at(n_queries)`` is the scan's own
+        final carry, so chaining segments reproduces the whole-stream bits
+        exactly.  ``policy=`` routes dispatch (one unstacked
+        :class:`RoutingPolicy`); the prefix-carry reconstruction reads the
+        recorded (slot, finish) trace, so it is policy-agnostic.
         """
+        policy = self._check_policy(policy)
+        if policy is not None and policy.stacked:
+            raise ValueError("segment_from serves one pool; stacked "
+                             "policies ride the batch/grid lanes")
         n = self.workload.n_queries
         total = sum(int(c) for c in config)
         if n == 0 or total == 0:
@@ -543,9 +914,15 @@ class PoolSimulator:
                 _slots=None, _final_rel=None)
         type_of_slot, active = self._slots(config)
         free0 = self._warm_free0(state, active)
-        free_f, (lat, start, slot) = _simulate_scan(
-            self._arrivals, self._service, jnp.asarray(type_of_slot),
-            self._priority, jnp.asarray(free0))
+        if policy is None:
+            free_f, (lat, start, slot) = _simulate_scan(
+                self._arrivals, self._service, jnp.asarray(type_of_slot),
+                self._priority, jnp.asarray(free0))
+        else:
+            pref, aff, hed = self._policy_single_args(policy, type_of_slot)
+            free_f, (lat, start, slot) = _simulate_scan_policy(
+                self._arrivals, self._service, jnp.asarray(type_of_slot),
+                self._priority, jnp.asarray(free0), pref, aff, hed)
         lat64 = np.asarray(jax.device_get(lat), dtype=np.float64)
         start32 = np.asarray(jax.device_get(start), dtype=np.float32)
         slots = np.asarray(jax.device_get(slot))
@@ -567,26 +944,26 @@ class PoolSimulator:
 
     def latencies_from(self, state: PoolState,
                        config) -> tuple[np.ndarray, PoolState]:
-        """Warm-start ``latencies``: per-query latency of the bound stream
-        served from ``state``, plus the final carry."""
-        seg = self.segment_from(state, config)
-        return seg.lat, seg.state
+        """Deprecated: ``simulate(config, state=state)``."""
+        _warn_deprecated("latencies_from", "simulate(config, state=state)")
+        r = self.simulate(config, state=state)
+        return r.lat, r.state
 
     def latencies_waits_from(
             self, state: PoolState,
             config) -> tuple[np.ndarray, np.ndarray, PoolState]:
-        """Warm-start ``latencies_waits``: (latency, queue wait) arrays of
-        the bound stream served from ``state``, plus the final carry."""
-        seg = self.segment_from(state, config)
-        return seg.lat, seg.waits, seg.state
+        """Deprecated: ``simulate(config, state=state)``."""
+        _warn_deprecated("latencies_waits_from",
+                         "simulate(config, state=state)")
+        r = self.simulate(config, state=state)
+        return r.lat, r.waits, r.state
 
     def qos_rate_from(self, state: PoolState,
                       config) -> tuple[float, PoolState]:
-        """Warm-start ``qos_rate``: the same host-side float64 threshold
-        comparison, so the idle carry reproduces ``qos_rate`` exactly."""
-        seg = self.segment_from(state, config)
-        rate = float(np.mean(seg.lat <= self.model.qos_latency))
-        return rate, seg.state
+        """Deprecated: ``qos(config, state=state)``."""
+        _warn_deprecated("qos_rate_from", "qos(config, state=state)")
+        r = self.qos(config, state=state)
+        return r.rates, r.state
 
     def carried_wait(self, state: PoolState, config, at: float) -> float:
         """In-flight busy seconds carried into local time ``at``: the sum
@@ -633,146 +1010,157 @@ class PoolSimulator:
         _check_horizon(horizon, context)
         return np.where(active, rel.astype(np.float32), np.float32(_INF))
 
-    def latencies_batch_from(self, state: PoolState, configs, deployed=None,
-                             now=None,
-                             warmup=None) -> tuple[np.ndarray,
-                                                   list[PoolState]]:
-        """Warm-start ``latencies_batch``: B candidate pools served from the
-        live backlog in one dispatch, plus each candidate's final carry.
+    def _sim_batch_from(self, state: PoolState, configs, policy, deployed,
+                        now, warmup) -> tuple[np.ndarray, list]:
+        """Warm batch core: B candidate pools served from the live backlog
+        in one dispatch, plus each candidate's final carry.
 
-        Row ``i`` is bit-identical to ``latencies_from(state_i, configs[i])``
-        where ``state_i`` is ``state`` itself (``deployed=None``) or
-        ``state.remap(deployed, configs[i], now, warmup)`` — the what-if
-        carry of redeploying the live pool as candidate ``i`` at episode
-        time ``now`` (default ``state.clock``, i.e. the bound stream's local
-        origin), added slots paying their tier's ``warmup`` cold start.
-        The idle carry at clock 0 therefore reproduces the cold
-        ``latencies_batch`` bit for bit.
+        Row ``i`` is bit-identical to ``segment_from(state_i, configs[i],
+        policy=policy)`` where ``state_i`` is ``state`` itself
+        (``deployed=None``) or ``state.remap(deployed, configs[i], now,
+        warmup)`` — the what-if carry of redeploying the live pool as
+        candidate ``i`` at episode time ``now`` (default ``state.clock``,
+        i.e. the bound stream's local origin), added slots paying their
+        tier's ``warmup`` cold start.  The idle carry at clock 0 reproduces
+        the cold batch lane bit for bit.  A stacked policy folds into the
+        lane axis: ``lat`` (P, B, n_queries), states a [P][B] nested list.
         """
-        configs = np.asarray(configs, dtype=np.int64)
         n = self.workload.n_queries
+        n_b = len(configs)
+        stacked = policy is not None and policy.stacked
+        n_p = policy.n_policies if stacked else 1
         if configs.size == 0:
+            if stacked:
+                return (np.zeros((n_p, 0, n), dtype=np.float64),
+                        [[] for _ in range(n_p)])
             return np.zeros((0, n), dtype=np.float64), []
         free_mat = self._warm_free_matrix(state, configs, deployed, now,
                                           warmup)
         type_of_slot, active = self._slots_batch(configs)
         if n == 0:
             # Empty stream: every candidate's carry passes through unchanged.
-            states = [PoolState(free=free_mat[b].copy(), clock=state.clock)
-                      for b in range(len(configs))]
-            return np.zeros((len(configs), 0), dtype=np.float64), states
+            def carries() -> list[PoolState]:
+                return [PoolState(free=free_mat[b].copy(),
+                                  clock=state.clock) for b in range(n_b)]
+
+            if stacked:
+                return (np.zeros((n_p, n_b, 0), dtype=np.float64),
+                        [carries() for _ in range(n_p)])
+            return np.zeros((n_b, 0), dtype=np.float64), carries()
         free0 = self._warm_free0_rows(
             state, free_mat, active, float(self.workload.arrivals[-1]),
             "warm-start batch")
-        free_f, (lat, _, _) = _simulate_scan_batch(
-            self._arrivals, self._service, jnp.asarray(type_of_slot),
-            self._priority, jnp.asarray(free0))
+        if policy is None:
+            free_f, (lat, _, _) = _simulate_scan_batch(
+                self._arrivals, self._service, jnp.asarray(type_of_slot),
+                self._priority, jnp.asarray(free0))
+            zero = configs.sum(axis=1) == 0
+        else:
+            tos, fr0, pref, aff, hed, n_p = _fold_policy(policy,
+                                                         type_of_slot, free0)
+            active = np.tile(active, (n_p, 1))
+            free_mat = np.tile(free_mat, (n_p, 1))
+            free_f, (lat, _, _) = _scan_policy_batch(
+                self._arrivals, self._service, jnp.asarray(tos),
+                self._priority, jnp.asarray(fr0), jnp.asarray(pref),
+                jnp.asarray(aff), jnp.asarray(hed))
+            zero = np.tile(configs.sum(axis=1) == 0, n_p)
         out = np.asarray(jax.device_get(lat), dtype=np.float64)
-        out[configs.sum(axis=1) == 0, :] = np.inf
+        out[zero, :] = np.inf
         final_rel = np.asarray(jax.device_get(free_f), dtype=np.float64)
         free_out = np.where(active, final_rel + float(state.clock), free_mat)
         states = [PoolState(free=free_out[b], clock=state.clock)
-                  for b in range(len(configs))]
+                  for b in range(len(free_out))]
+        if stacked:
+            return (out.reshape(n_p, n_b, n),
+                    [states[p * n_b:(p + 1) * n_b] for p in range(n_p)])
         return out, states
+
+    def latencies_batch_from(self, state: PoolState, configs, deployed=None,
+                             now=None,
+                             warmup=None) -> tuple[np.ndarray,
+                                                   list[PoolState]]:
+        """Deprecated: ``simulate(configs, state=, deployed=, ...)``."""
+        _warn_deprecated("latencies_batch_from",
+                         "simulate(configs, state=, deployed=)")
+        r = self.simulate(configs, state=state, deployed=deployed, now=now,
+                          warmup=warmup)
+        return r.lat, r.state
 
     def qos_rate_batch_from(self, state: PoolState, configs, deployed=None,
                             now=None,
                             warmup=None) -> tuple[np.ndarray,
                                                   list[PoolState]]:
-        """Warm-start ``qos_rate_batch``: element ``i`` equals
-        ``qos_rate_from(state_i, configs[i])`` exactly (same device
-        latencies, same host-side float64 threshold comparison)."""
-        lat, states = self.latencies_batch_from(state, configs, deployed,
-                                                now, warmup)
-        return np.mean(lat <= self.model.qos_latency, axis=1), states
+        """Deprecated: ``qos(configs, state=, deployed=, ...)``."""
+        _warn_deprecated("qos_rate_batch_from",
+                         "qos(configs, state=, deployed=)")
+        r = self.qos(configs, state=state, deployed=deployed, now=now,
+                     warmup=warmup)
+        return r.rates, r.state
 
     def latencies_grid_from(self, state: PoolState, configs, load_factors,
                             service_tables=None, deployed=None,
                             now=None, warmup=None) -> np.ndarray:
-        """Warm-start ``latencies_grid``: (W, B, n_queries) float64 where
-        cell ``[w, b]`` equals ``PoolSimulator(..., workload.scaled(
-        load_factors[w])).latencies_from(state_b, configs[b])[0]`` bit for
-        bit, with ``state_b`` the per-candidate remap described in
-        ``latencies_batch_from``.  Backlog is wall-clock: scaling compresses
-        the arrival stream but the carried busy seconds stay put, so one
-        (B, S) carry serves every workload row."""
-        configs = np.asarray(configs, dtype=np.int64)
-        arrivals = self._stacked_arrivals(load_factors)
-        tables = self._stacked_service(service_tables, len(arrivals))
-        if configs.size == 0:
-            return np.zeros((len(arrivals), 0, self.workload.n_queries),
-                            dtype=np.float64)
-        free_mat = self._warm_free_matrix(state, configs, deployed, now,
-                                          warmup)
-        type_of_slot, active = self._slots_batch(configs)
-        free0 = jnp.asarray(self._warm_free0_rows(
-            state, free_mat, active, float(arrivals[:, -1].max()),
-            "warm-start grid"))
-        if tables is None:
-            _, (lat, _, _) = _simulate_scan_grid(
-                jnp.asarray(arrivals, jnp.float32), self._service,
-                jnp.asarray(type_of_slot), self._priority, free0)
-        else:
-            _, (lat, _, _) = _simulate_scan_grid_tables(
-                jnp.asarray(arrivals, jnp.float32), tables,
-                jnp.asarray(type_of_slot), self._priority, free0)
-        out = np.asarray(jax.device_get(lat), dtype=np.float64)
-        out[:, configs.sum(axis=1) == 0, :] = np.inf
-        return out
+        """Deprecated: ``simulate(configs, workloads=, state=, ...)``."""
+        _warn_deprecated("latencies_grid_from",
+                         "simulate(configs, workloads=, state=)")
+        return self.simulate(configs, workloads=load_factors,
+                             service_tables=service_tables, state=state,
+                             deployed=deployed, now=now, warmup=warmup).lat
 
     def qos_rate_grid_from(self, state: PoolState, configs, load_factors,
                            service_tables=None, deployed=None,
                            now=None, warmup=None) -> np.ndarray:
-        """Warm-start ``qos_rate_grid``: the fused count scan from the
-        candidates' carries.  Cell ``[w, b]`` equals ``PoolSimulator(...,
-        workload.scaled(load_factors[w])).qos_rate_from(state_b,
-        configs[b])[0]`` exactly — the rounded-down float32 threshold (see
-        ``_qos_threshold_f32``) keeps the device-side counts bit-compatible
-        with the host comparison, warm carries included — and the idle carry
-        at clock 0 reproduces the cold ``qos_rate_grid`` bit for bit."""
-        configs = np.asarray(configs, dtype=np.int64)
-        arrivals = self._stacked_arrivals(load_factors)
-        n_w = len(arrivals)
-        tables = self._stacked_service(service_tables, n_w)
-        if configs.size == 0:
-            return np.zeros((n_w, 0), dtype=np.float64)
-        free_mat = self._warm_free_matrix(state, configs, deployed, now,
-                                          warmup)
-        type_of_slot, active = self._slots_batch(configs)
-        free0 = self._warm_free0_rows(
-            state, free_mat, active, float(arrivals[:, -1].max()),
-            "warm-start grid")
-        counts = self._qos_counts_grid(arrivals, tables, type_of_slot,
-                                       free0, configs, load_factors)
-        return counts.astype(np.float64) / self.workload.n_queries
+        """Deprecated: ``qos(configs, workloads=, state=, ...)``."""
+        _warn_deprecated("qos_rate_grid_from",
+                         "qos(configs, workloads=, state=)")
+        return self.qos(configs, workloads=load_factors,
+                        service_tables=service_tables, state=state,
+                        deployed=deployed, now=now, warmup=warmup).rates
 
     # ------------------------------------------------------------- batched
-    def latencies_batch(self, configs) -> np.ndarray:
-        """Per-query latencies for a batch of pool configs in one dispatch.
-
-        configs: (B, n_types) integer array-like.  Returns (B, n_queries)
-        float64; rows of all-zero configs are +inf (no pool, every query
-        violates).  Row ``i`` equals ``latencies(configs[i])`` bit-for-bit.
-        """
-        configs = np.asarray(configs, dtype=np.int64)
+    def _sim_batch(self, configs, policy) -> np.ndarray:
+        """Cold batch core: per-query latencies for a (B, n_types) batch in
+        one dispatch — (B, n_queries) float64, rows of all-zero configs
+        +inf (no pool, every query violates).  Row ``i`` equals the single
+        lane on ``configs[i]`` bit for bit.  A stacked policy folds P·B
+        lanes into the dispatch and returns (P, B, n_queries)."""
+        n = self.workload.n_queries
+        stacked = policy is not None and policy.stacked
         if configs.size == 0:
-            return np.zeros((0, self.workload.n_queries), dtype=np.float64)
+            if stacked:
+                return np.zeros((policy.n_policies, 0, n), dtype=np.float64)
+            return np.zeros((0, n), dtype=np.float64)
         type_of_slot, active = self._slots_batch(configs)
-        _, (lat, _, _) = _simulate_scan_batch(
-            self._arrivals, self._service, jnp.asarray(type_of_slot),
-            self._priority, jnp.asarray(_cold_free0(active)))
+        free0 = _cold_free0(active)
+        if policy is None:
+            _, (lat, _, _) = _simulate_scan_batch(
+                self._arrivals, self._service, jnp.asarray(type_of_slot),
+                self._priority, jnp.asarray(free0))
+            zero = configs.sum(axis=1) == 0
+        else:
+            tos, fr0, pref, aff, hed, n_p = _fold_policy(policy,
+                                                         type_of_slot, free0)
+            _, (lat, _, _) = _scan_policy_batch(
+                self._arrivals, self._service, jnp.asarray(tos),
+                self._priority, jnp.asarray(fr0), jnp.asarray(pref),
+                jnp.asarray(aff), jnp.asarray(hed))
+            zero = np.tile(configs.sum(axis=1) == 0, n_p)
         out = np.asarray(jax.device_get(lat), dtype=np.float64)
-        out[configs.sum(axis=1) == 0, :] = np.inf
+        out[zero, :] = np.inf
+        if stacked:
+            out = out.reshape(policy.n_policies, len(configs), n)
         return out
 
-    def qos_rate_batch(self, configs) -> np.ndarray:
-        """QoS satisfaction rate per config of a (B, n_types) batch.
+    def latencies_batch(self, configs) -> np.ndarray:
+        """Deprecated: ``simulate(configs).lat``."""
+        _warn_deprecated("latencies_batch", "simulate(configs).lat")
+        return self.simulate(configs).lat
 
-        Element ``i`` equals ``qos_rate(configs[i])`` (same device latencies,
-        same host-side threshold comparison).
-        """
-        lat = self.latencies_batch(configs)
-        return np.mean(lat <= self.model.qos_latency, axis=1)
+    def qos_rate_batch(self, configs) -> np.ndarray:
+        """Deprecated: ``qos(configs).rates``."""
+        _warn_deprecated("qos_rate_batch", "qos(configs).rates")
+        return self.qos(configs).rates
 
     # ---------------------------------------------------------------- grid
     def _stacked_arrivals(self, load_factors) -> np.ndarray:
@@ -807,39 +1195,71 @@ class PoolSimulator:
                              f"(W, n_types, n_queries), got {tables.shape}")
         return jnp.asarray(tables, dtype=jnp.float32)
 
+    def _sim_grid(self, configs, load_factors, service_tables, policy,
+                  state, deployed, now, warmup) -> np.ndarray:
+        """Grid core: per-query latencies on the (workload × config) grid,
+        one dispatch — (W, B, n_queries) float64 where cell ``[w, b]``
+        equals ``PoolSimulator(..., workload.scaled(load_factors[w]))`` on
+        the single lane for ``configs[b]`` bit for bit (all-zero config
+        rows +inf), cold from idle or warm from ``state`` (per-candidate
+        ``remap`` exactly as the batch lane; backlog is wall-clock, so one
+        (B, S) carry serves every workload row).  ``service_tables``
+        (optional, (W, n_types, n_queries)) gives each workload row its own
+        table — the batch-distribution axis.  A stacked policy folds into
+        the lane axis and returns (W, P, B, n_queries)."""
+        arrivals = self._stacked_arrivals(load_factors)
+        n_w = len(arrivals)
+        n = self.workload.n_queries
+        tables = self._stacked_service(service_tables, n_w)
+        stacked = policy is not None and policy.stacked
+        if configs.size == 0:
+            shape = ((n_w, policy.n_policies, 0, n) if stacked
+                     else (n_w, 0, n))
+            return np.zeros(shape, dtype=np.float64)
+        type_of_slot, active = self._slots_batch(configs)
+        if state is None:
+            free0 = _cold_free0(active)
+        else:
+            free_mat = self._warm_free_matrix(state, configs, deployed, now,
+                                              warmup)
+            free0 = self._warm_free0_rows(
+                state, free_mat, active, float(arrivals[:, -1].max()),
+                "warm-start grid")
+        arr_dev = jnp.asarray(arrivals, jnp.float32)
+        if policy is None:
+            if tables is None:
+                _, (lat, _, _) = _simulate_scan_grid(
+                    arr_dev, self._service, jnp.asarray(type_of_slot),
+                    self._priority, jnp.asarray(free0))
+            else:
+                _, (lat, _, _) = _simulate_scan_grid_tables(
+                    arr_dev, tables, jnp.asarray(type_of_slot),
+                    self._priority, jnp.asarray(free0))
+            zero = configs.sum(axis=1) == 0
+        else:
+            tos, fr0, pref, aff, hed, n_p = _fold_policy(policy,
+                                                         type_of_slot, free0)
+            kernel = (_scan_policy_grid if tables is None
+                      else _scan_policy_grid_tables)
+            svc = self._service if tables is None else tables
+            _, (lat, _, _) = kernel(
+                arr_dev, svc, jnp.asarray(tos), self._priority,
+                jnp.asarray(fr0), jnp.asarray(pref), jnp.asarray(aff),
+                jnp.asarray(hed))
+            zero = np.tile(configs.sum(axis=1) == 0, n_p)
+        out = np.asarray(jax.device_get(lat), dtype=np.float64)
+        out[:, zero, :] = np.inf
+        if stacked:
+            out = out.reshape(n_w, policy.n_policies, len(configs), n)
+        return out
+
     def latencies_grid(self, configs, load_factors,
                        service_tables=None) -> np.ndarray:
-        """Per-query latencies on the (workload × config) grid, one dispatch.
-
-        configs: (B, n_types) integer array-like; load_factors: (W,) > 0.
-        Returns (W, B, n_queries) float64 where cell ``[w, b]`` equals
-        ``PoolSimulator(..., workload.scaled(load_factors[w])).latencies(
-        configs[b])`` bit-for-bit (all-zero config rows are +inf).
-
-        ``service_tables`` (optional, (W, n_types, n_queries)) gives each
-        workload row its own service table — the batch-distribution axis:
-        row ``w`` then reproduces a simulator bound to a workload with the
-        same arrivals but the batch stream behind ``service_tables[w]``.
-        """
-        configs = np.asarray(configs, dtype=np.int64)
-        arrivals = self._stacked_arrivals(load_factors)
-        tables = self._stacked_service(service_tables, len(arrivals))
-        if configs.size == 0:
-            return np.zeros((len(arrivals), 0, self.workload.n_queries),
-                            dtype=np.float64)
-        type_of_slot, active = self._slots_batch(configs)
-        free0 = jnp.asarray(_cold_free0(active))
-        if tables is None:
-            _, (lat, _, _) = _simulate_scan_grid(
-                jnp.asarray(arrivals, jnp.float32), self._service,
-                jnp.asarray(type_of_slot), self._priority, free0)
-        else:
-            _, (lat, _, _) = _simulate_scan_grid_tables(
-                jnp.asarray(arrivals, jnp.float32), tables,
-                jnp.asarray(type_of_slot), self._priority, free0)
-        out = np.asarray(jax.device_get(lat), dtype=np.float64)
-        out[:, configs.sum(axis=1) == 0, :] = np.inf
-        return out
+        """Deprecated: ``simulate(configs, workloads=...).lat``."""
+        _warn_deprecated("latencies_grid",
+                         "simulate(configs, workloads=...).lat")
+        return self.simulate(configs, workloads=load_factors,
+                             service_tables=service_tables).lat
 
     def _grid_slot_pad(self, totals: np.ndarray) -> int:
         """Occupancy-trimmed slot padding: smallest power of two covering the
@@ -850,47 +1270,84 @@ class PoolSimulator:
         width = max(8, 1 << (need - 1).bit_length())
         return min(width, self.max_instances)
 
-    def qos_rate_grid(self, configs, load_factors,
-                      service_tables=None) -> np.ndarray:
-        """QoS satisfaction rates on the (workload × config) grid.
-
-        Returns (W, B) float64; cell ``[w, b]`` equals
-        ``PoolSimulator(..., workload.scaled(load_factors[w])).qos_rate(
-        configs[b])`` exactly.  This is the fused fast path: the lean count
-        scan (see ``_grid_lane_qos_counts``) over nested (workload, config)
-        axes, sharded across XLA host devices when several are configured,
-        with only (W, B) int32 counts crossing back to the host.
+    def _qos_grid(self, configs, load_factors, service_tables, policy,
+                  state, deployed, now, warmup) -> np.ndarray:
+        """QoS-rate grid core: (W, B) float64 — or (W, P, B) under a
+        stacked policy — where cell ``[w, b]`` equals ``PoolSimulator(...,
+        workload.scaled(load_factors[w]))``'s single-lane rate for
+        ``configs[b]`` exactly.  This is the fused fast path: the lean
+        count scan (see ``_grid_lane_qos_counts``) over nested (workload,
+        config) axes, sharded across XLA host devices when several are
+        configured, with only the int32 counts crossing back to the host.
 
         ``service_tables`` (optional, (W, n_types, n_queries)) stacks one
         service table per workload row — phases with *different batch
-        distributions* share the dispatch (see ``latencies_grid``).  The
-        stacked-table flavor runs the single-device executable: per-row
-        tables are a scenario/bench axis, not the BO rescale hot loop.
+        distributions* share the dispatch.  Stacked-table and policy
+        flavors run the single-device executable: per-row tables and
+        routing sweeps are scenario/bench axes, not the BO rescale hot
+        loop.  Warm carries (``state=``) remap per candidate exactly as
+        the batch lane; the rounded-down float32 threshold (see
+        ``_qos_threshold_f32``) keeps device counts bit-compatible with
+        the host comparison either way.
         """
-        configs = np.asarray(configs, dtype=np.int64)
         arrivals = self._stacked_arrivals(load_factors)
         n_w = len(arrivals)
         tables = self._stacked_service(service_tables, n_w)
+        stacked = policy is not None and policy.stacked
         if configs.size == 0:
-            return np.zeros((n_w, 0), dtype=np.float64)
+            shape = (n_w, policy.n_policies, 0) if stacked else (n_w, 0)
+            return np.zeros(shape, dtype=np.float64)
         type_of_slot, active = self._slots_batch(configs)
+        if state is None:
+            free0 = _cold_free0(active)
+        else:
+            free_mat = self._warm_free_matrix(state, configs, deployed, now,
+                                              warmup)
+            free0 = self._warm_free0_rows(
+                state, free_mat, active, float(arrivals[:, -1].max()),
+                "warm-start grid")
         counts = self._qos_counts_grid(arrivals, tables, type_of_slot,
-                                       _cold_free0(active), configs,
-                                       load_factors)
-        return counts.astype(np.float64) / self.workload.n_queries
+                                       free0, configs, load_factors, policy)
+        rates = counts.astype(np.float64) / self.workload.n_queries
+        if stacked:
+            rates = rates.reshape(n_w, policy.n_policies, len(configs))
+        return rates
+
+    def qos_rate_grid(self, configs, load_factors,
+                      service_tables=None) -> np.ndarray:
+        """Deprecated: ``qos(configs, workloads=...).rates``."""
+        _warn_deprecated("qos_rate_grid", "qos(configs, workloads=...).rates")
+        return self.qos(configs, workloads=load_factors,
+                        service_tables=service_tables).rates
 
     def _qos_counts_grid(self, arrivals, tables, type_of_slot, free0_rows,
-                         configs, load_factors) -> np.ndarray:
-        """One fused (W, B) QoS-count sweep from per-config initial carries
+                         configs, load_factors, policy=None) -> np.ndarray:
+        """One fused (W, L) QoS-count sweep from per-config initial carries
         (``free0_rows``: (B, max_instances) float32) — the shared dispatch
-        behind ``qos_rate_grid`` (idle carries) and ``qos_rate_grid_from``
-        (warm carries), so both ride the identical executables."""
+        behind the cold (idle carries) and warm (live carries) grid lanes,
+        so both ride the identical executables.  With ``policy`` the lane
+        axis is the policy fold (L = P·B, single-device executable)."""
         width = self._grid_slot_pad(configs.sum(axis=1))
         arr = np.asarray(arrivals, np.float32)                # (W, nq)
         tos = np.ascontiguousarray(type_of_slot[:, :width])   # (B, S)
         free0 = np.ascontiguousarray(free0_rows[:, :width])
 
         qos_t = jnp.float32(_qos_threshold_f32(self.model.qos_latency))
+        if policy is not None:
+            tos, free0, pref, aff, hed, _ = _fold_policy(policy, tos, free0)
+            iota = jnp.arange(width, dtype=jnp.int32)
+            if tables is not None:
+                counts, _ = _grid_counts_policy_tables_jit(
+                    jnp.asarray(arr), jnp.transpose(tables, (0, 2, 1)),
+                    jnp.asarray(tos), self._priority[:width],
+                    jnp.asarray(free0), iota, qos_t, jnp.asarray(pref),
+                    jnp.asarray(aff), jnp.asarray(hed))
+            else:
+                counts, _ = _grid_counts_policy_jit(
+                    jnp.asarray(arr), self._service.T, jnp.asarray(tos),
+                    self._priority[:width], jnp.asarray(free0), iota, qos_t,
+                    jnp.asarray(pref), jnp.asarray(aff), jnp.asarray(hed))
+            return np.asarray(jax.device_get(counts))
         n_dev = jax.local_device_count()
         if tables is not None:
             counts, _ = _grid_counts_tables_jit(

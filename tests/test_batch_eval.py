@@ -26,18 +26,19 @@ def _sim(seed=0, n=200, rate=120.0):
 
 # ------------------------------------------------------- simulator equivalence
 def test_latencies_batch_matches_single_exactly():
-    """Property: latencies_batch(configs)[i] == latencies(configs[i]) bit-for-
-    bit, over random configs including the empty and max-capacity pools."""
+    """Property: simulate(configs).lat[i] == simulate(configs[i]).lat bit-
+    for-bit, over random configs including the empty and max-capacity
+    pools."""
     sim = _sim()
     rng = np.random.default_rng(0)
     configs = rng.integers(0, 5, size=(30, 2))
     configs[0] = (0, 0)                       # empty pool
     configs[1] = (MAX_INST // 2, MAX_INST // 2)   # max-capacity padding
     configs[2] = (MAX_INST, 0)
-    batch = sim.latencies_batch(configs)
+    batch = sim.simulate(configs).lat
     assert batch.shape == (len(configs), sim.workload.n_queries)
     for i, cfg in enumerate(configs):
-        single = sim.latencies(tuple(int(c) for c in cfg))
+        single = sim.simulate(tuple(int(c) for c in cfg)).lat
         np.testing.assert_array_equal(batch[i], single)
 
 
@@ -46,22 +47,22 @@ def test_qos_rate_batch_matches_single():
     rng = np.random.default_rng(1)
     configs = rng.integers(0, 4, size=(16, 2))
     configs[0] = (0, 0)
-    rates = sim.qos_rate_batch(configs)
+    rates = sim.qos(configs).rates
     for i, cfg in enumerate(configs):
-        assert rates[i] == sim.qos_rate(tuple(int(c) for c in cfg))
+        assert rates[i] == float(sim.qos(tuple(int(c) for c in cfg)).rates)
 
 
 def test_batch_rejects_overflow_and_bad_shape():
     sim = _sim()
     with pytest.raises(ValueError):
-        sim.latencies_batch([[MAX_INST, MAX_INST]])   # exceeds padding
+        sim.simulate([[MAX_INST, MAX_INST]])          # exceeds padding
     with pytest.raises(ValueError):
-        sim.latencies_batch([[1, 1, 1]])              # wrong n_types
+        sim.simulate([[1, 1, 1]])                     # wrong n_types
 
 
 def test_empty_batch():
     sim = _sim()
-    out = sim.latencies_batch(np.zeros((0, 2), dtype=np.int64))
+    out = sim.simulate(np.zeros((0, 2), dtype=np.int64)).lat
     assert out.shape == (0, sim.workload.n_queries)
 
 

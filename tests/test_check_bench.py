@@ -86,6 +86,59 @@ def test_history_without_schema_only_still_warns_and_appends(tmp_path,
     assert "history" in out
 
 
+def _batch_eval_doc():
+    return {
+        "schema_version": CB.SCHEMA_VERSION, "bench": "batch_eval",
+        "n_queries": 1500,
+        "results": [{"batch_size": 32, "wall_time_single_s": 1.0,
+                     "wall_time_batched_s": 0.1, "speedup": 10.0}],
+        "grid": {"n_queries": 1500, "n_devices": 1, "n_workloads": 4,
+                 "batch_size": 32, "wall_time_sequential_s": 1.0,
+                 "wall_time_grid_s": 0.5, "speedup": 2.0,
+                 "bit_identical": True},
+        "warm": {"batch_size": 32, "wall_time_sequential_s": 1.0,
+                 "wall_time_batched_s": 0.2, "speedup": 5.0,
+                 "bit_identical": True, "warm_idle_delta_mean": 0.01},
+        "routing": {"batch_size": 8, "n_policies": 4,
+                    "wall_time_sequential_s": 1.0,
+                    "wall_time_joint_s": 0.2, "speedup": 5.0,
+                    "bit_identical": True, "surge_factor": 1.6,
+                    "qos_target": 0.99, "fcfs_min_cost": 3.0,
+                    "routed_min_cost": 2.0},
+    }
+
+
+def test_batch_eval_routing_and_grid_gates(tmp_path, capsys):
+    path = tmp_path / "BENCH_batch_eval.json"
+    path.write_text(json.dumps(_batch_eval_doc()))
+    assert CB.main([str(path)]) == 0
+    capsys.readouterr()
+    # the reduced grid floor only applies to single-device measurements
+    doc = _batch_eval_doc()
+    doc["grid"]["n_devices"] = 8
+    path.write_text(json.dumps(doc))
+    assert CB.main([str(path)]) == 1
+    assert "grid" in capsys.readouterr().out
+    # a batch_eval artifact without a routing section is incomplete
+    doc = _batch_eval_doc()
+    del doc["routing"]
+    path.write_text(json.dumps(doc))
+    assert CB.main([str(path)]) == 1
+    assert "routing" in capsys.readouterr().out
+    # inverted economics: the routed pool must undercut FCFS at the surge
+    doc = _batch_eval_doc()
+    doc["routing"]["routed_min_cost"] = 3.5
+    path.write_text(json.dumps(doc))
+    assert CB.main([str(path)]) == 1
+    assert "does not beat FCFS" in capsys.readouterr().out
+    # joint dispatch speedup under the full-size floor
+    doc = _batch_eval_doc()
+    doc["routing"]["speedup"] = 2.0
+    path.write_text(json.dumps(doc))
+    assert CB.main([str(path)]) == 1
+    assert "joint speedup" in capsys.readouterr().out
+
+
 def test_schema_only_skips_kind_gates_but_validates_schema(tmp_path,
                                                            capsys):
     # warm_idle_delta gates etc. are kind checks: skipped in schema mode

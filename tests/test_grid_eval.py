@@ -2,7 +2,7 @@
 
 Three equivalence contracts of the PR:
 
-* grid bit-identity — every cell of ``latencies_grid`` / ``qos_rate_grid``
+* grid bit-identity — every cell of the ``simulate``/``qos`` grid lanes
   equals the single-config path bound to the scaled workload, bit for bit;
 * device-side prune masks — the fused on-device tell update
   (``pruning.apply_prune_rules``) stays bit-identical to the host-side
@@ -56,76 +56,78 @@ def _configs(n=8, seed=0):
 
 # ----------------------------------------------------------- grid bit-identity
 def test_latencies_grid_matches_scaled_single_exactly():
-    """latencies_grid[w, b] == latencies of a simulator bound to
-    workload.scaled(factor_w), bit for bit (4 workloads x 8 configs)."""
+    """simulate(..., workloads=)[w, b] == the single lane of a simulator
+    bound to workload.scaled(factor_w), bit for bit (4 x 8 grid)."""
     wl = _workload()
     sim = _sim(wl)
     cfgs = _configs()
-    grid = sim.latencies_grid(cfgs, FACTORS)
+    grid = sim.simulate(cfgs, workloads=FACTORS).lat
     assert grid.shape == (len(FACTORS), len(cfgs), wl.n_queries)
     for w, f in enumerate(FACTORS):
         scaled = _scaled_sim(wl, f)
         for b, cfg in enumerate(cfgs):
-            single = scaled.latencies(tuple(int(c) for c in cfg))
+            single = scaled.simulate(tuple(int(c) for c in cfg)).lat
             np.testing.assert_array_equal(grid[w, b], single)
 
 
 def test_qos_rate_grid_matches_scaled_single_exactly():
-    """The acceptance grid: qos_rate_grid[w, b] == qos_rate(workload_w,
-    config_b) elementwise over a 4-workload x 8-config grid."""
+    """The acceptance grid: qos(...).rates[w, b] == the single rate of
+    (workload_w, config_b) elementwise over a 4 x 8 grid."""
     wl = _workload(seed=3, n=150, rate=200.0)
     sim = _sim(wl)
     cfgs = _configs(seed=1)
-    rates = sim.qos_rate_grid(cfgs, FACTORS)
+    rates = sim.qos(cfgs, workloads=FACTORS).rates
     assert rates.shape == (len(FACTORS), len(cfgs))
     for w, f in enumerate(FACTORS):
         scaled = _scaled_sim(wl, f)
         for b, cfg in enumerate(cfgs):
-            assert rates[w, b] == scaled.qos_rate(tuple(int(c) for c in cfg))
+            assert rates[w, b] == float(
+                scaled.qos(tuple(int(c) for c in cfg)).rates)
 
 
 def test_qos_rate_grid_matches_batch_rows():
-    """Row w of the grid == qos_rate_batch on the scaled simulator."""
+    """Row w of the grid == the batch lane on the scaled simulator."""
     wl = _workload(seed=5)
     sim = _sim(wl)
     cfgs = _configs(seed=2)
-    rates = sim.qos_rate_grid(cfgs, FACTORS)
+    rates = sim.qos(cfgs, workloads=FACTORS).rates
     for w, f in enumerate(FACTORS):
         np.testing.assert_array_equal(
-            rates[w], _scaled_sim(wl, f).qos_rate_batch(cfgs))
+            rates[w], _scaled_sim(wl, f).qos(cfgs).rates)
 
 
 def test_grid_unit_factor_row_matches_unscaled_paths():
     sim = _sim()
     cfgs = _configs(seed=4)
-    rates = sim.qos_rate_grid(cfgs, (1.0,))
-    np.testing.assert_array_equal(rates[0], sim.qos_rate_batch(cfgs))
-    lat = sim.latencies_grid(cfgs, (1.0,))
-    np.testing.assert_array_equal(lat[0], sim.latencies_batch(cfgs))
+    rates = sim.qos(cfgs, workloads=(1.0,)).rates
+    np.testing.assert_array_equal(rates[0], sim.qos(cfgs).rates)
+    lat = sim.simulate(cfgs, workloads=(1.0,)).lat
+    np.testing.assert_array_equal(lat[0], sim.simulate(cfgs).lat)
 
 
 def test_grid_empty_and_zero_configs():
     sim = _sim()
-    empty = sim.latencies_grid(np.zeros((0, 2), dtype=np.int64), FACTORS)
+    empty = sim.simulate(np.zeros((0, 2), dtype=np.int64),
+                         workloads=FACTORS).lat
     assert empty.shape == (len(FACTORS), 0, sim.workload.n_queries)
-    assert sim.qos_rate_grid(np.zeros((0, 2), dtype=np.int64),
-                             FACTORS).shape == (len(FACTORS), 0)
+    assert sim.qos(np.zeros((0, 2), dtype=np.int64),
+                   workloads=FACTORS).rates.shape == (len(FACTORS), 0)
     # the all-zero config row: +inf latencies, zero satisfaction
-    grid = sim.latencies_grid([(0, 0)], FACTORS)
+    grid = sim.simulate([(0, 0)], workloads=FACTORS).lat
     assert np.isinf(grid).all()
-    assert (sim.qos_rate_grid([(0, 0)], FACTORS) == 0.0).all()
+    assert (sim.qos([(0, 0)], workloads=FACTORS).rates == 0.0).all()
 
 
 def test_grid_rejects_bad_load_factors():
     sim = _sim()
     with pytest.raises(ValueError):
-        sim.qos_rate_grid([(1, 1)], [])
+        sim.qos([(1, 1)], workloads=[])
     with pytest.raises(ValueError):
-        sim.qos_rate_grid([(1, 1)], [0.0])
+        sim.qos([(1, 1)], workloads=[0.0])
     with pytest.raises(ValueError):
-        sim.qos_rate_grid([(1, 1)], [-1.5])
+        sim.qos([(1, 1)], workloads=[-1.5])
     with pytest.raises(ValueError):
-        sim.latencies_grid([(1, 1)], [np.inf])
+        sim.simulate([(1, 1)], workloads=[np.inf])
 
 
 def test_grid_arr_shards_pads_cyclically_beyond_workload_count():
@@ -147,7 +149,7 @@ def test_grid_arr_shards_pads_cyclically_beyond_workload_count():
 
 @pytest.mark.slow
 def test_grid_bit_identity_under_forced_multi_device(tmp_path):
-    """qos_rate_grid must survive (and stay exact on) hosts where
+    """the grid qos lane must survive (and stay exact on) hosts where
     benchmarks/__init__.py forces many XLA host devices — including the
     W=1, odd-B case whose workload-axis pad exceeds W."""
     import os
@@ -173,10 +175,10 @@ def test_grid_bit_identity_under_forced_multi_device(tmp_path):
         "sim = PoolSimulator(prof, [fast, slow], wl, max_instances=8)\n"
         "cfgs = np.array([[1, 0], [2, 1], [0, 3]])  # odd B\n"
         "for factors in [(1.5,), (1.0, 1.2), (1.0, 1.2, 1.5)]:\n"
-        "    got = sim.qos_rate_grid(cfgs, factors)\n"
+        "    got = sim.qos(cfgs, workloads=factors).rates\n"
         "    for w, f in enumerate(factors):\n"
         "        ref = PoolSimulator(prof, [fast, slow], wl.scaled(f),\n"
-        "                            max_instances=8).qos_rate_batch(cfgs)\n"
+        "                            max_instances=8).qos(cfgs).rates\n"
         "        np.testing.assert_array_equal(got[w], ref)\n"
         "print('MULTIDEV-OK')\n")
     env = dict(os.environ)
@@ -204,38 +206,41 @@ def test_grid_stacked_service_tables_match_per_dist_sims():
         service_time_table(PROF, [FAST, SLOW], wl_ln.batches),
         service_time_table(PROF, [FAST, SLOW], wl_ga.batches)])
     factors = (1.0, 1.5)
-    rates = sim.qos_rate_grid(cfgs, factors, service_tables=tables)
-    lat = sim.latencies_grid(cfgs, factors, service_tables=tables)
+    rates = sim.qos(cfgs, workloads=factors, service_tables=tables).rates
+    lat = sim.simulate(cfgs, workloads=factors,
+                       service_tables=tables).lat
     for w, (f, wl) in enumerate(zip(factors, (wl_ln, wl_ga))):
         ref = PoolSimulator(PROF, [FAST, SLOW], wl.scaled(f),
                             max_instances=MAX_INST)
-        np.testing.assert_array_equal(rates[w], ref.qos_rate_batch(cfgs))
-        np.testing.assert_array_equal(lat[w], ref.latencies_batch(cfgs))
+        np.testing.assert_array_equal(rates[w], ref.qos(cfgs).rates)
+        np.testing.assert_array_equal(lat[w], ref.simulate(cfgs).lat)
 
 
 def test_grid_stacked_service_tables_shape_validated():
     sim = _sim()
     nq = sim.workload.n_queries
     with pytest.raises(ValueError):        # W mismatch
-        sim.qos_rate_grid([(1, 1)], (1.0, 1.5),
-                          service_tables=np.zeros((1, 2, nq)))
+        sim.qos([(1, 1)], workloads=(1.0, 1.5),
+                service_tables=np.zeros((1, 2, nq)))
     with pytest.raises(ValueError):        # type-axis mismatch
-        sim.latencies_grid([(1, 1)], (1.0,),
-                           service_tables=np.zeros((1, 3, nq)))
+        sim.simulate([(1, 1)], workloads=(1.0,),
+                     service_tables=np.zeros((1, 3, nq)))
     with pytest.raises(ValueError):        # query-axis mismatch
-        sim.qos_rate_grid([(1, 1)], (1.0,),
-                          service_tables=np.zeros((1, 2, nq - 1)))
+        sim.qos([(1, 1)], workloads=(1.0,),
+                service_tables=np.zeros((1, 2, nq - 1)))
 
 
 def test_latencies_waits_consistent_with_latencies():
     sim = _sim()
     for cfg in [(2, 1), (1, 0)]:
-        lat, waits = sim.latencies_waits(cfg)
-        np.testing.assert_array_equal(lat, sim.latencies(cfg))
+        r = sim.simulate(cfg)
+        lat, waits = r.lat, r.waits
+        np.testing.assert_array_equal(lat, sim.simulate(cfg).lat)
         assert (waits >= 0).all()
         assert np.isfinite(waits).all()
         assert (waits <= lat).all()        # wait is part of the latency
-    lat, waits = sim.latencies_waits((0, 0))
+    r0 = sim.simulate((0, 0))
+    lat, waits = r0.lat, r0.waits
     assert np.isinf(lat).all() and np.isinf(waits).all()
 
 
@@ -433,21 +438,21 @@ def test_grid_edges_zero_pool_rows_and_single_query_no_nan():
     wl = _workload(n=1, rate=50.0)
     sim = PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=MAX_INST)
     cfgs = [(0, 0), (1, 0), (0, 2)]
-    rates = sim.qos_rate_grid(cfgs, (1.0, 2.0))
+    rates = sim.qos(cfgs, workloads=(1.0, 2.0)).rates
     assert rates.shape == (2, 3)
     assert not np.isnan(rates).any()
     assert (rates[:, 0] == 0.0).all()          # empty pool: all violations
-    lat = sim.latencies_grid(cfgs, (1.0, 2.0))
+    lat = sim.simulate(cfgs, workloads=(1.0, 2.0)).lat
     assert np.isinf(lat[:, 0]).all()
     assert np.isfinite(lat[:, 1:]).all()
-    lat1, waits1 = sim.latencies_waits((1, 0))
+    r1 = sim.simulate((1, 0))
+    lat1, waits1 = r1.lat, r1.waits
     assert lat1.shape == waits1.shape == (1,)
     assert np.isfinite(lat1).all() and waits1[0] == 0.0
     # warm start over a single-query segment
-    lat_w, waits_w, state = sim.latencies_waits_from(sim.initial_state(),
-                                                     (1, 0))
-    np.testing.assert_array_equal(lat_w, lat1)
-    assert np.isfinite(state.free[:1]).all()
+    rw = sim.simulate((1, 0), state=sim.initial_state())
+    np.testing.assert_array_equal(rw.lat, lat1)
+    assert np.isfinite(rw.state.free[:1]).all()
 
 
 def test_grid_arr_shard_cache_is_lru_with_hit_refresh():

@@ -3,7 +3,7 @@
 Contracts under test:
 
 * a constant single-phase episode's per-phase QoS is *bit-identical* to a
-  direct ``PoolSimulator.qos_rate`` call on the scaled workload (the
+  direct ``PoolSimulator.qos`` call on the scaled workload (the
   engine's whole-stream segment accounting introduces nothing);
 * episode replay is deterministic from the spec seed;
 * a mid-phase spot preemption triggers recovery, the report records a
@@ -77,7 +77,7 @@ def test_registry_episodes_build_and_validate():
 # ----------------------------------------------- constant-episode identity
 def test_constant_episode_bit_identical_to_simulator():
     """Single constant phase, no events, no adaptation: the reported phase
-    QoS equals PoolSimulator.qos_rate on the scaled stream bit for bit."""
+    QoS equals PoolSimulator.qos on the scaled stream bit for bit."""
     plane = _plane(n=300)
     spec = ScenarioSpec(name="const", qos_target=0.7, window=100,
                         init_budget=25,
@@ -88,9 +88,9 @@ def test_constant_episode_bit_identical_to_simulator():
     wl = plane.workloads["lognormal"]
     sim = PoolSimulator(PROF, [FAST, SLOW], wl.scaled(1.3),
                         max_instances=MAX_INST)
-    assert rep.phases[0].qos_rate == sim.qos_rate(rep.final_config)
+    assert rep.phases[0].qos_rate == float(sim.qos(rep.final_config).rates)
     # the stacked-table phase sweep agrees with the direct call too
-    assert rep.final_qos_by_phase == [sim.qos_rate(rep.final_config)]
+    assert rep.final_qos_by_phase == [float(sim.qos(rep.final_config).rates)]
     # window accounting covers every query exactly once
     assert sum(w.end - w.start for w in rep.windows) == 300
 
@@ -332,7 +332,7 @@ def test_dist_drift_phases_use_per_dist_tables():
     for i, dist in enumerate(("lognormal", "gaussian")):
         sim = PoolSimulator(PROF, [FAST, SLOW], plane.workloads[dist],
                             max_instances=MAX_INST)
-        assert rep.final_qos_by_phase[i] == sim.qos_rate(rep.final_config)
+        assert rep.final_qos_by_phase[i] == float(sim.qos(rep.final_config).rates)
 
 
 # ------------------------------------------------------------- live plane

@@ -41,7 +41,7 @@ def python_fcfs_oracle(workload: Workload, types, counts, profile):
 def test_scan_matches_python_oracle(counts):
     wl = _wl()
     sim = PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=8)
-    got = sim.latencies(counts)
+    got = sim.simulate(counts).lat
     want = python_fcfs_oracle(wl, [FAST, SLOW], counts, PROF)
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
 
@@ -49,7 +49,7 @@ def test_scan_matches_python_oracle(counts):
 def test_latency_at_least_service_time():
     wl = _wl()
     sim = PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=8)
-    lat = sim.latencies((2, 1))
+    lat = sim.simulate((2, 1)).lat
     min_service = np.minimum(FAST.latency(PROF, wl.batches),
                              SLOW.latency(PROF, wl.batches))
     # simulator runs float32; allow for rounding
@@ -59,7 +59,7 @@ def test_latency_at_least_service_time():
 def test_single_instance_serializes():
     wl = _wl(n=50, rate=500.0)   # heavy overload on one instance
     sim = PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=8)
-    lat = sim.latencies((1, 0))
+    lat = sim.simulate((1, 0)).lat
     svc = FAST.latency(PROF, wl.batches)
     finish = wl.arrivals + lat
     start = finish - svc
@@ -70,7 +70,7 @@ def test_single_instance_serializes():
 def test_more_fast_instances_weakly_better_qos():
     wl = _wl(n=400, rate=300.0)
     sim = PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=10)
-    rates = [sim.qos_rate((k, 0)) for k in (1, 2, 4, 6)]
+    rates = [float(sim.qos((k, 0)).rates) for k in (1, 2, 4, 6)]
     assert all(b >= a - 0.01 for a, b in zip(rates, rates[1:]))
     assert rates[-1] > rates[0]
 
@@ -78,7 +78,7 @@ def test_more_fast_instances_weakly_better_qos():
 def test_empty_pool_all_violations():
     wl = _wl(n=20)
     sim = PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=4)
-    assert sim.qos_rate((0, 0)) == 0.0
+    assert float(sim.qos((0, 0)).rates) == 0.0
 
 
 def test_type_order_priority():
@@ -87,7 +87,7 @@ def test_type_order_priority():
     batches = np.array([8, 8, 8])
     wl = Workload(arrivals=arrivals, batches=batches, rate_qps=0.1)
     sim = PoolSimulator(PROF, [SLOW, FAST], wl, max_instances=4)
-    lat = sim.latencies((1, 1))  # SLOW listed first → every query on SLOW
+    lat = sim.simulate((1, 1)).lat  # SLOW listed first → every query on SLOW
     svc_slow = SLOW.latency(PROF, batches)
     np.testing.assert_allclose(lat, svc_slow, rtol=1e-5)
 
@@ -111,14 +111,12 @@ def test_idle_carry_reproduces_cold_paths_bit_for_bit():
     wl = _wl(n=300, rate=200.0)
     sim = PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=8)
     for cfg in ((1, 0), (2, 1), (3, 3)):
-        lat, _ = sim.latencies_from(sim.initial_state(), cfg)
-        np.testing.assert_array_equal(lat, sim.latencies(cfg))
-        lat2, waits, _ = sim.latencies_waits_from(sim.initial_state(), cfg)
-        cl, cw = sim.latencies_waits(cfg)
-        np.testing.assert_array_equal(lat2, cl)
-        np.testing.assert_array_equal(waits, cw)
-        rate, _ = sim.qos_rate_from(sim.initial_state(), cfg)
-        assert rate == sim.qos_rate(cfg)
+        warm = sim.simulate(cfg, state=sim.initial_state())
+        cold = sim.simulate(cfg)
+        np.testing.assert_array_equal(warm.lat, cold.lat)
+        np.testing.assert_array_equal(warm.waits, cold.waits)
+        rate = sim.qos(cfg, state=sim.initial_state()).rates
+        assert rate == float(sim.qos(cfg).rates)
 
 
 def test_warm_chained_segments_bit_identical_to_whole_stream():
@@ -127,14 +125,15 @@ def test_warm_chained_segments_bit_identical_to_whole_stream():
     wl = _wl(n=400, rate=250.0)
     whole = PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=8)
     cfg = (2, 1)
-    want = whole.latencies(cfg)
+    want = whole.simulate(cfg).lat
     got, state = [], None
     for lo, hi in ((0, 90), (90, 91), (91, 250), (250, 400)):
         sim = PoolSimulator(PROF, [FAST, SLOW], _slice(wl, lo, hi),
                             max_instances=8)
         state = state or sim.initial_state()
-        lat, state = sim.latencies_from(state, cfg)
-        got.append(lat)
+        r = sim.simulate(cfg, state=state)
+        state = r.state
+        got.append(r.lat)
     np.testing.assert_array_equal(want, np.concatenate(got))
 
 
@@ -148,7 +147,7 @@ def test_segment_prefix_carry_matches_device_carry():
     for k in (0, 1, 137, 300):
         head = PoolSimulator(PROF, [FAST, SLOW], _slice(wl, 0, k),
                              max_instances=8)
-        _, carry = head.latencies_from(head.initial_state(), cfg)
+        carry = head.simulate(cfg, state=head.initial_state()).state
         np.testing.assert_array_equal(seg.state_at(k).free[:4],
                                       carry.free[:4])
 
@@ -190,8 +189,8 @@ def test_horizon_guard_rejects_big_timestamps():
     sim = PoolSimulator(PROF, [FAST, SLOW], _wl(n=20), max_instances=4)
     bad = PoolState(free=np.full(4, 2.0 * _MAX_HORIZON), clock=0.0)
     with pytest.raises(ValueError, match="envelope"):
-        sim.latencies_from(bad, (1, 1))
+        sim.simulate((1, 1), state=bad)
     # rebasing the clock back under the envelope makes the same state fine
     ok = bad.rebased(2.0 * _MAX_HORIZON)
-    lat, _ = sim.latencies_from(ok, (1, 1))
+    lat = sim.simulate((1, 1), state=ok).lat
     assert np.isfinite(lat).all()

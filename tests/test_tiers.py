@@ -171,27 +171,26 @@ def test_remap_batch_warmup_matches_sequential_remap():
 
 def test_warm_lanes_with_warmup_match_sequential_from():
     """Grid/batch lanes with a cold-start vector reproduce the sequential
-    remap + ``qos_rate_from`` path bit for bit — the same identity the
+    remap + warm single-config path bit for bit — the same identity the
     un-warmed lanes pin, now with added slots paying their tier's boot."""
     sim = _sim()
     state = _backlog_state(sim, deployed=(1, 2))
     w = np.array([0.3, 0.04])
     cfgs = np.array([(2, 2), (1, 2), (4, 0), (0, 3)])
-    rates, _ = sim.qos_rate_batch_from(state, cfgs, deployed=(1, 2),
-                                       warmup=w)
-    grid = sim.qos_rate_grid_from(state, cfgs, [1.0, 1.4], deployed=(1, 2),
-                                  warmup=w)
+    rates = sim.qos(cfgs, state=state, deployed=(1, 2), warmup=w).rates
+    grid = sim.qos(cfgs, workloads=[1.0, 1.4], state=state, deployed=(1, 2),
+                   warmup=w).rates
     for i, cfg in enumerate(cfgs):
         seq_state = state.remap((1, 2), tuple(cfg), float(state.clock),
                                 warmup=w)
-        seq_rate, _ = sim.qos_rate_from(seq_state, tuple(cfg))
+        seq_rate = float(sim.qos(tuple(cfg), state=seq_state).rates)
         assert rates[i] == seq_rate
         assert grid[0, i] == seq_rate
     # zero warmup is the legacy remap, bit for bit
     np.testing.assert_array_equal(
-        sim.qos_rate_batch_from(state, cfgs, deployed=(1, 2),
-                                warmup=np.zeros(2))[0],
-        sim.qos_rate_batch_from(state, cfgs, deployed=(1, 2))[0])
+        sim.qos(cfgs, state=state, deployed=(1, 2),
+                warmup=np.zeros(2)).rates,
+        sim.qos(cfgs, state=state, deployed=(1, 2)).rates)
 
 
 def test_cold_start_costs_qos_on_scale_up():
@@ -200,9 +199,9 @@ def test_cold_start_costs_qos_on_scale_up():
     sim = _sim()
     state = _backlog_state(sim, deployed=(1, 0), upto=60)
     cfgs = np.array([(4, 4)])
-    instant, _ = sim.qos_rate_batch_from(state, cfgs, deployed=(1, 0))
-    slow, _ = sim.qos_rate_batch_from(state, cfgs, deployed=(1, 0),
-                                      warmup=np.array([2.0, 2.0]))
+    instant = sim.qos(cfgs, state=state, deployed=(1, 0)).rates
+    slow = sim.qos(cfgs, state=state, deployed=(1, 0),
+                   warmup=np.array([2.0, 2.0])).rates
     assert slow[0] <= instant[0]
 
 

@@ -4,8 +4,8 @@ a live backlog.
 Contracts under test (the regression anchors of the warm lanes):
 
 * **idle anchors** — started from ``initial_state()`` every warm lane
-  reproduces its cold counterpart bit for bit (``qos_rate_batch_from`` ==
-  ``qos_rate_batch``, warm grid == cold grid, stacked tables included);
+  reproduces its cold counterpart bit for bit (warm batch == cold batch,
+  warm grid == cold grid, stacked tables included);
 * **per-row bit-identity** — row ``i`` of a warm batch (cell ``[w, b]`` of
   a warm grid) equals the sequential ``*_from`` path on that candidate's
   remapped state, exactly — fuzzed over random pools/streams/states via
@@ -81,13 +81,13 @@ def _backlog_state(sim, deployed=(1, 1), upto=90):
 def test_idle_batch_from_reproduces_cold_batch_bit_for_bit():
     sim = _shared_sim()
     cfgs = _configs()
-    lat, _ = sim.latencies_batch_from(sim.initial_state(), cfgs)
-    np.testing.assert_array_equal(lat, sim.latencies_batch(cfgs))
-    rates, _ = sim.qos_rate_batch_from(sim.initial_state(), cfgs)
-    np.testing.assert_array_equal(rates, sim.qos_rate_batch(cfgs))
+    lat = sim.simulate(cfgs, state=sim.initial_state()).lat
+    np.testing.assert_array_equal(lat, sim.simulate(cfgs).lat)
+    rates = sim.qos(cfgs, state=sim.initial_state()).rates
+    np.testing.assert_array_equal(rates, sim.qos(cfgs).rates)
     # remapping *from* an idle pool at clock 0 is still the idle carry
-    rates2, _ = sim.qos_rate_batch_from(sim.initial_state(), cfgs,
-                                        deployed=(1, 1))
+    rates2 = sim.qos(cfgs, state=sim.initial_state(),
+                     deployed=(1, 1)).rates
     np.testing.assert_array_equal(rates2, rates)
 
 
@@ -95,11 +95,13 @@ def test_idle_grid_from_reproduces_cold_grid_bit_for_bit():
     sim = _shared_sim()
     cfgs = _configs(seed=1)
     np.testing.assert_array_equal(
-        sim.qos_rate_grid_from(sim.initial_state(), cfgs, FACTORS),
-        sim.qos_rate_grid(cfgs, FACTORS))
+        sim.qos(cfgs, workloads=FACTORS,
+                state=sim.initial_state()).rates,
+        sim.qos(cfgs, workloads=FACTORS).rates)
     np.testing.assert_array_equal(
-        sim.latencies_grid_from(sim.initial_state(), cfgs, FACTORS),
-        sim.latencies_grid(cfgs, FACTORS))
+        sim.simulate(cfgs, workloads=FACTORS,
+                     state=sim.initial_state()).lat,
+        sim.simulate(cfgs, workloads=FACTORS).lat)
 
 
 def test_idle_grid_from_with_stacked_tables_matches_cold():
@@ -113,9 +115,10 @@ def test_idle_grid_from_with_stacked_tables_matches_cold():
         service_time_table(PROF, [FAST, SLOW], wl_ga.batches)])
     factors = (1.0, 1.5)
     np.testing.assert_array_equal(
-        sim.qos_rate_grid_from(sim.initial_state(), cfgs, factors,
-                               service_tables=tables),
-        sim.qos_rate_grid(cfgs, factors, service_tables=tables))
+        sim.qos(cfgs, workloads=factors, service_tables=tables,
+                state=sim.initial_state()).rates,
+        sim.qos(cfgs, workloads=factors,
+                service_tables=tables).rates)
 
 
 # ------------------------------------------------------ warm bit-identity
@@ -124,16 +127,18 @@ def test_warm_batch_rows_bit_equal_sequential_from():
     deployed = (1, 1)
     state = _backlog_state(sim, deployed)
     cfgs = _configs(seed=3)
-    lat, states = sim.latencies_batch_from(state, cfgs, deployed=deployed)
-    rates, _ = sim.qos_rate_batch_from(state, cfgs, deployed=deployed)
+    r = sim.simulate(cfgs, state=state, deployed=deployed)
+    lat, states = r.lat, r.state
+    rates = sim.qos(cfgs, state=state, deployed=deployed).rates
     for b, c in enumerate(cfgs):
         cfg = tuple(int(x) for x in c)
         s_b = state.remap(deployed, cfg, float(state.clock))
-        lat_ref, state_ref = sim.latencies_from(s_b, cfg)
+        ref = sim.simulate(cfg, state=s_b)
+        lat_ref, state_ref = ref.lat, ref.state
         np.testing.assert_array_equal(lat[b], lat_ref)
         np.testing.assert_array_equal(states[b].free, state_ref.free)
         assert states[b].clock == state_ref.clock
-        rate_ref, _ = sim.qos_rate_from(s_b, cfg)
+        rate_ref = sim.qos(cfg, state=s_b).rates
         assert rates[b] == rate_ref
 
 
@@ -143,17 +148,19 @@ def test_warm_grid_cells_bit_equal_sequential_on_scaled_sims():
     deployed = (2, 0)
     state = _backlog_state(sim, deployed)
     cfgs = _configs(seed=4)
-    rates = sim.qos_rate_grid_from(state, cfgs, FACTORS, deployed=deployed)
-    lat = sim.latencies_grid_from(state, cfgs, FACTORS, deployed=deployed)
+    rates = sim.qos(cfgs, workloads=FACTORS, state=state,
+                    deployed=deployed).rates
+    lat = sim.simulate(cfgs, workloads=FACTORS, state=state,
+                       deployed=deployed).lat
     for w, f in enumerate(FACTORS):
         scaled = PoolSimulator(PROF, [FAST, SLOW], wl.scaled(f),
                                max_instances=MAX_INST)
         for b, c in enumerate(cfgs):
             cfg = tuple(int(x) for x in c)
             s_b = state.remap(deployed, cfg, float(state.clock))
-            rate_ref, _ = scaled.qos_rate_from(s_b, cfg)
+            rate_ref = scaled.qos(cfg, state=s_b).rates
             assert rates[w, b] == rate_ref
-            lat_ref, _ = scaled.latencies_from(s_b, cfg)
+            lat_ref = scaled.simulate(cfg, state=s_b).lat
             np.testing.assert_array_equal(lat[w, b], lat_ref)
 
 
@@ -163,15 +170,16 @@ def test_warm_scoring_differs_from_idle_under_real_backlog():
     sim = _shared_sim()
     state = _backlog_state(sim, (1, 1))
     cfgs = _configs(seed=5)
-    warm, _ = sim.qos_rate_batch_from(state, cfgs, deployed=(1, 1))
-    idle = sim.qos_rate_batch(cfgs)
+    warm = sim.qos(cfgs, state=state, deployed=(1, 1)).rates
+    idle = sim.qos(cfgs).rates
     assert np.abs(warm - idle).max() > 0.0
 
 
 def test_warm_batch_empty_inputs_and_empty_stream():
     sim = _shared_sim()
-    lat, states = sim.latencies_batch_from(
-        sim.initial_state(), np.zeros((0, 2), dtype=np.int64))
+    r0 = sim.simulate(np.zeros((0, 2), dtype=np.int64),
+                      state=sim.initial_state())
+    lat, states = r0.lat, r0.state
     assert lat.shape == (0, sim.workload.n_queries) and states == []
     # an empty stream passes every candidate's carry through unchanged
     empty = PoolSimulator(PROF, [FAST, SLOW], _workload(n=1),
@@ -179,7 +187,8 @@ def test_warm_batch_empty_inputs_and_empty_stream():
     state = PoolState(free=np.full(MAX_INST, 2.0), clock=1.0)
     sliced = empty.workload
     assert sliced.n_queries == 1            # single-query stream still runs
-    lat1, states1 = empty.latencies_batch_from(state, [(1, 0), (0, 0)])
+    r1 = empty.simulate([(1, 0), (0, 0)], state=state)
+    lat1, states1 = r1.lat, r1.state
     assert lat1.shape == (2, 1)
     assert np.isinf(lat1[1]).all()          # empty pool: every query violates
     np.testing.assert_array_equal(states1[1].free, state.free)
@@ -189,9 +198,9 @@ def test_warm_lanes_reject_mismatched_state_padding():
     sim = _shared_sim()
     bad = PoolState.idle(MAX_INST + 1)
     with pytest.raises(ValueError, match="slots"):
-        sim.qos_rate_batch_from(bad, [(1, 1)])
+        sim.qos([(1, 1)], state=bad)
     with pytest.raises(ValueError, match="slots"):
-        sim.qos_rate_grid_from(bad, [(1, 1)], (1.0,))
+        sim.qos([(1, 1)], workloads=(1.0,), state=bad)
 
 
 # ------------------------------------------------------- property sweeps
@@ -201,18 +210,20 @@ def test_warm_lanes_reject_mismatched_state_padding():
        st.floats(min_value=0.0, max_value=0.4),
        st.integers(min_value=0, max_value=10_000))
 def test_prop_warm_batch_bit_equals_sequential(deployed, backlog, seed):
-    """Random pools/streams/states: qos_rate_batch_from[i] bit-equals
-    qos_rate_from(state_i, config_i) on the remapped per-candidate state."""
+    """Random pools/streams/states: the warm batch lane bit-equals the
+    warm single lane on the remapped per-candidate state."""
     sim = _shared_sim()
     rng = np.random.default_rng(seed)
     cfgs = rng.integers(0, 5, size=(4, 2))
     free = 3.0 + rng.uniform(0.0, max(backlog, 0.0), size=MAX_INST)
     state = PoolState(free=free, clock=3.0)
-    rates, states = sim.qos_rate_batch_from(state, cfgs, deployed=deployed)
+    rw = sim.qos(cfgs, state=state, deployed=deployed)
+    rates, states = rw.rates, rw.state
     for b, c in enumerate(cfgs):
         cfg = tuple(int(x) for x in c)
         s_b = state.remap(deployed, cfg, float(state.clock))
-        rate_ref, state_ref = sim.qos_rate_from(s_b, cfg)
+        refq = sim.qos(cfg, state=s_b)
+        rate_ref, state_ref = refq.rates, refq.state
         assert rates[b] == rate_ref
         np.testing.assert_array_equal(states[b].free, state_ref.free)
 
@@ -227,8 +238,9 @@ def test_prop_idle_grid_from_bit_equals_cold_grid(seed, factor):
     cfgs = rng.integers(0, 5, size=(5, 2))
     factors = (1.0, float(factor))
     np.testing.assert_array_equal(
-        sim.qos_rate_grid_from(sim.initial_state(), cfgs, factors),
-        sim.qos_rate_grid(cfgs, factors))
+        sim.qos(cfgs, workloads=factors,
+                state=sim.initial_state()).rates,
+        sim.qos(cfgs, workloads=factors).rates)
 
 
 @settings(max_examples=10)
@@ -314,8 +326,8 @@ def test_evaluator_grid_from_memoizes_per_warm_state():
     ev.grid_from(other, cfgs, FACTORS, deployed=deployed)
     assert ev.n_evals == 2 * n0
     # warm cells bit-match the simulator's own warm lane
-    direct = ev.sim.qos_rate_grid_from(state, cfgs, FACTORS,
-                                       deployed=deployed)
+    direct = ev.sim.qos(cfgs, workloads=FACTORS, state=state,
+                        deployed=deployed).rates
     np.testing.assert_array_equal(rates, direct)
 
 
@@ -356,8 +368,8 @@ def test_rescale_warm_state_scores_candidates_from_backlog():
     assert event.qos_by_load is not None
     # qos_by_load is the warm score of the winner, straight from the lanes
     for f, rate in event.qos_by_load.items():
-        direct = ev.sim.qos_rate_grid_from(state, [event.new_best], [f],
-                                           deployed=deployed)[0, 0]
+        direct = ev.sim.qos([event.new_best], workloads=[f], state=state,
+                            deployed=deployed).rates[0, 0]
         assert rate == direct
 
 
