@@ -8,8 +8,10 @@ emits ``BENCH_scenarios.json`` (stable schema) with the per-episode
 structured reports:
 
   * per-phase QoS satisfaction rate + cumulative cost,
-  * per-window violation flags + backlog carried across control-plane cuts
-    (``carried_wait``),
+  * a fixed-size window digest (``EpisodeReport.to_dict(windows="summary")``:
+    counts, violation counts, a QoS-rate percentile summary and the backlog
+    carried across control-plane cuts) instead of the raw per-window list,
+    which grows linearly with episode length,
   * per-injected-event adaptation latency in queries,
   * BO evaluations spent by every control action, plus each action's
     ``warm_idle_delta`` — the QoS optimism idle-restart candidate scoring
@@ -109,7 +111,7 @@ def run_episode(name: str, n: int, window: int = WINDOW,
     plane, space = paper_simulator_plane(model, spec)
     report = ScenarioEngine(spec, plane, space, carry_queue_state=carry,
                             warm_candidate_scoring=warm_scoring).run()
-    return report.to_dict()
+    return report.to_dict(windows="summary")
 
 
 def run_tier_episode(name: str, n: int, window: int = WINDOW,
@@ -127,7 +129,7 @@ def run_tier_episode(name: str, n: int, window: int = WINDOW,
         space = SearchSpace(bounds=bounds, prices=space.prices)
     report = ScenarioEngine(spec, plane, space, carry_queue_state=carry,
                             warm_candidate_scoring=warm_scoring).run()
-    return report.to_dict()
+    return report.to_dict(windows="summary")
 
 
 def _slim(doc: dict) -> dict:
@@ -247,8 +249,7 @@ def run(quick: bool = False):
         recoveries = [e["recovery_queries"] for e in doc["events"]]
         checks[name] = {
             "recovered_all_events": doc["recovered_all_events"],
-            "ends_healthy": (not doc["windows"][-1]["violation"]
-                             if doc["windows"] else False),
+            "ends_healthy": not doc["windows"]["last_violation"],
             # Matched scoring = matched control trajectory: the continuous
             # clock can only surface violations idle restarts hid
             # (equality = the pool drained at every cut).

@@ -16,7 +16,8 @@ sys.path.insert(0, "src")
 import argparse
 
 from repro.scenario import (EPISODES, LivePlane, ScenarioEngine,
-                            build_episode, paper_simulator_plane)
+                            TraceRecorder, build_episode,
+                            paper_simulator_plane)
 
 
 def summarize(report):
@@ -59,6 +60,9 @@ def main():
     ap.add_argument("--idle-restart", action="store_true",
                     help="legacy accounting: drop queue backlog at every "
                          "control-plane cut instead of carrying it")
+    ap.add_argument("--trace", metavar="OUT",
+                    help="dump the control-plane trace as Chrome trace "
+                         "JSON (open in https://ui.perfetto.dev)")
     ap.add_argument("--list", action="store_true")
     args = ap.parse_args()
     if args.list:
@@ -85,9 +89,15 @@ def main():
     else:
         plane, space = paper_simulator_plane(args.model, spec)
 
+    trace = TraceRecorder(process_name=args.episode) if args.trace else None
     report = ScenarioEngine(spec, plane, space,
-                            carry_queue_state=not args.idle_restart).run()
+                            carry_queue_state=not args.idle_restart,
+                            trace=trace).run()
     summarize(report)
+    if trace is not None:
+        trace.dump(args.trace)
+        print(f"  wrote {trace.n_events} trace events to {args.trace} "
+              f"(open in https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -21,9 +21,14 @@ Three responsibilities:
     baseline, bit-identical per policy row, with the flash-crowd economics
     holding — the cheapest routed-feasible pool at the surge load strictly
     cheaper than the cheapest FCFS-feasible pool at the same QoS target.
+    The telemetry section must show the telemetry-on batch lane within
+    10% of the telemetry-off wall time (the twin scan kernels pay for the
+    extra outputs with a one-hot carry update and occupancy-trimmed slot
+    axis), primary outputs bit-identical with telemetry off, and per-type
+    served counts summing exactly to ``n_queries`` on every lane.
     Smoke artifacts (``--smoke``/``--quick`` runs on a shrunken workload,
     ``n_queries < 1500``) gate B=32, the warm lane and the routing lane at
-    reduced floors — fixed per-dispatch overhead is a larger fraction of
+    reduced floors, and the telemetry overhead at a looser ceiling — fixed per-dispatch overhead is a larger fraction of
     the shorter sweeps and CI runners are noisy, but a real regression (the
     pre-batched sequential path measures ~1x) still lands far below them.
     The grid measurement is always taken at full workload size, so its
@@ -101,6 +106,12 @@ SMOKE_MIN_WARM_SPEEDUP = 2.5
 # P x B sequential single-config policy evaluations.
 MIN_ROUTING_SPEEDUP = 3.0
 SMOKE_MIN_ROUTING_SPEEDUP = 2.5
+# Telemetry plane: qos(telemetry=True) vs the plain call on the B=32 batch
+# lane.  The smoke ceiling is looser because both sides of the shrunken
+# ratio are a few milliseconds and timer noise alone swings the quotient
+# past the 10% margin.
+MAX_TELEMETRY_OVERHEAD = 1.10
+SMOKE_MAX_TELEMETRY_OVERHEAD = 1.25
 # Episodes whose warm run must show a nonzero warm-vs-idle scoring delta
 # (mirrors benchmarks/bench_scenarios.WARM_DELTA_EPISODES).
 WARM_DELTA_EPISODES = ("flash-crowd", "failure-storm")
@@ -138,6 +149,14 @@ ROUTING_KEYS = (
     "qos_target",
     "fcfs_min_cost",
     "routed_min_cost",
+)
+TELEMETRY_KEYS = (
+    "batch_size",
+    "wall_time_off_s",
+    "wall_time_on_s",
+    "overhead",
+    "bit_identical",
+    "served_counts_ok",
 )
 
 
@@ -276,6 +295,35 @@ def check_batch_eval(doc, label: str) -> list[str]:
             f"flash-crowd surge (routed {routed_cost:.4g} vs FCFS "
             f"{fcfs_cost:.4g} at QoS >= {routing['qos_target']}, "
             f"load x{routing['surge_factor']})",
+        )
+    max_tel = (SMOKE_MAX_TELEMETRY_OVERHEAD if smoke
+               else MAX_TELEMETRY_OVERHEAD)
+    tel = doc.get("telemetry")
+    if not isinstance(tel, dict):
+        errors.append(f"{label}: batch_eval artifact has no 'telemetry' "
+                      "section")
+        return errors
+    missing = [k for k in TELEMETRY_KEYS if k not in tel]
+    if missing:
+        errors.append(f"{label}: telemetry section missing keys {missing}")
+        return errors
+    if not tel["bit_identical"]:
+        errors.append(
+            f"{label}: primary outputs with telemetry off diverge from the "
+            "telemetry-on twin kernels",
+        )
+    if not tel["served_counts_ok"]:
+        bad = [lane for lane, ok
+               in (tel.get("served_counts_by_lane") or {}).items() if not ok]
+        errors.append(
+            f"{label}: per-type served counts do not sum to n_queries on "
+            f"lane(s) {bad or '?'}",
+        )
+    overhead = float(tel["overhead"])
+    if overhead > max_tel:
+        errors.append(
+            f"{label}: telemetry-on overhead {overhead:.3f}x on the B="
+            f"{tel['batch_size']} batch lane > allowed {max_tel:.2f}x",
         )
     return errors
 
@@ -461,6 +509,9 @@ def trend_metrics(doc) -> dict[str, tuple[float, str]]:
             if "routed_min_cost" in routing:
                 out["routed_min_cost"] = (float(routing["routed_min_cost"]),
                                           "lower")
+        tel = doc.get("telemetry")
+        if isinstance(tel, dict) and "overhead" in tel:
+            out["telemetry_overhead"] = (float(tel["overhead"]), "lower")
     elif bench == "scenarios":
         for name, ep in (doc.get("episodes") or {}).items():
             if isinstance(ep, dict) and "qos_rate" in ep:

@@ -13,6 +13,7 @@ from .report import (ControlAction, EpisodeReport, EventOutcome, PhaseReport,
                      WindowStat)
 from .spec import (BATCH_DISTS, EVENT_KIND_SPECS, EVENT_KINDS, EventKind,
                    EventSpec, PhaseSpec, ScenarioSpec, Timeline, fuzz_kinds)
+from .trace import TraceRecorder
 
 __all__ = [
     "ScenarioSpec", "PhaseSpec", "EventSpec", "Timeline",
@@ -24,4 +25,5 @@ __all__ = [
     "EpisodeReport", "PhaseReport", "WindowStat", "EventOutcome",
     "ControlAction",
     "EPISODES", "build_episode",
+    "TraceRecorder",
 ]

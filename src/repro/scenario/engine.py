@@ -87,6 +87,8 @@ subsequent window back at the QoS target.
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from ..core.ribbon import RibbonOptimizer
@@ -99,6 +101,7 @@ from .planes import slice_stream
 from .report import (ControlAction, EpisodeReport, EventOutcome, PhaseReport,
                      WindowStat)
 from .spec import EVENT_KINDS, EventSpec, ScenarioSpec, Timeline
+from .trace import TID_EVENTS, TID_PHASES, TID_WINDOWS, TraceRecorder
 
 
 class ScenarioEngine:
@@ -110,10 +113,15 @@ class ScenarioEngine:
                  forced_patience: int = 2, down_patience: int = 2,
                  max_adapts_per_phase: int = 4,
                  carry_queue_state: bool = True,
-                 warm_candidate_scoring: bool | None = None):
+                 warm_candidate_scoring: bool | None = None,
+                 trace: TraceRecorder | None = None):
         self.spec = spec.validate()
         self.plane = plane
         self.space = space
+        # Control-plane trace export (scenario/trace.py): when set, run()
+        # records phases, windows, events, searches and deploys as Chrome
+        # trace events.  Pure observability — nothing reads it back.
+        self.trace = trace
         self.monitor = monitor or LoadMonitor(qos_target=spec.qos_target)
         self.start = start
         self.allow_downscale = allow_downscale
@@ -432,10 +440,24 @@ class ScenarioEngine:
         self._total_queries = sum(ph.n_queries for ph in spec.phases)
         self._route_policy = None
         plane.begin_episode(carry=self.carry_queue_state)
+        trace = self.trace
+        # Episode time of the current stream's local t=0: phase boundaries
+        # advance it by the finished stream's span, a load spike's stream
+        # rebuild by the re-anchor delta — the same continuity the planes'
+        # advance_clock keeps for the carried pool state.
+        ep_base = 0.0
+        t0 = time.perf_counter()
         opt, used = self._initial_search(bounds, prices, dist0, f0)
+        if trace is not None:
+            trace.span("search:initial", 0.0, time.perf_counter() - t0,
+                       args={"bo_evals": int(used),
+                             "wall_ms": (time.perf_counter() - t0) * 1e3})
         report.bo_evals += used
         config = self._pick_config(opt, bounds)
         plane.deploy(config)
+        if trace is not None:
+            trace.instant("deploy", 0.0,
+                          args={"config": [int(c) for c in config]})
         self.monitor.reset()
         pending: list = []                  # open recovery trackers
         gq = 0                              # global index of phase start
@@ -444,14 +466,21 @@ class ScenarioEngine:
             if self._pending_switch and self._pending_switch[0] <= gq:
                 config = self._land_pending(config, gq, phase.load_factor)
             if restock_next:
+                t0 = time.perf_counter()
                 config, opt = self._restock(restock_next, p, gq, phase,
                                             bounds, prices, config, opt,
                                             report, pending)
+                if trace is not None:
+                    wall = time.perf_counter() - t0
+                    trace.span("search:restock", ep_base, wall,
+                               args={"wall_ms": wall * 1e3,
+                                     "config": [int(c) for c in config]})
                 restock_next = {}
             factor = phase.load_factor
             events = list(timeline.cuts[p])
             stream = plane.phase_stream(phase.batch_dist, phase.n_queries,
                                         factor)
+            ph_t0 = ep_base
             i = 0
             ph_passed = 0
             ph_cost = 0.0
@@ -465,9 +494,22 @@ class ScenarioEngine:
                 while events and events[0][0] <= i:
                     pos, ev_spec = events.pop(0)
                     prev_cfg = config
+                    ev_at = ep_base + float(
+                        stream.arrivals[min(pos, phase.n_queries - 1)])
+                    t0 = time.perf_counter()
                     config, opt, factor = self._apply_event(
                         ev_spec, p, gq + pos, phase, factor, bounds, prices,
                         config, opt, restock_next, report, pending)
+                    if trace is not None:
+                        wall = time.perf_counter() - t0
+                        trace.instant(f"event:{ev_spec.kind}", ev_at,
+                                      tid=TID_EVENTS,
+                                      args={"detail":
+                                            report.events[-1].detail})
+                        trace.span(f"handle:{ev_spec.kind}", ev_at, wall,
+                                   args={"wall_ms": wall * 1e3,
+                                         "config":
+                                         [int(c) for c in config]})
                     self._note_deploy(prev_cfg, config, gq + pos, factor)
                     if ev_spec.kind == "load_spike":
                         new_stream = plane.phase_stream(phase.batch_dist,
@@ -478,10 +520,16 @@ class ScenarioEngine:
                         # recompression, so carried backlog durations
                         # survive the stream rebuild.
                         k = min(i, phase.n_queries - 1)
-                        plane.advance_clock(float(stream.arrivals[k])
-                                            - float(new_stream.arrivals[k]))
+                        delta = (float(stream.arrivals[k])
+                                 - float(new_stream.arrivals[k]))
+                        plane.advance_clock(delta)
+                        ep_base += delta
                         stream = new_stream
                     plane.deploy(config)
+                    if trace is not None:
+                        trace.instant("deploy", ev_at,
+                                      args={"config":
+                                            [int(c) for c in config]})
                     self.monitor.reset()
                     down_blocked = False    # the regime changed
                 if (self._pending_switch
@@ -506,11 +554,30 @@ class ScenarioEngine:
                     span = float(seg.arrivals[w_hi - 1] - seg.arrivals[w])
                     g_end = gq + i + w_hi
                     viol = rate < spec.qos_target
-                    report.windows.append(WindowStat(
+                    wstat = WindowStat(
                         phase=p, start=gq + i + w, end=g_end, qos_rate=rate,
                         config=config, price=price,
                         cost=price * span / 3600.0, violation=viol,
-                        carried_wait=carried if w == 0 else 0.0))
+                        carried_wait=carried if w == 0 else 0.0)
+                    if spec.window_stats:
+                        tel = plane.window_telemetry(w, w_hi)
+                        if tel is not None:
+                            wstat.p50 = tel.latency_percentile(50.0)
+                            wstat.p95 = tel.latency_percentile(95.0)
+                            wstat.p99 = tel.latency_percentile(99.0)
+                            wstat.util_by_type = tuple(
+                                float(u)
+                                for u in tel.utilization(config, span))
+                            wstat.miss_by_type = tuple(
+                                int(m) for m in tel.miss)
+                    report.windows.append(wstat)
+                    if trace is not None:
+                        w_at = ep_base + float(seg.arrivals[w])
+                        trace.span("window", w_at, span, tid=TID_WINDOWS,
+                                   args={"qos_rate": rate,
+                                         "violation": viol,
+                                         "p99": float(wstat.p99)})
+                        trace.counter("qos_rate", w_at, {"rate": rate})
                     ph_passed += passed
                     ph_cost += price * span / 3600.0
                     ph_windows += 1
@@ -566,16 +633,29 @@ class ScenarioEngine:
                         # whether a different dispatch rule alone absorbs
                         # the new load on the *current* pool (0 BO evals,
                         # no capacity bought) before re-searching the pool.
+                        cut_at = ep_base + float(seg.arrivals[w_hi - 1])
                         if kind == "rescale_up" and self._try_reroute(
                                 phase.batch_dist, est, config, prices,
                                 p, g_end, report, pending):
+                            if trace is not None:
+                                trace.instant(
+                                    "reroute", cut_at,
+                                    args={"policy":
+                                          report.actions[-1].policy})
                             self.monitor.reset()
                             adapts += 1
                             bad_streak = 0
                             down_streak = 0
                             break
+                        t0 = time.perf_counter()
                         opt, new_best, used = self._adapt_load(
                             opt, phase.batch_dist, est, kind)
+                        if trace is not None:
+                            wall = time.perf_counter() - t0
+                            trace.span(f"search:{kind}", cut_at, wall,
+                                       args={"bo_evals": int(used),
+                                             "wall_ms": wall * 1e3,
+                                             "load_est": est})
                         if kind == "rescale_down":
                             # only act on a strictly cheaper pool; a no-op
                             # (or upsizing) result blocks further downscale
@@ -654,14 +734,28 @@ class ScenarioEngine:
                 plane.commit(consumed)
                 if redeploy:
                     plane.deploy(config)
+                    if trace is not None:
+                        trace.instant(
+                            "deploy",
+                            ep_base + float(seg.arrivals[consumed - 1]),
+                            args={"config": [int(c) for c in config]})
                 i += consumed
             report.phases.append(PhaseReport(
                 name=phase.name, batch_dist=phase.batch_dist,
                 load_factor=factor, n_queries=phase.n_queries,
                 qos_rate=ph_passed / phase.n_queries, cost=ph_cost,
                 n_windows=ph_windows, violation_windows=ph_viol))
+            ph_end = ep_base + float(stream.arrivals[-1])
+            if trace is not None:
+                trace.span(f"phase:{phase.name}", ph_t0, ph_end - ph_t0,
+                           tid=TID_PHASES,
+                           args={"n_queries": int(phase.n_queries),
+                                 "load_factor": float(factor),
+                                 "batch_dist": phase.batch_dist,
+                                 "qos_rate": ph_passed / phase.n_queries})
             # The next phase's local t=0 is this phase's end.
             plane.advance_clock(float(stream.arrivals[-1]))
+            ep_base = ph_end
             gq += phase.n_queries
 
         report.total_queries = gq

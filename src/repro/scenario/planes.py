@@ -103,7 +103,15 @@ class _EpisodeClock:
         self._deployed: tuple[int, ...] | None = None
         self._local_now = 0.0
         self._pending = None
+        self._tel_src = None
         self.last_carried_wait = 0.0
+
+    def window_telemetry(self, lo: int, hi: int):
+        """Telemetry over queries ``[lo, hi)`` of the last measured segment
+        (serving/telemetry.Telemetry), or ``None`` on planes without a
+        telemetry source (the live plane measures wall clock; it has no
+        dispatch trace to reduce)."""
+        return None
 
     def begin_episode(self, carry: bool = True) -> None:
         """Reset the episode clock to an idle pool at episode time 0.
@@ -220,17 +228,32 @@ class SimulatorPlane(_EpisodeClock):
         sim = PoolSimulator(self.profile, self.types, workload,
                             max_instances=self.max_instances)
         if not self._carry:
+            # Cold segment from the idle carry at clock 0 — the warm
+            # identity element, bit-identical to the cold simulate lane —
+            # so both accounting modes leave a telemetry source behind.
             self._pending = None
             self.last_carried_wait = 0.0
-            r = sim.simulate(np.asarray(config, dtype=np.int64),
-                             policy=policy)
-            return r.lat, r.waits
+            seg = sim.segment_from(sim.initial_state(), config,
+                                   policy=policy)
+            self._tel_src = (sim, seg, tuple(int(c) for c in config))
+            return seg.lat, seg.waits
         seg = sim.segment_from(self._state, config, policy=policy)
         at = float(workload.arrivals[0]) if workload.n_queries else 0.0
         self.last_carried_wait = sim.carried_wait(self._state, config, at)
         self._pending = (seg, np.asarray(workload.arrivals,
                                          dtype=np.float64))
+        self._tel_src = (sim, seg, tuple(int(c) for c in config))
         return seg.lat, seg.waits
+
+    def window_telemetry(self, lo: int, hi: int):
+        """Telemetry over queries ``[lo, hi)`` of the last measured segment
+        — host-side from the segment's recorded dispatch trace
+        (``PoolSimulator.segment_telemetry``), so window enrichment never
+        re-runs the scan."""
+        if self._tel_src is None:
+            return None
+        sim, seg, cfg = self._tel_src
+        return sim.segment_telemetry(seg, cfg, lo, hi)
 
     def commit(self, n_served: int) -> None:
         """Fold the first ``n_served`` queries of the last measured segment

@@ -26,6 +26,15 @@ class WindowStat:
     # opening control-plane cut, attributed to the segment's first window
     # (0 elsewhere, and everywhere under idle-restart accounting).
     carried_wait: float = 0.0
+    # Telemetry enrichment (serving/telemetry.py, spec.window_stats): the
+    # window's latency percentiles from the log-bucket histogram, mean
+    # utilization per instance type, and per-type QoS-miss attribution.
+    # Defaults when the plane has no telemetry source (live plane).
+    p50: float = 0.0
+    p95: float = 0.0
+    p99: float = 0.0
+    util_by_type: tuple = ()
+    miss_by_type: tuple = ()
 
 
 @dataclass
@@ -139,7 +148,39 @@ class EpisodeReport:
         """True when every injected event's QoS recovered to target."""
         return all(e.recovery_queries is not None for e in self.events)
 
-    def to_dict(self) -> dict:
+    def _windows_summary(self) -> dict:
+        """Fixed-size digest of the per-window list: counts plus a
+        percentile summary of the window QoS rates — what the bench
+        artifact keeps instead of a list that grows with episode length."""
+        rates = sorted(float(w.qos_rate) for w in self.windows)
+
+        def pctl(p: float) -> float:
+            if not rates:
+                return 0.0
+            k = min(max(int(p / 100.0 * len(rates)), 0), len(rates) - 1)
+            return rates[k]
+
+        return {
+            "mode": "summary",
+            "count": self.n_windows,
+            "violations": self.violation_windows,
+            "last_violation": (bool(self.windows[-1].violation)
+                               if self.windows else False),
+            "qos_rate_min": rates[0] if rates else 0.0,
+            "qos_rate_p10": pctl(10.0),
+            "qos_rate_p50": pctl(50.0),
+            "qos_rate_p90": pctl(90.0),
+            "qos_rate_max": rates[-1] if rates else 0.0,
+            "carried_wait_total": float(self.carried_wait_total),
+        }
+
+    def to_dict(self, windows: str = "full") -> dict:
+        """JSON-safe dump.  ``windows="summary"`` replaces the per-window
+        list (which grows linearly with episode length) with the fixed-size
+        digest of :meth:`_windows_summary`; ``"full"`` keeps the list."""
+        if windows not in ("full", "summary"):
+            raise ValueError(f'windows must be "full" or "summary", '
+                             f"got {windows!r}")
         return {
             "scenario": self.scenario,
             "plane": self.plane,
@@ -188,12 +229,17 @@ class EpisodeReport:
                                     else float(a.warm_idle_delta)),
                 "policy": a.policy,
             } for a in self.actions],
-            "windows": [{
+            "windows": self._windows_summary() if windows == "summary"
+            else [{
                 "phase": int(w.phase), "start": int(w.start),
                 "end": int(w.end), "qos_rate": float(w.qos_rate),
                 "config": [int(c) for c in w.config],
                 "price": float(w.price), "cost": float(w.cost),
                 "violation": bool(w.violation),
                 "carried_wait": float(w.carried_wait),
+                "p50": float(w.p50), "p95": float(w.p95),
+                "p99": float(w.p99),
+                "util_by_type": [float(u) for u in w.util_by_type],
+                "miss_by_type": [int(m) for m in w.miss_by_type],
             } for w in self.windows],
         }

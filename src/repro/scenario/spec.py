@@ -150,6 +150,12 @@ class ScenarioSpec:
     # candidate in one dispatch and, if some router restores QoS, reroutes
     # (0 BO evaluations) instead of re-searching the pool.  () disables.
     route_policies: tuple[str, ...] = ()
+    # Enrich every WindowStat with telemetry-derived stats (latency
+    # percentiles from the log-bucket histogram, per-type utilization and
+    # QoS-miss attribution) on planes that expose a telemetry source
+    # (serving/telemetry.py).  Pure reporting: control decisions never
+    # read these fields.
+    window_stats: bool = True
 
     def validate(self) -> "ScenarioSpec":
         if not self.phases:

@@ -13,6 +13,7 @@ from .pool import (DEFAULT_BOUNDS, DEFAULT_RATES, PoolEvaluator,
 from .routing import NAMED_POLICIES, RoutingPolicy, named_policy
 from .simulator import (PoolSimulator, PoolState, QosResult, SegmentResult,
                         SimResult)
+from .telemetry import BUCKET_EDGES, N_BUCKETS, Telemetry
 from .tiers import (TIER_NAMES, TIERED_POOLS, TIERS, CapacityTier,
                     SpotPriceProcess, TierCatalog, TierHazard, tiered_pool,
                     tiered_variant)
@@ -25,6 +26,7 @@ __all__ = [
     "PoolEvaluator", "best_homogeneous", "cost_effectiveness",
     "make_paper_setup", "paper_workload", "DEFAULT_RATES", "DEFAULT_BOUNDS",
     "PoolSimulator", "PoolState", "SegmentResult", "SimResult", "QosResult",
+    "Telemetry", "BUCKET_EDGES", "N_BUCKETS",
     "RoutingPolicy", "NAMED_POLICIES", "named_policy",
     "LoadMonitor", "ScaleEvent", "rescale",
     "fail_instances", "recover_from_capacity_change",

@@ -95,6 +95,8 @@ import numpy as np
 
 from .instance import InstanceType, ModelProfile, service_time_table
 from .routing import RoutingPolicy
+from .telemetry import (BUCKET_EDGES, N_BUCKETS, Telemetry, from_arrays,
+                        queue_depth)
 from .workload import Workload
 
 _INF = 1e30
@@ -258,7 +260,9 @@ class SegmentResult:
     consumed before an adaptation cut.  ``state`` (= ``state_at(n)``) is the
     scan's own final carry, bit-exact; interior prefixes are reconstructed
     from the recorded per-query (slot, finish) trace with the same float32
-    arithmetic the device performed.
+    arithmetic the device performed.  ``telemetry`` is populated by
+    ``segment_from(..., telemetry=True)``; window slices come from
+    ``PoolSimulator.segment_telemetry``.
     """
 
     lat: np.ndarray
@@ -269,6 +273,8 @@ class SegmentResult:
     _fin: np.ndarray | None             # (nq,) float64-exact f32 finishes
     _slots: np.ndarray | None           # (nq,) int dispatch trace
     _final_rel: np.ndarray | None       # (S,) float64 of the f32 carry out
+    _start: np.ndarray | None = None    # (nq,) float32 start times
+    telemetry: "Telemetry | None" = None
 
     @property
     def n_queries(self) -> int:
@@ -369,6 +375,17 @@ def _qos_threshold_f32(qos_latency: float) -> float:
     return float(t)
 
 
+_EDGES_DEV = None
+
+
+def _edges_dev():
+    """Device-resident copy of ``BUCKET_EDGES`` (uploaded once per process)."""
+    global _EDGES_DEV
+    if _EDGES_DEV is None:
+        _EDGES_DEV = jnp.asarray(BUCKET_EDGES)
+    return _EDGES_DEV
+
+
 def _grid_lane_qos_counts(arrivals, service_T, type_of_slot, priority, free0,
                           iota, qos_t):
     """QoS-pass count of one (workload, config) lane — the lean FCFS scan.
@@ -423,6 +440,74 @@ _grid_counts_tables_jit = jax.jit(jax.vmap(
 # costs more than the sweep itself at rescale-loop call rates.
 _grid_counts_pmap = jax.pmap(_grid_counts_wb,
                              in_axes=(0, 0, 0, 0, 0, 0, 0))
+
+
+def _grid_lane_qos_counts_tel(arrivals, service_T, type_of_slot, priority,
+                              free0, iota, qos_t, n_active, iota_t, iota_k,
+                              edges):
+    """Telemetry flavor of ``_grid_lane_qos_counts``: the same dispatch
+    recurrence and QoS count, with the full telemetry plane accumulated
+    *inside the scan carry* at constant memory — per-type served / QoS-miss
+    / busy-millisecond counters, log-bucket latency+wait histograms, and
+    integrated/peak queue depth — so a (W, B) sweep never materializes a
+    per-query array.  Every accumulator is an int32 add (or max), and every
+    float expression (latency, wait, bucket comparison, busy rounding) is
+    the identical float32 arithmetic the materializing lanes' finalize pass
+    performs, which is what keeps grid-cell telemetry bit-equal to the
+    single lane's.  The emitted QoS count is bit-identical to the legacy
+    count scan.
+
+    Extra operands: ``n_active`` () int32 active-slot count of this lane,
+    ``iota_t`` (n_types,) / ``iota_k`` (N_BUCKETS,) int32 one-hot index
+    vectors, ``edges`` (N_BUCKETS - 1,) float32 histogram edges.
+    """
+
+    def step(carry, inputs):
+        free, count, served, miss, busy, lath, waith, dsum, dpeak = carry
+        arrival, svc_by_type = inputs
+        idle = free <= arrival
+        key = jnp.where(idle, priority - _BIG, free)
+        slot = jnp.argmin(key)
+        start = jnp.maximum(arrival, free[slot])
+        svc = svc_by_type[type_of_slot[slot]]
+        finish = start + svc
+        free = jnp.where(iota == slot, finish, free)
+        lat = finish - arrival
+        count = count + (lat <= qos_t).astype(jnp.int32)
+        one_t = (iota_t == type_of_slot[slot]).astype(jnp.int32)
+        served = served + one_t
+        miss = miss + one_t * (lat > qos_t).astype(jnp.int32)
+        busy = busy + one_t * jnp.round(svc * 1000.0).astype(jnp.int32)
+        wait = jnp.maximum(start - arrival, 0.0)
+        lath = lath + (iota_k == (lat >= edges).sum()).astype(jnp.int32)
+        waith = waith + (iota_k == (wait >= edges).sum()).astype(jnp.int32)
+        depth = n_active - idle.sum().astype(jnp.int32)
+        dsum = dsum + depth
+        dpeak = jnp.maximum(dpeak, depth)
+        return (free, count, served, miss, busy, lath, waith, dsum,
+                dpeak), None
+
+    n_t = iota_t.shape[0]
+    n_k = iota_k.shape[0]
+    zero_t = jnp.zeros(n_t, jnp.int32)
+    carry0 = (free0, jnp.int32(0), zero_t, zero_t, zero_t,
+              jnp.zeros(n_k, jnp.int32), jnp.zeros(n_k, jnp.int32),
+              jnp.int32(0), jnp.int32(0))
+    carry, _ = jax.lax.scan(step, carry0, (arrivals, service_T),
+                            unroll=_GRID_UNROLL)
+    return carry[1:]
+
+
+# Telemetry grid sweeps run the single-device executable only (the
+# pmap-sharded fast path stays telemetry-off: observability sweeps are
+# scenario/bench axes, not the BO rescale hot loop).
+_TEL_LANE_AXES = (None, None, 0, None, 0, None, None, 0, None, None, None)
+_grid_counts_tel_jit = jax.jit(jax.vmap(
+    jax.vmap(_grid_lane_qos_counts_tel, in_axes=_TEL_LANE_AXES),
+    in_axes=(0,) + (None,) * 10))
+_grid_counts_tel_tables_jit = jax.jit(jax.vmap(
+    jax.vmap(_grid_lane_qos_counts_tel, in_axes=_TEL_LANE_AXES),
+    in_axes=(0, 0) + (None,) * 9))
 
 
 @jax.jit
@@ -528,6 +613,64 @@ _grid_counts_policy_tables_jit = jax.jit(jax.vmap(
     in_axes=(0, 0, None, None, None, None, None, None, None, None)))
 
 
+def _grid_lane_qos_counts_policy_tel(arrivals, service_T, type_of_slot,
+                                     priority, free0, iota, qos_t, n_active,
+                                     iota_t, iota_k, edges, pref_slot,
+                                     affinity, hedge):
+    """Routed twin of ``_grid_lane_qos_counts_tel``: the policy dispatch key
+    of ``_simulate_scan_policy`` with the in-carry telemetry accumulators.
+    Identity parameters reproduce the legacy telemetry count scan bit for
+    bit (the idle test and every accumulator expression are shared)."""
+
+    def step(carry, inputs):
+        free, count, served, miss, busy, lath, waith, dsum, dpeak = carry
+        arrival, svc_by_type = inputs
+        svc_slot = svc_by_type[type_of_slot]
+        idle = free <= arrival
+        idle_key = jnp.where(
+            idle, (pref_slot + affinity * svc_slot) * _TIE + priority, _INF)
+        busy_key = jnp.where(idle, _INF, free + hedge * svc_slot)
+        slot = jnp.where(idle.any(), jnp.argmin(idle_key),
+                         jnp.argmin(busy_key))
+        start = jnp.maximum(arrival, free[slot])
+        svc = svc_by_type[type_of_slot[slot]]
+        finish = start + svc
+        free = jnp.where(iota == slot, finish, free)
+        lat = finish - arrival
+        count = count + (lat <= qos_t).astype(jnp.int32)
+        one_t = (iota_t == type_of_slot[slot]).astype(jnp.int32)
+        served = served + one_t
+        miss = miss + one_t * (lat > qos_t).astype(jnp.int32)
+        busy = busy + one_t * jnp.round(svc * 1000.0).astype(jnp.int32)
+        wait = jnp.maximum(start - arrival, 0.0)
+        lath = lath + (iota_k == (lat >= edges).sum()).astype(jnp.int32)
+        waith = waith + (iota_k == (wait >= edges).sum()).astype(jnp.int32)
+        depth = n_active - idle.sum().astype(jnp.int32)
+        dsum = dsum + depth
+        dpeak = jnp.maximum(dpeak, depth)
+        return (free, count, served, miss, busy, lath, waith, dsum,
+                dpeak), None
+
+    n_t = iota_t.shape[0]
+    n_k = iota_k.shape[0]
+    zero_t = jnp.zeros(n_t, jnp.int32)
+    carry0 = (free0, jnp.int32(0), zero_t, zero_t, zero_t,
+              jnp.zeros(n_k, jnp.int32), jnp.zeros(n_k, jnp.int32),
+              jnp.int32(0), jnp.int32(0))
+    carry, _ = jax.lax.scan(step, carry0, (arrivals, service_T),
+                            unroll=_GRID_UNROLL)
+    return carry[1:]
+
+
+_TEL_POLICY_AXES = _TEL_LANE_AXES + (0, 0, 0)
+_grid_counts_policy_tel_jit = jax.jit(jax.vmap(
+    jax.vmap(_grid_lane_qos_counts_policy_tel, in_axes=_TEL_POLICY_AXES),
+    in_axes=(0,) + (None,) * 13))
+_grid_counts_policy_tel_tables_jit = jax.jit(jax.vmap(
+    jax.vmap(_grid_lane_qos_counts_policy_tel, in_axes=_TEL_POLICY_AXES),
+    in_axes=(0, 0) + (None,) * 12))
+
+
 def _fold_policy(policy: RoutingPolicy, type_of_slot: np.ndarray,
                  free0: np.ndarray) -> tuple:
     """Fold a policy's (optional) stacked axis into the lane axis.
@@ -559,6 +702,176 @@ def _cold_free0(active: np.ndarray) -> np.ndarray:
     return np.where(active, np.float32(0.0), np.float32(_INF))
 
 
+# Bit layout of the packed per-query word the telemetry twin scans emit:
+# slot index in the low bits, the slot's type above it, the queue depth
+# (busy active slots just before dispatch) on top.  Ten bits per field
+# bounds pools at 1024 slots/types — far above any catalog in the repo.
+_PACK_T = 10
+_PACK_D = 20
+
+
+def _simulate_scan_tel(arrivals, service, type_of_slot, priority, free0,
+                       n_active, iota):
+    """Telemetry twin of ``_simulate_scan``: the identical dispatch
+    arithmetic — latencies, starts, and chosen slots are bit-identical by
+    construction — plus the per-step queue depth measured in place from the
+    carry (``n_active`` minus the idle count the dispatch key already
+    needed) and packed with the slot and its type into one int32 output.
+    The twin runs on occupancy-trimmed slot operands with the one-hot
+    carry update of the lean grid kernels; both are invisible to the
+    results (inactive slots never win the argmin, and ``where(iota ==
+    slot)`` writes the very value the positional update would), and
+    together they make the telemetry lane cheaper than the legacy scan it
+    twins — which is what holds the bench's ≤10 % overhead gate.
+    """
+
+    def step(free, inputs):
+        arrival, svc_by_type = inputs
+        idle = free <= arrival
+        key = jnp.where(idle, priority - _BIG, free)
+        slot = jnp.argmin(key)
+        start = jnp.maximum(arrival, free[slot])
+        tslot = type_of_slot[slot]
+        finish = start + svc_by_type[tslot]
+        free = jnp.where(iota == slot, finish, free)
+        depth = n_active - idle.sum().astype(jnp.int32)
+        packed = (slot.astype(jnp.int32) | (tslot << _PACK_T)
+                  | (depth << _PACK_D))
+        return free, (finish - arrival, start, packed)
+
+    return jax.lax.scan(step, free0, (arrivals, service.T))
+
+
+def _simulate_scan_policy_tel(arrivals, service, type_of_slot, priority,
+                              free0, pref_slot, affinity, hedge, n_active,
+                              iota):
+    """Telemetry twin of ``_simulate_scan_policy`` — same contract and
+    bit-identity argument as ``_simulate_scan_tel``."""
+
+    def step(free, inputs):
+        arrival, svc_by_type = inputs
+        svc_slot = svc_by_type[type_of_slot]
+        idle = free <= arrival
+        idle_key = jnp.where(
+            idle, (pref_slot + affinity * svc_slot) * _TIE + priority, _INF)
+        busy_key = jnp.where(idle, _INF, free + hedge * svc_slot)
+        slot = jnp.where(idle.any(), jnp.argmin(idle_key),
+                         jnp.argmin(busy_key))
+        start = jnp.maximum(arrival, free[slot])
+        tslot = type_of_slot[slot]
+        finish = start + svc_by_type[tslot]
+        free = jnp.where(iota == slot, finish, free)
+        depth = n_active - idle.sum().astype(jnp.int32)
+        packed = (slot.astype(jnp.int32) | (tslot << _PACK_T)
+                  | (depth << _PACK_D))
+        return free, (finish - arrival, start, packed)
+
+    return jax.lax.scan(step, free0, (arrivals, service.T))
+
+
+# Lane axes mirror the primary kernels': slot layout, carry, and active
+# count map with the lane; the stream, service table, and trimmed iota are
+# shared.  Grid variants add the workload axis over arrivals (and over the
+# per-workload service tables for the tables flavor).
+_TEL_SCAN_AXES = (None, None, 0, None, 0, 0, None)
+_scan_tel_batch = jax.jit(jax.vmap(_simulate_scan_tel,
+                                   in_axes=_TEL_SCAN_AXES))
+_scan_tel_grid = jax.jit(jax.vmap(
+    jax.vmap(_simulate_scan_tel, in_axes=_TEL_SCAN_AXES),
+    in_axes=(0,) + (None,) * 6))
+_scan_tel_grid_tables = jax.jit(jax.vmap(
+    jax.vmap(_simulate_scan_tel, in_axes=_TEL_SCAN_AXES),
+    in_axes=(0, 0) + (None,) * 5))
+
+_TEL_SCAN_POLICY_AXES = (None, None, 0, None, 0, 0, 0, 0, 0, None)
+_scan_policy_tel_batch = jax.jit(jax.vmap(
+    _simulate_scan_policy_tel, in_axes=_TEL_SCAN_POLICY_AXES))
+_scan_policy_tel_grid = jax.jit(jax.vmap(
+    jax.vmap(_simulate_scan_policy_tel, in_axes=_TEL_SCAN_POLICY_AXES),
+    in_axes=(0,) + (None,) * 9))
+_scan_policy_tel_grid_tables = jax.jit(jax.vmap(
+    jax.vmap(_simulate_scan_policy_tel, in_axes=_TEL_SCAN_POLICY_AXES),
+    in_axes=(0, 0) + (None,) * 8))
+
+
+def _tel_finalize(lat, start, packed, arrivals, service, qos_t, edges):
+    """Device telemetry reduction over one lane's twin-scan outputs.
+
+    The twin scans emit per-query (latency, start, packed slot/type/depth),
+    so telemetry is a data-parallel post-pass over arrays the lane already
+    materialized: per-type one-hot sums for the served / QoS-miss /
+    busy-millisecond counters, comparison-count bucketing folded into
+    adjacent differences for the two histograms (no scatters — XLA CPU
+    lowers them to row-at-a-time loops), and a straight sum/max over the
+    queue depth the scan measured in place.  Every float expression
+    (latency, wait, bucket comparison, busy rounding) is the identical
+    float32 arithmetic of the in-carry grid kernel and the host mirror,
+    which is what keeps all three telemetry styles bit-equal.
+
+    Returns int32 (served, miss, busy_ms) per type, (lat_hist, wait_hist)
+    per bucket, and scalar (depth_sum, depth_peak).
+    """
+    nq = lat.shape[0]
+    n_types = service.shape[0]
+    tslot = (packed >> _PACK_T) & ((1 << (_PACK_D - _PACK_T)) - 1)
+    depth = packed >> _PACK_D
+    onehot = tslot[:, None] == jnp.arange(n_types, dtype=tslot.dtype)[None, :]
+    served = onehot.astype(jnp.int32).sum(axis=0)
+    miss = (onehot & (lat > qos_t)[:, None]).astype(jnp.int32).sum(axis=0)
+    svc = service[tslot, jnp.arange(nq)]
+    ms = jnp.round(svc * 1000.0).astype(jnp.int32)
+    busy_ms = jnp.where(onehot, ms[:, None], 0).sum(axis=0)
+    wait = jnp.maximum(start - arrivals, 0.0)
+
+    def hist(x):
+        # #{x in bucket k} from >=-edge counts: identical comparisons to
+        # the in-carry kernel's ``(x >= edges).sum()`` bucket index, folded
+        # to adjacent differences so no per-query one-hot row ever exists.
+        cnt = (x[:, None] >= edges).astype(jnp.int32).sum(axis=0)
+        return jnp.concatenate([jnp.int32(nq)[None] - cnt[:1],
+                                cnt[:-1] - cnt[1:], cnt[-1:]])
+
+    return (served, miss, busy_ms, hist(lat), hist(wait), depth.sum(),
+            depth.max())
+
+
+# (lat, start, packed, arrivals, service, qos_t, edges): lane-mapped
+# outputs, shared stream/table/consts; grid variants map arrivals (and the
+# per-workload service table for the tables flavor) with the workload axis.
+_TEL_FIN_AXES = (0, 0, 0, None, None, None, None)
+_tel_finalize_batch = jax.jit(jax.vmap(_tel_finalize, in_axes=_TEL_FIN_AXES))
+_tel_finalize_grid = jax.jit(jax.vmap(
+    jax.vmap(_tel_finalize, in_axes=_TEL_FIN_AXES),
+    in_axes=(0, 0, 0, 0, None, None, None)))
+_tel_finalize_grid_tables = jax.jit(jax.vmap(
+    jax.vmap(_tel_finalize, in_axes=_TEL_FIN_AXES),
+    in_axes=(0, 0, 0, 0, 0, None, None)))
+
+
+def _device_telemetry(parts, n_types, zero=None, shape=None) -> Telemetry:
+    """Assemble a host :class:`Telemetry` from device accumulator parts
+    (int32 → int64), zeroing all-zero-config lanes (their scan outputs are
+    garbage the primary paths also overwrite host-side) and optionally
+    unfolding a stacked-policy lane axis."""
+    served, miss, busy, lath, waith, dsum, dpeak = [
+        np.asarray(jax.device_get(p), dtype=np.int64) for p in parts]
+    if zero is not None and np.asarray(zero).any():
+        for a in (served, miss, busy, lath, waith):
+            a[..., zero, :] = 0
+        dsum[..., zero] = 0
+        dpeak[..., zero] = 0
+    if shape is not None:
+        served = served.reshape(shape + served.shape[-1:])
+        miss = miss.reshape(shape + miss.shape[-1:])
+        busy = busy.reshape(shape + busy.shape[-1:])
+        lath = lath.reshape(shape + lath.shape[-1:])
+        waith = waith.reshape(shape + waith.shape[-1:])
+        dsum = dsum.reshape(shape)
+        dpeak = dpeak.reshape(shape)
+    return Telemetry(served=served, miss=miss, busy_ms=busy, lat_hist=lath,
+                     wait_hist=waith, depth_sum=dsum, depth_peak=dpeak)
+
+
 @dataclass
 class SimResult:
     """Per-query outcome of one ``PoolSimulator.simulate`` call.
@@ -571,11 +884,15 @@ class SimResult:
     the final continuous-clock carry for warm-start calls: a
     :class:`PoolState` (single), a list of them (batch), or a [P][B] nested
     list (stacked policy × batch); ``None`` on cold and grid lanes.
+    ``telemetry`` (``telemetry=True`` calls only) is a
+    :class:`~repro.serving.telemetry.Telemetry` whose leading dims mirror
+    the lane.
     """
 
     lat: np.ndarray
     waits: np.ndarray | None
     state: object | None
+    telemetry: "Telemetry | None" = None
 
 
 @dataclass
@@ -584,11 +901,14 @@ class QosResult:
 
     ``rates`` is the fraction of queries within the model's QoS latency —
     a float (single lane), (B,) or (P, B) (batch lanes), or (W, [P,] B)
-    (workload grid).  ``state`` mirrors :class:`SimResult.state`.
+    (workload grid).  ``state`` mirrors :class:`SimResult.state`;
+    ``telemetry`` mirrors :class:`SimResult.telemetry` (grid calls ride
+    the in-carry accumulators, so only the counters cross to the host).
     """
 
     rates: float | np.ndarray
     state: object | None
+    telemetry: "Telemetry | None" = None
 
 
 # Legacy names that already warned this process — shim warnings fire once
@@ -676,7 +996,7 @@ class PoolSimulator:
 
     def simulate(self, configs, *, state=None, workloads=None,
                  service_tables=None, policy=None, deployed=None, now=None,
-                 warmup=None) -> "SimResult":
+                 warmup=None, telemetry: bool = False) -> "SimResult":
         """Serve the bound stream — every lane, one entrypoint.
 
         The lane is picked by the arguments, not the method name:
@@ -701,9 +1021,15 @@ class PoolSimulator:
           untouched legacy FCFS kernels, bit-identical to the pre-redesign
           methods on every lane.
 
-        All-zero configs serve nothing (+inf latencies).  The legacy
-        ``latencies*``/``qos_rate*`` names delegate here and warn
-        (docs/api_migration.md maps every old call).
+        All-zero configs serve nothing (+inf latencies, zero telemetry).
+        ``telemetry=True`` additionally returns a
+        :class:`~repro.serving.telemetry.Telemetry` per lane — the primary
+        outputs are bit-identical either way: telemetry-off keeps the
+        untouched legacy kernels, telemetry-on swaps in twin scans with the
+        identical dispatch arithmetic that also measure queue depth in
+        place, plus a data-parallel device finalize for the counters and
+        histograms.  The legacy ``latencies*``/``qos_rate*`` names delegate
+        here and warn (docs/api_migration.md maps every old call).
         """
         policy = self._check_policy(policy)
         self._check_warm_kwargs(state, deployed, now, warmup)
@@ -712,9 +1038,10 @@ class PoolSimulator:
             if cfg.ndim != 2:
                 raise ValueError("the workload grid needs a (B, n_types) "
                                  "config batch")
-            lat = self._sim_grid(cfg, workloads, service_tables, policy,
-                                 state, deployed, now, warmup)
-            return SimResult(lat=lat, waits=None, state=None)
+            lat, tel = self._sim_grid(cfg, workloads, service_tables, policy,
+                                      state, deployed, now, warmup,
+                                      telemetry)
+            return SimResult(lat=lat, waits=None, state=None, telemetry=tel)
         if service_tables is not None:
             raise ValueError("service_tables is a workload-grid axis; pass "
                              "workloads= as well")
@@ -724,24 +1051,35 @@ class PoolSimulator:
                     "a stacked policy needs a config batch; pass "
                     "configs=[config] to score one pool under P policies")
             if state is not None:
-                seg = self.segment_from(state, cfg, policy=policy)
+                seg = self.segment_from(state, cfg, policy=policy,
+                                        telemetry=telemetry)
                 return SimResult(lat=seg.lat, waits=seg.waits,
-                                 state=seg.state)
+                                 state=seg.state, telemetry=seg.telemetry)
+            if telemetry:
+                # The idle carry at clock 0 is the warm identity element, so
+                # the segment lane reproduces the cold bits exactly — and
+                # already knows how to attach telemetry.
+                seg = self.segment_from(self.initial_state(), cfg,
+                                        policy=policy, telemetry=True)
+                return SimResult(lat=seg.lat, waits=seg.waits, state=None,
+                                 telemetry=seg.telemetry)
             lat, waits = self._lat_waits_single(cfg, policy)
             return SimResult(lat=lat, waits=waits, state=None)
         if cfg.ndim != 2:
             raise ValueError("configs must be (n_types,) or (B, n_types), "
                              f"got shape {cfg.shape}")
         if state is not None:
-            lat, states = self._sim_batch_from(state, cfg, policy, deployed,
-                                               now, warmup)
-            return SimResult(lat=lat, waits=None, state=states)
-        return SimResult(lat=self._sim_batch(cfg, policy), waits=None,
-                         state=None)
+            lat, states, tel = self._sim_batch_from(state, cfg, policy,
+                                                    deployed, now, warmup,
+                                                    telemetry)
+            return SimResult(lat=lat, waits=None, state=states,
+                             telemetry=tel)
+        lat, tel = self._sim_batch(cfg, policy, telemetry)
+        return SimResult(lat=lat, waits=None, state=None, telemetry=tel)
 
     def qos(self, configs, *, state=None, workloads=None, service_tables=None,
-            policy=None, deployed=None, now=None,
-            warmup=None) -> "QosResult":
+            policy=None, deployed=None, now=None, warmup=None,
+            telemetry: bool = False) -> "QosResult":
         """QoS satisfaction rates — ``simulate``'s lanes, lean reductions.
 
         Same argument-driven lane selection as :meth:`simulate` (single /
@@ -751,6 +1089,10 @@ class PoolSimulator:
         cross back to the host — and the single cold lane skips the waits
         materialization, so sequential baselines stay honest.  Rates agree
         with ``simulate(...)`` + a host-side threshold mean bit for bit.
+        ``telemetry=True`` attaches per-lane telemetry; rates stay
+        bit-identical (the grid lane swaps to the in-carry telemetry scan,
+        whose QoS count is the same arithmetic; other lanes just add the
+        device post-pass).
         """
         policy = self._check_policy(policy)
         self._check_warm_kwargs(state, deployed, now, warmup)
@@ -759,9 +1101,10 @@ class PoolSimulator:
             if cfg.ndim != 2:
                 raise ValueError("the workload grid needs a (B, n_types) "
                                  "config batch")
-            rates = self._qos_grid(cfg, workloads, service_tables, policy,
-                                   state, deployed, now, warmup)
-            return QosResult(rates=rates, state=None)
+            rates, tel = self._qos_grid(cfg, workloads, service_tables,
+                                        policy, state, deployed, now, warmup,
+                                        telemetry)
+            return QosResult(rates=rates, state=None, telemetry=tel)
         if service_tables is not None:
             raise ValueError("service_tables is a workload-grid axis; pass "
                              "workloads= as well")
@@ -771,9 +1114,17 @@ class PoolSimulator:
                     "a stacked policy needs a config batch; pass "
                     "configs=[config] to score one pool under P policies")
             if state is not None:
-                seg = self.segment_from(state, cfg, policy=policy)
+                seg = self.segment_from(state, cfg, policy=policy,
+                                        telemetry=telemetry)
                 rate = float(np.mean(seg.lat <= self.model.qos_latency))
-                return QosResult(rates=rate, state=seg.state)
+                return QosResult(rates=rate, state=seg.state,
+                                 telemetry=seg.telemetry)
+            if telemetry:
+                seg = self.segment_from(self.initial_state(), cfg,
+                                        policy=policy, telemetry=True)
+                rate = float(np.mean(seg.lat <= self.model.qos_latency))
+                return QosResult(rates=rate, state=None,
+                                 telemetry=seg.telemetry)
             lat = self._lat_single(cfg, policy)
             return QosResult(
                 rates=float(np.mean(lat <= self.model.qos_latency)),
@@ -782,17 +1133,26 @@ class PoolSimulator:
             raise ValueError("configs must be (n_types,) or (B, n_types), "
                              f"got shape {cfg.shape}")
         if state is not None:
-            lat, states = self._sim_batch_from(state, cfg, policy, deployed,
-                                               now, warmup)
+            lat, states, tel = self._sim_batch_from(state, cfg, policy,
+                                                    deployed, now, warmup,
+                                                    telemetry)
             return QosResult(rates=np.mean(lat <= self.model.qos_latency,
-                                           axis=-1), state=states)
-        lat = self._sim_batch(cfg, policy)
+                                           axis=-1), state=states,
+                             telemetry=tel)
+        lat, tel = self._sim_batch(cfg, policy, telemetry)
         return QosResult(rates=np.mean(lat <= self.model.qos_latency,
-                                       axis=-1), state=None)
+                                       axis=-1), state=None, telemetry=tel)
 
-    def tail_latency(self, config, pct: float = 99.0) -> float:
-        return float(np.percentile(
-            self._lat_single(np.asarray(config, dtype=np.int64), None), pct))
+    def tail_latency(self, config, pct: float = 99.0, *, state=None,
+                     policy=None) -> float:
+        """Tail latency of one pool config, derived from the telemetry
+        plane's log-bucket histogram (the upper edge of the bucket where
+        the CDF crosses the rank — within one bucket of the exact sample
+        percentile).  Accepts ``state=``/``policy=`` like ``simulate``, so
+        warm tails and routed tails ride the same unified surface instead
+        of the old cold-only re-simulation."""
+        r = self.qos(config, state=state, policy=policy, telemetry=True)
+        return r.telemetry.latency_percentile(pct)
 
     # -------------------------------------------------- single-lane cores
     def _policy_single_args(self, policy: RoutingPolicy,
@@ -886,8 +1246,8 @@ class PoolSimulator:
         return np.where(active, rel.astype(np.float32),
                         np.float32(_INF))
 
-    def segment_from(self, state: PoolState, config, *,
-                     policy=None) -> "SegmentResult":
+    def segment_from(self, state: PoolState, config, *, policy=None,
+                     telemetry: bool = False) -> "SegmentResult":
         """Serve the bound stream as one continuous-time segment.
 
         Returns a :class:`SegmentResult` whose ``lat``/``waits`` equal the
@@ -898,6 +1258,9 @@ class PoolSimulator:
         exactly.  ``policy=`` routes dispatch (one unstacked
         :class:`RoutingPolicy`); the prefix-carry reconstruction reads the
         recorded (slot, finish) trace, so it is policy-agnostic.
+        ``telemetry=True`` attaches the segment's telemetry (computed on
+        the host from the recorded trace — bit-identical to the device
+        accumulators, see tests/test_telemetry.py).
         """
         policy = self._check_policy(policy)
         if policy is not None and policy.stacked:
@@ -911,7 +1274,9 @@ class PoolSimulator:
             return SegmentResult(
                 lat=np.full(n, np.inf), waits=np.full(n, np.inf),
                 _state0=state, _active=None, _rel0=None, _fin=None,
-                _slots=None, _final_rel=None)
+                _slots=None, _final_rel=None,
+                telemetry=(Telemetry.zeros(len(self.types)) if telemetry
+                           else None))
         type_of_slot, active = self._slots(config)
         free0 = self._warm_free0(state, active)
         if policy is None:
@@ -938,9 +1303,47 @@ class PoolSimulator:
         svc32 = self._service_host[type_of_slot[slots], np.arange(n)]
         fin = np.asarray(start32 + svc32, dtype=np.float64)
         final_rel = np.asarray(jax.device_get(free_f), dtype=np.float64)
-        return SegmentResult(lat=lat64, waits=waits, _state0=state,
-                             _active=active, _rel0=free0.astype(np.float64),
-                             _fin=fin, _slots=slots, _final_rel=final_rel)
+        seg = SegmentResult(lat=lat64, waits=waits, _state0=state,
+                            _active=active, _rel0=free0.astype(np.float64),
+                            _fin=fin, _slots=slots, _final_rel=final_rel,
+                            _start=start32)
+        if telemetry:
+            seg.telemetry = self.segment_telemetry(seg, config)
+        return seg
+
+    def segment_telemetry(self, seg: "SegmentResult", config, lo: int = 0,
+                          hi: int | None = None) -> Telemetry:
+        """Telemetry over queries ``[lo, hi)`` of a served segment.
+
+        Host-side, from the segment's recorded dispatch trace, with the
+        device kernels' own float32 arithmetic — so a full-segment call is
+        bit-identical to ``segment_from(..., telemetry=True)``'s device
+        outputs, and slicing a segment into windows and merging the pieces
+        reproduces the one-shot telemetry exactly (integer accumulators).
+        This is what the scenario engine's per-window enrichment reads.
+        """
+        n = seg.n_queries
+        hi = n if hi is None else int(hi)
+        if not 0 <= lo <= hi <= n:
+            raise ValueError(f"window [{lo}, {hi}) outside [0, {n}]")
+        n_types = len(self.types)
+        if seg._active is None or lo == hi:
+            return Telemetry.zeros(n_types)
+        type_of_slot, active = self._slots(config)
+        slots = seg._slots
+        tslot = type_of_slot[slots]
+        if self._service_host is None:
+            self._service_host = np.asarray(jax.device_get(self._service))
+        svc32 = self._service_host[tslot, np.arange(n)]
+        arr32 = np.asarray(jax.device_get(self._arrivals), dtype=np.float32)
+        wait32 = np.maximum(seg._start - arr32, np.float32(0.0))
+        depth = queue_depth(slots, seg._fin,
+                            np.asarray(seg._rel0, dtype=np.float32),
+                            active, arr32)
+        qos_t = _qos_threshold_f32(self.model.qos_latency)
+        return from_arrays(
+            seg.lat[lo:hi], wait32[lo:hi], svc32[lo:hi], tslot[lo:hi],
+            n_types, qos_t, depth=depth[lo:hi])
 
     def latencies_from(self, state: PoolState,
                        config) -> tuple[np.ndarray, PoolState]:
@@ -1011,7 +1414,9 @@ class PoolSimulator:
         return np.where(active, rel.astype(np.float32), np.float32(_INF))
 
     def _sim_batch_from(self, state: PoolState, configs, policy, deployed,
-                        now, warmup) -> tuple[np.ndarray, list]:
+                        now, warmup,
+                        telemetry: bool = False) -> tuple[np.ndarray, list,
+                                                          "Telemetry | None"]:
         """Warm batch core: B candidate pools served from the live backlog
         in one dispatch, plus each candidate's final carry.
 
@@ -1024,16 +1429,22 @@ class PoolSimulator:
         tier's ``warmup`` cold start.  The idle carry at clock 0 reproduces
         the cold batch lane bit for bit.  A stacked policy folds into the
         lane axis: ``lat`` (P, B, n_queries), states a [P][B] nested list.
+        With ``telemetry`` the twin scan's outputs additionally feed the
+        device finalize pass; the third element is None otherwise.
         """
         n = self.workload.n_queries
         n_b = len(configs)
         stacked = policy is not None and policy.stacked
         n_p = policy.n_policies if stacked else 1
+        tel_shape = (n_p, n_b) if stacked else None
+        zeros_tel = (Telemetry.zeros(len(self.types),
+                                     (n_p, n_b) if stacked else (n_b,))
+                     if telemetry else None)
         if configs.size == 0:
             if stacked:
                 return (np.zeros((n_p, 0, n), dtype=np.float64),
-                        [[] for _ in range(n_p)])
-            return np.zeros((0, n), dtype=np.float64), []
+                        [[] for _ in range(n_p)], zeros_tel)
+            return np.zeros((0, n), dtype=np.float64), [], zeros_tel
         free_mat = self._warm_free_matrix(state, configs, deployed, now,
                                           warmup)
         type_of_slot, active = self._slots_batch(configs)
@@ -1045,36 +1456,61 @@ class PoolSimulator:
 
             if stacked:
                 return (np.zeros((n_p, n_b, 0), dtype=np.float64),
-                        [carries() for _ in range(n_p)])
-            return np.zeros((n_b, 0), dtype=np.float64), carries()
+                        [carries() for _ in range(n_p)], zeros_tel)
+            return np.zeros((n_b, 0), dtype=np.float64), carries(), zeros_tel
         free0 = self._warm_free0_rows(
             state, free_mat, active, float(self.workload.arrivals[-1]),
             "warm-start batch")
+        width = None
+        start = packed = None
         if policy is None:
-            free_f, (lat, _, _) = _simulate_scan_batch(
-                self._arrivals, self._service, jnp.asarray(type_of_slot),
-                self._priority, jnp.asarray(free0))
             zero = configs.sum(axis=1) == 0
+            if telemetry:
+                tos_d, prio, fr0_d, n_act, iota, width = self._tel_operands(
+                    type_of_slot, active, free0)
+                free_f, (lat, start, packed) = _scan_tel_batch(
+                    self._arrivals, self._service, tos_d, prio, fr0_d,
+                    n_act, iota)
+            else:
+                free_f, (lat, _, _) = _simulate_scan_batch(
+                    self._arrivals, self._service, jnp.asarray(type_of_slot),
+                    self._priority, jnp.asarray(free0))
         else:
             tos, fr0, pref, aff, hed, n_p = _fold_policy(policy,
                                                          type_of_slot, free0)
             active = np.tile(active, (n_p, 1))
             free_mat = np.tile(free_mat, (n_p, 1))
-            free_f, (lat, _, _) = _scan_policy_batch(
-                self._arrivals, self._service, jnp.asarray(tos),
-                self._priority, jnp.asarray(fr0), jnp.asarray(pref),
-                jnp.asarray(aff), jnp.asarray(hed))
             zero = np.tile(configs.sum(axis=1) == 0, n_p)
+            if telemetry:
+                tos_d, prio, fr0_d, n_act, iota, width = self._tel_operands(
+                    tos, active, fr0)
+                free_f, (lat, start, packed) = _scan_policy_tel_batch(
+                    self._arrivals, self._service, tos_d, prio, fr0_d,
+                    jnp.asarray(np.ascontiguousarray(pref[:, :width])),
+                    jnp.asarray(aff), jnp.asarray(hed), n_act, iota)
+            else:
+                free_f, (lat, _, _) = _scan_policy_batch(
+                    self._arrivals, self._service, jnp.asarray(tos),
+                    self._priority, jnp.asarray(fr0), jnp.asarray(pref),
+                    jnp.asarray(aff), jnp.asarray(hed))
         out = np.asarray(jax.device_get(lat), dtype=np.float64)
         out[zero, :] = np.inf
+        tel = None
+        if telemetry:
+            tel = self._tel_batch(lat, start, packed, tel_shape, zero)
         final_rel = np.asarray(jax.device_get(free_f), dtype=np.float64)
+        if width is not None and width < active.shape[1]:
+            # Widen the trimmed twin carry back to full slot padding; the
+            # tail holds absent slots only, whose carry is never read.
+            pad = np.full((len(final_rel), active.shape[1] - width), _INF)
+            final_rel = np.concatenate([final_rel, pad], axis=1)
         free_out = np.where(active, final_rel + float(state.clock), free_mat)
         states = [PoolState(free=free_out[b], clock=state.clock)
                   for b in range(len(free_out))]
         if stacked:
             return (out.reshape(n_p, n_b, n),
-                    [states[p * n_b:(p + 1) * n_b] for p in range(n_p)])
-        return out, states
+                    [states[p * n_b:(p + 1) * n_b] for p in range(n_p)], tel)
+        return out, states, tel
 
     def latencies_batch_from(self, state: PoolState, configs, deployed=None,
                              now=None,
@@ -1119,38 +1555,101 @@ class PoolSimulator:
                         deployed=deployed, now=now, warmup=warmup).rates
 
     # ------------------------------------------------------------- batched
-    def _sim_batch(self, configs, policy) -> np.ndarray:
+    def _tel_operands(self, tos, active, free0) -> tuple:
+        """Occupancy-trimmed device operands for the telemetry twin scans:
+        (type_of_slot, priority, free0, n_active, iota, width).  Active
+        slots are packed in the ``[0, total)`` prefix, so trimming the
+        padded tail (same power-of-two sizing as the grid sweep) changes no
+        dispatch decision.  The width-keyed constants are cached — the
+        twin lanes are benched against the legacy kernels at ≤10 %
+        overhead, so per-call host work stays minimal."""
+        totals = active.sum(axis=1)
+        width = self._grid_slot_pad(totals)
+        cache = getattr(self, "_tel_width_cache", None)
+        if cache is None:
+            cache = self._tel_width_cache = {}
+        ent = cache.get(width)
+        if ent is None:
+            ent = cache[width] = (self._priority[:width],
+                                  jnp.arange(width, dtype=jnp.int32))
+        return (jnp.asarray(np.ascontiguousarray(tos[:, :width])), ent[0],
+                jnp.asarray(np.ascontiguousarray(free0[:, :width])),
+                jnp.asarray(totals.astype(np.int32)), ent[1], width)
+
+    def _tel_batch(self, lat, start, packed, tel_shape, zero) -> Telemetry:
+        """Run the device telemetry finalize over one twin-scan batch
+        dispatch's outputs and assemble the host :class:`Telemetry`
+        (``tel_shape`` unfolds a stacked-policy lane axis)."""
+        parts = _tel_finalize_batch(
+            lat, start, packed, self._arrivals, self._service,
+            jnp.float32(_qos_threshold_f32(self.model.qos_latency)),
+            _edges_dev())
+        return _device_telemetry(parts, len(self.types), zero=zero,
+                                 shape=tel_shape)
+
+    def _sim_batch(self, configs, policy,
+                   telemetry: bool = False) -> tuple[np.ndarray,
+                                                     Telemetry | None]:
         """Cold batch core: per-query latencies for a (B, n_types) batch in
         one dispatch — (B, n_queries) float64, rows of all-zero configs
         +inf (no pool, every query violates).  Row ``i`` equals the single
         lane on ``configs[i]`` bit for bit.  A stacked policy folds P·B
-        lanes into the dispatch and returns (P, B, n_queries)."""
+        lanes into the dispatch and returns (P, B, n_queries).  With
+        ``telemetry`` the twin scan's outputs feed the device finalize pass
+        (see ``_tel_finalize``); without it the second element is None."""
         n = self.workload.n_queries
+        n_b = len(configs)
         stacked = policy is not None and policy.stacked
-        if configs.size == 0:
-            if stacked:
-                return np.zeros((policy.n_policies, 0, n), dtype=np.float64)
-            return np.zeros((0, n), dtype=np.float64)
+        n_p = policy.n_policies if stacked else 1
+        tel_shape = (n_p, n_b) if stacked else None
+        if configs.size == 0 or n == 0:
+            if configs.size:
+                self._slots_batch(configs)  # keep shape/padding validation
+            shape = (n_p, n_b, n) if stacked else (n_b, n)
+            tel = None
+            if telemetry:
+                tel = Telemetry.zeros(len(self.types), shape[:-1])
+            return np.zeros(shape, dtype=np.float64), tel
         type_of_slot, active = self._slots_batch(configs)
         free0 = _cold_free0(active)
+        start = packed = None
         if policy is None:
-            _, (lat, _, _) = _simulate_scan_batch(
-                self._arrivals, self._service, jnp.asarray(type_of_slot),
-                self._priority, jnp.asarray(free0))
             zero = configs.sum(axis=1) == 0
+            if telemetry:
+                tos_d, prio, fr0_d, n_act, iota, _ = self._tel_operands(
+                    type_of_slot, active, free0)
+                _, (lat, start, packed) = _scan_tel_batch(
+                    self._arrivals, self._service, tos_d, prio, fr0_d,
+                    n_act, iota)
+            else:
+                _, (lat, _, _) = _simulate_scan_batch(
+                    self._arrivals, self._service, jnp.asarray(type_of_slot),
+                    self._priority, jnp.asarray(free0))
         else:
             tos, fr0, pref, aff, hed, n_p = _fold_policy(policy,
                                                          type_of_slot, free0)
-            _, (lat, _, _) = _scan_policy_batch(
-                self._arrivals, self._service, jnp.asarray(tos),
-                self._priority, jnp.asarray(fr0), jnp.asarray(pref),
-                jnp.asarray(aff), jnp.asarray(hed))
             zero = np.tile(configs.sum(axis=1) == 0, n_p)
+            if telemetry:
+                active_l = np.tile(active, (n_p, 1))
+                tos_d, prio, fr0_d, n_act, iota, width = self._tel_operands(
+                    tos, active_l, fr0)
+                _, (lat, start, packed) = _scan_policy_tel_batch(
+                    self._arrivals, self._service, tos_d, prio, fr0_d,
+                    jnp.asarray(np.ascontiguousarray(pref[:, :width])),
+                    jnp.asarray(aff), jnp.asarray(hed), n_act, iota)
+            else:
+                _, (lat, _, _) = _scan_policy_batch(
+                    self._arrivals, self._service, jnp.asarray(tos),
+                    self._priority, jnp.asarray(fr0), jnp.asarray(pref),
+                    jnp.asarray(aff), jnp.asarray(hed))
         out = np.asarray(jax.device_get(lat), dtype=np.float64)
         out[zero, :] = np.inf
         if stacked:
-            out = out.reshape(policy.n_policies, len(configs), n)
-        return out
+            out = out.reshape(n_p, n_b, n)
+        tel = None
+        if telemetry:
+            tel = self._tel_batch(lat, start, packed, tel_shape, zero)
+        return out, tel
 
     def latencies_batch(self, configs) -> np.ndarray:
         """Deprecated: ``simulate(configs).lat``."""
@@ -1196,7 +1695,9 @@ class PoolSimulator:
         return jnp.asarray(tables, dtype=jnp.float32)
 
     def _sim_grid(self, configs, load_factors, service_tables, policy,
-                  state, deployed, now, warmup) -> np.ndarray:
+                  state, deployed, now, warmup,
+                  telemetry: bool = False) -> tuple[np.ndarray,
+                                                    "Telemetry | None"]:
         """Grid core: per-query latencies on the (workload × config) grid,
         one dispatch — (W, B, n_queries) float64 where cell ``[w, b]``
         equals ``PoolSimulator(..., workload.scaled(load_factors[w]))`` on
@@ -1206,16 +1707,25 @@ class PoolSimulator:
         (B, S) carry serves every workload row).  ``service_tables``
         (optional, (W, n_types, n_queries)) gives each workload row its own
         table — the batch-distribution axis.  A stacked policy folds into
-        the lane axis and returns (W, P, B, n_queries)."""
+        the lane axis and returns (W, P, B, n_queries).  With ``telemetry``
+        the scan outputs feed the grid finalize pass (leading dims (W,
+        [P,] B)); the second element is None otherwise."""
         arrivals = self._stacked_arrivals(load_factors)
         n_w = len(arrivals)
         n = self.workload.n_queries
+        n_b = len(configs)
         tables = self._stacked_service(service_tables, n_w)
         stacked = policy is not None and policy.stacked
-        if configs.size == 0:
-            shape = ((n_w, policy.n_policies, 0, n) if stacked
-                     else (n_w, 0, n))
-            return np.zeros(shape, dtype=np.float64)
+        n_p = policy.n_policies if stacked else 1
+        tel_shape = (n_w, n_p, n_b) if stacked else None
+        if configs.size == 0 or n == 0:
+            if configs.size:
+                self._slots_batch(configs)  # keep shape/padding validation
+            shape = ((n_w, n_p, n_b, n) if stacked else (n_w, n_b, n))
+            tel = None
+            if telemetry:
+                tel = Telemetry.zeros(len(self.types), shape[:-1])
+            return np.zeros(shape, dtype=np.float64), tel
         type_of_slot, active = self._slots_batch(configs)
         if state is None:
             free0 = _cold_free0(active)
@@ -1226,32 +1736,59 @@ class PoolSimulator:
                 state, free_mat, active, float(arrivals[:, -1].max()),
                 "warm-start grid")
         arr_dev = jnp.asarray(arrivals, jnp.float32)
+        svc = self._service if tables is None else tables
+        start = packed = None
         if policy is None:
-            if tables is None:
-                _, (lat, _, _) = _simulate_scan_grid(
-                    arr_dev, self._service, jnp.asarray(type_of_slot),
-                    self._priority, jnp.asarray(free0))
-            else:
-                _, (lat, _, _) = _simulate_scan_grid_tables(
-                    arr_dev, tables, jnp.asarray(type_of_slot),
-                    self._priority, jnp.asarray(free0))
             zero = configs.sum(axis=1) == 0
+            if telemetry:
+                tos_d, prio, fr0_d, n_act, iota, _ = self._tel_operands(
+                    type_of_slot, active, free0)
+                kernel = (_scan_tel_grid if tables is None
+                          else _scan_tel_grid_tables)
+                _, (lat, start, packed) = kernel(
+                    arr_dev, svc, tos_d, prio, fr0_d, n_act, iota)
+            else:
+                kernel = (_simulate_scan_grid if tables is None
+                          else _simulate_scan_grid_tables)
+                _, (lat, _, _) = kernel(
+                    arr_dev, svc, jnp.asarray(type_of_slot),
+                    self._priority, jnp.asarray(free0))
         else:
             tos, fr0, pref, aff, hed, n_p = _fold_policy(policy,
                                                          type_of_slot, free0)
-            kernel = (_scan_policy_grid if tables is None
-                      else _scan_policy_grid_tables)
-            svc = self._service if tables is None else tables
-            _, (lat, _, _) = kernel(
-                arr_dev, svc, jnp.asarray(tos), self._priority,
-                jnp.asarray(fr0), jnp.asarray(pref), jnp.asarray(aff),
-                jnp.asarray(hed))
             zero = np.tile(configs.sum(axis=1) == 0, n_p)
+            if telemetry:
+                active_l = np.tile(active, (n_p, 1))
+                tos_d, prio, fr0_d, n_act, iota, width = self._tel_operands(
+                    tos, active_l, fr0)
+                kernel = (_scan_policy_tel_grid if tables is None
+                          else _scan_policy_tel_grid_tables)
+                _, (lat, start, packed) = kernel(
+                    arr_dev, svc, tos_d, prio, fr0_d,
+                    jnp.asarray(np.ascontiguousarray(pref[:, :width])),
+                    jnp.asarray(aff), jnp.asarray(hed), n_act, iota)
+            else:
+                kernel = (_scan_policy_grid if tables is None
+                          else _scan_policy_grid_tables)
+                _, (lat, _, _) = kernel(
+                    arr_dev, svc, jnp.asarray(tos), self._priority,
+                    jnp.asarray(fr0), jnp.asarray(pref), jnp.asarray(aff),
+                    jnp.asarray(hed))
         out = np.asarray(jax.device_get(lat), dtype=np.float64)
         out[:, zero, :] = np.inf
+        tel = None
+        if telemetry:
+            fin_jit = (_tel_finalize_grid if tables is None
+                       else _tel_finalize_grid_tables)
+            parts = fin_jit(
+                lat, start, packed, arr_dev, svc,
+                jnp.float32(_qos_threshold_f32(self.model.qos_latency)),
+                _edges_dev())
+            tel = _device_telemetry(parts, len(self.types), zero=zero,
+                                    shape=tel_shape)
         if stacked:
-            out = out.reshape(n_w, policy.n_policies, len(configs), n)
-        return out
+            out = out.reshape(n_w, n_p, n_b, n)
+        return out, tel
 
     def latencies_grid(self, configs, load_factors,
                        service_tables=None) -> np.ndarray:
@@ -1271,7 +1808,9 @@ class PoolSimulator:
         return min(width, self.max_instances)
 
     def _qos_grid(self, configs, load_factors, service_tables, policy,
-                  state, deployed, now, warmup) -> np.ndarray:
+                  state, deployed, now, warmup,
+                  telemetry: bool = False) -> tuple[np.ndarray,
+                                                    "Telemetry | None"]:
         """QoS-rate grid core: (W, B) float64 — or (W, P, B) under a
         stacked policy — where cell ``[w, b]`` equals ``PoolSimulator(...,
         workload.scaled(load_factors[w]))``'s single-lane rate for
@@ -1289,14 +1828,28 @@ class PoolSimulator:
         the batch lane; the rounded-down float32 threshold (see
         ``_qos_threshold_f32``) keeps device counts bit-compatible with
         the host comparison either way.
+
+        With ``telemetry`` the sweep runs the in-carry accumulator kernels
+        (``_grid_lane_qos_counts_tel``): same dispatch recurrence, same
+        count arithmetic, constant memory — only the counters cross back to
+        the host.  The second element is None otherwise.
         """
         arrivals = self._stacked_arrivals(load_factors)
         n_w = len(arrivals)
+        n_b = len(configs)
         tables = self._stacked_service(service_tables, n_w)
         stacked = policy is not None and policy.stacked
-        if configs.size == 0:
-            shape = (n_w, policy.n_policies, 0) if stacked else (n_w, 0)
-            return np.zeros(shape, dtype=np.float64)
+        n_p = policy.n_policies if stacked else 1
+        if configs.size == 0 or self.workload.n_queries == 0:
+            if configs.size:
+                self._slots_batch(configs)  # keep shape/padding validation
+            shape = (n_w, n_p, n_b) if stacked else (n_w, n_b)
+            tel = (Telemetry.zeros(len(self.types), shape)
+                   if telemetry else None)
+            if self.workload.n_queries == 0 and configs.size:
+                # 0/0 convention: an empty stream has no violations.
+                return np.full(shape, np.nan, dtype=np.float64), tel
+            return np.zeros(shape, dtype=np.float64), tel
         type_of_slot, active = self._slots_batch(configs)
         if state is None:
             free0 = _cold_free0(active)
@@ -1306,12 +1859,19 @@ class PoolSimulator:
             free0 = self._warm_free0_rows(
                 state, free_mat, active, float(arrivals[:, -1].max()),
                 "warm-start grid")
-        counts = self._qos_counts_grid(arrivals, tables, type_of_slot,
-                                       free0, configs, load_factors, policy)
+        tel = None
+        if telemetry:
+            counts, tel = self._qos_counts_grid_tel(
+                arrivals, tables, type_of_slot, free0, configs, policy,
+                (n_w, n_p, n_b) if stacked else None)
+        else:
+            counts = self._qos_counts_grid(arrivals, tables, type_of_slot,
+                                           free0, configs, load_factors,
+                                           policy)
         rates = counts.astype(np.float64) / self.workload.n_queries
         if stacked:
-            rates = rates.reshape(n_w, policy.n_policies, len(configs))
-        return rates
+            rates = rates.reshape(n_w, n_p, n_b)
+        return rates, tel
 
     def qos_rate_grid(self, configs, load_factors,
                       service_tables=None) -> np.ndarray:
@@ -1366,6 +1926,58 @@ class PoolSimulator:
             self._priority[:width], jnp.asarray(free0),
             jnp.arange(width, dtype=jnp.int32), qos_t)
         return np.asarray(jax.device_get(counts))
+
+    def _qos_counts_grid_tel(self, arrivals, tables, type_of_slot,
+                             free0_rows, configs, policy,
+                             tel_shape) -> tuple[np.ndarray, Telemetry]:
+        """Telemetry twin of ``_qos_counts_grid``: the in-carry accumulator
+        kernels over the same trimmed layout.  Single-device executable only
+        (the pmap shard path stays telemetry-off); the QoS counts come from
+        the identical dispatch recurrence and comparison, so the rates are
+        bit-identical to the lean sweep's."""
+        width = self._grid_slot_pad(configs.sum(axis=1))
+        arr = np.asarray(arrivals, np.float32)                # (W, nq)
+        tos = np.ascontiguousarray(type_of_slot[:, :width])   # (B, S)
+        free0 = np.ascontiguousarray(free0_rows[:, :width])
+        n_active = configs.sum(axis=1).astype(np.int32)
+        zero = n_active == 0
+
+        qos_t = jnp.float32(_qos_threshold_f32(self.model.qos_latency))
+        iota = jnp.arange(width, dtype=jnp.int32)
+        iota_t = jnp.arange(len(self.types), dtype=jnp.int32)
+        iota_k = jnp.arange(N_BUCKETS, dtype=jnp.int32)
+        edges = _edges_dev()
+        if policy is not None:
+            tos, free0, pref, aff, hed, n_p = _fold_policy(policy, tos,
+                                                           free0)
+            n_active = np.tile(n_active, n_p)
+            zero = np.tile(zero, n_p)
+            lane = (jnp.asarray(tos), self._priority[:width],
+                    jnp.asarray(free0), iota, qos_t,
+                    jnp.asarray(n_active), iota_t, iota_k, edges,
+                    jnp.asarray(pref), jnp.asarray(aff), jnp.asarray(hed))
+            if tables is not None:
+                out = _grid_counts_policy_tel_tables_jit(
+                    jnp.asarray(arr), jnp.transpose(tables, (0, 2, 1)),
+                    *lane)
+            else:
+                out = _grid_counts_policy_tel_jit(
+                    jnp.asarray(arr), self._service.T, *lane)
+        else:
+            lane = (jnp.asarray(tos), self._priority[:width],
+                    jnp.asarray(free0), iota, qos_t,
+                    jnp.asarray(n_active), iota_t, iota_k, edges)
+            if tables is not None:
+                out = _grid_counts_tel_tables_jit(
+                    jnp.asarray(arr), jnp.transpose(tables, (0, 2, 1)),
+                    *lane)
+            else:
+                out = _grid_counts_tel_jit(
+                    jnp.asarray(arr), self._service.T, *lane)
+        counts = np.asarray(jax.device_get(out[0]))
+        tel = _device_telemetry(out[1:], len(self.types), zero=zero,
+                                shape=tel_shape)
+        return counts, tel
 
     def _grid_replicated_consts(self, width: int, n_dev: int) -> tuple:
         """Per-device replicas of the sweep constants (service table,

@@ -105,6 +105,11 @@ def _batch_eval_doc():
                     "bit_identical": True, "surge_factor": 1.6,
                     "qos_target": 0.99, "fcfs_min_cost": 3.0,
                     "routed_min_cost": 2.0},
+        "telemetry": {"batch_size": 32, "n_queries": 1500,
+                      "wall_time_off_s": 0.01, "wall_time_on_s": 0.0105,
+                      "overhead": 1.05, "bit_identical": True,
+                      "served_counts_by_lane": {"batch": True},
+                      "served_counts_ok": True},
     }
 
 
@@ -137,6 +142,42 @@ def test_batch_eval_routing_and_grid_gates(tmp_path, capsys):
     path.write_text(json.dumps(doc))
     assert CB.main([str(path)]) == 1
     assert "joint speedup" in capsys.readouterr().out
+
+
+def test_batch_eval_telemetry_gates(tmp_path, capsys):
+    path = tmp_path / "BENCH_batch_eval.json"
+    # a batch_eval artifact without a telemetry section is incomplete
+    doc = _batch_eval_doc()
+    del doc["telemetry"]
+    path.write_text(json.dumps(doc))
+    assert CB.main([str(path)]) == 1
+    assert "telemetry" in capsys.readouterr().out
+    # overhead over the full-size ceiling fails
+    doc = _batch_eval_doc()
+    doc["telemetry"]["overhead"] = 1.2
+    path.write_text(json.dumps(doc))
+    assert CB.main([str(path)]) == 1
+    assert "telemetry-on overhead" in capsys.readouterr().out
+    # ...but the same overhead passes on a smoke (shrunken) artifact
+    doc["n_queries"] = 400
+    path.write_text(json.dumps(doc))
+    assert CB.main([str(path)]) == 0
+    capsys.readouterr()
+    # primary-output divergence and count-conservation failures are fatal
+    doc = _batch_eval_doc()
+    doc["telemetry"]["bit_identical"] = False
+    path.write_text(json.dumps(doc))
+    assert CB.main([str(path)]) == 1
+    assert "diverge" in capsys.readouterr().out
+    doc = _batch_eval_doc()
+    doc["telemetry"]["served_counts_ok"] = False
+    doc["telemetry"]["served_counts_by_lane"] = {"batch": True, "grid": False}
+    path.write_text(json.dumps(doc))
+    assert CB.main([str(path)]) == 1
+    assert "grid" in capsys.readouterr().out
+    # telemetry_overhead participates in the trend metrics, lower = better
+    metrics = CB.trend_metrics(_batch_eval_doc())
+    assert metrics["telemetry_overhead"] == (1.05, "lower")
 
 
 def test_schema_only_skips_kind_gates_but_validates_schema(tmp_path,

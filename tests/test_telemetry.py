@@ -1,0 +1,326 @@
+"""Device-resident telemetry plane: the three telemetry styles (twin-scan
+finalize, in-carry grid accumulators, host numpy mirror) must agree bit for
+bit, primary outputs must be bit-identical with telemetry off on every lane,
+and the histogram estimators must stay within one log bucket of the exact
+sample statistics."""
+
+import numpy as np
+import pytest
+
+from repro.serving.instance import InstanceType, ModelProfile
+from repro.serving.routing import RoutingPolicy, named_policy
+from repro.serving.simulator import (PoolSimulator, PoolState,
+                                     _qos_threshold_f32)
+from repro.serving.telemetry import (BUCKET_EDGES, N_BUCKETS, Telemetry,
+                                     bucket_index, from_arrays)
+from repro.serving.workload import generate_workload
+
+FAST = InstanceType("fast", price=1.0, flops=1e9, mem_bw=1e9, overhead=1e-3)
+SLOW = InstanceType("slow", price=0.3, flops=2e8, mem_bw=5e8, overhead=2e-3)
+PROF = ModelProfile("toy", flops_per_sample=1e6, act_bytes_per_sample=1e4,
+                    weight_bytes=1e5, qos_latency=0.05)
+MAX_INST = 8
+
+
+def _sim(seed=0, n=300, rate=200.0):
+    wl = generate_workload(seed, n, rate, median_batch=8.0, max_batch=32)
+    return PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=MAX_INST)
+
+
+def _tel_fields(tel):
+    return (tel.served, tel.miss, tel.busy_ms, tel.lat_hist, tel.wait_hist,
+            tel.depth_sum, tel.depth_peak)
+
+
+def assert_tel_equal(a: Telemetry, b: Telemetry):
+    for x, y in zip(_tel_fields(a), _tel_fields(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+CFGS = [(2, 1), (1, 0), (3, 3), (0, 2)]
+
+
+# ------------------------------------------------------------ basic counters
+@pytest.mark.parametrize("config", CFGS)
+def test_served_counts_sum_to_n_queries(config):
+    sim = _sim()
+    tel = sim.qos(config, telemetry=True).telemetry
+    assert int(tel.served.sum()) == sim.workload.n_queries
+    assert tel.n == sim.workload.n_queries
+    assert int(tel.lat_hist.sum()) == sim.workload.n_queries
+    assert int(tel.wait_hist.sum()) == sim.workload.n_queries
+
+
+def test_zero_config_serves_nothing():
+    sim = _sim()
+    tel = sim.qos((0, 0), telemetry=True).telemetry
+    assert int(tel.served.sum()) == 0
+    assert int(tel.lat_hist.sum()) == 0
+    assert int(tel.depth_peak) == 0
+
+
+def test_miss_counts_reconcile_with_qos_rate():
+    """served - miss is exactly the device's QoS-pass count."""
+    sim = _sim()
+    for config in CFGS:
+        r = sim.qos(config, telemetry=True)
+        tel = r.telemetry
+        passes = int(tel.served.sum() - tel.miss.sum())
+        assert passes == round(float(r.rates) * sim.workload.n_queries)
+
+
+def test_single_type_pool_attributes_everything_to_that_type():
+    sim = _sim()
+    tel = sim.qos((0, 2), telemetry=True).telemetry
+    assert int(tel.served[0]) == 0
+    assert int(tel.busy_ms[0]) == 0
+    assert int(tel.served[1]) == sim.workload.n_queries
+
+
+# ----------------------------------------------- on/off primary bit-identity
+@pytest.mark.parametrize("config", CFGS)
+def test_batch_lane_bit_identical_on_vs_off(config):
+    sim = _sim()
+    cfgs = [config, (1, 1), (2, 2)]
+    off = sim.qos(cfgs)
+    on = sim.qos(cfgs, telemetry=True)
+    np.testing.assert_array_equal(np.asarray(off.rates), np.asarray(on.rates))
+    np.testing.assert_array_equal(sim.simulate(cfgs).lat,
+                                  sim.simulate(cfgs, telemetry=True).lat)
+
+
+def test_grid_lane_bit_identical_on_vs_off():
+    sim = _sim()
+    cfgs = [(2, 1), (1, 2), (3, 0)]
+    wls = [0.8, 1.0, 1.5]
+    off = sim.qos(cfgs, workloads=wls)
+    on = sim.qos(cfgs, workloads=wls, telemetry=True)
+    np.testing.assert_array_equal(np.asarray(off.rates), np.asarray(on.rates))
+    np.testing.assert_array_equal(sim.simulate(cfgs, workloads=wls).lat,
+                                  sim.simulate(cfgs, workloads=wls,
+                                               telemetry=True).lat)
+
+
+def test_policy_lanes_bit_identical_on_vs_off():
+    sim = _sim()
+    cfgs = [(2, 1), (1, 1)]
+    prices = [FAST.price, SLOW.price]
+    stacked = RoutingPolicy.stack([named_policy(k, prices) for k in
+                                   ("fcfs", "hedged")])
+    for policy in (named_policy("hedged", prices), stacked):
+        off = sim.qos(cfgs, policy=policy)
+        on = sim.qos(cfgs, policy=policy, telemetry=True)
+        np.testing.assert_array_equal(np.asarray(off.rates),
+                                      np.asarray(on.rates))
+
+
+def test_warm_lanes_bit_identical_on_vs_off_including_carry():
+    sim = _sim()
+    state = PoolState(free=np.full(MAX_INST, 0.4), clock=0.2)
+    cfgs = [(2, 1), (1, 1), (0, 2)]
+    off = sim.qos(cfgs, state=state, deployed=(2, 1))
+    on = sim.qos(cfgs, state=state, deployed=(2, 1), telemetry=True)
+    np.testing.assert_array_equal(np.asarray(off.rates), np.asarray(on.rates))
+    for s_off, s_on in zip(np.atleast_1d(off.state), np.atleast_1d(on.state)):
+        np.testing.assert_array_equal(s_off.free, s_on.free)
+        assert s_off.clock == s_on.clock
+
+
+def test_single_lane_bit_identical_on_vs_off():
+    sim = _sim()
+    for config in CFGS:
+        np.testing.assert_array_equal(sim.simulate(config).lat,
+                                      sim.simulate(config,
+                                                   telemetry=True).lat)
+
+
+# --------------------------------------------- cross-style bit-equivalence
+@pytest.mark.parametrize("config", [(2, 1), (1, 2), (4, 0)])
+def test_grid_cell_equals_batch_lane_telemetry(config):
+    """The in-carry grid accumulators and the twin-scan finalize are two
+    independent device implementations; a 1.0-factor grid cell must equal
+    the batch lane bit for bit."""
+    sim = _sim()
+    batch = sim.qos([config, (1, 1)], telemetry=True).telemetry[0]
+    grid = sim.qos([config, (1, 1)], workloads=[1.0],
+                   telemetry=True).telemetry[0, 0]
+    assert_tel_equal(batch, grid)
+
+
+@pytest.mark.parametrize("config", [(2, 1), (3, 3)])
+def test_host_mirror_equals_device_telemetry(config):
+    """The numpy reference (segment trace -> from_arrays/queue_depth) must
+    reproduce the device finalize bit for bit."""
+    sim = _sim()
+    device = sim.qos(config, telemetry=True).telemetry
+    seg = sim.segment_from(sim.initial_state(), config, telemetry=True)
+    assert_tel_equal(device, seg.telemetry)
+
+
+def test_policy_batch_rows_equal_single_policy_telemetry():
+    sim = _sim()
+    pols = [named_policy(k, [FAST.price, SLOW.price])
+            for k in ("fcfs", "hedged")]
+    stacked = RoutingPolicy.stack(pols)
+    cfgs = [(2, 1), (1, 1)]
+    joint = sim.qos(cfgs, policy=stacked, telemetry=True).telemetry
+    for p, pol in enumerate(pols):
+        rows = sim.qos(cfgs, policy=pol, telemetry=True).telemetry
+        for b in range(len(cfgs)):
+            assert_tel_equal(joint[p, b], rows[b])
+
+
+# ------------------------------------------------- chunked-segment merging
+def test_window_slices_merge_to_one_shot_exactly():
+    sim = _sim()
+    seg = sim.segment_from(sim.initial_state(), (2, 1))
+    full = sim.segment_telemetry(seg, (2, 1))
+    n = sim.workload.n_queries
+    for cuts in ([0, 100, n], [0, 1, 2, n], [0, 37, 38, 200, n]):
+        acc = Telemetry.zeros(2)
+        for lo, hi in zip(cuts[:-1], cuts[1:]):
+            acc = acc + sim.segment_telemetry(seg, (2, 1), lo, hi)
+        assert_tel_equal(acc, full)
+
+
+def test_merge_rejects_shape_mismatch():
+    with pytest.raises(ValueError, match="different shapes"):
+        Telemetry.zeros(2).merge(Telemetry.zeros(3))
+
+
+def test_chunked_streams_merge_to_concatenated_stream():
+    """Serving a stream in two chunks through the carried state and merging
+    the two segment telemetries equals the one-shot telemetry of the
+    concatenated stream (integer accumulators + exact carry chaining)."""
+    sim = _sim(n=240)
+    seg = sim.segment_from(sim.initial_state(), (2, 1))
+    k = 150
+    first = sim.segment_telemetry(seg, (2, 1), 0, k)
+    second = sim.segment_telemetry(seg, (2, 1), k, None)
+    assert_tel_equal(first + second, sim.segment_telemetry(seg, (2, 1)))
+
+
+# --------------------------------------------------- histogram percentiles
+def test_bucket_edges_are_float32_exact_powers_of_two():
+    assert N_BUCKETS == 32
+    assert len(BUCKET_EDGES) == N_BUCKETS - 1
+    ratios = BUCKET_EDGES[1:] / BUCKET_EDGES[:-1]
+    np.testing.assert_array_equal(ratios, np.full(N_BUCKETS - 2, 2.0,
+                                                  dtype=np.float32))
+
+
+@pytest.mark.parametrize("pct", [50.0, 95.0, 99.0])
+@pytest.mark.parametrize("config", [(2, 1), (1, 0), (3, 3)])
+def test_percentile_within_one_bucket_of_exact(config, pct):
+    """The nearest-rank histogram estimate must land in (or at the upper
+    edge of) the bucket containing the exact sample percentile — i.e.
+    within a factor-of-two bracket."""
+    sim = _sim()
+    tel = sim.qos(config, telemetry=True).telemetry
+    lat = np.asarray(sim.simulate(config).lat, dtype=np.float32)
+    exact = float(np.percentile(lat, pct, method="inverted_cdf"))
+    est = tel.latency_percentile(pct)
+    k_exact = int(bucket_index(np.float32(exact)))
+    k_est = int(np.searchsorted(
+        np.concatenate([BUCKET_EDGES, [np.float32(np.inf)]]), est))
+    assert abs(k_est - k_exact) <= 1
+    # The estimate is an upper edge: never below the exact percentile.
+    assert est >= exact * (1.0 - 1e-6)
+
+
+def test_percentile_monotone_in_pct():
+    sim = _sim()
+    tel = sim.qos((2, 1), telemetry=True).telemetry
+    ps = [tel.latency_percentile(p) for p in (10, 50, 90, 99, 100)]
+    assert all(a <= b for a, b in zip(ps, ps[1:]))
+
+
+def test_percentile_requires_unbatched_lane():
+    sim = _sim()
+    tel = sim.qos([(2, 1), (1, 1)], telemetry=True).telemetry
+    with pytest.raises(ValueError, match="unbatched"):
+        tel.latency_percentile(99.0)
+    assert tel[0].latency_percentile(99.0) > 0.0
+
+
+def test_tail_latency_matches_telemetry_percentile():
+    sim = _sim()
+    tel = sim.qos((2, 1), telemetry=True).telemetry
+    assert sim.tail_latency((2, 1), 99.0) == tel.latency_percentile(99.0)
+    # warm + routed tails ride the same surface
+    state = PoolState(free=np.full(MAX_INST, 0.3), clock=0.1)
+    warm_tel = sim.qos((2, 1), state=state, deployed=(2, 1),
+                       telemetry=True).telemetry
+    assert (sim.tail_latency((2, 1), 95.0, state=state)
+            == pytest.approx(warm_tel.latency_percentile(95.0)))
+
+
+# ------------------------------------------------------- derived quantities
+def test_utilization_bounded_and_zero_for_absent_types():
+    sim = _sim()
+    tel = sim.qos((2, 0), telemetry=True).telemetry
+    span = float(sim.workload.arrivals[-1])
+    util = tel.utilization((2, 0), span)
+    assert util.shape == (2,)
+    assert util[1] == 0.0
+    assert 0.0 < util[0]
+
+
+def test_from_arrays_matches_hand_counts():
+    lat = np.array([0.01, 0.2, 0.0005], dtype=np.float32)
+    wait = np.array([0.0, 0.1, 0.0], dtype=np.float32)
+    svc = np.array([0.01, 0.1, 0.0005], dtype=np.float32)
+    tslot = np.array([0, 1, 0])
+    qos_t = _qos_threshold_f32(0.05)
+    tel = from_arrays(lat, wait, svc, tslot, 2, qos_t,
+                      depth=np.array([0, 1, 2]))
+    np.testing.assert_array_equal(tel.served, [2, 1])
+    np.testing.assert_array_equal(tel.miss, [0, 1])
+    np.testing.assert_array_equal(tel.busy_ms, [10, 100])
+    assert int(tel.depth_sum) == 3 and int(tel.depth_peak) == 2
+    assert int(tel.lat_hist.sum()) == 3
+
+
+def test_to_dict_is_json_safe_and_finite():
+    import json
+
+    sim = _sim()
+    doc = sim.qos((2, 1), telemetry=True).telemetry.to_dict()
+    rt = json.loads(json.dumps(doc))
+    assert rt["p50"] <= rt["p95"] <= rt["p99"]
+    assert sum(rt["served"]) == sim.workload.n_queries
+
+
+# ----------------------------------------------------------- property sweep
+def test_prop_all_lanes_bit_identical_and_counts_conserved():
+    """Hypothesis (shim) sweep: across workload seeds/rates and pool mixes,
+    telemetry-on never perturbs a primary output and served counts always
+    sum to n_queries on batch, grid and policy lanes."""
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=8)
+    @given(st.integers(min_value=0, max_value=10_000),
+           st.floats(min_value=60.0, max_value=600.0))
+    def run(seed, rate):
+        sim = _sim(seed=seed, n=120, rate=rate)
+        cfgs = [(2, 1), (0, 1), (1, 3)]
+        off = sim.qos(cfgs)
+        on = sim.qos(cfgs, telemetry=True)
+        np.testing.assert_array_equal(np.asarray(off.rates),
+                                      np.asarray(on.rates))
+        np.testing.assert_array_equal(
+            np.asarray(on.telemetry.served.sum(axis=-1)), [120, 120, 120])
+        gon = sim.qos(cfgs, workloads=[1.0, 1.3], telemetry=True)
+        np.testing.assert_array_equal(
+            np.asarray(gon.rates),
+            np.asarray(sim.qos(cfgs, workloads=[1.0, 1.3]).rates))
+        assert int(gon.telemetry.served.sum()) == 120 * 2 * 3
+        pol = named_policy("hedged", [FAST.price, SLOW.price])
+        pon = sim.qos(cfgs, policy=pol, telemetry=True)
+        np.testing.assert_array_equal(
+            np.asarray(pon.rates), np.asarray(sim.qos(cfgs, policy=pol).rates))
+        np.testing.assert_array_equal(
+            np.asarray(pon.telemetry.served.sum(axis=-1)), [120, 120, 120])
+
+    run()

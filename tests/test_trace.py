@@ -1,0 +1,198 @@
+"""Control-plane trace export + report observability surface.
+
+Contracts under test:
+
+* :class:`TraceRecorder` serializes valid Chrome-trace-event JSON —
+  microsecond integer timestamps, named thread lanes, metadata excluded
+  from ``n_events``;
+* a traced episode emits the expected span families (phases, windows,
+  searches, deploys, events) at episode-time coordinates, and tracing is
+  pure observability — the report is bit-identical with and without a
+  recorder attached;
+* ``WindowStat`` enrichment (histogram percentiles, per-type utilization
+  and miss attribution) is populated from the telemetry plane and the
+  ``window_stats`` knob turns it off;
+* ``EpisodeReport.to_dict(windows="summary")`` digests the per-window
+  list into the fixed-size summary the bench artifact keeps.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.search_space import SearchSpace
+from repro.scenario import (EventSpec, PhaseSpec, ScenarioEngine,
+                            ScenarioSpec, SimulatorPlane, TraceRecorder)
+from repro.scenario.trace import TID_EVENTS, TID_PHASES, TID_WINDOWS, _us
+from repro.serving.instance import InstanceType, ModelProfile
+from repro.serving.workload import generate_workload
+
+FAST = InstanceType("fast", price=1.0, flops=1e9, mem_bw=1e9, overhead=1e-3)
+SLOW = InstanceType("slow", price=0.3, flops=2e8, mem_bw=5e8, overhead=2e-3)
+PROF = ModelProfile("toy", flops_per_sample=1e6, act_bytes_per_sample=1e4,
+                    weight_bytes=1e5, qos_latency=0.05)
+MAX_INST = 8
+
+
+def _plane(n=400, seed=0, rate=120.0):
+    wls = {"lognormal": generate_workload(seed, n, rate, median_batch=8.0,
+                                          max_batch=32)}
+    return SimulatorPlane(PROF, [FAST, SLOW], wls, max_instances=MAX_INST)
+
+
+def _space():
+    return SearchSpace(bounds=(4, 4), prices=(1.0, 0.3))
+
+
+def _spec(n=400, window=100, events=(), window_stats=True):
+    return ScenarioSpec(
+        name="traced", phases=(PhaseSpec("steady", n),), window=window,
+        events=tuple(events), seed=0, window_stats=window_stats).validate()
+
+
+def _run(spec, trace=None):
+    return ScenarioEngine(spec, _plane(n=spec.phases[0].n_queries),
+                          _space(), trace=trace).run()
+
+
+# ------------------------------------------------------------- recorder unit
+def test_recorder_event_shapes_and_us_conversion():
+    rec = TraceRecorder(process_name="p")
+    rec.span("work", 1.5, 0.25, tid=TID_PHASES, args={"k": 1})
+    rec.instant("mark", 2.0, tid=TID_EVENTS)
+    rec.counter("qos", 2.5, {"rate": 0.75})
+    assert rec.n_events == 3          # metadata rows excluded
+    span = next(e for e in rec.events if e["ph"] == "X")
+    assert span["ts"] == 1_500_000 and span["dur"] == 250_000
+    assert span["tid"] == TID_PHASES and span["args"] == {"k": 1}
+    inst = next(e for e in rec.events if e["ph"] == "i")
+    assert inst["ts"] == 2_000_000 and inst["s"] == "t"
+    ctr = next(e for e in rec.events if e["ph"] == "C")
+    assert ctr["args"] == {"rate": 0.75} and ctr["tid"] == TID_WINDOWS
+    assert _us(1e-6) == 1
+
+
+def test_recorder_clamps_negative_durations():
+    rec = TraceRecorder()
+    rec.span("s", 1.0, -0.5)
+    assert next(e for e in rec.events if e["ph"] == "X")["dur"] == 0
+
+
+def test_recorder_names_thread_lanes():
+    rec = TraceRecorder()
+    names = {e["tid"]: e["args"]["name"] for e in rec.events
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert names[TID_PHASES] == "phases"
+    assert names[TID_WINDOWS] == "monitor windows"
+
+
+def test_recorder_dump_round_trips(tmp_path):
+    rec = TraceRecorder()
+    rec.span("s", 0.0, 1.0)
+    path = tmp_path / "trace.json"
+    rec.dump(str(path))
+    doc = json.loads(path.read_text())
+    assert doc["displayTimeUnit"] == "ms"
+    assert doc["traceEvents"] == rec.events
+
+
+# ------------------------------------------------------------ traced episode
+def test_traced_episode_emits_expected_span_families():
+    rec = TraceRecorder()
+    spec = _spec(events=(EventSpec("spot_preemption", 0, at_frac=0.5,
+                                   count=1),))
+    _run(spec, trace=rec)
+    names = [e["name"] for e in rec.events if e["ph"] != "M"]
+    assert "search:initial" in names
+    assert "phase:steady" in names
+    assert "window" in names
+    assert "deploy" in names
+    assert any(n.startswith("event:spot_preemption") for n in names)
+    # every non-metadata event sits at a nonnegative microsecond timestamp
+    assert all(e["ts"] >= 0 for e in rec.events if e["ph"] != "M")
+
+
+def test_phase_span_covers_windows():
+    rec = TraceRecorder()
+    _run(_spec(), trace=rec)
+    phase = next(e for e in rec.events
+                 if e["ph"] == "X" and e["name"].startswith("phase:"))
+    windows = [e for e in rec.events
+               if e["ph"] == "X" and e["name"] == "window"]
+    assert windows
+    for w in windows:
+        assert w["ts"] >= phase["ts"]
+        assert w["ts"] + w["dur"] <= phase["ts"] + phase["dur"] + 1
+
+
+def test_tracing_is_pure_observability():
+    """Attaching a recorder must not change a single reported number."""
+    spec = _spec(events=(EventSpec("spot_preemption", 0, at_frac=0.5,
+                                   count=1),))
+    plain = _run(spec)
+    traced = _run(spec, trace=TraceRecorder())
+    assert plain.to_dict() == traced.to_dict()
+
+
+# ------------------------------------------------- WindowStat enrichment
+def test_window_stats_enriched_from_telemetry():
+    report = _run(_spec())
+    assert report.windows
+    for w in report.windows:
+        assert w.p50 <= w.p95 <= w.p99
+        assert len(w.util_by_type) == 2
+        assert len(w.miss_by_type) == 2
+        assert all(0.0 <= u for u in w.util_by_type)
+    served_misses = sum(sum(w.miss_by_type) for w in report.windows)
+    assert served_misses >= 0
+
+
+def test_window_stats_knob_disables_enrichment():
+    report = _run(_spec(window_stats=False))
+    for w in report.windows:
+        assert w.p50 == 0.0 and w.p95 == 0.0 and w.p99 == 0.0
+        assert w.util_by_type == () and w.miss_by_type == ()
+
+
+def test_window_stats_knob_does_not_change_primary_numbers():
+    on = _run(_spec())
+    off = _run(_spec(window_stats=False))
+    assert on.qos_rate == off.qos_rate
+    assert on.total_cost == off.total_cost
+    assert [w.qos_rate for w in on.windows] == [w.qos_rate
+                                                for w in off.windows]
+
+
+# ------------------------------------------------------ report summary mode
+def test_to_dict_summary_mode_digests_windows():
+    report = _run(_spec())
+    full = report.to_dict()
+    summary = report.to_dict(windows="summary")
+    assert isinstance(full["windows"], list)
+    assert summary["windows"]["mode"] == "summary"
+    assert summary["windows"]["count"] == len(full["windows"])
+    assert summary["windows"]["violations"] == report.violation_windows
+    rates = [w["qos_rate"] for w in full["windows"]]
+    assert summary["windows"]["qos_rate_min"] == pytest.approx(min(rates))
+    assert summary["windows"]["qos_rate_max"] == pytest.approx(max(rates))
+    # everything but the windows digest is identical
+    for key in full:
+        if key != "windows":
+            assert full[key] == summary[key]
+    json.dumps(summary)   # JSON-safe
+
+
+def test_to_dict_rejects_unknown_windows_mode():
+    report = _run(_spec())
+    with pytest.raises(ValueError, match="full"):
+        report.to_dict(windows="nope")
+
+
+def test_summary_percentiles_ordered():
+    report = _run(_spec(events=(EventSpec("load_spike", 0, at_frac=0.4,
+                                          factor=2.0),)))
+    s = report.to_dict(windows="summary")["windows"]
+    assert (s["qos_rate_min"] <= s["qos_rate_p10"] <= s["qos_rate_p50"]
+            <= s["qos_rate_p90"] <= s["qos_rate_max"])
+    assert np.isfinite(s["carried_wait_total"])
