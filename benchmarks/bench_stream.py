@@ -1,0 +1,197 @@
+"""Streamed episodes: constant-memory million-query serving benchmark.
+
+Exercises the streaming stack end to end and emits ``BENCH_stream.json``
+(stable schema, gated by ``scripts/check_bench.py``):
+
+  * **stream** — wall-clock throughput of ``StreamingSimulator.qos`` over
+    the full episode (1M queries; ``--smoke`` shrinks to 20k): queries are
+    generated on device chunk by chunk (``WorkloadSpec.generate_chunk``)
+    and scanned through the donated-carry streaming kernel, so the host
+    never materializes the trace.
+  * **memory** — the constant-memory claim, measured: peak live device
+    bytes (``jax.live_arrays()``, sampled by the per-chunk probe) at n and
+    4n queries must agree to within a few percent — peak memory is a
+    function of the chunk size, not the episode length.
+  * **bit_identical** — the streamed QoS rate equals
+    ``PoolSimulator.qos`` on ``spec.realize(n)`` bit for bit at the
+    monolithic reference size (n=1500, the tier-1 workload scale).
+  * **day** — a full diurnal day (registry episode ``diurnal-day``:
+    5 phases x 200k queries) through the scenario engine on a
+    ``stream_chunk``-bounded simulator plane — the end-to-end
+    million-query episode the chunked plane serving exists for.
+    ``--smoke`` runs the same episode at 2k queries/phase.
+
+``check_bench`` gates: streamed == monolithic rate, memory ratio,
+throughput floors, and (full runs) the day episode covering >= 1M queries.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.scenario import (ScenarioEngine, build_episode,
+                            paper_simulator_plane)
+from repro.serving.instance import AWS_INSTANCES, MODEL_PROFILES
+from repro.serving.pool import DEFAULT_RATES, PAPER_POOLS
+from repro.serving.simulator import PoolSimulator, StreamingSimulator
+from repro.serving.workload import WorkloadSpec
+
+from .common import print_table, write_bench_json
+
+MODEL = "mtwnd"
+CONFIG = (2, 3, 3)
+FULL_N = 1_000_000
+SMOKE_N = 20_000
+BIT_N = 1500             # monolithic reference size (tier-1 workload scale)
+STREAM_CHUNK = 4096      # plane segment block size for the day episode
+DAY_SMOKE_N = 2_000
+DAY_SMOKE_WINDOW = 400
+
+
+def _setup():
+    profile = MODEL_PROFILES[MODEL]
+    types = [AWS_INSTANCES[n] for n in PAPER_POOLS[MODEL]["diverse"]]
+    return profile, types
+
+
+def _spec() -> WorkloadSpec:
+    return WorkloadSpec(seed=0, rate_qps=DEFAULT_RATES[MODEL])
+
+
+def bench_stream(n: int) -> dict:
+    profile, types = _setup()
+    sim = StreamingSimulator(profile, types, _spec())
+    sim.qos(CONFIG, 2 * sim.spec.chunk)          # compile warm-up
+    t0 = time.perf_counter()
+    res = sim.qos(CONFIG, n)
+    elapsed = time.perf_counter() - t0
+    return {
+        "n_queries": n,
+        "chunk": sim.spec.chunk,
+        "elapsed_s": elapsed,
+        "qps": n / elapsed,
+        "qos_rate": res.rate,
+        "rebases": res.rebases,
+    }
+
+
+def bench_memory(n: int) -> dict:
+    """Peak live device bytes at n vs 4n streamed queries: the streaming
+    loop holds one generated block plus two donated carries, so the peak
+    must not scale with episode length."""
+    profile, types = _setup()
+    sim = StreamingSimulator(profile, types, _spec())
+    sim.qos(CONFIG, 2 * sim.spec.chunk)          # compile warm-up
+
+    def peak_bytes(nq: int) -> int:
+        peak = 0
+
+        def probe(_c: int) -> None:
+            nonlocal peak
+            peak = max(peak, sum(a.nbytes for a in jax.live_arrays()))
+
+        sim.qos(CONFIG, nq, probe=probe)
+        return peak
+
+    small, large = peak_bytes(n), peak_bytes(4 * n)
+    return {
+        "n_small": n,
+        "n_large": 4 * n,
+        "peak_small_bytes": small,
+        "peak_large_bytes": large,
+        "ratio": large / small,
+    }
+
+
+def bench_bit_identity() -> dict:
+    profile, types = _setup()
+    spec = _spec()
+    streamed = StreamingSimulator(profile, types, spec).qos(CONFIG, BIT_N)
+    mono = PoolSimulator(profile, types, spec.realize(BIT_N))
+    mono_rate = float(mono.qos(CONFIG).rates)
+    return {
+        "n_queries": BIT_N,
+        "streamed_rate": streamed.rate,
+        "monolithic_rate": mono_rate,
+        "ok": streamed.rate == mono_rate,
+    }
+
+
+def bench_day(quick: bool) -> dict:
+    """The diurnal-day episode (5 phases, 1M queries at full size) end to
+    end: chunked plane serving + the scenario engine's adapt loop."""
+    if quick:
+        spec = build_episode("diurnal-day", n=DAY_SMOKE_N,
+                             window=DAY_SMOKE_WINDOW)
+    else:
+        spec = build_episode("diurnal-day")
+    plane, space = paper_simulator_plane(MODEL, spec,
+                                         stream_chunk=STREAM_CHUNK)
+    t0 = time.perf_counter()
+    report = ScenarioEngine(spec, plane, space).run()
+    elapsed = time.perf_counter() - t0
+    return {
+        "episode": spec.name,
+        "n_per_phase": spec.phases[0].n_queries,
+        "window": spec.window,
+        "stream_chunk": STREAM_CHUNK,
+        "total_queries": report.total_queries,
+        "qos_rate": report.qos_rate,
+        "total_cost": report.total_cost,
+        "bo_evals": report.bo_evals,
+        "n_windows": report.n_windows,
+        "violation_windows": report.violation_windows,
+        "final_config": [int(c) for c in report.final_config],
+        "elapsed_s": elapsed,
+        "completed": True,
+    }
+
+
+def run(quick: bool = False):
+    n = SMOKE_N if quick else FULL_N
+    stream = bench_stream(n)
+    memory = bench_memory(SMOKE_N if quick else FULL_N // 4)
+    bit = bench_bit_identity()
+    day = bench_day(quick)
+    print_table(
+        f"Streamed episodes — {MODEL}, config {CONFIG} "
+        f"({'smoke' if quick else 'full'})",
+        ["section", "queries", "wall s", "result"],
+        [
+            ["stream", stream["n_queries"], f"{stream['elapsed_s']:.3f}",
+             f"{stream['qps']:.0f} qps, QoS {stream['qos_rate']:.4f}, "
+             f"{stream['rebases']} rebases"],
+            ["memory", f"{memory['n_small']} vs {memory['n_large']}", "-",
+             f"peak {memory['peak_small_bytes']} vs "
+             f"{memory['peak_large_bytes']} B (x{memory['ratio']:.3f})"],
+            ["bit_identical", bit["n_queries"], "-",
+             f"streamed {bit['streamed_rate']:.6f} == monolithic "
+             f"{bit['monolithic_rate']:.6f}: {bit['ok']}"],
+            ["day", day["total_queries"], f"{day['elapsed_s']:.1f}",
+             f"QoS {day['qos_rate']:.4f}, ${day['total_cost']:.2f}, "
+             f"{day['violation_windows']}/{day['n_windows']} viol."],
+        ])
+    payload = {
+        "model": MODEL,
+        "config": list(CONFIG),
+        "n_queries": n,
+        "stream": stream,
+        "memory": memory,
+        "bit_identical": bit,
+        "day": day,
+    }
+    write_bench_json("stream", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--quick", action="store_true",
+                        help="shrunken stream + day episode")
+    parser.add_argument("--smoke", action="store_true",
+                        help="CI smoke mode (alias for --quick)")
+    args = parser.parse_args()
+    run(quick=args.quick or args.smoke)

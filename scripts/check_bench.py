@@ -115,6 +115,18 @@ SMOKE_MAX_TELEMETRY_OVERHEAD = 1.25
 # Episodes whose warm run must show a nonzero warm-vs-idle scoring delta
 # (mirrors benchmarks/bench_scenarios.WARM_DELTA_EPISODES).
 WARM_DELTA_EPISODES = ("flash-crowd", "failure-storm")
+# Streamed-episode artifacts (bench == "stream").  A full run streams >= 1M
+# queries; anything smaller is a smoke artifact and gates at reduced
+# floors.  The throughput floors sit ~20x below a healthy CPU measurement
+# (~2M queries/s), so they trip on a real regression (e.g. the stream
+# falling back to per-query host dispatch), not on runner noise.  The
+# memory ratio gates the constant-memory claim itself: peak live device
+# bytes at 4n vs n queries must stay flat (chunk-sized buffers only).
+FULL_STREAM_N = 1_000_000
+MIN_STREAM_QPS = 100_000.0
+SMOKE_MIN_STREAM_QPS = 10_000.0
+MAX_STREAM_MEM_RATIO = 1.10
+SMOKE_MAX_STREAM_MEM_RATIO = 1.25
 
 RESULT_KEYS = (
     "batch_size",
@@ -157,6 +169,28 @@ TELEMETRY_KEYS = (
     "overhead",
     "bit_identical",
     "served_counts_ok",
+)
+STREAM_KEYS = (
+    "n_queries",
+    "chunk",
+    "elapsed_s",
+    "qps",
+    "qos_rate",
+    "rebases",
+)
+STREAM_MEMORY_KEYS = (
+    "n_small",
+    "n_large",
+    "peak_small_bytes",
+    "peak_large_bytes",
+    "ratio",
+)
+STREAM_DAY_KEYS = (
+    "episode",
+    "total_queries",
+    "qos_rate",
+    "total_cost",
+    "completed",
 )
 
 
@@ -399,6 +433,75 @@ def check_scenarios(doc, label: str) -> list[str]:
     return errors
 
 
+def check_stream(doc, label: str) -> list[str]:
+    """Gates for streamed-episode artifacts (benchmarks/bench_stream):
+    the streamed QoS rate must equal the monolithic reference bit for bit,
+    peak device memory must not scale with episode length (the
+    constant-memory claim), throughput must clear the floor, and the
+    end-to-end day episode must have completed — covering >= 1M queries on
+    a full run."""
+    errors = []
+    stream = doc.get("stream")
+    if not isinstance(stream, dict):
+        return [f"{label}: stream artifact has no 'stream' section"]
+    missing = [k for k in STREAM_KEYS if k not in stream]
+    if missing:
+        return [f"{label}: stream section missing keys {missing}"]
+    full = float(stream["n_queries"]) >= FULL_STREAM_N
+    min_qps = MIN_STREAM_QPS if full else SMOKE_MIN_STREAM_QPS
+    qps = float(stream["qps"])
+    if qps < min_qps:
+        errors.append(
+            f"{label}: streamed throughput {qps:.0f} queries/s"
+            f" < required {min_qps:.0f}",
+        )
+    memory = doc.get("memory")
+    if not isinstance(memory, dict):
+        errors.append(f"{label}: stream artifact has no 'memory' section")
+    else:
+        missing = [k for k in STREAM_MEMORY_KEYS if k not in memory]
+        if missing:
+            errors.append(f"{label}: memory section missing keys {missing}")
+        else:
+            max_ratio = (MAX_STREAM_MEM_RATIO if full
+                         else SMOKE_MAX_STREAM_MEM_RATIO)
+            ratio = float(memory["ratio"])
+            if ratio > max_ratio:
+                errors.append(
+                    f"{label}: peak device memory grew x{ratio:.3f} from "
+                    f"{memory['n_small']} to {memory['n_large']} queries "
+                    f"(> allowed x{max_ratio:.2f}) — streaming is no "
+                    "longer constant-memory",
+                )
+    bit = doc.get("bit_identical")
+    if not isinstance(bit, dict):
+        errors.append(f"{label}: stream artifact has no 'bit_identical' "
+                      "section")
+    elif not bit.get("ok", False):
+        errors.append(
+            f"{label}: streamed QoS rate "
+            f"{bit.get('streamed_rate')} != monolithic "
+            f"{bit.get('monolithic_rate')} at n={bit.get('n_queries')}",
+        )
+    day = doc.get("day")
+    if not isinstance(day, dict):
+        errors.append(f"{label}: stream artifact has no 'day' section")
+        return errors
+    missing = [k for k in STREAM_DAY_KEYS if k not in day]
+    if missing:
+        errors.append(f"{label}: day section missing keys {missing}")
+        return errors
+    if not day["completed"]:
+        errors.append(f"{label}: day episode did not complete")
+    if full and float(day["total_queries"]) < FULL_STREAM_N:
+        errors.append(
+            f"{label}: full-size day episode covered "
+            f"{day['total_queries']} queries, fewer than the required "
+            f"{FULL_STREAM_N}",
+        )
+    return errors
+
+
 def check_tiers(doc, label: str) -> list[str]:
     """Economics + robustness gates on the hybrid capacity-tier section
     (``payload["tiers"]`` of a scenarios artifact, absent on legacy
@@ -527,6 +630,16 @@ def trend_metrics(doc) -> dict[str, tuple[float, str]]:
             if isinstance(ep, dict) and "total_cost" in ep:
                 out[f"tiers.{name}.total_cost"] = (float(ep["total_cost"]),
                                                    "lower")
+    elif bench == "stream":
+        stream = doc.get("stream")
+        if isinstance(stream, dict) and "qps" in stream:
+            out["stream_qps"] = (float(stream["qps"]), "higher")
+        memory = doc.get("memory")
+        if isinstance(memory, dict) and "ratio" in memory:
+            out["stream_mem_ratio"] = (float(memory["ratio"]), "lower")
+        day = doc.get("day")
+        if isinstance(day, dict) and "qos_rate" in day:
+            out["day.qos_rate"] = (float(day["qos_rate"]), "higher")
     return out
 
 
@@ -677,6 +790,8 @@ def main(argv=None) -> int:
                 errors.extend(check_batch_eval(doc, label))
             elif doc.get("bench") == "scenarios":
                 errors.extend(check_scenarios(doc, label))
+            elif doc.get("bench") == "stream":
+                errors.extend(check_stream(doc, label))
         if history_enabled:
             warnings.extend(update_history(doc, label, history_path, commit))
 

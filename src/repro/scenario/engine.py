@@ -87,6 +87,7 @@ subsequent window back at the QoS target.
 
 from __future__ import annotations
 
+import itertools
 import time
 
 import numpy as np
@@ -102,6 +103,26 @@ from .report import (ControlAction, EpisodeReport, EventOutcome, PhaseReport,
                      WindowStat)
 from .spec import EVENT_KINDS, EventSpec, ScenarioSpec, Timeline
 from .trace import TID_EVENTS, TID_PHASES, TID_WINDOWS, TraceRecorder
+
+
+def _near_seed_candidates(seed: tuple, bounds, exclude: tuple,
+                          radius: int = 2) -> list[tuple]:
+    """Pool configs in a bounded Hamming ball around ``seed``: every
+    per-type count shifted by -1/0/+1 with at most ``radius`` total moves,
+    clipped to ``[0, bounds]`` and with the current pool (``exclude``)
+    dropped.  Seed-first ordering (the all-zero delta is the first tuple
+    ``itertools.product`` yields), so a price tie resolves toward the exact
+    pre-storm pool."""
+    out = []
+    for delta in itertools.product((0, -1, 1), repeat=len(seed)):
+        if sum(abs(d) for d in delta) > radius:
+            continue
+        cand = tuple(int(c) + d for c, d in zip(seed, delta))
+        if cand == exclude:
+            continue
+        if all(0 <= c <= int(b) for c, b in zip(cand, bounds)):
+            out.append(cand)
+    return out
 
 
 class ScenarioEngine:
@@ -461,6 +482,7 @@ class ScenarioEngine:
         self.monitor.reset()
         pending: list = []                  # open recovery trackers
         gq = 0                              # global index of phase start
+        phase_states: list = []             # entry carry per phase (or None)
 
         for p, phase in enumerate(spec.phases):
             if self._pending_switch and self._pending_switch[0] <= gq:
@@ -480,6 +502,9 @@ class ScenarioEngine:
             events = list(timeline.cuts[p])
             stream = plane.phase_stream(phase.batch_dist, phase.n_queries,
                                         factor)
+            # The carry the episode holds entering this phase, for the
+            # warm final sweep (None while cold / before the first deploy).
+            phase_states.append(plane.candidate_state())
             ph_t0 = ep_base
             i = 0
             ph_passed = 0
@@ -763,6 +788,13 @@ class ScenarioEngine:
         report.final_config = config
         report.final_qos_by_phase = plane.phase_sweep(
             config, list(spec.phases), policy=self._route_policy)
+        if report.final_qos_by_phase is not None:
+            # Warm twin of the summary sweep: each phase row starts from
+            # the carry the episode actually held entering that phase —
+            # still one stacked-table dispatch (the states= grid axis).
+            report.final_qos_by_phase_warm = plane.phase_sweep(
+                config, list(spec.phases), policy=self._route_policy,
+                states=phase_states)
         return report
 
     # ----------------------------------------------------------- event ops
@@ -1058,15 +1090,25 @@ class ScenarioEngine:
             # provisioning lead like any other deploy; the monitor cannot
             # trigger this return on its own because a drained steady
             # state shows no queue slack to release.
-            trim = tuple(int(c) for c in seed)
             ev = self.plane.grid_evaluator(phase.batch_dist)
-            if (ev is not None and trim != tuple(config)
-                    and all(0 <= c <= int(b) for c, b in zip(trim, bounds))
-                    and float(np.dot(prices, trim))
-                    < float(np.dot(prices, config))):
-                rate = float(ev.grid([trim], [phase.load_factor],
-                                     policy=self._route_policy)[0, 0])
-                if rate >= self.spec.qos_target:
+            # Not only the exact pre-storm pool: the whole bounded Hamming
+            # neighborhood around it (the storm may have shifted bounds or
+            # prices so the precise seed is gone or no longer the cheapest
+            # feasible return point), scored in one grid dispatch.
+            cands = [c for c in _near_seed_candidates(
+                         tuple(int(x) for x in seed), bounds, tuple(config))
+                     if float(np.dot(prices, c))
+                     < float(np.dot(prices, config))]
+            if ev is not None and cands:
+                rates = ev.grid(cands, [phase.load_factor],
+                                policy=self._route_policy)[0]
+                feasible = [(float(np.dot(prices, c)), i)
+                            for i, c in enumerate(cands)
+                            if float(rates[i]) >= self.spec.qos_target]
+                if feasible:
+                    # Cheapest feasible; ties break seed-first (stable min
+                    # over the generation order via the index tiebreak).
+                    trim = cands[min(feasible)[1]]
                     # Two-stage transition: first the union pool (the trim
                     # slots wake cold beside the still-warm incumbents),
                     # then — via ``_land_pending`` — the pure-removal drop

@@ -165,9 +165,11 @@ class SimulatorPlane(_EpisodeClock):
 
     def __init__(self, profile: ModelProfile, types: list[InstanceType],
                  workloads: dict[str, Workload], max_instances: int = 40,
-                 catalog=None):
+                 catalog=None, stream_chunk: int | None = None):
         if not workloads:
             raise ValueError("at least one base workload is required")
+        if stream_chunk is not None and stream_chunk < 1:
+            raise ValueError("stream_chunk must be >= 1")
         arrs = [wl.arrivals for wl in workloads.values()]
         for a in arrs[1:]:
             if not np.array_equal(a, arrs[0]):
@@ -177,6 +179,11 @@ class SimulatorPlane(_EpisodeClock):
         self.types = list(types)
         self.max_instances = max_instances
         self._n_slots = max_instances
+        # Streaming episodes: serve each measured segment in bounded query
+        # blocks chained through the PoolState carry (PR 4/5 segment
+        # chaining is bit-exact across arbitrary cuts), so a million-query
+        # phase never binds one million-row simulator.  None = monolithic.
+        self._stream_chunk = stream_chunk
         self.workloads = dict(workloads)
         self.evaluators = {d: PoolEvaluator(profile, self.types, wl,
                                             max_instances=max_instances)
@@ -225,45 +232,88 @@ class SimulatorPlane(_EpisodeClock):
         return _prefix(self.workloads[dist].scaled(factor), n)
 
     def measure(self, dist: str, workload: Workload, config, *, policy=None):
-        sim = PoolSimulator(self.profile, self.types, workload,
-                            max_instances=self.max_instances)
-        if not self._carry:
-            # Cold segment from the idle carry at clock 0 — the warm
-            # identity element, bit-identical to the cold simulate lane —
-            # so both accounting modes leave a telemetry source behind.
+        """Serve one phase stream, in one shot or — with ``stream_chunk``
+        set — as a chain of bounded query blocks, each block's
+        :class:`PoolSimulator` bound to its slice alone and warm-started
+        from the previous block's final carry.  Block boundaries are
+        invisible to the results: the carry threads bit-exactly
+        (``segment_from`` chaining), so latencies, waits, the committed
+        state, and window telemetry all match the monolithic serve."""
+        n = workload.n_queries
+        chunk = self._stream_chunk
+        if chunk is None or n <= chunk:
+            cuts = [(0, n)]
+        else:
+            cuts = [(lo, min(lo + chunk, n)) for lo in range(0, n, chunk)]
+        cfg_tuple = tuple(int(c) for c in config)
+        cold = not self._carry
+        parts = []
+        lats, waits = [], []
+        st = None
+        for lo, hi in cuts:
+            sim = PoolSimulator(self.profile, self.types,
+                                slice_stream(workload, lo, hi),
+                                max_instances=self.max_instances)
+            if st is None:
+                # Cold segments start from the idle carry at clock 0 — the
+                # warm identity element, bit-identical to the cold simulate
+                # lane — so both accounting modes leave a telemetry source.
+                st = sim.initial_state() if cold else self._state
+            seg = sim.segment_from(st, config, policy=policy)
+            st = seg.state
+            parts.append((sim, seg, cfg_tuple, lo, hi - lo))
+            lats.append(seg.lat)
+            waits.append(seg.waits)
+        self._tel_src = parts
+        if cold:
             self._pending = None
             self.last_carried_wait = 0.0
-            seg = sim.segment_from(sim.initial_state(), config,
-                                   policy=policy)
-            self._tel_src = (sim, seg, tuple(int(c) for c in config))
-            return seg.lat, seg.waits
-        seg = sim.segment_from(self._state, config, policy=policy)
-        at = float(workload.arrivals[0]) if workload.n_queries else 0.0
-        self.last_carried_wait = sim.carried_wait(self._state, config, at)
-        self._pending = (seg, np.asarray(workload.arrivals,
-                                         dtype=np.float64))
-        self._tel_src = (sim, seg, tuple(int(c) for c in config))
-        return seg.lat, seg.waits
+        else:
+            at = float(workload.arrivals[0]) if n else 0.0
+            self.last_carried_wait = parts[0][0].carried_wait(
+                self._state, config, at)
+            self._pending = (parts, np.asarray(workload.arrivals,
+                                               dtype=np.float64))
+        if len(parts) == 1:
+            return parts[0][1].lat, parts[0][1].waits
+        return np.concatenate(lats), np.concatenate(waits)
 
     def window_telemetry(self, lo: int, hi: int):
         """Telemetry over queries ``[lo, hi)`` of the last measured segment
         — host-side from the segment's recorded dispatch trace
         (``PoolSimulator.segment_telemetry``), so window enrichment never
-        re-runs the scan."""
+        re-runs the scan.  On a chunked serve the window's overlap with
+        each block reduces separately and the pieces merge exactly
+        (``Telemetry.merge`` is integer accumulation)."""
         if self._tel_src is None:
             return None
-        sim, seg, cfg = self._tel_src
-        return sim.segment_telemetry(seg, cfg, lo, hi)
+        tel = None
+        for sim, seg, cfg, off, m in self._tel_src:
+            w_lo, w_hi = max(lo - off, 0), min(hi - off, m)
+            if w_lo >= w_hi:
+                continue
+            piece = sim.segment_telemetry(seg, cfg, w_lo, w_hi)
+            tel = piece if tel is None else tel.merge(piece)
+        if tel is None:
+            # Empty window: an all-zero plane of the right type arity.
+            sim, seg, cfg = self._tel_src[0][:3]
+            return sim.segment_telemetry(seg, cfg, 0, 0)
+        return tel
 
     def commit(self, n_served: int) -> None:
         """Fold the first ``n_served`` queries of the last measured segment
         into the carried state (the rest was rolled back by the engine)."""
         if not self._carry or self._pending is None:
             return
-        seg, arr = self._pending
+        parts, arr = self._pending
         self._pending = None
         n = int(n_served)
-        self._state = seg.state_at(n)
+        for sim, seg, cfg, off, m in parts:
+            if n <= off + m:
+                self._state = seg.state_at(max(n - off, 0))
+                break
+        else:
+            self._state = parts[-1][1].state
         if n > 0:
             self._local_now = float(arr[n - 1])
 
@@ -290,19 +340,28 @@ class SimulatorPlane(_EpisodeClock):
             warmup=self._cold_starts, policy=policy)[0, 0])
 
     def phase_sweep(self, config, phases: list[PhaseSpec], *,
-                    policy=None) -> list[float]:
+                    policy=None, states=None) -> list[float]:
         """Full-stream QoS of one config under every phase's conditions —
         one stacked service-table grid dispatch (W = n_phases lanes over
-        the shared arrival grid, each with its phase's batch stream)."""
+        the shared arrival grid, each with its phase's batch stream).
+
+        ``states=`` (one entry per phase: ``None`` or a ``(PoolState,
+        deployed_config)`` pair, e.g. the plane's ``candidate_state()``
+        captured at each phase start) warm-starts every phase row from the
+        carry the episode actually held entering that phase — the whole
+        multi-phase warm sweep still runs in the one dispatch."""
         sim = next(iter(self.evaluators.values())).sim
         tables = np.stack([
             service_time_table(self.profile, self.types,
                                self.workloads[ph.batch_dist].batches)
             for ph in phases])
         factors = [ph.load_factor for ph in phases]
+        kwargs = {}
+        if states is not None:
+            kwargs = {"states": list(states), "warmup": self._cold_starts}
         rates = sim.qos([tuple(int(c) for c in config)],
                         workloads=factors, service_tables=tables,
-                        policy=policy).rates
+                        policy=policy, **kwargs).rates
         return [float(r) for r in rates[:, 0]]
 
 
@@ -468,16 +527,19 @@ class LivePlane(_EpisodeClock):
                 initial_busy=rel * self.time_scale))
         return evaluate
 
-    def phase_sweep(self, config, phases, *, policy=None) -> None:
+    def phase_sweep(self, config, phases, *, policy=None,
+                    states=None) -> None:
         return None                      # re-serving every phase is not free
 
 
 def paper_simulator_plane(model_name: str, spec: ScenarioSpec,
-                          max_instances: int = 40):
+                          max_instances: int = 40,
+                          stream_chunk: int | None = None):
     """(plane, space) for a named paper model: Table 3 diverse pool, the
     standard per-model stream for every batch distribution the spec's
     phases use (shared arrivals from ``spec.seed``), and the default
-    search-space bounds."""
+    search-space bounds.  ``stream_chunk`` bounds per-segment simulator
+    memory for long episodes (see ``SimulatorPlane``)."""
     profile = MODEL_PROFILES[model_name]
     types = [AWS_INSTANCES[n] for n in PAPER_POOLS[model_name]["diverse"]]
     workloads = {d: paper_workload(model_name, seed=spec.seed,
@@ -485,7 +547,8 @@ def paper_simulator_plane(model_name: str, spec: ScenarioSpec,
                                    batch_dist=d)
                  for d in spec.batch_dists}
     plane = SimulatorPlane(profile, types, workloads,
-                           max_instances=max_instances)
+                           max_instances=max_instances,
+                           stream_chunk=stream_chunk)
     from ..core.search_space import SearchSpace
     prices = tuple(t.price for t in types)
     space = SearchSpace(bounds=DEFAULT_BOUNDS[model_name], prices=prices)
@@ -493,7 +556,8 @@ def paper_simulator_plane(model_name: str, spec: ScenarioSpec,
 
 
 def tiered_simulator_plane(model_name: str, spec: ScenarioSpec,
-                           max_instances: int = 40):
+                           max_instances: int = 40,
+                           stream_chunk: int | None = None):
     """(plane, space) for a named model on its hybrid capacity-tier pool
     (serving/tiers.TIERED_POOLS): the same per-model streams as
     ``paper_simulator_plane``, but the pool mixes on-demand, spot and
@@ -511,7 +575,8 @@ def tiered_simulator_plane(model_name: str, spec: ScenarioSpec,
                                    batch_dist=d)
                  for d in spec.batch_dists}
     plane = SimulatorPlane(profile, types, workloads,
-                           max_instances=max_instances, catalog=catalog)
+                           max_instances=max_instances, catalog=catalog,
+                           stream_chunk=stream_chunk)
     from ..core.search_space import SearchSpace
     prices = tuple(t.price for t in types)
     space = SearchSpace(bounds=bounds, prices=prices)

@@ -109,6 +109,9 @@ class EpisodeReport:
     # Simulator plane only: full-stream QoS of the final config under every
     # phase's conditions, swept in one stacked-table grid dispatch.
     final_qos_by_phase: list[float] | None = None
+    # Warm twin: the same sweep with each phase row started from the carry
+    # the episode held entering that phase (the states= grid axis).
+    final_qos_by_phase_warm: list[float] | None = None
 
     # ------------------------------------------------------------ summaries
     @property
@@ -193,6 +196,9 @@ class EpisodeReport:
             "final_qos_by_phase": (
                 None if self.final_qos_by_phase is None
                 else [float(r) for r in self.final_qos_by_phase]),
+            "final_qos_by_phase_warm": (
+                None if self.final_qos_by_phase_warm is None
+                else [float(r) for r in self.final_qos_by_phase_warm]),
             "n_windows": self.n_windows,
             "violation_windows": self.violation_windows,
             "carried_wait_total": float(self.carried_wait_total),

@@ -6,26 +6,28 @@ from .autoscaler import LoadMonitor, ScaleEvent, rescale
 from .fault import (fail_instances, recover_from_capacity_change,
                     recover_from_failure, reprice)
 from .instance import (AWS_INSTANCES, MODEL_PROFILES, PAPER_POOLS, TPU_CELLS,
-                       InstanceType, ModelProfile, service_time_table)
+                       InstanceType, ModelProfile, service_time_lut,
+                       service_time_table)
 from .pool import (DEFAULT_BOUNDS, DEFAULT_RATES, PoolEvaluator,
                    best_homogeneous, cost_effectiveness, make_paper_setup,
                    paper_workload)
 from .routing import NAMED_POLICIES, RoutingPolicy, named_policy
 from .simulator import (PoolSimulator, PoolState, QosResult, SegmentResult,
-                        SimResult)
+                        SimResult, StreamingSimulator, StreamResult)
 from .telemetry import BUCKET_EDGES, N_BUCKETS, Telemetry
 from .tiers import (TIER_NAMES, TIERED_POOLS, TIERS, CapacityTier,
                     SpotPriceProcess, TierCatalog, TierHazard, tiered_pool,
                     tiered_variant)
-from .workload import (Workload, gaussian_batches, generate_workload,
-                       lognormal_batches)
+from .workload import (Workload, WorkloadSpec, gaussian_batches,
+                       generate_workload, lognormal_batches)
 
 __all__ = [
     "AWS_INSTANCES", "MODEL_PROFILES", "PAPER_POOLS", "TPU_CELLS",
-    "InstanceType", "ModelProfile", "service_time_table",
+    "InstanceType", "ModelProfile", "service_time_table", "service_time_lut",
     "PoolEvaluator", "best_homogeneous", "cost_effectiveness",
     "make_paper_setup", "paper_workload", "DEFAULT_RATES", "DEFAULT_BOUNDS",
     "PoolSimulator", "PoolState", "SegmentResult", "SimResult", "QosResult",
+    "StreamingSimulator", "StreamResult",
     "Telemetry", "BUCKET_EDGES", "N_BUCKETS",
     "RoutingPolicy", "NAMED_POLICIES", "named_policy",
     "LoadMonitor", "ScaleEvent", "rescale",
@@ -33,5 +35,6 @@ __all__ = [
     "recover_from_failure", "reprice",
     "CapacityTier", "TIERS", "TIER_NAMES", "TierHazard", "SpotPriceProcess",
     "TierCatalog", "TIERED_POOLS", "tiered_variant", "tiered_pool",
-    "Workload", "generate_workload", "lognormal_batches", "gaussian_batches",
+    "Workload", "WorkloadSpec", "generate_workload", "lognormal_batches",
+    "gaussian_batches",
 ]

@@ -198,3 +198,19 @@ def service_time_table(model: ModelProfile, types: list[InstanceType],
             _SERVICE_TABLE_CACHE.pop(next(iter(_SERVICE_TABLE_CACHE)))
         _SERVICE_TABLE_CACHE[key] = table
     return table
+
+
+def service_time_lut(model: ModelProfile, types: list[InstanceType],
+                     max_batch: int) -> np.ndarray:
+    """(n_types, max_batch + 1) service times indexed by batch size.
+
+    The streaming lane generates batch sizes on device, so per-query service
+    columns cannot be precomputed host-side; instead the kernel gathers from
+    this lookup table (``lut[:, batch]``).  Entry ``[t, b]`` equals
+    ``types[t].latency(model, b)`` bit for bit, which is exactly the value
+    the host-built ``service_time_table`` column holds for a query of batch
+    ``b`` — so the streamed scan reproduces the monolithic arithmetic.
+    Rides the same memo cache (``batches`` = ``arange(max_batch + 1)``).
+    """
+    return service_time_table(model, types,
+                              np.arange(int(max_batch) + 1, dtype=np.int64))

@@ -85,6 +85,7 @@ every lane (tests/test_routing.py).
 
 from __future__ import annotations
 
+import math
 import warnings
 from dataclasses import dataclass
 from functools import partial
@@ -92,12 +93,16 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
 
-from .instance import InstanceType, ModelProfile, service_time_table
+from .instance import (InstanceType, ModelProfile, service_time_lut,
+                       service_time_table)
 from .routing import RoutingPolicy
 from .telemetry import (BUCKET_EDGES, N_BUCKETS, Telemetry, from_arrays,
                         queue_depth)
-from .workload import Workload
+from .workload import Workload, WorkloadSpec
 
 _INF = 1e30
 # Offset ranking idle slots strictly below any busy slot's next-free time.
@@ -428,18 +433,70 @@ _grid_counts_wb = jax.vmap(
 _grid_counts_jit = jax.jit(_grid_counts_wb)
 # Per-workload service tables (see _simulate_scan_grid_tables): the (nq, T)
 # transposed table is mapped with the arrival rows.
-_grid_counts_tables_jit = jax.jit(jax.vmap(
+_grid_counts_wb_tables = jax.vmap(
     jax.vmap(_grid_lane_qos_counts,
              in_axes=(None, None, 0, None, 0, None, None)),
-    in_axes=(0, 0, None, None, None, None, None)))
-# Sharded flavor for multi-host-device processes (single-process CPU
-# parallelism, see benchmarks/__init__.py).  Every argument is mapped over
-# the device axis — broadcast-style args are pre-replicated device buffers
-# (cached in PoolSimulator), because pmap's per-call broadcast of in_axes=
-# None operands re-transfers them to every device on every dispatch, which
-# costs more than the sweep itself at rescale-loop call rates.
-_grid_counts_pmap = jax.pmap(_grid_counts_wb,
-                             in_axes=(0, 0, 0, 0, 0, 0, 0))
+    in_axes=(0, 0, None, None, None, None, None))
+_grid_counts_tables_jit = jax.jit(_grid_counts_wb_tables)
+# Per-workload-row initial carries (the ``states=`` grid): free0 gains the
+# workload axis — row ``w`` starts every candidate lane from the carry the
+# episode entered phase ``w`` with — so a whole multi-phase sweep runs warm
+# in one dispatch.
+_grid_counts_states_jit = jax.jit(jax.vmap(
+    jax.vmap(_grid_lane_qos_counts,
+             in_axes=(None, None, 0, None, 0, None, None)),
+    in_axes=(0, None, None, None, 0, None, None)))
+_grid_counts_tables_states_jit = jax.jit(jax.vmap(
+    jax.vmap(_grid_lane_qos_counts,
+             in_axes=(None, None, 0, None, 0, None, None)),
+    in_axes=(0, 0, None, None, 0, None, None)))
+
+
+def _stream_chunk(free, count, shift, arrivals, batches, valid, lut_T,
+                  type_of_slot, priority, iota, qos_t):
+    """One streamed query block through the lean FCFS count scan.
+
+    Same dispatch recurrence as ``_grid_lane_qos_counts``, with three
+    streaming deltas — none of which changes the arithmetic of a full
+    block:
+
+      * service times come from a (max_batch + 1, n_types) lookup-table
+        gather over the block's on-device batch sizes (``lut_T[batch]`` is
+        bit-equal to the host-built service-table column for that batch,
+        see ``instance.service_time_lut``);
+      * ``shift`` rebases the carry into a new local time origin before
+        the block runs — 0.0 between ordinary blocks, which is a bitwise
+        identity (``x - 0.0 == x``, and ``ulp(_INF)`` dwarfs any shift);
+      * ``valid`` masks the tail of the final partial block: masked
+        queries touch neither the carry nor the count, and an all-True
+        block is bit-identical to the unmasked scan.
+
+    ``free``/``count`` are donated (``_stream_chunk_jit``), so a streaming
+    consumer holds two small carry buffers plus one block of generated
+    queries regardless of episode length.
+    """
+    free = free - shift
+
+    def step(carry, inputs):
+        free, count = carry
+        arrival, batch, ok = inputs
+        svc_by_type = lut_T[batch]
+        key = jnp.where(free <= arrival, priority - _BIG, free)
+        slot = jnp.argmin(key)
+        start = jnp.maximum(arrival, free[slot])
+        finish = start + svc_by_type[type_of_slot[slot]]
+        free = jnp.where(ok & (iota == slot), finish, free)
+        count = count + (ok & ((finish - arrival) <= qos_t)).astype(
+            jnp.int32)
+        return (free, count), None
+
+    (free, count), _ = jax.lax.scan(step, (free, count),
+                                    (arrivals, batches, valid),
+                                    unroll=_GRID_UNROLL)
+    return free, count
+
+
+_stream_chunk_jit = jax.jit(_stream_chunk, donate_argnums=(0, 1))
 
 
 def _grid_lane_qos_counts_tel(arrivals, service_T, type_of_slot, priority,
@@ -499,7 +556,7 @@ def _grid_lane_qos_counts_tel(arrivals, service_T, type_of_slot, priority,
 
 
 # Telemetry grid sweeps run the single-device executable only (the
-# pmap-sharded fast path stays telemetry-off: observability sweeps are
+# shard_map fast path stays telemetry-off: observability sweeps are
 # scenario/bench axes, not the BO rescale hot loop).
 _TEL_LANE_AXES = (None, None, 0, None, 0, None, None, 0, None, None, None)
 _grid_counts_tel_jit = jax.jit(jax.vmap(
@@ -600,17 +657,87 @@ def _grid_lane_qos_counts_policy(arrivals, service_T, type_of_slot, priority,
     return count, free
 
 
-# Nested (workload, policy·config-lane) axes.  Policy sweeps run the
-# single-device executable only: routing is a control-plane / bench axis,
-# not the sharded rescale hot loop, so there is no pmap flavor.
-_grid_counts_policy_jit = jax.jit(jax.vmap(
+# Nested (workload, policy·config-lane) axes.  The folded P·B lane axis is
+# an ordinary batch axis, so the routed grid shards across XLA host devices
+# exactly like the plain one (``_dispatch_grid_sharded`` splits whichever of
+# the workload / lane axes costs less, mapping the policy operands with the
+# lanes).
+_grid_counts_policy_wb = jax.vmap(
     jax.vmap(_grid_lane_qos_counts_policy,
              in_axes=(None, None, 0, None, 0, None, None, 0, 0, 0)),
-    in_axes=(0, None, None, None, None, None, None, None, None, None)))
-_grid_counts_policy_tables_jit = jax.jit(jax.vmap(
+    in_axes=(0, None, None, None, None, None, None, None, None, None))
+_grid_counts_policy_jit = jax.jit(_grid_counts_policy_wb)
+_grid_counts_policy_wb_tables = jax.vmap(
     jax.vmap(_grid_lane_qos_counts_policy,
              in_axes=(None, None, 0, None, 0, None, None, 0, 0, 0)),
-    in_axes=(0, 0, None, None, None, None, None, None, None, None)))
+    in_axes=(0, 0, None, None, None, None, None, None, None, None))
+_grid_counts_policy_tables_jit = jax.jit(_grid_counts_policy_wb_tables)
+# Routed ``states=`` grid: per-workload-row initial carries (see the plain
+# states jits above).
+_grid_counts_policy_states_jit = jax.jit(jax.vmap(
+    jax.vmap(_grid_lane_qos_counts_policy,
+             in_axes=(None, None, 0, None, 0, None, None, 0, 0, 0)),
+    in_axes=(0, None, None, None, 0, None, None, None, None, None)))
+_grid_counts_policy_tables_states_jit = jax.jit(jax.vmap(
+    jax.vmap(_grid_lane_qos_counts_policy,
+             in_axes=(None, None, 0, None, 0, None, None, 0, 0, 0)),
+    in_axes=(0, 0, None, None, 0, None, None, None, None, None)))
+
+
+# ---------------------------------------------------------------------------
+# shard_map lane sharding (replaces the single-process pmap opt-in): the
+# flattened grid is laid out over a 1-D "lane" mesh of the configured XLA
+# host devices (or real chips on accelerator backends).  Under jit the
+# shard_mapped executable takes *global* operands — callers cyclic-pad the
+# split axis to a device multiple and slice the result, no (n_dev, ...)
+# leading-axis reshape — and per-device blocks run the identical per-lane
+# vmap bodies, so sharded counts match the single-device jits bit for bit.
+# ---------------------------------------------------------------------------
+_MESHES: dict[int, Mesh] = {}
+
+
+def _lane_mesh(n_dev: int) -> Mesh:
+    mesh = _MESHES.get(n_dev)
+    if mesh is None:
+        mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("lane",))
+        _MESHES[n_dev] = mesh
+    return mesh
+
+
+# flavor -> (per-device vmap body, workload-split arg indices,
+#            lane-split arg indices).  Workload-split shards arrival rows
+# (and, for the tables flavors, the matching service-table rows);
+# lane-split shards slot layouts + carries (+ the per-lane policy operands).
+_SHARD_FLAVORS = {
+    "plain": (_grid_counts_wb, (0,), (2, 4)),
+    "tables": (_grid_counts_wb_tables, (0, 1), (2, 4)),
+    "policy": (_grid_counts_policy_wb, (0,), (2, 4, 7, 8, 9)),
+    "policy_tables": (_grid_counts_policy_wb_tables, (0, 1), (2, 4, 7, 8, 9)),
+}
+_N_SHARD_ARGS = {"plain": 7, "tables": 7, "policy": 10, "policy_tables": 10}
+_SHARDED_FNS: dict[tuple, object] = {}
+
+
+def _sharded_counts_fn(n_dev: int, flavor: str, axis: str):
+    """Compiled shard_mapped grid-counts executable, cached per
+    (device count, kernel flavor, split axis)."""
+    cache_key = (n_dev, flavor, axis)
+    fn = _SHARDED_FNS.get(cache_key)
+    if fn is None:
+        base, w_args, l_args = _SHARD_FLAVORS[flavor]
+        n_args = _N_SHARD_ARGS[flavor]
+        split = w_args if axis == "w" else l_args
+        in_specs = tuple(P("lane") if i in split else P()
+                         for i in range(n_args))
+        # Splitting workloads shards the (W, B) result rows; splitting
+        # lanes shards its columns.
+        out_specs = ((P("lane"), P("lane")) if axis == "w"
+                     else (P(None, "lane"), P(None, "lane")))
+        fn = jax.jit(shard_map(base, mesh=_lane_mesh(n_dev),
+                               in_specs=in_specs, out_specs=out_specs,
+                               check_rep=False))
+        _SHARDED_FNS[cache_key] = fn
+    return fn
 
 
 def _grid_lane_qos_counts_policy_tel(arrivals, service_T, type_of_slot,
@@ -700,6 +827,32 @@ def _cold_free0(active: np.ndarray) -> np.ndarray:
     absent ones — bitwise the carry the scan built internally before warm
     starts existed, which is what keeps the cold paths bit-identical."""
     return np.where(active, np.float32(0.0), np.float32(_INF))
+
+
+def _expand_slots(configs, n_types: int,
+                  max_instances: int) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized config→slot expansion for a (B, n_types) batch.
+
+    Slot ``s`` of row ``b`` holds type ``t`` iff
+    ``cumsum(configs[b])[t-1] <= s < cumsum(configs[b])[t]``; counting the
+    cumulative sums <= s gives ``t`` without any per-slot loop.
+    Returns (type_of_slot (B, max_inst) int32, active (B, max_inst) bool).
+    Module-level so the streaming simulator (which owns no PoolSimulator)
+    shares the identical layout arithmetic.
+    """
+    counts = np.asarray(configs, dtype=np.int64)
+    if counts.ndim != 2 or counts.shape[1] != n_types:
+        raise ValueError(f"expected (B, {n_types}) config batch, "
+                         f"got shape {counts.shape}")
+    cum = np.cumsum(counts, axis=1)                      # (B, T)
+    total = cum[:, -1]
+    if (total > max_instances).any():
+        raise ValueError("config exceeds max_instances padding")
+    slots = np.arange(max_instances)
+    active = slots[None, :] < total[:, None]             # (B, S)
+    type_of_slot = (slots[None, None, :] >= cum[:, :, None]).sum(
+        axis=1).astype(np.int32)                         # (B, S)
+    return np.where(active, type_of_slot, 0).astype(np.int32), active
 
 
 # Bit layout of the packed per-query word the telemetry twin scans emit:
@@ -952,26 +1105,9 @@ class PoolSimulator:
         self._grid_arrs: dict[tuple, jnp.ndarray] = {}
 
     def _slots_batch(self, configs) -> tuple[np.ndarray, np.ndarray]:
-        """Vectorized config→slot expansion for a (B, n_types) batch.
-
-        Slot ``s`` of row ``b`` holds type ``t`` iff
-        ``cumsum(configs[b])[t-1] <= s < cumsum(configs[b])[t]``; counting the
-        cumulative sums <= s gives ``t`` without any per-slot loop.
-        Returns (type_of_slot (B, max_inst) int32, active (B, max_inst) bool).
-        """
-        counts = np.asarray(configs, dtype=np.int64)
-        if counts.ndim != 2 or counts.shape[1] != len(self.types):
-            raise ValueError(f"expected (B, {len(self.types)}) config batch, "
-                             f"got shape {counts.shape}")
-        cum = np.cumsum(counts, axis=1)                      # (B, T)
-        total = cum[:, -1]
-        if (total > self.max_instances).any():
-            raise ValueError("config exceeds max_instances padding")
-        slots = np.arange(self.max_instances)
-        active = slots[None, :] < total[:, None]             # (B, S)
-        type_of_slot = (slots[None, None, :] >= cum[:, :, None]).sum(
-            axis=1).astype(np.int32)                         # (B, S)
-        return np.where(active, type_of_slot, 0).astype(np.int32), active
+        """Config→slot expansion for a (B, n_types) batch (see
+        ``_expand_slots``)."""
+        return _expand_slots(configs, len(self.types), self.max_instances)
 
     def _slots(self, config) -> tuple[np.ndarray, np.ndarray]:
         type_of_slot, active = self._slots_batch(
@@ -1077,9 +1213,9 @@ class PoolSimulator:
         lat, tel = self._sim_batch(cfg, policy, telemetry)
         return SimResult(lat=lat, waits=None, state=None, telemetry=tel)
 
-    def qos(self, configs, *, state=None, workloads=None, service_tables=None,
-            policy=None, deployed=None, now=None, warmup=None,
-            telemetry: bool = False) -> "QosResult":
+    def qos(self, configs, *, state=None, states=None, workloads=None,
+            service_tables=None, policy=None, deployed=None, now=None,
+            warmup=None, telemetry: bool = False) -> "QosResult":
         """QoS satisfaction rates — ``simulate``'s lanes, lean reductions.
 
         Same argument-driven lane selection as :meth:`simulate` (single /
@@ -1093,9 +1229,27 @@ class PoolSimulator:
         bit-identical (the grid lane swaps to the in-carry telemetry scan,
         whose QoS count is the same arithmetic; other lanes just add the
         device post-pass).
+
+        ``states=`` is the grid lane's *per-workload-row* warm start: one
+        entry per workload row, each ``None`` (cold) or a ``(PoolState,
+        deployed_config)`` pair — row ``w`` then scores every candidate
+        from the carry the episode held entering that phase, so a whole
+        multi-phase sweep runs warm in one dispatch.  Mutually exclusive
+        with the single shared ``state=`` and with ``telemetry=``.
         """
         policy = self._check_policy(policy)
-        self._check_warm_kwargs(state, deployed, now, warmup)
+        if states is not None:
+            if workloads is None:
+                raise ValueError("states= is a per-workload-row grid axis; "
+                                 "pass workloads= as well")
+            if state is not None or deployed is not None or now is not None:
+                raise ValueError("states= carries its own (state, deployed) "
+                                 "pairs; state=/deployed=/now= do not apply")
+            if telemetry:
+                raise ValueError("telemetry is not supported on the "
+                                 "per-row states= grid")
+        else:
+            self._check_warm_kwargs(state, deployed, now, warmup)
         cfg = np.asarray(configs, dtype=np.int64)
         if workloads is not None:
             if cfg.ndim != 2:
@@ -1103,7 +1257,7 @@ class PoolSimulator:
                                  "config batch")
             rates, tel = self._qos_grid(cfg, workloads, service_tables,
                                         policy, state, deployed, now, warmup,
-                                        telemetry)
+                                        telemetry, states=states)
             return QosResult(rates=rates, state=None, telemetry=tel)
         if service_tables is not None:
             raise ValueError("service_tables is a workload-grid axis; pass "
@@ -1412,6 +1566,26 @@ class PoolSimulator:
             horizon = max(horizon, float(rel[active].max()))
         _check_horizon(horizon, context)
         return np.where(active, rel.astype(np.float32), np.float32(_INF))
+
+    def _states_free0(self, states, configs, active, arrivals,
+                      warmup) -> np.ndarray:
+        """(W, B, S) float32 per-workload-row initial carries for the
+        ``states=`` grid: row ``w`` is the same ``remap_batch`` → local-frame
+        carry the shared ``state=`` path builds, from that row's own
+        ``(PoolState, deployed)`` pair — or the idle carry when the entry is
+        ``None`` — so each row stays bit-identical to a separate warm grid
+        call on its phase carry."""
+        rows = []
+        for w, entry in enumerate(states):
+            if entry is None:
+                rows.append(_cold_free0(active))
+                continue
+            st, dep = entry
+            mat = self._warm_free_matrix(st, configs, dep, None, warmup)
+            rows.append(self._warm_free0_rows(
+                st, mat, active, float(arrivals[w, -1]),
+                "warm-start phase grid"))
+        return np.stack(rows)
 
     def _sim_batch_from(self, state: PoolState, configs, policy, deployed,
                         now, warmup,
@@ -1808,9 +1982,8 @@ class PoolSimulator:
         return min(width, self.max_instances)
 
     def _qos_grid(self, configs, load_factors, service_tables, policy,
-                  state, deployed, now, warmup,
-                  telemetry: bool = False) -> tuple[np.ndarray,
-                                                    "Telemetry | None"]:
+                  state, deployed, now, warmup, telemetry: bool = False,
+                  states=None) -> tuple[np.ndarray, "Telemetry | None"]:
         """QoS-rate grid core: (W, B) float64 — or (W, P, B) under a
         stacked policy — where cell ``[w, b]`` equals ``PoolSimulator(...,
         workload.scaled(load_factors[w]))``'s single-lane rate for
@@ -1851,7 +2024,13 @@ class PoolSimulator:
                 return np.full(shape, np.nan, dtype=np.float64), tel
             return np.zeros(shape, dtype=np.float64), tel
         type_of_slot, active = self._slots_batch(configs)
-        if state is None:
+        if states is not None:
+            if len(states) != n_w:
+                raise ValueError(f"states= needs one entry per workload row "
+                                 f"({n_w}), got {len(states)}")
+            free0 = self._states_free0(states, configs, active, arrivals,
+                                       warmup)
+        elif state is None:
             free0 = _cold_free0(active)
         else:
             free_mat = self._warm_free_matrix(state, configs, deployed, now,
@@ -1883,48 +2062,80 @@ class PoolSimulator:
     def _qos_counts_grid(self, arrivals, tables, type_of_slot, free0_rows,
                          configs, load_factors, policy=None) -> np.ndarray:
         """One fused (W, L) QoS-count sweep from per-config initial carries
-        (``free0_rows``: (B, max_instances) float32) — the shared dispatch
-        behind the cold (idle carries) and warm (live carries) grid lanes,
-        so both ride the identical executables.  With ``policy`` the lane
-        axis is the policy fold (L = P·B, single-device executable)."""
+        (``free0_rows``: (B, max_instances) float32, or (W, B, max_instances)
+        for the per-row ``states=`` grid) — the shared dispatch behind the
+        cold (idle carries) and warm (live carries) grid lanes, so both ride
+        the identical executables.  With ``policy`` the lane axis is the
+        policy fold (L = P·B).  Every flavor — plain, stacked-table, routed,
+        and both combined — shards across the host devices through
+        ``_dispatch_grid_sharded`` when several are configured; the per-row
+        ``states=`` carries run the single-device states jits."""
         width = self._grid_slot_pad(configs.sum(axis=1))
         arr = np.asarray(arrivals, np.float32)                # (W, nq)
         tos = np.ascontiguousarray(type_of_slot[:, :width])   # (B, S)
-        free0 = np.ascontiguousarray(free0_rows[:, :width])
+        free0 = np.ascontiguousarray(free0_rows[..., :width])
+        per_row = free0.ndim == 3                             # (W, B, S)
 
         qos_t = jnp.float32(_qos_threshold_f32(self.model.qos_latency))
+        iota = jnp.arange(width, dtype=jnp.int32)
+        policy_ops = None
         if policy is not None:
-            tos, free0, pref, aff, hed, _ = _fold_policy(policy, tos, free0)
-            iota = jnp.arange(width, dtype=jnp.int32)
+            if per_row:
+                # Fold the policy over the layout alone, then tile every
+                # row's carries across the policy axis (the carry does not
+                # depend on the policy).
+                tos2, _, pref, aff, hed, n_p = _fold_policy(
+                    policy, tos, np.zeros_like(tos, dtype=np.float32))
+                free0 = np.ascontiguousarray(np.tile(free0, (1, n_p, 1)))
+                tos = tos2
+            else:
+                tos, free0, pref, aff, hed, _ = _fold_policy(policy, tos,
+                                                             free0)
+            policy_ops = (np.asarray(pref), np.asarray(aff), np.asarray(hed))
+        if per_row:
+            ops = (jnp.asarray(arr),
+                   self._service.T if tables is None
+                   else jnp.transpose(tables, (0, 2, 1)),
+                   jnp.asarray(tos), self._priority[:width],
+                   jnp.asarray(free0), iota, qos_t)
+            if policy is not None:
+                ops = ops + tuple(jnp.asarray(x) for x in policy_ops)
+                fn = (_grid_counts_policy_states_jit if tables is None
+                      else _grid_counts_policy_tables_states_jit)
+            else:
+                fn = (_grid_counts_states_jit if tables is None
+                      else _grid_counts_tables_states_jit)
+            counts, _ = fn(*ops)
+            return np.asarray(jax.device_get(counts))
+        n_dev = jax.local_device_count()
+        if n_dev > 1:
+            factors = tuple(float(f) for f in np.asarray(load_factors,
+                                                         dtype=np.float64))
+            return self._dispatch_grid_sharded(arr, tables, tos, free0,
+                                               width, n_dev, factors,
+                                               policy_ops)
+        if policy is not None:
+            pref, aff, hed = (jnp.asarray(x) for x in policy_ops)
             if tables is not None:
                 counts, _ = _grid_counts_policy_tables_jit(
                     jnp.asarray(arr), jnp.transpose(tables, (0, 2, 1)),
                     jnp.asarray(tos), self._priority[:width],
-                    jnp.asarray(free0), iota, qos_t, jnp.asarray(pref),
-                    jnp.asarray(aff), jnp.asarray(hed))
+                    jnp.asarray(free0), iota, qos_t, pref, aff, hed)
             else:
                 counts, _ = _grid_counts_policy_jit(
                     jnp.asarray(arr), self._service.T, jnp.asarray(tos),
                     self._priority[:width], jnp.asarray(free0), iota, qos_t,
-                    jnp.asarray(pref), jnp.asarray(aff), jnp.asarray(hed))
+                    pref, aff, hed)
             return np.asarray(jax.device_get(counts))
-        n_dev = jax.local_device_count()
         if tables is not None:
             counts, _ = _grid_counts_tables_jit(
                 jnp.asarray(arr), jnp.transpose(tables, (0, 2, 1)),
                 jnp.asarray(tos), self._priority[:width],
-                jnp.asarray(free0), jnp.arange(width, dtype=jnp.int32),
-                qos_t)
+                jnp.asarray(free0), iota, qos_t)
             return np.asarray(jax.device_get(counts))
-        if n_dev > 1:
-            factors = tuple(float(f) for f in np.asarray(load_factors,
-                                                         dtype=np.float64))
-            return self._dispatch_grid_sharded(arr, tos, free0, width,
-                                               n_dev, factors)
         counts, _ = _grid_counts_jit(
             jnp.asarray(arr), self._service.T, jnp.asarray(tos),
-            self._priority[:width], jnp.asarray(free0),
-            jnp.arange(width, dtype=jnp.int32), qos_t)
+            self._priority[:width], jnp.asarray(free0), iota, qos_t)
         return np.asarray(jax.device_get(counts))
 
     def _qos_counts_grid_tel(self, arrivals, tables, type_of_slot,
@@ -1932,7 +2143,7 @@ class PoolSimulator:
                              tel_shape) -> tuple[np.ndarray, Telemetry]:
         """Telemetry twin of ``_qos_counts_grid``: the in-carry accumulator
         kernels over the same trimmed layout.  Single-device executable only
-        (the pmap shard path stays telemetry-off); the QoS counts come from
+        (the shard_map path stays telemetry-off); the QoS counts come from
         the identical dispatch recurrence and comparison, so the rates are
         bit-identical to the lean sweep's."""
         width = self._grid_slot_pad(configs.sum(axis=1))
@@ -1980,91 +2191,223 @@ class PoolSimulator:
         return counts, tel
 
     def _grid_replicated_consts(self, width: int, n_dev: int) -> tuple:
-        """Per-device replicas of the sweep constants (service table,
-        priority, slot iota, QoS threshold), uploaded once and cached."""
+        """Mesh-replicated sweep constants (service table, priority, slot
+        iota, QoS threshold), uploaded once and cached.  shard_map under jit
+        takes global operands, so "replicated" here is a ``P()`` placement
+        on the lane mesh — each device reads the same buffer."""
         key = (n_dev, width)
         if key not in self._grid_consts:
-            devices = jax.local_devices()[:n_dev]
+            rep = NamedSharding(_lane_mesh(n_dev), P())
             self._grid_consts[key] = (
-                jax.device_put_replicated(self._service.T, devices),
-                jax.device_put_replicated(self._priority[:width], devices),
-                jax.device_put_replicated(
-                    jnp.arange(width, dtype=jnp.int32), devices),
-                jax.device_put_replicated(
+                jax.device_put(self._service.T, rep),
+                jax.device_put(self._priority[:width], rep),
+                jax.device_put(jnp.arange(width, dtype=jnp.int32), rep),
+                jax.device_put(
                     jnp.float32(_qos_threshold_f32(self.model.qos_latency)),
-                    devices),
+                    rep),
             )
         return self._grid_consts[key]
 
     def _grid_arr_shards(self, arr: np.ndarray, mode: str, n_dev: int,
                          factors: tuple) -> jnp.ndarray:
         """Device layout of the (W, nq) arrival grid, LRU-cached per
-        load-factor tuple: workload-axis shards ("w", padded with duplicate
-        levels) or per-device replicas ("b").  Hits refresh recency, so a
-        rescale loop cycling through more monitored-level sets than the
-        cache holds evicts the stalest set instead of thrashing re-uploads
-        of the ones it keeps re-sweeping."""
+        load-factor tuple: workload-axis lane shards ("w", cyclically padded
+        with duplicate levels to a device multiple) or a mesh-replicated
+        buffer ("b").  Hits refresh recency, so a rescale loop cycling
+        through more monitored-level sets than the cache holds evicts the
+        stalest set instead of thrashing re-uploads of the ones it keeps
+        re-sweeping."""
         key = (mode, n_dev, factors)
         out = self._grid_arrs.pop(key, None)
         if out is None:
-            n_w = len(arr)
+            mesh = _lane_mesh(n_dev)
             if mode == "w":
+                n_w = len(arr)
                 pad_w = (-n_w) % n_dev
                 if pad_w:
                     # Cyclic padding: pad_w may exceed n_w (e.g. one load
                     # level on an 8-device host), so wrap the row index.
                     arr = np.concatenate(
                         [arr, arr[np.arange(pad_w) % n_w]])
-                out = jnp.asarray(
-                    arr.reshape(n_dev, (n_w + pad_w) // n_dev, -1))
+                out = jax.device_put(jnp.asarray(arr),
+                                     NamedSharding(mesh, P("lane")))
             else:
-                out = jnp.asarray(np.ascontiguousarray(
-                    np.broadcast_to(arr, (n_dev,) + arr.shape)))
+                out = jax.device_put(jnp.asarray(arr),
+                                     NamedSharding(mesh, P()))
             while len(self._grid_arrs) >= 8:
                 self._grid_arrs.pop(next(iter(self._grid_arrs)))
         # (Re-)inserting moves the key to the recent end of the dict.
         self._grid_arrs[key] = out
         return out
 
-    def _dispatch_grid_sharded(self, arr, tos, free0, width, n_dev,
-                               factors) -> np.ndarray:
-        """One pmapped sweep across the host devices.
+    def _dispatch_grid_sharded(self, arr, tables, tos, free0, width, n_dev,
+                               factors, policy_ops=None) -> np.ndarray:
+        """One shard_mapped sweep across the lane mesh — every grid flavor
+        (plain / stacked-table / routed / both).
 
-        Splits the workload axis (padding with duplicate levels when it does
-        not divide) unless the config axis divides more cleanly — e.g. a
-        single-level sweep over many configs.  All broadcast operands arrive
-        pre-replicated; only the per-call slot layouts (and their idle
-        carries) cross the host boundary.
+        Splits the workload axis (cyclically padded with duplicate levels
+        when it does not divide) unless the lane axis divides more cleanly —
+        e.g. a single-level sweep over many configs or a wide policy fold.
+        The shard_mapped executable takes global operands (no per-device
+        leading axis); pad rows are sliced off the result, and per-device
+        blocks run the same per-lane vmap bodies as the single-device jits,
+        so counts are bit-identical to them.
         """
         n_w, n_b = len(arr), len(tos)
         service_r, prio_r, iota_r, qos_r = self._grid_replicated_consts(
             width, n_dev)
-
-        def replicate(x):
-            return jnp.asarray(np.ascontiguousarray(
-                np.broadcast_to(x, (n_dev,) + x.shape)))
+        if tables is None:
+            flavor = "plain" if policy_ops is None else "policy"
+            svc = service_r
+        else:
+            flavor = "tables" if policy_ops is None else "policy_tables"
+            svc = jnp.transpose(tables, (0, 2, 1))
 
         # Split whichever axis wastes fewer lanes per device; both axes pad
-        # cyclically (duplicate levels / duplicate configs, results of the
+        # cyclically (duplicate levels / duplicate lanes, results of the
         # pad rows dropped), so neither split requires exact divisibility.
         pad_w = (-n_w) % n_dev
         pad_b = (-n_b) % n_dev
         lanes_w_split = ((n_w + pad_w) // n_dev) * n_b
         lanes_b_split = n_w * ((n_b + pad_b) // n_dev)
+        extra = () if policy_ops is None else policy_ops
         if lanes_b_split < lanes_w_split:
             if pad_b:
                 idx = np.arange(n_b + pad_b) % n_b
                 tos, free0 = tos[idx], free0[idx]
-            counts, _ = _grid_counts_pmap(
-                self._grid_arr_shards(arr, "b", n_dev, factors), service_r,
-                jnp.asarray(tos.reshape(n_dev, -1, width)), prio_r,
-                jnp.asarray(free0.reshape(n_dev, -1, width)),
-                iota_r, qos_r)
-            counts = np.asarray(jax.device_get(counts))
-            counts = counts.transpose(1, 0, 2).reshape(n_w, n_b + pad_b)
-            return counts[:, :n_b]
-        counts, _ = _grid_counts_pmap(
-            self._grid_arr_shards(arr, "w", n_dev, factors), service_r,
-            replicate(tos), prio_r, replicate(free0), iota_r, qos_r)
-        counts = np.asarray(jax.device_get(counts))
-        return counts.reshape(-1, n_b)[:n_w]
+                # Policy operands (pref rows, affinity, hedge) all carry the
+                # lane axis leading, so they pad with the same cyclic index.
+                extra = tuple(x[idx] for x in extra)
+            fn = _sharded_counts_fn(n_dev, flavor, "b")
+            counts, _ = fn(
+                self._grid_arr_shards(arr, "b", n_dev, factors), svc,
+                jnp.asarray(tos), prio_r, jnp.asarray(free0), iota_r, qos_r,
+                *(jnp.asarray(x) for x in extra))
+            return np.asarray(jax.device_get(counts))[:, :n_b]
+        if pad_w and tables is not None:
+            idx = np.arange(n_w + pad_w) % n_w
+            svc = jnp.concatenate([svc, svc[idx[n_w:]]])
+        fn = _sharded_counts_fn(n_dev, flavor, "w")
+        counts, _ = fn(
+            self._grid_arr_shards(arr, "w", n_dev, factors), svc,
+            jnp.asarray(tos), prio_r, jnp.asarray(free0), iota_r, qos_r,
+            *(jnp.asarray(x) for x in extra))
+        return np.asarray(jax.device_get(counts))[:n_w]
+
+
+@dataclass(frozen=True)
+class StreamResult:
+    """Outcome of a streamed QoS evaluation."""
+
+    rate: float          # QoS satisfaction fraction (paper Eq. 2 R_sat)
+    n_queries: int       # queries streamed
+    rebases: int         # clock rebases taken (0 while horizon < _MAX_HORIZON/2)
+
+
+class StreamingSimulator:
+    """Constant-memory streamed twin of :class:`PoolSimulator`'s QoS lane.
+
+    Bound to a generative :class:`WorkloadSpec` instead of a finite
+    :class:`Workload`: query blocks are drawn on device chunk by chunk
+    (``spec.generate_chunk``), each block scanned through the donated-carry
+    streaming kernel (``_stream_chunk``), so evaluating ``n`` queries holds
+    one block plus two carry buffers regardless of ``n``.
+
+    Bit-exactness contract (tests/test_streaming.py):
+
+      * while the unscaled horizon stays below ``_MAX_HORIZON / 2`` the
+        streamed QoS count equals ``PoolSimulator(model, types,
+        spec.realize(n)).qos(config)`` bit for bit — same layout expansion
+        (``_expand_slots``), same slot-pad width, same f32 threshold
+        rounding, same per-query arithmetic (the LUT gather reproduces the
+        host service-table column exactly);
+      * beyond that the stream *rebases*: the carry and arrival origin
+        shift back to ~0 between chunks (exact f32 subtraction of the new
+        origin), which keeps every in-scan timestamp inside the guarded
+        float32 envelope at any episode length — the monolithic path would
+        raise its horizon guard instead.
+    """
+
+    def __init__(self, model: ModelProfile, types: list[InstanceType],
+                 spec: WorkloadSpec, max_instances: int = 40):
+        self.model = model
+        self.types = list(types)
+        self.spec = spec
+        self.max_instances = max_instances
+        # f32 cast *before* the transpose so lut_T rows hold exactly the
+        # f32 values the monolithic path's service-table cast produces.
+        self._lut_T = jnp.asarray(
+            np.asarray(service_time_lut(model, self.types, spec.max_batch),
+                       dtype=np.float32).T)
+        self._priority = jnp.arange(max_instances, dtype=jnp.float32)
+
+    def qos(self, config, n_queries: int, *, probe=None) -> StreamResult:
+        """Stream ``n_queries`` of the bound spec through ``config``.
+
+        ``probe``, if given, is called as ``probe(chunk_index)`` after each
+        block — the constant-memory bench hooks live-buffer accounting in
+        here without the simulator growing a telemetry dependency.
+        """
+        cfg = np.asarray(config, dtype=np.int64)
+        if cfg.ndim != 1 or len(cfg) != len(self.types):
+            raise ValueError(f"expected ({len(self.types)},) config, got "
+                             f"shape {cfg.shape}")
+        n = int(n_queries)
+        if n < 0:
+            raise ValueError("n_queries must be >= 0")
+        if n == 0:
+            # 0/0 convention of the grid lane: no queries, no violations.
+            return StreamResult(rate=float("nan"), n_queries=0, rebases=0)
+        if int(cfg.sum()) == 0:
+            # Single-lane convention: an empty pool serves nothing within
+            # QoS (latencies are +inf).
+            return StreamResult(rate=0.0, n_queries=n, rebases=0)
+        type_of_slot, active = _expand_slots(cfg[None, :], len(self.types),
+                                             self.max_instances)
+        width = min(max(8, 1 << (int(cfg.sum()) - 1).bit_length()),
+                    self.max_instances)
+        tos = jnp.asarray(np.ascontiguousarray(type_of_slot[0, :width]))
+        prio = self._priority[:width]
+        iota = jnp.arange(width, dtype=jnp.int32)
+        qos_t = jnp.float32(_qos_threshold_f32(self.model.qos_latency))
+        free = jnp.asarray(
+            np.ascontiguousarray(_cold_free0(active[0, :width])))
+        count = jnp.zeros((), dtype=jnp.int32)
+        full_valid = np.ones(self.spec.chunk, dtype=bool)
+
+        chunk = self.spec.chunk
+        scale = float(self.spec.scale)
+        base = 0.0
+        shift = 0.0
+        rebases = 0
+        for c in range(math.ceil(n / chunk)):
+            arr, local, batches = self.spec.generate_chunk(c, base)
+            left = n - c * chunk
+            if left >= chunk:
+                valid = full_valid
+            else:
+                valid = np.zeros(chunk, dtype=bool)
+                valid[:left] = True
+            free, count = _stream_chunk_jit(
+                free, count, jnp.float32(shift), arr, batches,
+                jnp.asarray(valid), self._lut_T, tos, prio, iota, qos_t)
+            shift = 0.0
+            base = float(local[-1])
+            horizon = base / scale
+            if horizon > _MAX_HORIZON:
+                raise ValueError(
+                    f"stream chunk spans {horizon:.0f}s of simulated time "
+                    f"(> {_MAX_HORIZON:.0f}s): one block outruns the "
+                    f"float32 envelope; raise rate_qps or shrink chunk")
+            if horizon > _MAX_HORIZON / 2.0:
+                # Rebase: the next chunk's gaps accumulate from 0 again,
+                # and the carry drops the same origin (exact f32 value of
+                # the *scaled* origin) on entry to the next block.
+                shift = float(np.float32(np.float64(base) /
+                              np.float64(scale)))
+                base = 0.0
+                rebases += 1
+            if probe is not None:
+                probe(c)
+        return StreamResult(rate=int(jax.device_get(count)) / n,
+                            n_queries=n, rebases=rebases)

@@ -9,15 +9,31 @@
 
 Generation is jax.random-based so streams are reproducible from a single seed
 across the whole framework.
+
+Two stream representations coexist:
+
+* :class:`Workload` — a host-materialized finite trace (arrays), the classic
+  representation every simulator lane binds to.
+* :class:`WorkloadSpec` — a *generative* description of an unbounded stream:
+  fixed-size query chunks are drawn **on device** (threefry keys split per
+  chunk index), so a streaming consumer never materializes the episode.
+  ``realize(n)`` runs the identical chunked computation and concatenates the
+  results, which is what makes a streamed episode bit-identical to a
+  monolithic scan over the realized trace — threefry bits depend on the draw
+  shape, so the chunked generation *is* the canonical stream and the
+  monolithic path replays it chunk for chunk.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import math
+from dataclasses import dataclass, replace
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
 
 @dataclass(frozen=True)
@@ -53,6 +69,131 @@ def gaussian_batches(key, n: int, mean: float = 48.0, std: float = 24.0,
     """Gaussian batch sizes (paper Fig. 11 robustness study)."""
     raw = mean + std * jax.random.normal(key, (n,))
     return jnp.clip(jnp.round(raw), 1, max_batch).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("chunk", "dist"))
+def _spec_chunk(k_arr, k_batch, c, base, rate, scale, p_a, p_b, max_batch, *,
+                chunk: int, dist: str):
+    """One on-device query chunk: (scaled arrivals f32, unscaled local
+    arrivals f32, batches i32).
+
+    Every float expression carries an explicit float32 dtype — the caller
+    runs this under ``jax.experimental.enable_x64`` so the load-scale
+    division happens in float64 (matching the host path, which divides
+    float64 arrivals before the device's float32 cast), and x64 mode flips
+    jax's *default* dtypes, so nothing here may rely on them.  Chunk ``c``
+    draws from ``fold_in(key, c)``, so any chunk regenerates independently
+    given the previous chunk's last unscaled arrival (``base``).
+    """
+    ka = jax.random.fold_in(k_arr, c)
+    kb = jax.random.fold_in(k_batch, c)
+    gaps = jax.random.exponential(ka, (chunk,), dtype=jnp.float32) / rate
+    local = base + jnp.cumsum(gaps)
+    arr = (local.astype(jnp.float64) / scale.astype(jnp.float64)).astype(
+        jnp.float32)
+    z = jax.random.normal(kb, (chunk,), dtype=jnp.float32)
+    raw = jnp.exp(p_a + p_b * z) if dist == "lognormal" else p_a + p_b * z
+    batches = jnp.clip(jnp.round(raw), jnp.float32(1.0),
+                       max_batch).astype(jnp.int32)
+    return arr, local, batches
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """Generative description of an unbounded query stream.
+
+    The stream is defined *chunk-wise*: chunk ``c`` (``chunk`` queries) is
+    drawn on device from ``fold_in``-derived keys, inter-arrival gaps
+    accumulating onto the previous chunk's last unscaled arrival.  ``scale``
+    compresses arrivals exactly as ``Workload.scaled`` does — the division
+    runs in float64 before any float32 cast, so a streamed scaled episode
+    matches a host-built scaled trace bit for bit.  ``scaled`` composes
+    multiplicatively, mirroring ``Workload.scaled`` chaining.
+    """
+
+    seed: int
+    rate_qps: float
+    batch_dist: str = "lognormal"
+    chunk: int = 4096
+    scale: float = 1.0
+    median_batch: float = 24.0
+    sigma: float = 0.8
+    mean_batch: float = 48.0
+    std_batch: float = 24.0
+    max_batch: int = 256
+
+    def __post_init__(self):
+        if self.chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        if not self.rate_qps > 0 or not self.scale > 0:
+            raise ValueError("rate_qps and scale must be > 0")
+        if self.batch_dist not in ("lognormal", "gaussian"):
+            raise ValueError(f"unknown batch_dist {self.batch_dist!r}")
+
+    @property
+    def effective_rate(self) -> float:
+        """Nominal arrival rate after load scaling."""
+        return self.rate_qps * self.scale
+
+    def scaled(self, load_factor: float) -> "WorkloadSpec":
+        """Same stream under ``load_factor``-times heavier traffic
+        (``Workload.scaled`` semantics; factors compose by multiplication,
+        and the realized division is ``unscaled / (f1 * f2 * ...)``)."""
+        if not load_factor > 0:
+            raise ValueError("load_factor must be > 0")
+        return replace(self, scale=self.scale * float(load_factor))
+
+    def _keys(self):
+        return jax.random.split(jax.random.PRNGKey(self.seed))
+
+    def generate_chunk(self, c: int, base: float):
+        """Device arrays of chunk ``c``: (scaled arrivals f32, unscaled
+        local arrivals f32, batches i32).  ``base`` is the previous chunk's
+        last *unscaled* arrival (0.0 for chunk 0, or a rebased origin)."""
+        k_arr, k_batch = self._keys()
+        if self.batch_dist == "lognormal":
+            p_a = float(np.log(self.median_batch))
+            p_b = self.sigma
+        else:
+            p_a = self.mean_batch
+            p_b = self.std_batch
+        with enable_x64():
+            return _spec_chunk(
+                k_arr, k_batch, np.int64(c), jnp.float32(base),
+                jnp.float32(self.rate_qps), jnp.float32(self.scale),
+                jnp.float32(p_a), jnp.float32(p_b),
+                jnp.float32(self.max_batch),
+                chunk=self.chunk, dist=self.batch_dist)
+
+    def realize(self, n_queries: int) -> Workload:
+        """Host :class:`Workload` of the stream's first ``n_queries`` — the
+        *same* chunked device computation, concatenated and truncated.
+
+        Unscaled float32 arrivals are upcast to float64 exactly, then the
+        load scale divides in float64 (one division by the composed scale)
+        — so a ``PoolSimulator`` bound to the result sees, after its own
+        float32 cast, the identical bits a streaming consumer generates on
+        device.
+        """
+        if n_queries < 0:
+            raise ValueError("n_queries must be >= 0")
+        arrs: list[np.ndarray] = []
+        bats: list[np.ndarray] = []
+        base = 0.0
+        for c in range(math.ceil(n_queries / self.chunk)):
+            _, local, batches = self.generate_chunk(c, base)
+            local = np.asarray(jax.device_get(local))
+            arrs.append(local)
+            bats.append(np.asarray(jax.device_get(batches)))
+            base = float(local[-1])
+        arr64 = (np.concatenate(arrs)[:n_queries].astype(np.float64)
+                 if arrs else np.zeros(0, dtype=np.float64))
+        if self.scale != 1.0:
+            arr64 = arr64 / np.float64(self.scale)
+        bat64 = (np.concatenate(bats)[:n_queries].astype(np.int64)
+                 if bats else np.zeros(0, dtype=np.int64))
+        return Workload(arrivals=arr64, batches=bat64,
+                        rate_qps=float(self.effective_rate))
 
 
 def generate_workload(seed: int, n_queries: int, rate_qps: float,

@@ -199,3 +199,66 @@ def test_schema_only_skips_kind_gates_but_validates_schema(tmp_path,
     bad.write_text(json.dumps({"schema_version": CB.SCHEMA_VERSION,
                                "bench": "x", "v": float("inf")}))
     assert CB.main([str(bad), "--schema-only"]) == 1
+
+
+def _stream_doc(n=1_000_000):
+    return {
+        "schema_version": CB.SCHEMA_VERSION, "bench": "stream",
+        "model": "mtwnd", "config": [2, 3, 3], "n_queries": n,
+        "stream": {"n_queries": n, "chunk": 4096, "elapsed_s": 0.5,
+                   "qps": 2_000_000.0, "qos_rate": 0.98, "rebases": 0},
+        "memory": {"n_small": n // 4, "n_large": n, "peak_small_bytes": 52552,
+                   "peak_large_bytes": 52552, "ratio": 1.0},
+        "bit_identical": {"n_queries": 1500, "streamed_rate": 0.98,
+                          "monolithic_rate": 0.98, "ok": True},
+        "day": {"episode": "diurnal-day", "total_queries": n,
+                "qos_rate": 0.995, "total_cost": 1.4, "completed": True},
+    }
+
+
+def test_stream_gates(tmp_path, capsys):
+    path = tmp_path / "BENCH_stream.json"
+    path.write_text(json.dumps(_stream_doc()))
+    assert CB.main([str(path)]) == 0
+    capsys.readouterr()
+    # throughput below the full floor fails...
+    doc = _stream_doc()
+    doc["stream"]["qps"] = 50_000.0
+    path.write_text(json.dumps(doc))
+    assert CB.main([str(path)]) == 1
+    assert "throughput" in capsys.readouterr().out
+    # ...but passes at smoke scale, where the reduced floor applies
+    doc["n_queries"] = doc["stream"]["n_queries"] = 20_000
+    doc["day"]["total_queries"] = 10_000
+    path.write_text(json.dumps(doc))
+    assert CB.main([str(path)]) == 0
+    capsys.readouterr()
+    # a growing memory peak breaks the constant-memory claim
+    doc = _stream_doc()
+    doc["memory"]["ratio"] = 1.5
+    doc["memory"]["peak_large_bytes"] = 78828
+    path.write_text(json.dumps(doc))
+    assert CB.main([str(path)]) == 1
+    assert "constant-memory" in capsys.readouterr().out
+    # streamed rate diverging from the monolithic reference is fatal
+    doc = _stream_doc()
+    doc["bit_identical"]["ok"] = False
+    path.write_text(json.dumps(doc))
+    assert CB.main([str(path)]) == 1
+    assert "monolithic" in capsys.readouterr().out
+    # a full-size run must cover the whole day episode
+    doc = _stream_doc()
+    doc["day"]["total_queries"] = 500_000
+    path.write_text(json.dumps(doc))
+    assert CB.main([str(path)]) == 1
+    assert "day episode" in capsys.readouterr().out
+    # missing sections are incomplete artifacts
+    doc = _stream_doc()
+    del doc["memory"]
+    path.write_text(json.dumps(doc))
+    assert CB.main([str(path)]) == 1
+    assert "memory" in capsys.readouterr().out
+    # stream throughput participates in the trend metrics
+    metrics = CB.trend_metrics(_stream_doc())
+    assert metrics["stream_qps"] == (2_000_000.0, "higher")
+    assert metrics["stream_mem_ratio"] == (1.0, "lower")

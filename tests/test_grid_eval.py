@@ -133,18 +133,18 @@ def test_grid_rejects_bad_load_factors():
 def test_grid_arr_shards_pads_cyclically_beyond_workload_count():
     """The workload-axis pad may exceed W (one load level on an 8-device
     host): rows must wrap cyclically instead of silently under-filling the
-    reshape."""
+    device multiple.  shard_map takes global operands, so the cached array
+    keeps its 2-D shape — padded to a device multiple and laid out over the
+    lane mesh."""
     sim = _sim()
     for n_w, n_dev in [(1, 4), (2, 8), (3, 4), (5, 8), (4, 4)]:
         factors = tuple(1.0 + 0.1 * i for i in range(n_w))
         arr = np.asarray(sim._stacked_arrivals(factors), np.float32)
         out = np.asarray(sim._grid_arr_shards(arr, "w", n_dev, factors))
         pad_w = (-n_w) % n_dev
-        assert out.shape == (n_dev, (n_w + pad_w) // n_dev,
-                             sim.workload.n_queries)
-        flat = out.reshape(-1, sim.workload.n_queries)
+        assert out.shape == (n_w + pad_w, sim.workload.n_queries)
         for i in range(n_w + pad_w):
-            np.testing.assert_array_equal(flat[i], arr[i % n_w])
+            np.testing.assert_array_equal(out[i], arr[i % n_w])
 
 
 @pytest.mark.slow

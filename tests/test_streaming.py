@@ -1,0 +1,407 @@
+"""Streaming chunked episodes: constant-memory simulation contracts.
+
+* ``WorkloadSpec`` chunk generation is deterministic and prefix-stable,
+  and ``realize(n)`` reproduces the chunked device stream exactly;
+* ``StreamingSimulator.qos`` is bit-identical to ``PoolSimulator.qos``
+  on the realized trace at monolithic-safe horizons — including partial
+  final chunks — and streams *past* the monolithic float32 horizon guard
+  by rebasing the clock between chunks;
+* ``scaled()`` chaining composes multiplicatively and the scaled stream
+  matches the host-built scaled trace bit for bit;
+* the ``states=`` per-workload-row warm grid equals the shared-state
+  grid row by row (cold rows equal the cold grid);
+* the shard_map lane dispatch is bit-identical to the single-device jits
+  for every flavor (plain / stacked-table / routed / both) on both split
+  axes, including cyclic padding;
+* ``SimulatorPlane(stream_chunk=)`` measures, windows, and commits
+  bit-identically to the monolithic plane, and ``phase_sweep(states=)``
+  warm rows match the shared-state grid.
+"""
+
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.scenario import PhaseSpec, SimulatorPlane
+from repro.scenario.engine import _near_seed_candidates
+from repro.serving.instance import (InstanceType, ModelProfile,
+                                    service_time_table)
+from repro.serving.routing import RoutingPolicy
+from repro.serving.simulator import (PoolSimulator, StreamingSimulator,
+                                     _MAX_HORIZON)
+from repro.serving.workload import Workload, WorkloadSpec, generate_workload
+
+FAST = InstanceType("fast", price=1.0, flops=1e9, mem_bw=1e9, overhead=1e-3)
+SLOW = InstanceType("slow", price=0.3, flops=2e8, mem_bw=5e8, overhead=2e-3)
+PROF = ModelProfile("toy", flops_per_sample=1e6, act_bytes_per_sample=1e4,
+                    weight_bytes=1e5, qos_latency=0.05)
+MAX_INST = 8
+
+
+def _spec(seed=0, rate=120.0, chunk=256, **kw):
+    kw.setdefault("median_batch", 8.0)
+    kw.setdefault("mean_batch", 10.0)
+    kw.setdefault("std_batch", 4.0)
+    kw.setdefault("max_batch", 32)
+    return WorkloadSpec(seed=seed, rate_qps=rate, chunk=chunk, **kw)
+
+
+def _sim(wl):
+    return PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=MAX_INST)
+
+
+def _stream(spec):
+    return StreamingSimulator(PROF, [FAST, SLOW], spec,
+                              max_instances=MAX_INST)
+
+
+# ------------------------------------------------------------ spec hygiene
+def test_spec_validation():
+    with pytest.raises(ValueError, match="chunk"):
+        _spec(chunk=0)
+    with pytest.raises(ValueError, match="rate_qps"):
+        _spec(rate=0.0)
+    with pytest.raises(ValueError, match="batch_dist"):
+        _spec(batch_dist="zipf")
+    with pytest.raises(ValueError, match="load_factor"):
+        _spec().scaled(0.0)
+    with pytest.raises(ValueError, match="n_queries"):
+        _spec().realize(-1)
+
+
+def test_realize_deterministic_and_prefix_stable():
+    spec = _spec(chunk=64)
+    a = spec.realize(300)
+    b = spec.realize(300)
+    np.testing.assert_array_equal(a.arrivals, b.arrivals)
+    np.testing.assert_array_equal(a.batches, b.batches)
+    # the stream is chunk-wise: a shorter realization is an exact prefix
+    c = spec.realize(100)
+    np.testing.assert_array_equal(a.arrivals[:100], c.arrivals)
+    np.testing.assert_array_equal(a.batches[:100], c.batches)
+    assert np.all(np.diff(a.arrivals) > 0)
+    assert a.batches.min() >= 1 and a.batches.max() <= 32
+    empty = spec.realize(0)
+    assert empty.n_queries == 0
+
+
+def test_realize_gaussian_dist_and_effective_rate():
+    spec = _spec(batch_dist="gaussian", chunk=128)
+    wl = spec.realize(256)
+    assert wl.n_queries == 256
+    assert wl.rate_qps == spec.effective_rate == spec.rate_qps
+    s2 = spec.scaled(1.5)
+    assert s2.effective_rate == spec.rate_qps * 1.5
+
+
+# --------------------------------------------- streamed qos bit-identity
+@pytest.mark.parametrize("dist", ["lognormal", "gaussian"])
+@pytest.mark.parametrize("seed", [0, 7])
+def test_stream_qos_bit_identical_to_monolithic(dist, seed):
+    """Streamed QoS == PoolSimulator.qos on realize(n), bit for bit, with
+    a partial final chunk (1500 = 5 x 256 + 220) exercising the mask."""
+    spec = _spec(seed=seed, batch_dist=dist)
+    n = 1500
+    sim = _sim(spec.realize(n))
+    ssim = _stream(spec)
+    for cfg in [(1, 1), (2, 2), (0, 3), (3, 0)]:
+        res = ssim.qos(cfg, n)
+        assert res.rate == float(sim.qos(cfg).rates)
+        assert res.n_queries == n and res.rebases == 0
+
+
+def test_stream_qos_single_partial_chunk():
+    """n below one chunk: the whole episode is one masked block."""
+    spec = _spec()
+    n = 100
+    res = _stream(spec).qos((2, 1), n)
+    assert res.rate == float(_sim(spec.realize(n)).qos((2, 1)).rates)
+
+
+def test_stream_edge_cases_and_probe():
+    spec = _spec(chunk=64)
+    ssim = _stream(spec)
+    r0 = ssim.qos((1, 1), 0)
+    assert math.isnan(r0.rate) and r0.n_queries == 0 and r0.rebases == 0
+    rz = ssim.qos((0, 0), 50)
+    assert rz.rate == 0.0 and rz.n_queries == 50
+    with pytest.raises(ValueError, match="n_queries"):
+        ssim.qos((1, 1), -1)
+    with pytest.raises(ValueError, match="config"):
+        ssim.qos((1, 1, 1), 10)
+    seen = []
+    ssim.qos((1, 1), 200, probe=seen.append)
+    assert seen == list(range(math.ceil(200 / 64)))
+
+
+# --------------------------------------------------- load-scale chaining
+def test_scaled_chaining_composes_and_streams_bit_exactly():
+    spec = _spec(chunk=128)
+    s2 = spec.scaled(1.5).scaled(2.0)
+    assert s2.scale == 3.0 == spec.scaled(3.0).scale
+    # realized scaled stream == host f64 divide of the unscaled stream
+    base = spec.realize(600)
+    np.testing.assert_array_equal(s2.realize(600).arrivals,
+                                  base.arrivals / np.float64(3.0))
+    # ... and == Workload.scaled chaining (1.5 then the exact x2)
+    np.testing.assert_array_equal(s2.realize(600).arrivals,
+                                  base.scaled(1.5).scaled(2.0).arrivals)
+    # scaled-then-streamed == monolithic on the host-built scaled trace
+    res = _stream(s2).qos((2, 2), 600)
+    assert res.rate == float(_sim(s2.realize(600)).qos((2, 2)).rates)
+
+
+# ------------------------------------------------------- clock rebasing
+def test_rebase_streams_past_monolithic_horizon():
+    """A sparse stream whose horizon outruns the float32 envelope: the
+    monolithic path refuses it, the streamed path rebases and finishes."""
+    spec = _spec(seed=3, rate=0.01, chunk=256)
+    n = 2048                 # ~2e5 simulated seconds >> _MAX_HORIZON
+    wl = spec.realize(n)
+    assert float(wl.arrivals[-1]) > _MAX_HORIZON
+    with pytest.raises(ValueError, match="horizon"):
+        _sim(wl)
+    res = _stream(spec).qos((2, 0), n)
+    assert res.rebases >= 1
+    assert 0.9 < res.rate <= 1.0     # ~100 s gaps: almost nothing queues
+    # rebased replay is deterministic
+    again = _stream(spec).qos((2, 0), n)
+    assert again == res
+
+
+def test_one_chunk_outrunning_envelope_raises():
+    spec = _spec(seed=3, rate=0.01, chunk=2048)
+    with pytest.raises(ValueError, match="outruns"):
+        _stream(spec).qos((2, 0), 2048)
+
+
+# ------------------------------------------------- states= per-row grid
+def _warm_state(sim, cfg):
+    return sim.segment_from(sim.initial_state(), cfg).state
+
+
+def test_states_grid_rows_match_shared_state_grid():
+    sim = _sim(generate_workload(0, 200, 120.0, median_batch=8.0,
+                                 max_batch=32))
+    cfg_a = (2, 1)
+    st = _warm_state(sim, cfg_a)
+    cfgs = np.array([(1, 1), (2, 2), (0, 3)])
+    r = np.asarray(sim.qos(cfgs, workloads=[1.0, 1.3],
+                           states=[None, (st, cfg_a)]).rates)
+    assert r.shape == (2, 3)
+    cold = np.asarray(sim.qos(cfgs, workloads=[1.0, 1.3]).rates)
+    np.testing.assert_array_equal(r[0], cold[0])
+    warm = np.asarray(sim.qos(cfgs, workloads=[1.3], state=st,
+                              deployed=cfg_a).rates)
+    np.testing.assert_array_equal(r[1], warm[0])
+
+
+def test_states_grid_stacked_tables_and_policies():
+    wl = generate_workload(0, 200, 120.0, median_batch=8.0, max_batch=32)
+    sim = _sim(wl)
+    cfg_a = (1, 2)
+    st = _warm_state(sim, cfg_a)
+    states = [None, (st, cfg_a)]
+    cfgs = np.array([(1, 1), (2, 2)])
+    tbl = service_time_table(PROF, [FAST, SLOW], wl.batches)
+    tables = np.stack([tbl, tbl])
+    rt = np.asarray(sim.qos(cfgs, workloads=[1.0, 1.3],
+                            service_tables=tables, states=states).rates)
+    np.testing.assert_array_equal(
+        rt[1], np.asarray(sim.qos(cfgs, workloads=[1.3],
+                                  service_tables=tbl[None], state=st,
+                                  deployed=cfg_a).rates)[0])
+    pols = [RoutingPolicy.fcfs(2), RoutingPolicy.hedged(2)]
+    stacked = RoutingPolicy.stack(pols)
+    rp = np.asarray(sim.qos(cfgs, workloads=[1.0, 1.3], states=states,
+                            policy=stacked).rates)
+    assert rp.shape == (2, 2, 2)
+    rpt = np.asarray(sim.qos(cfgs, workloads=[1.0, 1.3],
+                             service_tables=tables, states=states,
+                             policy=stacked).rates)
+    for p, pol in enumerate(pols):
+        np.testing.assert_array_equal(
+            rp[0, p],
+            np.asarray(sim.qos(cfgs, workloads=[1.0], policy=pol).rates)[0])
+        np.testing.assert_array_equal(
+            rp[1, p],
+            np.asarray(sim.qos(cfgs, workloads=[1.3], state=st,
+                               deployed=cfg_a, policy=pol).rates)[0])
+        np.testing.assert_array_equal(rpt[:, p], np.asarray(
+            sim.qos(cfgs, workloads=[1.0, 1.3], service_tables=tables,
+                    states=states, policy=pol).rates))
+
+
+def test_states_grid_validation():
+    sim = _sim(generate_workload(0, 100, 120.0, median_batch=8.0,
+                                 max_batch=32))
+    cfgs = np.array([(1, 1)])
+    st = _warm_state(sim, (1, 1))
+    with pytest.raises(ValueError, match="workloads"):
+        sim.qos(cfgs, states=[None])
+    with pytest.raises(ValueError, match="state=/deployed=/now="):
+        sim.qos(cfgs, workloads=[1.0], states=[None], state=st)
+    with pytest.raises(ValueError, match="telemetry"):
+        sim.qos(cfgs, workloads=[1.0], states=[None], telemetry=True)
+    with pytest.raises(ValueError, match="one entry per workload row"):
+        sim.qos(cfgs, workloads=[1.0, 1.3], states=[None])
+
+
+# ------------------------------------------ shard_map dispatch identity
+SHARD_CASES = [
+    # (factors, n_cfgs, tables, n_policies) — chosen so both split axes
+    # and both cyclic paddings are exercised on a forced 2-lane mesh.
+    ((1.0, 1.2, 1.5), 3, False, 0),       # w-split, pad_w=1
+    ((1.3,), 3, False, 0),                # b-split, pad_b=1
+    ((1.0, 1.2, 1.5), 3, True, 0),        # w-split + table row padding
+    ((1.3,), 3, True, 0),                 # b-split, stacked tables
+    ((1.0, 1.1, 1.2, 1.5), 3, False, 2),  # w-split, policy fold
+    ((1.3,), 1, False, 3),                # b-split pads policy operands
+    ((1.0, 1.1, 1.2, 1.5), 3, True, 2),   # w-split, both stacked axes
+    ((1.3,), 1, True, 3),                 # b-split, both stacked axes
+]
+
+
+@pytest.mark.parametrize("factors,n_cfgs,tables,n_pol", SHARD_CASES)
+def test_sharded_grid_bit_identical_to_single_device(monkeypatch, factors,
+                                                     n_cfgs, tables, n_pol):
+    """Forcing the lane mesh on (n_dev=2) must not change a single bit of
+    any grid flavor relative to the single-device jits."""
+    wl = generate_workload(1, 150, 120.0, median_batch=8.0, max_batch=32)
+    sim = _sim(wl)
+    cfgs = np.array([(1, 1), (2, 2), (0, 3)][:n_cfgs])
+    kw = {"workloads": list(factors)}
+    if tables:
+        tbl = service_time_table(PROF, [FAST, SLOW], wl.batches)
+        kw["service_tables"] = np.stack([tbl] * len(factors))
+    if n_pol:
+        kw["policy"] = RoutingPolicy.stack(
+            [RoutingPolicy.fcfs(2), RoutingPolicy.hedged(2),
+             RoutingPolicy.cost_aware([1.0, 0.3])][:n_pol])
+    base = np.asarray(sim.qos(cfgs, **kw).rates)
+    monkeypatch.setattr(jax, "local_device_count", lambda: 2)
+    sharded = np.asarray(sim.qos(cfgs, **kw).rates)
+    np.testing.assert_array_equal(sharded, base)
+
+
+# --------------------------------------------- chunked simulator plane
+def _plane(stream_chunk=None, n=400, seed=0, rate=120.0):
+    wls = {d: generate_workload(seed, n, rate, batch_dist=d,
+                                median_batch=8.0, mean_batch=10.0,
+                                std_batch=4.0, max_batch=32)
+           for d in ("lognormal", "gaussian")}
+    return SimulatorPlane(PROF, [FAST, SLOW], wls, max_instances=MAX_INST,
+                          stream_chunk=stream_chunk)
+
+
+def _tel_equal(a, b):
+    assert type(a) is type(b)
+    for f in dataclasses.fields(a):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f.name)),
+                                      np.asarray(getattr(b, f.name)))
+
+
+def test_plane_stream_chunk_validation():
+    with pytest.raises(ValueError, match="stream_chunk"):
+        _plane(stream_chunk=0)
+
+
+def test_plane_stream_chunk_bit_identical_to_monolithic():
+    """Chunked serving (stream_chunk=97, deliberately not dividing the
+    segment) is invisible: latencies, waits, window telemetry, carried
+    wait, committed state and the *next* warm segment all match."""
+    mono, chunked = _plane(), _plane(stream_chunk=97)
+    cfg = (2, 1)
+    for pl in (mono, chunked):
+        pl.begin_episode(carry=True)
+        pl.deploy(cfg)
+    wl = mono.phase_stream("lognormal", 300, 1.2)
+    lat_m, w_m = mono.measure("lognormal", wl, cfg)
+    lat_c, w_c = chunked.measure("lognormal", wl, cfg)
+    np.testing.assert_array_equal(lat_c, lat_m)
+    np.testing.assert_array_equal(w_c, w_m)
+    assert chunked.last_carried_wait == mono.last_carried_wait
+    _tel_equal(chunked.window_telemetry(30, 170),
+               mono.window_telemetry(30, 170))
+    _tel_equal(chunked.window_telemetry(5, 5),
+               mono.window_telemetry(5, 5))
+    # partial commit lands inside the third chunk
+    mono.commit(250)
+    chunked.commit(250)
+    np.testing.assert_array_equal(np.asarray(chunked._state.free),
+                                  np.asarray(mono._state.free))
+    assert chunked._state.clock == mono._state.clock
+    assert chunked._local_now == mono._local_now
+    wl2 = mono.phase_stream("gaussian", 200, 1.0)
+    lat_m2, _ = mono.measure("gaussian", wl2, cfg)
+    lat_c2, _ = chunked.measure("gaussian", wl2, cfg)
+    np.testing.assert_array_equal(lat_c2, lat_m2)
+    assert chunked.last_carried_wait == mono.last_carried_wait
+
+
+def test_phase_sweep_states_rows_match_shared_state_grid():
+    plane = _plane()
+    cfg = (2, 1)
+    plane.begin_episode(carry=True)
+    plane.deploy(cfg)
+    wl = plane.phase_stream("lognormal", 300, 1.0)
+    plane.measure("lognormal", wl, cfg)
+    plane.commit(300)
+    cs = plane.candidate_state()
+    assert cs is not None
+    phases = [PhaseSpec("a", 200, 1.0), PhaseSpec("b", 200, 1.3)]
+    probe = (1, 2)
+    sweep = plane.phase_sweep(probe, phases, states=[None, cs])
+    cold = plane.phase_sweep(probe, phases)
+    assert sweep[0] == cold[0]                # a None row scores cold
+    sim = plane.evaluators["lognormal"].sim
+    tbl = service_time_table(PROF, [FAST, SLOW],
+                             plane.workloads["lognormal"].batches)
+    ref = np.asarray(sim.qos([probe], workloads=[1.3],
+                             service_tables=tbl[None], state=cs[0],
+                             deployed=cs[1],
+                             warmup=plane._cold_starts).rates)
+    assert sweep[1] == float(ref[0, 0])
+
+
+# ----------------------------------------------- near-seed restock trim
+def test_near_seed_candidates_bounded_ball():
+    cands = _near_seed_candidates((2, 2), (4, 4), (3, 2))
+    assert cands[0] == (2, 2)                 # seed-first ordering
+    assert (3, 2) not in cands                # current pool excluded
+    assert all(0 <= c[i] <= 4 for c in cands for i in range(2))
+    assert all(abs(c[0] - 2) + abs(c[1] - 2) <= 2 for c in cands)
+    assert len(set(cands)) == len(cands) == 8
+    # clipping at the origin / bounds drops out-of-range neighbors
+    edge = _near_seed_candidates((0, 4), (4, 4), (9, 9))
+    assert all(c[0] >= 0 and c[1] <= 4 for c in edge)
+    assert (0, 4) in edge and len(edge) == 4
+    # excluding the seed itself removes the first entry
+    assert _near_seed_candidates((1, 1), (4, 4), (1, 1))[0] != (1, 1)
+
+
+def test_engine_records_warm_phase_sweep():
+    """Every simulator-plane episode reports the warm twin of the final
+    phase sweep: one states= grid dispatch from each phase's entry carry."""
+    from repro.core.search_space import SearchSpace
+    from repro.scenario import ScenarioEngine, ScenarioSpec
+
+    spec = ScenarioSpec(name="warm-sweep", qos_target=0.9, window=100,
+                        init_budget=25, rescale_budget=12,
+                        phases=(PhaseSpec("a", 300, 1.0),
+                                PhaseSpec("b", 300, 1.4)))
+    plane = _plane(n=300)
+    rep = ScenarioEngine(spec, plane,
+                         SearchSpace(bounds=(4, 4),
+                                     prices=(1.0, 0.3))).run()
+    assert rep.final_qos_by_phase is not None
+    warm = rep.final_qos_by_phase_warm
+    assert warm is not None and len(warm) == 2
+    assert all(0.0 <= r <= 1.0 for r in warm)
+    # phase 0 is entered on the idle carry at clock 0 — the warm identity
+    # element — so its warm row equals the cold sweep's bit for bit
+    assert warm[0] == rep.final_qos_by_phase[0]
+    assert rep.to_dict()["final_qos_by_phase_warm"] == warm
