@@ -48,7 +48,7 @@ import jax
 import numpy as np
 
 from repro.serving import (NAMED_POLICIES, PoolSimulator, RoutingPolicy,
-                           make_paper_setup, named_policy)
+                           best_homogeneous, make_paper_setup, named_policy)
 
 from .common import print_table, write_bench_json
 
@@ -205,7 +205,7 @@ def _measure_warm(sim, space):
     }
 
 
-def _measure_routing(sim, space):
+def _measure_routing(ev, space):
     """Joint (policy x config) dispatch vs a sequential per-policy loop,
     plus the flash-crowd economics gate.
 
@@ -220,7 +220,13 @@ def _measure_routing(sim, space):
     any policy makes feasible must strictly undercut the cheapest config
     FCFS makes feasible — the routed pool absorbs the surge with less
     hardware (scenario engine's ``reroute`` action, engine.py).
+
+    Homogeneous baselines are scored *under each policy* via
+    ``best_homogeneous(..., policy=)`` — before the policy axis was
+    threaded through, every policy silently priced its homogeneous
+    comparison at FCFS, overstating routing's diverse-pool advantage.
     """
+    sim = ev.sim
     policies = [named_policy(n, space.prices) for n in NAMED_POLICIES]
     stacked = RoutingPolicy.stack(policies)
     cfgs = _sample_configs(space, ROUTE_BATCH, seed=11)
@@ -269,6 +275,30 @@ def _measure_routing(sim, space):
     routed_policy = (NAMED_POLICIES[int(np.argmax(rates[:, ri]))]
                      if routed_cfg else None)
 
+    # Per-policy cheapest homogeneous pool at base load: the policy axis
+    # must actually reach the count sweep (the pre-fix behavior scored all
+    # of these identically at FCFS).
+    homog = {}
+    for pname, pol in zip(NAMED_POLICIES, policies):
+        best = min(
+            (best_homogeneous(ev, t, space.prices, ROUTE_QOS_TARGET,
+                              cap=max(space.bounds),
+                              policy=None if pname == "fcfs" else pol)
+             for t in range(len(space.prices))),
+            key=lambda rc: rc[1])
+        homog[pname] = {"count": best[0], "cost": (float(best[1])
+                                                   if best[0] else -1.0)}
+    feasible_costs = [h["cost"] for h in homog.values() if h["count"]]
+    homog_summary = {
+        "per_policy": homog,
+        "fcfs_cost": homog["fcfs"]["cost"],
+        "routed_min_cost": (min(feasible_costs) if feasible_costs
+                            else -1.0),
+        "routed_never_pricier": bool(
+            not feasible_costs or homog["fcfs"]["count"] is None
+            or min(feasible_costs) <= homog["fcfs"]["cost"]),
+    }
+
     return {
         "policies": list(NAMED_POLICIES),
         "batch_size": ROUTE_BATCH,
@@ -287,6 +317,7 @@ def _measure_routing(sim, space):
         "routed_policy": routed_policy,
         "routed_saving_pct": (100.0 * (1.0 - routed_cost / fcfs_cost)
                               if np.isfinite(fcfs_cost) else 0.0),
+        "homogeneous": homog_summary,
     }
 
 
@@ -391,7 +422,7 @@ def run(quick: bool = False):
                   f"{warm['speedup']:.1f}x", warm["bit_identical"],
                   f"{warm['warm_idle_delta_mean']:.4f}"]])
 
-    routing = _measure_routing(sim, space)
+    routing = _measure_routing(ev, space)
     print_table("Routing engine — joint (policy x config) dispatch + "
                 "flash-crowd economics",
                 ["P x B", "speedup", "bit-identical", "FCFS $ @surge",

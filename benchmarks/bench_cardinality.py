@@ -9,7 +9,7 @@ import numpy as np
 from repro.core.search_space import SearchSpace
 from repro.serving import AWS_INSTANCES, MODEL_PROFILES, PoolEvaluator
 from repro.serving.pool import DEFAULT_RATES
-from repro.serving.workload import generate_workload
+from repro.serving.workload import WorkloadSpec
 
 from .common import get_context, print_table, write_json
 
@@ -20,9 +20,9 @@ BOUNDS = {1: (8,), 2: (8, 8), 3: (6, 6, 8), 4: (5, 5, 6, 6)}
 
 def run(quick: bool = False):
     prof = MODEL_PROFILES["mtwnd"]
-    wl = generate_workload(0, 1200, DEFAULT_RATES["mtwnd"],
-                           median_batch=prof.median_batch,
-                           max_batch=prof.max_batch)
+    wl = WorkloadSpec(seed=0, rate_qps=DEFAULT_RATES["mtwnd"],
+                      median_batch=prof.median_batch,
+                      max_batch=prof.max_batch).realize(1200)
     homog_cost = get_context("mtwnd").homog_cost
 
     max_card = 3 if quick else 4

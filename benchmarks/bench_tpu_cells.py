@@ -6,7 +6,7 @@ import numpy as np
 
 from repro.core import RibbonOptimizer, SearchSpace
 from repro.serving import PoolEvaluator, TPU_CELLS, ModelProfile
-from repro.serving.workload import generate_workload
+from repro.serving.workload import WorkloadSpec
 
 from .common import print_table, write_json
 
@@ -18,8 +18,8 @@ LLM_PROFILE = ModelProfile("llm-decode", flops_per_sample=6.0e9,
 
 def run(quick: bool = False):
     types = [TPU_CELLS[n] for n in ("cell8", "cell4", "cell1")]
-    wl = generate_workload(0, 1200, rate_qps=95.0, median_batch=8,
-                           max_batch=64)
+    wl = WorkloadSpec(seed=0, rate_qps=95.0, median_batch=8,
+                      max_batch=64).realize(1200)
     ev = PoolEvaluator(LLM_PROFILE, types, wl)
     space = SearchSpace(bounds=(6, 8, 10),
                         prices=tuple(t.price for t in types))

@@ -15,7 +15,7 @@ sys.path.insert(0, "src")
 from repro.core import RibbonOptimizer, SearchSpace
 from repro.serving.engine import DEFAULT_TPU_CELLS, ClusterEngine
 from repro.serving.fault import recover_from_failure
-from repro.serving.workload import generate_workload
+from repro.serving.workload import WorkloadSpec
 
 
 def main():
@@ -23,8 +23,8 @@ def main():
     engine = ClusterEngine("mtwnd", cells, seed=0)
     print("warming up cell executables ...")
     engine.warmup()
-    wl = generate_workload(0, 80, rate_qps=150.0, median_batch=8,
-                           max_batch=32)
+    wl = WorkloadSpec(seed=0, rate_qps=150.0, median_batch=8,
+                      max_batch=32).realize(80)
     space = SearchSpace(bounds=(4, 3, 3),
                         prices=tuple(c.price for c in cells))
     qos_latency = 0.03

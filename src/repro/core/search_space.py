@@ -163,3 +163,32 @@ def estimate_upper_bounds(evaluate_qos, n_types: int, hard_cap: int = 24,
             m_i = count
         bounds.append(max(m_i, 1))
     return tuple(bounds)
+
+
+def upper_bounds_from_throughput(rates, tputs, *, headroom: float = 1.0,
+                                 cap: int = 64) -> tuple[int, ...]:
+    """Per-type instance caps from measured throughputs: enough instances of
+    each type to carry the *entire* bucketed load alone (the loosest bound a
+    minimum-cost allocation can need), scaled by ``headroom`` and clipped to
+    ``cap``.
+
+    ``rates`` is the per-bucket arrival rate vector (qps); ``tputs`` is the
+    ``(n_types, n_buckets)`` matrix of queries/s one instance of each type
+    sustains per bucket (``serving.instance.measured_throughputs``).  A type
+    with a non-positive throughput on any bucket cannot serve the load alone,
+    so it falls back to ``cap``.
+    """
+    rates_arr = np.asarray(rates, dtype=np.float64)
+    tput_arr = np.atleast_2d(np.asarray(tputs, dtype=np.float64))
+    if tput_arr.shape[1] != rates_arr.shape[0]:
+        raise ValueError("tputs must have one column per bucket rate")
+    if headroom <= 0:
+        raise ValueError("headroom must be positive")
+    bounds = []
+    for col in tput_arr:
+        if np.any(col <= 0):
+            bounds.append(int(cap))
+            continue
+        need = float(np.sum(rates_arr / col)) * headroom
+        bounds.append(int(min(cap, int(np.ceil(need - 1e-9)))))
+    return tuple(max(b, 1) for b in bounds)

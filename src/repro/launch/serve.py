@@ -14,7 +14,7 @@ import argparse
 
 from ..core import RibbonOptimizer, SearchSpace
 from ..serving.engine import DEFAULT_TPU_CELLS, ClusterEngine
-from ..serving.workload import generate_workload
+from ..serving.workload import WorkloadSpec
 
 
 def serve(model: str = "mtwnd", n_queries: int = 60, rate_qps: float = 40.0,
@@ -26,8 +26,8 @@ def serve(model: str = "mtwnd", n_queries: int = 60, rate_qps: float = 40.0,
     if verbose:
         print("[serve] warming up cell executables ...")
     engine.warmup()
-    wl = generate_workload(seed, n_queries, rate_qps, median_batch=8,
-                           max_batch=32)
+    wl = WorkloadSpec(seed=seed, rate_qps=rate_qps, median_batch=8,
+                      max_batch=32).realize(n_queries)
     space = SearchSpace(bounds=bounds, prices=tuple(c.price for c in cells))
 
     def evaluate(config):

@@ -192,6 +192,15 @@ class ScenarioEngine:
         # Set by a successful reroute (spec.route_policies): the engine
         # then serves, scores and searches under that dispatch rule.
         self._route_policy = None
+        # Measured drift belief: which registered batch distribution the
+        # plane's window classifier (``infer_dist``) last matched this
+        # phase, or None.  Adaptation searches score against this belief,
+        # not the spec's phase label — a mislabeled spec still recovers.
+        # Reset at each phase boundary so the belief never crosses a label
+        # change (correctly-labeled episodes behave bit-identically: every
+        # in-phase adaptation runs after at least one window has confirmed
+        # the label).
+        self._dist_belief: str | None = None
 
     def _cold_horizon(self, old_config, new_config,
                       factor: float) -> int | None:
@@ -256,6 +265,14 @@ class ScenarioEngine:
             return self.plane.warm_oracle(dist, factor,
                                           policy=self._route_policy)
         return self.plane.oracle(dist, factor, policy=self._route_policy)
+
+    def _scoring_dist(self, phase) -> str:
+        """The batch distribution adaptation searches score against: the
+        measured belief when the plane's drift classifier holds one for the
+        current phase, else the spec's label.  Serving always follows the
+        spec's label (that is the physical traffic); only the *scoring* of
+        hypothetical pools trusts measurements over labels."""
+        return self._dist_belief or phase.batch_dist
 
     def _drive(self, opt: RibbonOptimizer, dist: str, factor: float,
                budget: int) -> int:
@@ -506,6 +523,7 @@ class ScenarioEngine:
             # warm final sweep (None while cold / before the first deploy).
             phase_states.append(plane.candidate_state())
             ph_t0 = ep_base
+            self._dist_belief = None     # beliefs never cross a phase cut
             i = 0
             ph_passed = 0
             ph_cost = 0.0
@@ -573,6 +591,16 @@ class ScenarioEngine:
                 while w < len(lat):
                     w_hi = min(w + spec.window, len(lat))
                     wlat, wwaits = lat[w:w_hi], waits[w:w_hi]
+                    # Update the measured drift belief *before* this
+                    # window's adaptation check: the classifier reads only
+                    # the window's own latencies/waits, never the spec, so
+                    # a mislabeled phase is caught the moment it is served.
+                    infer = getattr(plane, "infer_dist", None)
+                    est_dist = None
+                    if infer is not None:
+                        est_dist = infer(i + w, wlat, wwaits, config)
+                        if est_dist is not None:
+                            self._dist_belief = est_dist
                     passed = int(np.sum(wlat <= qos_lat))
                     rate = passed / (w_hi - w)
                     price = float(np.dot(prices, config))
@@ -583,7 +611,11 @@ class ScenarioEngine:
                         phase=p, start=gq + i + w, end=g_end, qos_rate=rate,
                         config=config, price=price,
                         cost=price * span / 3600.0, violation=viol,
-                        carried_wait=carried if w == 0 else 0.0)
+                        carried_wait=carried if w == 0 else 0.0,
+                        dist_est=est_dist)
+                    segb = getattr(plane, "segment_buckets", None)
+                    if segb is not None:
+                        wstat.bucket_waits = segb(w, w_hi, wwaits)
                     if spec.window_stats:
                         tel = plane.window_telemetry(w, w_hi)
                         if tel is not None:
@@ -660,8 +692,8 @@ class ScenarioEngine:
                         # no capacity bought) before re-searching the pool.
                         cut_at = ep_base + float(seg.arrivals[w_hi - 1])
                         if kind == "rescale_up" and self._try_reroute(
-                                phase.batch_dist, est, config, prices,
-                                p, g_end, report, pending):
+                                self._scoring_dist(phase), est, config,
+                                prices, p, g_end, report, pending):
                             if trace is not None:
                                 trace.instant(
                                     "reroute", cut_at,
@@ -674,7 +706,7 @@ class ScenarioEngine:
                             break
                         t0 = time.perf_counter()
                         opt, new_best, used = self._adapt_load(
-                            opt, phase.batch_dist, est, kind)
+                            opt, self._scoring_dist(phase), est, kind)
                         if trace is not None:
                             wall = time.perf_counter() - t0
                             trace.span(f"search:{kind}", cut_at, wall,
@@ -709,7 +741,7 @@ class ScenarioEngine:
                                 if (new_best is not None
                                         and self._cold_starts is not None
                                         and not self._fallback_helps(
-                                            phase.batch_dist, est,
+                                            self._scoring_dist(phase), est,
                                             config, new_best)):
                                     # Tier cold starts change the calculus:
                                     # the blown-up pool's added slots wake
@@ -731,7 +763,7 @@ class ScenarioEngine:
                             if new_best else price,
                             bo_evals=used,
                             warm_idle_delta=self._score_delta(
-                                phase.batch_dist, est, config),
+                                self._scoring_dist(phase), est, config),
                             policy=getattr(self._route_policy, "name",
                                            None))
                         report.actions.append(action)
@@ -863,7 +895,7 @@ class ScenarioEngine:
         for t, mult in sorted(targets.items()):
             prices[t] = prices[t] * mult
             self.plane.apply_price(t, prices[t])
-        oracle = self._search_oracle(phase.batch_dist, factor)
+        oracle = self._search_oracle(self._scoring_dist(phase), factor)
         opt, sev = reprice(opt, prices, oracle,
                            budget=self.spec.recover_budget)
         new_cfg = sev.new_best or config
@@ -886,8 +918,8 @@ class ScenarioEngine:
             old_price=old_price,
             new_price=float(np.dot(prices, new_cfg)),
             bo_evals=sev.samples_used,
-            warm_idle_delta=self._score_delta(phase.batch_dist, factor,
-                                              config)))
+            warm_idle_delta=self._score_delta(self._scoring_dist(phase),
+                                              factor, config)))
         report.bo_evals += sev.samples_used
         return tuple(int(c) for c in new_cfg), opt
 
@@ -949,7 +981,8 @@ class ScenarioEngine:
             drain = min(n_rem, 2 * self.spec.window)
             search_factor = factor * (1.0
                                       + self.spec.provision_queries / drain)
-        oracle = self._search_oracle(phase.batch_dist, search_factor)
+        oracle = self._search_oracle(self._scoring_dist(phase),
+                                     search_factor)
         opt, sev = recover_from_capacity_change(
             opt, oracle, losses, budget=self.spec.recover_budget, kind=kind,
             # Tiered planes score from the live backlog with cold starts
@@ -973,8 +1006,8 @@ class ScenarioEngine:
             old_price=float(np.dot(prices, config)),
             new_price=float(np.dot(prices, new_cfg)),
             bo_evals=sev.samples_used,
-            warm_idle_delta=self._score_delta(phase.batch_dist, factor,
-                                              config)))
+            warm_idle_delta=self._score_delta(self._scoring_dist(phase),
+                                              factor, config)))
         report.bo_evals += sev.samples_used
         if self.spec.provision_queries > 0 and new_cfg != degraded:
             # replacement capacity boots asynchronously: the degraded pool
@@ -1054,7 +1087,7 @@ class ScenarioEngine:
         self._pending_trim = None
         seed, self._pre_loss_config = self._pre_loss_config, None
         for t, cnt in sorted(restock_next.items()):
-            oracle = self._search_oracle(phase.batch_dist,
+            oracle = self._search_oracle(self._scoring_dist(phase),
                                          phase.load_factor)
             opt, sev = recover_from_failure(opt, oracle, failed_type=t,
                                             lost=-cnt,
@@ -1069,9 +1102,8 @@ class ScenarioEngine:
                 old_price=float(np.dot(prices, config)),
                 new_price=float(np.dot(prices, new_cfg)),
                 bo_evals=sev.samples_used,
-                warm_idle_delta=self._score_delta(phase.batch_dist,
-                                                  phase.load_factor,
-                                                  config))
+                warm_idle_delta=self._score_delta(
+                    self._scoring_dist(phase), phase.load_factor, config))
             report.actions.append(action)
             pending.append(action)
             report.bo_evals += sev.samples_used
@@ -1090,7 +1122,7 @@ class ScenarioEngine:
             # provisioning lead like any other deploy; the monitor cannot
             # trigger this return on its own because a drained steady
             # state shows no queue slack to release.
-            ev = self.plane.grid_evaluator(phase.batch_dist)
+            ev = self.plane.grid_evaluator(self._scoring_dist(phase))
             # Not only the exact pre-storm pool: the whole bounded Hamming
             # neighborhood around it (the storm may have shifted bounds or
             # prices so the precise seed is gone or no longer the cheapest

@@ -58,7 +58,7 @@ import numpy as np
 
 from ..serving.instance import (AWS_INSTANCES, MODEL_PROFILES, PAPER_POOLS,
                                 InstanceType, ModelProfile,
-                                service_time_table)
+                                service_table_for)
 from ..serving.pool import (DEFAULT_BOUNDS, PoolEvaluator, paper_workload)
 from ..serving.simulator import PoolSimulator, PoolState
 from ..serving.workload import Workload
@@ -70,14 +70,20 @@ def _prefix(workload: Workload, n: int) -> Workload:
         return workload
     return Workload(arrivals=workload.arrivals[:n],
                     batches=workload.batches[:n],
-                    rate_qps=workload.rate_qps)
+                    rate_qps=workload.rate_qps,
+                    bucket_of=None if workload.bucket_of is None
+                    else workload.bucket_of[:n],
+                    buckets=workload.buckets)
 
 
 def slice_stream(workload: Workload, lo: int, hi: int) -> Workload:
     """A contiguous segment of a stream (absolute arrival times kept)."""
     return Workload(arrivals=workload.arrivals[lo:hi],
                     batches=workload.batches[lo:hi],
-                    rate_qps=workload.rate_qps)
+                    rate_qps=workload.rate_qps,
+                    bucket_of=None if workload.bucket_of is None
+                    else workload.bucket_of[lo:hi],
+                    buckets=workload.buckets)
 
 
 class _EpisodeClock:
@@ -197,6 +203,8 @@ class SimulatorPlane(_EpisodeClock):
         if catalog is not None:
             self._cold_starts = catalog.cold_starts(profile)
             self.cost_penalties = catalog.cost_penalties()
+        self._dist_tables: dict[str, np.ndarray] = {}
+        self._last_stream: Workload | None = None
         self._reset_clock(False)     # cold until an episode begins
 
     @property
@@ -247,6 +255,7 @@ class SimulatorPlane(_EpisodeClock):
             cuts = [(lo, min(lo + chunk, n)) for lo in range(0, n, chunk)]
         cfg_tuple = tuple(int(c) for c in config)
         cold = not self._carry
+        self._last_stream = workload
         parts = []
         lats, waits = [], []
         st = None
@@ -317,6 +326,67 @@ class SimulatorPlane(_EpisodeClock):
         if n > 0:
             self._local_now = float(arr[n - 1])
 
+    def _dist_table(self, dist: str) -> np.ndarray:
+        tab = self._dist_tables.get(dist)
+        if tab is None:
+            tab = np.asarray(service_table_for(self.profile, self.types,
+                                               self.workloads[dist]),
+                             dtype=np.float64)
+            self._dist_tables[dist] = tab
+        return tab
+
+    def infer_dist(self, start: int, lat, waits, config) -> str | None:
+        """Classify which registered batch distribution produced a measured
+        window, from the measurements alone.
+
+        FCFS latency decomposes as wait + service, so ``lat - waits`` is
+        the service time each query actually drew on whichever active
+        instance served it.  Each registered distribution predicts a small
+        set of admissible service values per query (its service-table
+        column, restricted to types the deployed ``config`` runs); the
+        distribution whose predictions match the largest fraction of the
+        window wins, if that fraction clears 0.9.  Returns ``None`` when no
+        distribution matches (or the plane registers only one, where the
+        question is moot).  This is what lets the engine adapt to drift in
+        the *measured* traffic even when the spec's phase labels lie."""
+        if len(self.workloads) < 2:
+            return None
+        resid = (np.asarray(lat, dtype=np.float64)
+                 - np.asarray(waits, dtype=np.float64))
+        ok = np.isfinite(resid)
+        if not ok.any():
+            return None
+        active = [t for t, c in enumerate(config) if int(c) > 0]
+        if not active:
+            return None
+        lo, hi = int(start), int(start) + len(resid)
+        best, best_frac = None, 0.0
+        for d in self.workloads:
+            tab = self._dist_table(d)
+            if hi > tab.shape[1]:
+                continue
+            cols = tab[np.ix_(active, range(lo, hi))]
+            rel = np.abs(cols - resid[None, :]) / np.maximum(cols, 1e-12)
+            frac = float((rel.min(axis=0) <= 1e-3)[ok].mean())
+            if frac > best_frac:
+                best, best_frac = d, frac
+        return best if best_frac >= 0.9 else None
+
+    def segment_buckets(self, lo: int, hi: int, waits) -> tuple:
+        """Per-bucket mean waits over queries ``[lo, hi)`` of the last
+        measured segment, ordered by bucket index; ``()`` when the stream
+        carries no bucket annotation."""
+        wl = self._last_stream
+        if wl is None or wl.bucket_of is None:
+            return ()
+        ids = np.asarray(wl.bucket_of[lo:hi])
+        w = np.asarray(waits, dtype=np.float64)
+        out = []
+        for b in range(len(wl.buckets)):
+            sel = ids == b
+            out.append(float(w[sel].mean()) if sel.any() else 0.0)
+        return tuple(out)
+
     def grid_evaluator(self, dist: str) -> PoolEvaluator:
         return self.evaluators[dist]
 
@@ -352,8 +422,8 @@ class SimulatorPlane(_EpisodeClock):
         multi-phase warm sweep still runs in the one dispatch."""
         sim = next(iter(self.evaluators.values())).sim
         tables = np.stack([
-            service_time_table(self.profile, self.types,
-                               self.workloads[ph.batch_dist].batches)
+            service_table_for(self.profile, self.types,
+                              self.workloads[ph.batch_dist])
             for ph in phases])
         factors = [ph.load_factor for ph in phases]
         kwargs = {}

@@ -35,6 +35,15 @@ class WindowStat:
     p99: float = 0.0
     util_by_type: tuple = ()
     miss_by_type: tuple = ()
+    # Drift detection (scenario/planes.SimulatorPlane.infer_dist): which
+    # registered batch distribution the window's *measured* service residuals
+    # matched, or None when the plane cannot classify.  The engine scores
+    # adaptations against this belief, not the spec's phase label.
+    dist_est: str | None = None
+    # Per-bucket mean waits over the window (bucketed streams only; () when
+    # the stream carries no bucket annotation) — what dist-drift detection
+    # and the observability plane read instead of trusting the spec's mix.
+    bucket_waits: tuple = ()
 
 
 @dataclass

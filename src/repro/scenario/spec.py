@@ -59,7 +59,8 @@ EVENT_KIND_SPECS: dict[str, EventKind] = {
 }
 
 EVENT_KINDS = tuple(EVENT_KIND_SPECS)
-BATCH_DISTS = ("lognormal", "gaussian")
+BATCH_DISTS = ("lognormal", "gaussian", "bucketed-small",
+               "bucketed-large")
 
 
 def fuzz_kinds(tiered: bool = False) -> tuple[str, ...]:

@@ -38,7 +38,7 @@ per chip-hour, with effective F/B derived from chip counts.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
@@ -214,3 +214,90 @@ def service_time_lut(model: ModelProfile, types: list[InstanceType],
     """
     return service_time_table(model, types,
                               np.arange(int(max_batch) + 1, dtype=np.int64))
+
+
+def bucket_profile(model: ModelProfile, bucket) -> ModelProfile:
+    """The model profile as seen by one request-size bucket: the bucket's
+    output scale multiplies ``flops_per_sample`` and its input scale
+    multiplies ``act_bytes_per_sample`` (workload.RequestBucket semantics).
+    The unit bucket returns a value-equal profile (float multiplies by 1.0
+    are exact), so its tables hit the same memo entries bit for bit."""
+    return replace(model,
+                   flops_per_sample=model.flops_per_sample
+                   * float(bucket.flops_scale),
+                   act_bytes_per_sample=model.act_bytes_per_sample
+                   * float(bucket.bytes_scale))
+
+
+def bucketed_service_time_table(model: ModelProfile,
+                                types: list[InstanceType],
+                                batches: np.ndarray,
+                                bucket_of: np.ndarray,
+                                buckets) -> np.ndarray:
+    """(n_types, n_queries) service times of a bucket-annotated stream:
+    column ``q`` holds the latency of batch ``batches[q]`` under query
+    ``q``'s bucket-scaled profile.  Built from one memoized
+    ``service_time_table`` per bucket (the per-bucket profiles key the same
+    cache), columns selected by ``bucket_of`` — with a single unit bucket
+    this *is* the legacy table, bit for bit and cache-entry for
+    cache-entry."""
+    per_bucket = [service_time_table(bucket_profile(model, bk), types,
+                                     batches) for bk in buckets]
+    if len(per_bucket) == 1:
+        return per_bucket[0]
+    bucket_of = np.asarray(bucket_of)
+    out = per_bucket[0].copy()
+    for k in range(1, len(per_bucket)):
+        sel = bucket_of == k
+        out[:, sel] = per_bucket[k][:, sel]
+    out.setflags(write=False)
+    return out
+
+
+def bucketed_service_time_lut(model: ModelProfile,
+                              types: list[InstanceType], max_batch: int,
+                              buckets) -> np.ndarray:
+    """(n_types, n_buckets * (max_batch + 1)) lookup table for streamed
+    bucketed specs: bucket ``k``'s block is that bucket-scaled profile's
+    ``service_time_lut``, gathered by the flat index
+    ``k * (max_batch + 1) + batch`` — so with one unit bucket the flat
+    index degenerates to the batch size over the legacy table."""
+    return np.concatenate(
+        [service_time_lut(bucket_profile(model, bk), types, max_batch)
+         for bk in buckets], axis=1)
+
+
+def service_table_for(model: ModelProfile, types: list[InstanceType],
+                      workload) -> np.ndarray:
+    """The per-query service table of a :class:`~.workload.Workload` —
+    bucket-aware when the stream carries bucket annotations, the legacy
+    scalar table otherwise.  Every simulator lane binds its stream through
+    this selector, which is what makes bucketed traffic ride cold, warm,
+    grid and routed dispatches without kernel changes."""
+    bucket_of = getattr(workload, "bucket_of", None)
+    if bucket_of is None:
+        return service_time_table(model, types, workload.batches)
+    return bucketed_service_time_table(model, types, workload.batches,
+                                       bucket_of, workload.buckets)
+
+
+def measured_throughputs(model: ModelProfile, types: list[InstanceType],
+                         workload) -> np.ndarray:
+    """Per-(instance type x bucket) sustained throughput profiled from a
+    stream's service times (Mélange's ``tputs`` matrix): entry ``[t, k]``
+    is the query rate one type-``t`` instance sustains serving bucket
+    ``k``'s realized queries back to back — ``n_k / sum(service times)``.
+    Un-bucketed streams profile as a single column."""
+    table = service_table_for(model, types, workload)
+    bucket_of = getattr(workload, "bucket_of", None)
+    if bucket_of is None:
+        bucket_of = np.zeros(workload.n_queries, dtype=np.int64)
+        n_buckets = 1
+    else:
+        n_buckets = len(workload.buckets)
+    out = np.zeros((len(types), n_buckets), dtype=np.float64)
+    for k in range(n_buckets):
+        sel = np.asarray(bucket_of) == k
+        if sel.any():
+            out[:, k] = sel.sum() / table[:, sel].sum(axis=1)
+    return out

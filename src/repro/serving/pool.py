@@ -18,7 +18,7 @@ from .instance import (AWS_INSTANCES, MODEL_PROFILES, PAPER_POOLS,
                        InstanceType, ModelProfile)
 from .routing import RoutingPolicy
 from .simulator import PoolSimulator
-from .workload import Workload, generate_workload
+from .workload import BucketedWorkloadSpec, Workload, WorkloadSpec
 
 
 def cost_effectiveness(perf_qps: float, price_per_hour: float) -> float:
@@ -257,19 +257,73 @@ class PoolEvaluator:
 
 
 def best_homogeneous(evaluator: PoolEvaluator, type_index: int, prices,
-                     qos_target: float, cap: int = 24):
+                     qos_target: float, cap: int = 24, *, policy=None):
     """Minimum-count homogeneous pool of one type meeting QoS, evaluated as
     one batched sweep over counts 1..cap.  Returns (count, cost) or
-    (None, inf)."""
+    (None, inf).
+
+    ``policy=`` scores the pool under that routing policy (the evaluator's
+    per-policy memo pair), so homogeneous baselines compare apples to apples
+    against routed diverse pools — a single-type pool still behaves
+    differently under size-aware dispatch than under FCFS when the policy
+    reorders its queue."""
     n = len(evaluator.types)
     cfgs = np.zeros((cap, n), dtype=np.int64)
     cfgs[:, type_index] = np.arange(1, cap + 1)
-    rates = evaluator.batch(cfgs)
+    rates = evaluator.batch(cfgs, policy=policy)
     ok = np.nonzero(rates >= qos_target)[0]
     if ok.size == 0:
         return None, np.inf
     count = int(ok[0]) + 1
     return count, count * prices[type_index]
+
+
+# Request-size mixes backing the bucketed batch distributions: weights[i][j]
+# is the traffic fraction landing in (input-size bucket i, output-size bucket
+# j); the scales multiply the roofline profile's per-sample bytes (input axis)
+# and flops (output axis).  "small" skews toward short requests, "large"
+# toward long ones — the drifting pair the dist-drift-bucketed scenario uses.
+BUCKET_DIST_MIXES: dict[str, dict] = {
+    "bucketed-small": {"weights": ((0.45, 0.15), (0.30, 0.10)),
+                       "input_scales": (0.7, 1.6),
+                       "output_scales": (0.8, 1.5)},
+    "bucketed-large": {"weights": ((0.10, 0.30), (0.15, 0.45)),
+                       "input_scales": (0.7, 1.6),
+                       "output_scales": (0.8, 1.5)},
+}
+
+
+def paper_spec(model_name: str, seed: int = 0,
+               rate_qps: float | None = None,
+               batch_dist: str = "lognormal") -> WorkloadSpec:
+    """The standard per-model stream as an on-device :class:`WorkloadSpec`
+    (paper §5.1 parameters); ``realize()`` of this spec IS the canonical
+    stream every lane scores."""
+    profile = MODEL_PROFILES[model_name]
+    if rate_qps is None:
+        rate_qps = DEFAULT_RATES[model_name]
+    return WorkloadSpec(seed=seed, rate_qps=rate_qps, batch_dist=batch_dist,
+                        median_batch=profile.median_batch,
+                        mean_batch=2.0 * profile.median_batch,
+                        std_batch=profile.median_batch,
+                        max_batch=profile.max_batch)
+
+
+def paper_bucketed_spec(model_name: str, batch_dist: str, seed: int = 0,
+                        rate_qps: float | None = None) -> BucketedWorkloadSpec:
+    """Bucketed variant of the standard per-model stream: the named mix from
+    ``BUCKET_DIST_MIXES`` layered over the lognormal base — same seed, same
+    arrival and batch bits, only the bucket annotation added."""
+    mix = BUCKET_DIST_MIXES[batch_dist]
+    if rate_qps is None:
+        rate_qps = DEFAULT_RATES[model_name]
+    base = paper_spec(model_name, seed=seed, rate_qps=rate_qps,
+                      batch_dist="lognormal")
+    rates = tuple(tuple(w * float(rate_qps) for w in row)
+                  for row in mix["weights"])
+    return BucketedWorkloadSpec(base=base, rates=rates,
+                                input_scales=mix["input_scales"],
+                                output_scales=mix["output_scales"])
 
 
 def paper_workload(model_name: str, seed: int = 0, n_queries: int = 1500,
@@ -278,17 +332,16 @@ def paper_workload(model_name: str, seed: int = 0, n_queries: int = 1500,
     """The standard per-model query stream (paper §5.1 parameters).
 
     Streams that differ only in ``batch_dist`` share the same arrival times
-    (the arrival and batch PRNG keys are split independently), which is what
-    lets the stacked service-table grid axis sweep both distributions over
-    one arrival grid (paper Fig. 11, scenario dist-drift phases)."""
-    profile = MODEL_PROFILES[model_name]
-    if rate_qps is None:
-        rate_qps = DEFAULT_RATES[model_name]
-    return generate_workload(seed, n_queries, rate_qps, batch_dist=batch_dist,
-                             median_batch=profile.median_batch,
-                             mean_batch=2.0 * profile.median_batch,
-                             std_batch=profile.median_batch,
-                             max_batch=profile.max_batch)
+    (one seed/rate = one arrival stream, whatever the batch or bucket law),
+    which is what lets the stacked service-table grid axis sweep all
+    distributions over one arrival grid (paper Fig. 11, scenario dist-drift
+    phases).  Bucketed dist names (``BUCKET_DIST_MIXES``) return the same
+    lognormal stream with a per-query bucket annotation layered on."""
+    if batch_dist in BUCKET_DIST_MIXES:
+        return paper_bucketed_spec(model_name, batch_dist, seed=seed,
+                                   rate_qps=rate_qps).realize(n_queries)
+    return paper_spec(model_name, seed=seed, rate_qps=rate_qps,
+                      batch_dist=batch_dist).realize(n_queries)
 
 
 def make_paper_setup(model_name: str, seed: int = 0, n_queries: int = 1500,

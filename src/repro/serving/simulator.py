@@ -97,8 +97,9 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from .instance import (InstanceType, ModelProfile, service_time_lut,
-                       service_time_table)
+from .instance import (InstanceType, ModelProfile,
+                       bucketed_service_time_lut, service_table_for,
+                       service_time_lut, service_time_table)
 from .routing import RoutingPolicy
 from .telemetry import (BUCKET_EDGES, N_BUCKETS, Telemetry, from_arrays,
                         queue_depth)
@@ -1091,8 +1092,13 @@ class PoolSimulator:
         if workload.n_queries:
             _check_horizon(float(workload.arrivals[-1]),
                            "PoolSimulator workload")
+        # Bucket-aware selector: a stream annotated with request-size
+        # buckets binds a per-query table built from bucket-scaled
+        # profiles, so bucketed traffic rides every lane below (cold,
+        # warm, batch, grid, routed) with no kernel changes.  Scalar
+        # streams bind the legacy table bit for bit.
         self._service = jnp.asarray(
-            service_time_table(model, self.types, workload.batches),
+            service_table_for(model, self.types, workload),
             dtype=jnp.float32)
         self._service_host: np.ndarray | None = None   # lazy host mirror
         self._arrivals = jnp.asarray(workload.arrivals, dtype=jnp.float32)
@@ -2334,11 +2340,21 @@ class StreamingSimulator:
         self.types = list(types)
         self.spec = spec
         self.max_instances = max_instances
+        # Bucketed specs (workload.BucketedWorkloadSpec) expand the LUT to
+        # one block per bucket; the kernel is unchanged — the gather index
+        # becomes ``bucket * (max_batch + 1) + batch``, which with a single
+        # unit bucket is just the batch size over the legacy table.
+        buckets = getattr(spec, "buckets", None)
+        if buckets is None:
+            lut = service_time_lut(model, self.types, spec.max_batch)
+        else:
+            lut = bucketed_service_time_lut(model, self.types,
+                                            spec.max_batch, buckets)
+        self._bucketed = buckets is not None
+        self._lut_stride = int(spec.max_batch) + 1
         # f32 cast *before* the transpose so lut_T rows hold exactly the
         # f32 values the monolithic path's service-table cast produces.
-        self._lut_T = jnp.asarray(
-            np.asarray(service_time_lut(model, self.types, spec.max_batch),
-                       dtype=np.float32).T)
+        self._lut_T = jnp.asarray(np.asarray(lut, dtype=np.float32).T)
         self._priority = jnp.arange(max_instances, dtype=jnp.float32)
 
     def qos(self, config, n_queries: int, *, probe=None) -> StreamResult:
@@ -2381,7 +2397,12 @@ class StreamingSimulator:
         shift = 0.0
         rebases = 0
         for c in range(math.ceil(n / chunk)):
-            arr, local, batches = self.spec.generate_chunk(c, base)
+            if self._bucketed:
+                arr, local, batches, bucket = self.spec.generate_chunk(
+                    c, base)
+                batches = bucket * self._lut_stride + batches
+            else:
+                arr, local, batches = self.spec.generate_chunk(c, base)
             left = n - c * chunk
             if left >= chunk:
                 valid = full_valid

@@ -37,12 +37,38 @@ from jax.experimental import enable_x64
 
 
 @dataclass(frozen=True)
+class RequestBucket:
+    """One cell of a request-size distribution (Mélange's 2D histogram).
+
+    A bucket scales the analytical per-query resource model
+    multiplicatively: ``flops_scale`` multiplies the model's
+    ``flops_per_sample`` (output-size axis — longer outputs cost compute)
+    and ``bytes_scale`` multiplies ``act_bytes_per_sample`` (input-size
+    axis — bigger inputs move more activation bytes).  ``rate`` is the
+    bucket's share of the arrival rate in queries/s.  The unit bucket
+    ``(1.0, 1.0)`` reproduces the un-bucketed model bit for bit (a float
+    multiply by 1.0 is exact).
+    """
+
+    name: str
+    rate: float
+    flops_scale: float = 1.0
+    bytes_scale: float = 1.0
+
+
+@dataclass(frozen=True)
 class Workload:
     """A concrete query stream."""
 
     arrivals: np.ndarray      # (n,) absolute arrival times, seconds, sorted
     batches: np.ndarray       # (n,) int batch size per query
     rate_qps: float           # nominal arrival rate
+    # Request-size bucket annotation (None = legacy scalar stream): the
+    # bucket index of each query plus the bucket descriptors.  Simulator
+    # lanes build bucket-aware service tables from these; everything else
+    # (arrivals, batches, scaling) is bucket-agnostic.
+    bucket_of: np.ndarray | None = None    # (n,) int bucket index per query
+    buckets: tuple[RequestBucket, ...] | None = None
 
     @property
     def n_queries(self) -> int:
@@ -53,7 +79,8 @@ class Workload:
         'the load becomes 1.5 times heavier' compresses inter-arrivals)."""
         return Workload(arrivals=self.arrivals / load_factor,
                         batches=self.batches,
-                        rate_qps=self.rate_qps * load_factor)
+                        rate_qps=self.rate_qps * load_factor,
+                        bucket_of=self.bucket_of, buckets=self.buckets)
 
 
 def lognormal_batches(key, n: int, median: float = 24.0, sigma: float = 0.8,
@@ -196,23 +223,170 @@ class WorkloadSpec:
                         rate_qps=float(self.effective_rate))
 
 
+# Distinct fold_in tag deriving the bucket draw stream from the spec seed:
+# the arrival/batch keys come from split(PRNGKey(seed)), so folding the raw
+# seed key with a fixed tag gives buckets their own threefry stream without
+# perturbing a single bit of the base arrival/batch draws.
+_BUCKET_STREAM_TAG = 0x42C0DE
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def _bucket_chunk(k_bucket, c, cum, *, chunk: int):
+    """Bucket index of each query in chunk ``c``: one uniform draw per
+    query, inverted through the bucket CDF (``searchsorted`` over the
+    cumulative probabilities, right-open intervals)."""
+    kc = jax.random.fold_in(k_bucket, c)
+    u = jax.random.uniform(kc, (chunk,), dtype=jnp.float32)
+    return jnp.searchsorted(cum, u, side="right").astype(jnp.int32)
+
+
+@dataclass(frozen=True)
+class BucketedWorkloadSpec:
+    """A :class:`WorkloadSpec` carrying a request-size rate matrix.
+
+    ``rates[i][j]`` is the arrival rate (queries/s) of the bucket with
+    input scale ``input_scales[i]`` and output scale ``output_scales[j]``
+    — Mélange's 2D workload distribution.  The base spec's arrival and
+    batch streams are untouched (``realize`` is bit-identical to
+    ``base.realize`` on those fields); the bucket index of each query is
+    drawn on device from its own ``fold_in``-derived stream, chunk for
+    chunk, so a streaming consumer and ``realize`` see the same
+    assignment.  Buckets flatten row-major into :class:`RequestBucket`
+    descriptors whose scales multiply the analytical latency model
+    (``instance.bucket_profile``).
+    """
+
+    base: WorkloadSpec
+    rates: tuple[tuple[float, ...], ...]
+    input_scales: tuple[float, ...] = (1.0,)
+    output_scales: tuple[float, ...] = (1.0,)
+
+    def __post_init__(self):
+        r = len(self.rates)
+        if r != len(self.input_scales):
+            raise ValueError("rates must have one row per input scale")
+        if any(len(row) != len(self.output_scales) for row in self.rates):
+            raise ValueError("rates must have one column per output scale")
+        flat = [float(v) for row in self.rates for v in row]
+        if any(v < 0 for v in flat) or not sum(flat) > 0:
+            raise ValueError("bucket rates must be >= 0 with a positive sum")
+        if abs(sum(flat) - self.base.rate_qps) > 1e-6 * self.base.rate_qps:
+            raise ValueError(
+                f"bucket rates sum to {sum(flat):g} qps but the base spec "
+                f"arrives at {self.base.rate_qps:g} qps")
+        if any(not s > 0 for s in self.input_scales + self.output_scales):
+            raise ValueError("bucket scales must be > 0")
+
+    # Forwarded stream surface (streaming consumers use these).
+    @property
+    def seed(self) -> int:
+        return self.base.seed
+
+    @property
+    def rate_qps(self) -> float:
+        return self.base.rate_qps
+
+    @property
+    def effective_rate(self) -> float:
+        return self.base.effective_rate
+
+    @property
+    def chunk(self) -> int:
+        return self.base.chunk
+
+    @property
+    def scale(self) -> float:
+        return self.base.scale
+
+    @property
+    def max_batch(self) -> int:
+        return self.base.max_batch
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.input_scales) * len(self.output_scales)
+
+    @property
+    def buckets(self) -> tuple[RequestBucket, ...]:
+        """Row-major flattened bucket descriptors (the ``bucket_of`` index
+        order)."""
+        return tuple(
+            RequestBucket(name=f"in{i}.out{j}", rate=float(self.rates[i][j]),
+                          flops_scale=float(self.output_scales[j]),
+                          bytes_scale=float(self.input_scales[i]))
+            for i in range(len(self.input_scales))
+            for j in range(len(self.output_scales)))
+
+    def scaled(self, load_factor: float) -> "BucketedWorkloadSpec":
+        """Heavier traffic, same bucket mix (all bucket rates scale by the
+        factor, so the probabilities — and the drawn assignment — are
+        unchanged)."""
+        return replace(self, base=self.base.scaled(load_factor))
+
+    def _bucket_key(self):
+        return jax.random.fold_in(jax.random.PRNGKey(self.base.seed),
+                                  _BUCKET_STREAM_TAG)
+
+    def _cum_probs(self) -> np.ndarray:
+        flat = np.asarray([v for row in self.rates for v in row],
+                          dtype=np.float64)
+        cum = np.cumsum(flat / flat.sum()).astype(np.float32)
+        # The uniform draw lives in [0, 1); pin the last edge so f32
+        # rounding can never push it below a drawn value (an out-of-range
+        # bucket index).
+        cum[-1] = 1.0
+        return cum
+
+    def generate_chunk(self, c: int, base: float):
+        """Device arrays of chunk ``c``: (scaled arrivals f32, unscaled
+        local arrivals f32, batches i32, bucket indices i32) — the first
+        three bit-identical to ``self.base.generate_chunk(c, base)``."""
+        arr, local, batches = self.base.generate_chunk(c, base)
+        bucket = _bucket_chunk(self._bucket_key(), np.int64(c),
+                               jnp.asarray(self._cum_probs()),
+                               chunk=self.base.chunk)
+        return arr, local, batches, bucket
+
+    def realize(self, n_queries: int) -> Workload:
+        """Host :class:`Workload` with per-query bucket indices; arrivals
+        and batches are bit-identical to ``base.realize(n_queries)``."""
+        if n_queries < 0:
+            raise ValueError("n_queries must be >= 0")
+        arrs: list[np.ndarray] = []
+        bats: list[np.ndarray] = []
+        bkts: list[np.ndarray] = []
+        base = 0.0
+        for c in range(math.ceil(n_queries / self.base.chunk)):
+            _, local, batches, bucket = self.generate_chunk(c, base)
+            local = np.asarray(jax.device_get(local))
+            arrs.append(local)
+            bats.append(np.asarray(jax.device_get(batches)))
+            bkts.append(np.asarray(jax.device_get(bucket)))
+            base = float(local[-1])
+        arr64 = (np.concatenate(arrs)[:n_queries].astype(np.float64)
+                 if arrs else np.zeros(0, dtype=np.float64))
+        if self.base.scale != 1.0:
+            arr64 = arr64 / np.float64(self.base.scale)
+        bat64 = (np.concatenate(bats)[:n_queries].astype(np.int64)
+                 if bats else np.zeros(0, dtype=np.int64))
+        b64 = (np.concatenate(bkts)[:n_queries].astype(np.int64)
+               if bkts else np.zeros(0, dtype=np.int64))
+        return Workload(arrivals=arr64, batches=bat64,
+                        rate_qps=float(self.base.effective_rate),
+                        bucket_of=b64, buckets=self.buckets)
+
+
 def generate_workload(seed: int, n_queries: int, rate_qps: float,
                       batch_dist: str = "lognormal",
                       median_batch: float = 24.0, sigma: float = 0.8,
                       mean_batch: float = 48.0, std_batch: float = 24.0,
                       max_batch: int = 256) -> Workload:
-    key = jax.random.PRNGKey(seed)
-    k_arr, k_batch = jax.random.split(key)
-    gaps = jax.random.exponential(k_arr, (n_queries,)) / rate_qps
-    arrivals = jnp.cumsum(gaps)
-    if batch_dist == "lognormal":
-        batches = lognormal_batches(k_batch, n_queries, median_batch, sigma,
-                                    max_batch)
-    elif batch_dist == "gaussian":
-        batches = gaussian_batches(k_batch, n_queries, mean_batch, std_batch,
-                                   max_batch)
-    else:
-        raise ValueError(f"unknown batch_dist {batch_dist!r}")
-    return Workload(arrivals=np.asarray(jax.device_get(arrivals), dtype=np.float64),
-                    batches=np.asarray(jax.device_get(batches), dtype=np.int64),
-                    rate_qps=float(rate_qps))
+    """One seed, one stream: delegates to ``WorkloadSpec.realize`` so the
+    legacy entrypoint and the chunked generator produce identical bits
+    (the split-key whole-array draws this function used to make were a
+    second, divergent PRNG stream for the same seed)."""
+    spec = WorkloadSpec(seed=seed, rate_qps=rate_qps, batch_dist=batch_dist,
+                        median_batch=median_batch, sigma=sigma,
+                        mean_batch=mean_batch, std_batch=std_batch,
+                        max_batch=max_batch)
+    return spec.realize(n_queries)

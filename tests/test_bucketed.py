@@ -1,0 +1,284 @@
+"""Request-size buckets and the exact Mélange solver.
+
+Contracts under test:
+
+* a 1-bucket :class:`BucketedWorkloadSpec` with unit scales reduces
+  *bit-exactly* to the legacy scalar path on every lane — realized
+  stream, cold ``qos()``, warm ``segment_from``, the stacked grid, and
+  the streaming simulator;
+* multi-bucket specs validate their rate-matrix shape and rate budget,
+  annotate every query with an in-range bucket id, and actually move
+  QoS when the buckets scale work;
+* ``solve_bucketed`` is exact: the MILP and the pure-python branch and
+  bound agree, the degenerate 1-bucket/1-type instance reproduces the
+  simulator's exhaustive optimum, and the heterogeneous optimum never
+  costs more than any homogeneous allocation;
+* a mislabeled ``batch_dist`` spec still recovers: the engine's drift
+  belief comes from measured waits (``SimulatorPlane.infer_dist``), not
+  from the phase label.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.baselines import solve_bucketed
+from repro.core.search_space import SearchSpace
+from repro.scenario import (PhaseSpec, ScenarioEngine, ScenarioSpec,
+                            SimulatorPlane, build_episode)
+from repro.scenario.planes import _prefix
+from repro.serving.instance import (InstanceType, ModelProfile,
+                                    measured_throughputs, service_table_for)
+from repro.serving.pool import BUCKET_DIST_MIXES, PoolEvaluator
+from repro.serving.simulator import PoolSimulator, StreamingSimulator
+from repro.serving.workload import BucketedWorkloadSpec, WorkloadSpec
+
+FAST = InstanceType("fast", price=1.0, flops=1e9, mem_bw=1e9, overhead=1e-3)
+SLOW = InstanceType("slow", price=0.3, flops=2e8, mem_bw=5e8, overhead=2e-3)
+PROF = ModelProfile("toy", flops_per_sample=1e6, act_bytes_per_sample=1e4,
+                    weight_bytes=1e5, qos_latency=0.05)
+
+
+def _spec(seed=0, rate=120.0):
+    return WorkloadSpec(seed=seed, rate_qps=rate, chunk=256,
+                        median_batch=8.0, mean_batch=10.0, std_batch=4.0,
+                        max_batch=32)
+
+
+def _two_buckets(spec, heavy=2.5):
+    """1 input scale x 2 output scales, rate split evenly."""
+    half = spec.rate_qps / 2.0
+    return BucketedWorkloadSpec(base=spec, rates=((half, half),),
+                                input_scales=(1.0,),
+                                output_scales=(1.0, heavy))
+
+
+# --------------------------------------------------- 1-bucket reduction
+def test_unit_bucket_stream_bit_identical_to_scalar():
+    spec = _spec()
+    b1 = BucketedWorkloadSpec(base=spec, rates=((spec.rate_qps,),))
+    wl_s, wl_b = spec.realize(400), b1.realize(400)
+    assert np.array_equal(wl_s.arrivals, wl_b.arrivals)
+    assert np.array_equal(wl_s.batches, wl_b.batches)
+    assert wl_b.bucket_of is not None
+    assert np.array_equal(np.asarray(wl_b.bucket_of), np.zeros(400, int))
+
+
+def test_unit_bucket_qos_bit_identical_on_all_lanes():
+    spec = _spec()
+    b1 = BucketedWorkloadSpec(base=spec, rates=((spec.rate_qps,),))
+    wl_s, wl_b = spec.realize(300), b1.realize(300)
+    sim_s = PoolSimulator(PROF, [FAST, SLOW], wl_s, max_instances=8)
+    sim_b = PoolSimulator(PROF, [FAST, SLOW], wl_b, max_instances=8)
+    cfg = (2, 1)
+    # cold lane
+    r_s, r_b = sim_s.qos(cfg), sim_b.qos(cfg)
+    assert float(r_s.rates) == float(r_b.rates)
+    # warm lane: idle carry reproduces the cold bits, bucketed or not
+    seg_s = sim_s.segment_from(sim_s.initial_state(), cfg)
+    seg_b = sim_b.segment_from(sim_b.initial_state(), cfg)
+    assert np.array_equal(seg_s.lat, seg_b.lat)
+    assert np.array_equal(seg_s.waits, seg_b.waits)
+    # grid lane: the stacked-table axis sees identical service tables
+    grid_s = sim_s.qos([cfg, (1, 2)], workloads=[1.0, 1.3]).rates
+    grid_b = sim_b.qos([cfg, (1, 2)], workloads=[1.0, 1.3]).rates
+    assert np.array_equal(np.asarray(grid_s), np.asarray(grid_b))
+
+
+def test_unit_bucket_streaming_bit_identical():
+    spec = _spec()
+    b1 = BucketedWorkloadSpec(base=spec, rates=((spec.rate_qps,),))
+    st_s = StreamingSimulator(PROF, [FAST, SLOW], spec, max_instances=8)
+    st_b = StreamingSimulator(PROF, [FAST, SLOW], b1, max_instances=8)
+    r_s = st_s.qos((2, 1), n_queries=512)
+    r_b = st_b.qos((2, 1), n_queries=512)
+    assert float(r_s.rate) == float(r_b.rate)
+
+
+# ------------------------------------------------------- bucketed specs
+def test_bucketed_spec_validation():
+    spec = _spec()
+    with pytest.raises(ValueError):     # wrong column count
+        BucketedWorkloadSpec(base=spec, rates=((60.0,), (60.0,)),
+                             input_scales=(1.0, 1.0),
+                             output_scales=(1.0, 2.5))
+    with pytest.raises(ValueError):     # rates don't sum to base rate
+        BucketedWorkloadSpec(base=spec, rates=((10.0, 10.0),),
+                             input_scales=(1.0,),
+                             output_scales=(1.0, 2.5))
+
+
+def test_multi_bucket_annotations_and_qos_shift():
+    spec = _spec()
+    bspec = _two_buckets(spec, heavy=6.0)
+    wl = bspec.realize(400)
+    ids = np.asarray(wl.bucket_of)
+    assert set(np.unique(ids)) <= {0, 1}
+    assert 0 < ids.mean() < 1          # both buckets actually drawn
+    # heavy output bucket inflates service times -> QoS drops vs scalar
+    base = PoolSimulator(PROF, [FAST, SLOW], spec.realize(400),
+                         max_instances=8).qos((1, 1))
+    buck = PoolSimulator(PROF, [FAST, SLOW], wl, max_instances=8).qos((1, 1))
+    assert float(buck.rates) < float(base.rates)
+    # service table reflects the per-query bucket annotation
+    tab = service_table_for(PROF, [FAST, SLOW], wl)
+    assert tab.shape == (2, 400)
+
+
+def test_measured_throughputs_shape_and_ordering():
+    spec = _spec()
+    wl = _two_buckets(spec, heavy=6.0).realize(400)
+    tputs = measured_throughputs(PROF, [FAST, SLOW], wl)
+    assert tputs.shape == (2, 2)
+    assert (tputs > 0).all()
+    # the heavy bucket sustains strictly fewer queries/s on every type
+    assert (tputs[:, 1] < tputs[:, 0]).all()
+
+
+# --------------------------------------------------------- exact solver
+def test_solve_bucketed_enumerate_is_exact_and_feasible():
+    rates = [40.0, 20.0]
+    tputs = [[30.0, 5.0],      # cheap type, slow on heavy bucket
+             [25.0, 20.0]]     # pricey type, good at heavy bucket
+    prices = [1.0, 1.8]
+    sol = solve_bucketed(rates, tputs, prices, slice_factor=4,
+                         method="enumerate")
+    assert sol.method == "enumerate"
+    # assignment rows are simplex points quantized to 1/slice_factor
+    for row in sol.assignment:
+        assert abs(sum(row) - 1.0) < 1e-9
+        for frac in row:
+            assert abs(frac * 4 - round(frac * 4)) < 1e-9
+    # bought capacity covers the demanded instance-time
+    for t in range(2):
+        assert sol.config[t] >= sol.loads[t] - 1e-9
+    assert sol.cost == pytest.approx(
+        sum(p * c for p, c in zip(prices, sol.config)))
+
+
+def test_solve_bucketed_milp_matches_enumerate():
+    pytest.importorskip("scipy.optimize")
+    rates = [40.0, 20.0, 8.0]
+    tputs = [[30.0, 5.0, 12.0],
+             [25.0, 20.0, 6.0],
+             [10.0, 10.0, 10.0]]
+    prices = [1.0, 1.8, 0.9]
+    a = solve_bucketed(rates, tputs, prices, slice_factor=4, method="milp")
+    b = solve_bucketed(rates, tputs, prices, slice_factor=4,
+                       method="enumerate")
+    assert a.cost == pytest.approx(b.cost)
+    assert a.config == b.config or a.cost == pytest.approx(b.cost)
+
+
+def test_solve_bucketed_beats_homogeneous():
+    rates = np.array([40.0, 20.0])
+    tputs = np.array([[30.0, 5.0], [25.0, 20.0]])
+    prices = np.array([1.0, 1.8])
+    sol = solve_bucketed(rates, tputs, prices, slice_factor=8)
+    for t in range(2):
+        homo = prices[t] * np.ceil((rates / tputs[t]).sum())
+        assert sol.cost <= homo + 1e-9
+    # the mixed pool is strictly cheaper than either homogeneous one here
+    assert sol.cost < min(prices[t] * np.ceil((rates / tputs[t]).sum())
+                          for t in range(2))
+
+
+def test_solve_bucketed_degenerate_matches_exhaustive():
+    """1 bucket + 1 type + throughput calibrated from the simulator's own
+    optimum: the ILP reproduces PoolEvaluator.exhaustive exactly."""
+    spec = _spec(rate=150.0)
+    wl = spec.realize(300)
+    ev = PoolEvaluator(PROF, [FAST], wl, max_instances=6)
+    space = SearchSpace(bounds=(6,), prices=(FAST.price,))
+    best_cfg, best_cost, _ = ev.exhaustive(space, qos_target=0.95)
+    n_star = int(best_cfg[0])
+    assert n_star >= 1
+    # one instance sustains rate/n* qps at the QoS knee by construction
+    sol = solve_bucketed([spec.rate_qps], [[spec.rate_qps / n_star]],
+                         [FAST.price], slice_factor=1, bounds=(6,))
+    assert sol.config == (n_star,)
+    assert sol.cost == pytest.approx(best_cost)
+
+
+def test_solve_bucketed_rejects_unservable_and_infeasible():
+    with pytest.raises(ValueError):    # nobody can serve bucket 1
+        solve_bucketed([10.0, 5.0], [[20.0, 0.0]], [1.0])
+    with pytest.raises(ValueError):    # bounds too tight for the load
+        solve_bucketed([100.0], [[10.0]], [1.0], bounds=(2,),
+                       method="enumerate")
+
+
+# -------------------------------------------- drift from measured waits
+class _MislabeledPlane(SimulatorPlane):
+    """Serves Gaussian-batch traffic no matter what the spec label says —
+    the episode's ``batch_dist`` annotations are all lies."""
+
+    def phase_stream(self, dist, n, factor):
+        return _prefix(self.workloads["gaussian"].scaled(factor), n)
+
+
+def _dist_workloads(n=300, seed=0, rate=120.0):
+    return {d: WorkloadSpec(seed=seed, rate_qps=rate, median_batch=8.0,
+                            mean_batch=10.0, std_batch=4.0, max_batch=32,
+                            batch_dist=d).realize(n)
+            for d in ("lognormal", "gaussian")}
+
+
+def test_mislabeled_batch_dist_recovers_from_measured_waits():
+    wls = _dist_workloads()
+    plane = _MislabeledPlane(PROF, [FAST, SLOW], wls, max_instances=8)
+    spec = ScenarioSpec(
+        name="mislabeled", qos_target=0.9, window=100, init_budget=20,
+        phases=(PhaseSpec("lied", 300, 1.0, batch_dist="lognormal"),))
+    rep = ScenarioEngine(spec, plane, SearchSpace(bounds=(4, 4),
+                                                  prices=(1.0, 0.3)),
+                         allow_downscale=False).run()
+    # the belief flipped off the (wrong) spec label using only residuals
+    ests = [w.dist_est for w in rep.windows]
+    assert "gaussian" in ests
+    assert "lognormal" not in ests
+    assert rep.phases[0].qos_rate > 0.0
+
+
+def test_honest_labels_estimate_matches_spec():
+    wls = _dist_workloads()
+    plane = SimulatorPlane(PROF, [FAST, SLOW], wls, max_instances=8)
+    spec = ScenarioSpec(
+        name="honest", qos_target=0.9, window=100, init_budget=20,
+        phases=(PhaseSpec("ln", 300, 1.0, batch_dist="lognormal"),
+                PhaseSpec("ga", 300, 1.0, batch_dist="gaussian")))
+    rep = ScenarioEngine(spec, plane, SearchSpace(bounds=(4, 4),
+                                                  prices=(1.0, 0.3)),
+                         allow_downscale=False).run()
+    n_ph = len(rep.windows) // 2
+    assert all(w.dist_est in (None, "lognormal")
+               for w in rep.windows[:n_ph])
+    assert all(w.dist_est in (None, "gaussian")
+               for w in rep.windows[n_ph:])
+
+
+# ------------------------------------------------- bucketed drift episode
+def test_dist_drift_bucketed_episode_runs_with_bucket_waits():
+    spec = build_episode("dist-drift-bucketed", n=200, window=50)
+    assert spec.validate() is spec
+    base = _spec(rate=120.0)
+    wls = {}
+    for dist in ("bucketed-small", "bucketed-large"):
+        mix = BUCKET_DIST_MIXES[dist]
+        w = np.asarray(mix["weights"], dtype=np.float64)
+        wls[dist] = BucketedWorkloadSpec(
+            base=base, rates=tuple(tuple(base.rate_qps * x for x in row)
+                                   for row in w / w.sum()),
+            input_scales=mix["input_scales"],
+            output_scales=mix["output_scales"]).realize(200)
+    plane = SimulatorPlane(PROF, [FAST, SLOW], wls, max_instances=8)
+    ep = dataclasses.replace(spec, qos_target=0.9)
+    rep = ScenarioEngine(ep, plane, SearchSpace(bounds=(4, 4),
+                                                prices=(1.0, 0.3)),
+                         allow_downscale=False).run()
+    assert len(rep.phases) == 3
+    # per-bucket measured waits ride every window stat
+    assert all(len(w.bucket_waits) == 4 for w in rep.windows)
+    for w in rep.windows:
+        assert all(np.isfinite(x) or np.isnan(x) for x in w.bucket_waits)

@@ -278,7 +278,7 @@ PROF = ModelProfile("toy", flops_per_sample=1e6, act_bytes_per_sample=1e4,
 
 
 def test_hedging_mitigates_straggler_tail():
-    wl = generate_workload(0, 400, 150.0, median_batch=8, max_batch=32)
+    wl = generate_workload(0, 600, 150.0, median_batch=8, max_batch=32)
     strag = StragglerModel(slow_factor=8.0, afflicted=(0,))
     base = simulate_fcfs_hedged(wl, [FAST], (3,), PROF, straggler=strag,
                                 hedge_threshold=None)

@@ -440,8 +440,8 @@ def test_engine_reroute_absorbs_flash_crowd_cheaper_than_fcfs():
 
     reports = {}
     for routed in (True, False):
-        spec = flash_crowd(n=240, window=60, seed=0, routed=routed)
-        spec = dataclasses.replace(spec, init_budget=4)
+        spec = flash_crowd(n=360, window=60, seed=3, routed=routed)
+        spec = dataclasses.replace(spec, init_budget=4, qos_target=0.98)
         plane, space = paper_simulator_plane("mtwnd", spec)
         reports[routed] = ScenarioEngine(spec, plane, space,
                                          start=(4, 1, 1)).run()

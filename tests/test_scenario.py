@@ -79,7 +79,7 @@ def test_constant_episode_bit_identical_to_simulator():
     """Single constant phase, no events, no adaptation: the reported phase
     QoS equals PoolSimulator.qos on the scaled stream bit for bit."""
     plane = _plane(n=300)
-    spec = ScenarioSpec(name="const", qos_target=0.7, window=100,
+    spec = ScenarioSpec(name="const", qos_target=0.9, window=100,
                         init_budget=25,
                         phases=(PhaseSpec("only", 300, load_factor=1.3),))
     eng = ScenarioEngine(spec, plane, _space(), allow_downscale=False)
@@ -219,7 +219,7 @@ def test_restock_supersedes_inflight_provisioning():
 def test_constant_episode_warm_equals_idle_restart_accounting():
     """With no cuts there is no backlog to carry: the carried-state clock
     and the legacy idle-restart accounting produce identical reports."""
-    spec = ScenarioSpec(name="const2", qos_target=0.7, window=100,
+    spec = ScenarioSpec(name="const2", qos_target=0.9, window=100,
                         init_budget=25,
                         phases=(PhaseSpec("only", 300, load_factor=1.3),))
     docs = []
@@ -294,7 +294,7 @@ def test_warm_candidate_scoring_records_delta_and_knob_decouples():
         name="spike-delta", qos_target=0.9, window=100, init_budget=25,
         rescale_budget=15,
         phases=(PhaseSpec("a", 400, 1.0), PhaseSpec("b", 400, 1.0)),
-        events=(EventSpec("load_spike", phase=1, at_frac=0.25, factor=1.8),))
+        events=(EventSpec("load_spike", phase=1, at_frac=0.25, factor=2.0),))
     warm = ScenarioEngine(spec, _plane(n=400), _space()).run()
     ups = [a for a in warm.actions if a.kind == "rescale_up"]
     assert ups and all(a.warm_idle_delta is not None for a in ups)
